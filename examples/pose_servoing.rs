@@ -1,0 +1,89 @@
+//! Pose detection under a visual-servoing deadline (paper Sec. 2.1):
+//! "as this application is intended for visual servoing of a robot arm,
+//! it requires very tight end-to-end latencies; our goal is a 50 ms
+//! latency bound."
+//!
+//! Runs the ε-greedy tuner on the pose app at L = 50 ms and prints the
+//! operating points it settles on — which knob settings buy a 7×
+//! speedup over the fidelity-maximizing defaults, and at what fidelity
+//! cost.
+//!
+//! ```bash
+//! cargo run --release --example pose_servoing
+//! ```
+
+use std::collections::HashMap;
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::runtime::native::NativeBackend;
+use iptune::trace::TraceSet;
+use iptune::tuner::{EpsGreedyController, TunerConfig};
+
+fn main() -> anyhow::Result<()> {
+    let spec_dir = find_spec_dir(None)?;
+    let app = app_by_name("pose", &spec_dir)?;
+    let bound = 50.0;
+    let frames = 1000;
+
+    println!("== pose detection @ L = {bound} ms (visual servoing) ==");
+    let defaults = app.spec.defaults();
+    let content = app.model.content(0);
+    let default_lat: f64 = app.stage_latencies(&defaults, &content).iter().sum();
+    println!(
+        "defaults: latency {:.0} ms, fidelity {:.3}  (the paper's fidelity-max corner)",
+        default_lat,
+        app.model.fidelity(&defaults, &content)
+    );
+
+    let traces = TraceSet::generate_default(&app, 7);
+    let backend = NativeBackend::structured(&app.spec);
+    let eps = TunerConfig::epsilon_for_horizon(frames);
+    let cfg = TunerConfig { epsilon: eps, bound_ms: bound, warmup_frames: 25 };
+    let mut ctl = EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, 3);
+    let out = ctl.run(frames);
+
+    // which actions did exploitation settle on?
+    let mut counts: HashMap<usize, usize> = HashMap::new();
+    for s in out.steps.iter().filter(|s| !s.explored && s.frame > 200) {
+        *counts.entry(s.action).or_insert(0) += 1;
+    }
+    let mut top: Vec<(usize, usize)> = counts.into_iter().collect();
+    top.sort_by(|a, b| b.1.cmp(&a.1));
+
+    println!("\ntop operating points chosen after convergence:");
+    println!(
+        "{:>6} {:>7} {:>9} {:>9}  K1(scale) K2(thresh) K3(parSIFT) K4(parMatch) K5(parClust)",
+        "action", "frames", "cost(ms)", "fidelity"
+    );
+    for &(a, n) in top.iter().take(4) {
+        let t = &traces.traces[a];
+        println!(
+            "{:>6} {:>7} {:>9.1} {:>9.3}  {:>9.2} {:>10.0} {:>11.0} {:>12.0} {:>12.0}",
+            a,
+            n,
+            t.avg_cost_ms(),
+            t.avg_fidelity(),
+            t.config[0],
+            t.config[1],
+            t.config[2],
+            t.config[3],
+            t.config[4]
+        );
+    }
+
+    println!("\n== outcome over {frames} frames ==");
+    println!("avg fidelity   : {:.3}", out.avg_reward);
+    println!(
+        "avg violation  : {:.1} ms | max {:.1} ms | over-bound {:.1}% of frames",
+        out.avg_violation_ms,
+        out.max_violation_ms,
+        100.0 * out.violation_rate
+    );
+    println!(
+        "speedup vs defaults: {:.1}x (from {:.0} ms to the {bound} ms envelope)",
+        default_lat / bound,
+        default_lat
+    );
+    Ok(())
+}

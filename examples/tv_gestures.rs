@@ -1,0 +1,92 @@
+//! Gesture-controlled TV on the *live* streaming engine (paper Fig. 3/4):
+//! a responsive interface needs ~100 ms end-to-end. This example runs the
+//! full closed loop on the threaded data-flow engine — stages as
+//! concurrent tasks with bounded connectors, per-stage latency probes,
+//! online learning, and dynamic retuning of the running pipeline —
+//! exactly the deployment story of paper Sec. 2.
+//!
+//! ```bash
+//! cargo run --release --example tv_gestures
+//! ```
+
+use std::sync::Arc;
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::engine::{spawn_stream, EngineConfig};
+use iptune::runtime::native::NativeBackend;
+use iptune::runtime::Backend;
+use iptune::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let spec_dir = find_spec_dir(None)?;
+    let app = Arc::new(app_by_name("motion_sift", &spec_dir)?);
+    let bound = 100.0;
+    let frames = 600;
+    let retune_every = 20;
+
+    println!("== TV gesture control on the streaming engine (L = {bound} ms) ==");
+    println!("pipeline: {}", app.graph.to_dot("tv").lines().count() - 2);
+    let handle = spawn_stream(
+        Arc::clone(&app),
+        app.spec.defaults(), // start at the fidelity-max corner (slow!)
+        EngineConfig { frames, realtime_scale: 1e-5, queue_capacity: 8, seed: 3 },
+    );
+
+    let mut backend = NativeBackend::structured(&app.spec);
+    let mut rng = Rng::new(17);
+    // candidate grid: random valid configs + the defaults
+    let mut candidates: Vec<Vec<f64>> = (0..48)
+        .map(|_| (0..app.spec.num_vars()).map(|_| rng.f64()).collect())
+        .collect();
+    candidates.push(app.spec.normalize(&app.spec.defaults()));
+    let content = app.model.content(0);
+    let rewards: Vec<f64> = candidates
+        .iter()
+        .map(|u| app.model.fidelity(&app.spec.denormalize(u), &content))
+        .collect();
+
+    let (mut lat, mut fid, mut over, mut n) = (0.0, 0.0, 0usize, 0usize);
+    let mut tail_stats = (0.0f64, 0usize, 0usize); // (lat sum, over, n)
+    while let Ok(rec) = handle.records.recv() {
+        let u = app.spec.normalize(&rec.knobs);
+        let (y, off) = backend.group_map().targets(&rec.stage_ms, rec.end_to_end_ms);
+        backend.update(&u, &y);
+        backend.observe_offset(off);
+        lat += rec.end_to_end_ms;
+        fid += rec.fidelity;
+        n += 1;
+        if rec.end_to_end_ms > bound {
+            over += 1;
+        }
+        if rec.frame >= frames - 200 {
+            tail_stats.0 += rec.end_to_end_ms;
+            tail_stats.2 += 1;
+            if rec.end_to_end_ms > bound {
+                tail_stats.1 += 1;
+            }
+        }
+        if rec.frame % retune_every == retune_every - 1 {
+            let pick = backend.solve(&candidates, &rewards, bound);
+            let ks = app.spec.denormalize(&candidates[pick]);
+            if rec.frame % 100 == 99 {
+                println!(
+                    "frame {:>4}: window avg latency {:>7.1} ms, fidelity {:.3}, over-bound {:>3}/{:>3} -> K = [{:.1}, {:.1}, {:.0}, {:.0}, {:.0}]",
+                    rec.frame, lat / n as f64, fid / n as f64, over, n,
+                    ks[0], ks[1], ks[2], ks[3], ks[4]
+                );
+                (lat, fid, over, n) = (0.0, 0.0, 0, 0);
+            }
+            handle.set_knobs(ks);
+        }
+    }
+
+    println!("\n== steady state (last 200 frames) ==");
+    println!(
+        "avg latency {:.1} ms | over-bound {:.1}% | target {} ms",
+        tail_stats.0 / tail_stats.2 as f64,
+        100.0 * tail_stats.1 as f64 / tail_stats.2 as f64,
+        bound
+    );
+    Ok(())
+}

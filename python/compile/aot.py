@@ -1,0 +1,117 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT runtime.
+
+Emits, per (app, variant) pair, three artifacts:
+
+    artifacts/{app}_{variant}_{predict,update,solve}.hlo.txt
+
+plus ``artifacts/manifest.json`` describing every artifact's input/output
+shapes so the Rust runtime can validate what it loads.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects; the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Python runs only here, at build time (``make artifacts``); the Rust
+binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .spec import all_specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is essential: the default HLO printer
+    elides big constants as ``constant({...})``, which the text parser on
+    the Rust side silently reads back as *zeros* — the monomial selection
+    matrices baked into the predictor would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def shape_sig(args) -> list[dict]:
+    return [{"shape": list(np.shape(a)), "dtype": str(np.asarray(a).dtype)}
+            for a in args]
+
+
+def lower_bundle(bundle, out_dir: str) -> dict:
+    entries = {}
+    for op in ("predict", "update", "solve"):
+        args = bundle.example_args(op)
+        lowered = jax.jit(bundle.fn(op)).lower(*args)
+        text = to_hlo_text(lowered)
+        name = f"{bundle.spec.name}_{bundle.variant}_{op}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(bundle.fn(op), *args)
+        flat, _ = jax.tree_util.tree_flatten(out_shapes)
+        entries[name] = {
+            "file": os.path.basename(path),
+            "app": bundle.spec.name,
+            "variant": bundle.variant,
+            "op": op,
+            "inputs": shape_sig(args),
+            "outputs": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                        for s in flat],
+            "num_groups": bundle.num_groups,
+            "feature_pad": bundle.spec.feature_pad,
+            "candidate_pad": bundle.spec.candidate_pad,
+            "num_vars": bundle.spec.num_vars,
+        }
+        print(f"  wrote {path} ({len(text)} chars)")
+    return entries
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts",
+                        help="output dir OR a single .hlo.txt path whose "
+                             "parent dir is used (Makefile convenience)")
+    args = parser.parse_args()
+    out_dir = args.out
+    if out_dir.endswith(".hlo.txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest: dict = {"artifacts": {}, "apps": {}}
+    for spec in all_specs():
+        manifest["apps"][spec.name] = {
+            "num_vars": spec.num_vars,
+            "num_groups": spec.num_groups,
+            "feature_pad": spec.feature_pad,
+            "candidate_pad": spec.candidate_pad,
+            "structured_features": spec.structured_feature_count(),
+            "unstructured_features": spec.unstructured_feature_count(),
+        }
+        for variant in model_mod.VARIANTS:
+            print(f"lowering {spec.name}/{variant} ...")
+            bundle = model_mod.build(spec, variant)
+            manifest["artifacts"].update(lower_bundle(bundle, out_dir))
+
+    # Sentinel the Makefile tracks + human-readable inventory.
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json "
+          f"({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: fused epsilon-insensitive OGD weight update.
+
+One PA-clipped online-gradient step (paper Eq. 6-8; clipping rationale in
+rust/src/learner/ogd.rs) for all per-group regressors at once:
+
+    phi     = monomial_expand(u)                          # [F]
+    err_g   = <w_g, phi> - y_g                            # [G]
+    tau_g   = min(eta, max(|err_g|-eps, 0) / ||phi_g||^2)
+    w_g'    = (w_g - tau_g*sign(err_g)*phi_g - eta*2*gamma*w_g) * support_g
+
+The support mask is the projection onto each group's monomial subspace
+(structured predictors only own the monomials of their variable subset —
+paper Sec 3.3), and simultaneously keeps the padded feature slots at
+exactly zero. Targets are in normalized latency units (1 unit = 100 ms;
+the L3 backend converts). Fusing expansion + subgradient + shrink +
+projection means one VMEM round trip for the whole update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def ogd_update(weights, u_aug, y, eta, *, idx, support,
+               gamma=0.01, eps_ins=0.01, pa_damping=0.5, interpret=True):
+    """One OGD step on the eps-insensitive SVR loss.
+
+    weights : [G, F] float32
+    u_aug   : [V+1]  float32 normalized action + trailing 1.0
+    y       : [G]    float32 observed per-group latency targets (ms)
+    eta     : []     float32 learning rate (schedule lives in L3)
+    idx     : np.ndarray [D, F] int32 static gather indices
+    support : np.ndarray [G, F] float32 static subspace masks
+    returns weights' : [G, F]
+    """
+    from .poly import selection_matrices
+
+    support = np.asarray(support, dtype=np.float32)
+    g, f = weights.shape
+    vp = u_aug.shape[0]
+    # gather-free expansion (see poly.py): valid == union of supports
+    valid = (support.sum(axis=0) > 0.0).astype(np.float32)
+    sel = selection_matrices(idx, vp, valid)
+    d = sel.shape[0]
+
+    def kernel(w_ref, u_ref, y_ref, eta_ref, sel_ref, sup_ref, o_ref):
+        u = u_ref[...]                                    # [V+1]
+        sel_m = sel_ref[...]
+        phi = u @ sel_m[0]
+        for dd in range(1, d):                            # static degree loop
+            phi = phi * (u @ sel_m[dd])
+        w = w_ref[...]                                    # [G, F]
+        sup = sup_ref[...]
+        eta = eta_ref[0]
+        phis = phi[None, :] * sup                         # per-group masked phi
+        err = jnp.sum(w * phis, axis=-1) - y_ref[...]     # [G]
+        loss = jnp.maximum(jnp.abs(err) - eps_ins, 0.0)
+        phi_norm2 = jnp.maximum(jnp.sum(phis * phis, axis=-1), 1e-12)
+        tau = jnp.minimum(eta, pa_damping * loss / phi_norm2)  # damped PA clip
+        step = tau * jnp.sign(err)                        # [G]
+        o_ref[...] = (w - step[:, None] * phis - eta * 2.0 * gamma * w) * sup
+
+    return pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec((g, f), lambda: (0, 0)),
+            pl.BlockSpec((vp,), lambda: (0,)),
+            pl.BlockSpec((g,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((d, vp, f), lambda: (0, 0, 0)),
+            pl.BlockSpec((g, f), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, f), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, f), weights.dtype),
+        interpret=interpret,
+    )(weights, u_aug, y, jnp.reshape(eta, (1,)), sel, support)

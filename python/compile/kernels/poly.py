@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: fused polynomial feature expansion + per-group matvec.
+
+This is the tuner's per-frame hot spot: predicting the latency of every
+candidate operating point (paper Eq. 2 needs \\hat c(x, k) for the whole
+action space each exploitation step). The kernel fuses
+
+    phi   = monomial_expand(u)          # [block_n, F]
+    pred  = phi @ W.T                   # [block_n, G]
+
+into a single VMEM-resident block so the expansion never round-trips to
+HBM. The monomial gather indices are *compile-time constants* (they are a
+property of the app spec, not data), so the expansion lowers to registers
++ element-wise products feeding the MXU matmul.
+
+The expansion is *gather-free*: the static monomial indices are encoded
+as one-hot selection matrices S_d ∈ {0,1}^[(V+1) x F], so each factor is
+the matmul ``u @ S_d`` and phi is their elementwise product. Besides
+being the MXU-native formulation, this avoids `gather` ops entirely —
+the pinned xla_extension 0.5.1 runtime mis-executes the NaN-fill gather
+that ``jnp.take`` lowers to.
+
+TPU mapping (DESIGN.md Sec 2): grid tiles the candidate batch; the weight
+matrix is broadcast-resident in VMEM (G x F x 4 B = a few KB). On this
+image we run interpret=True (CPU) — structure is what we optimize.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def selection_matrices(idx, vp, valid):
+    """One-hot encode gather indices: S[d, v, j] = 1 iff idx[d, j] == v.
+
+    The validity mask is folded into S[0] (padded feature slots select
+    nothing -> phi = 0 there).
+    """
+    idx = np.asarray(idx, dtype=np.int64)
+    d, f = idx.shape
+    sel = np.zeros((d, vp, f), dtype=np.float32)
+    for dd in range(d):
+        sel[dd, idx[dd], np.arange(f)] = 1.0
+    sel[0] *= np.asarray(valid, np.float32)[None, :]
+    return sel
+
+
+def expand_block(u, sel):
+    """Monomial expansion of a [n, V+1] block -> [n, F] via one-hot
+    selection matmuls (gather-free)."""
+    phi = u @ sel[0]
+    for d in range(1, sel.shape[0]):
+        phi = phi * (u @ sel[d])
+    return phi
+
+
+def poly_predict(u_aug, weights, *, idx, valid, block_n=32, interpret=True):
+    """Per-group latency predictions for a padded candidate batch.
+
+    u_aug   : [N, V+1] float32, normalized knobs + trailing 1.0
+    weights : [G, F]   float32 per-group weights (support-masked)
+    idx     : np.ndarray [D, F] int32 — gather indices (spec-derived; loop
+              bound over the degree axis is compile-time static)
+    valid   : np.ndarray [F] float32 — monomial validity mask
+    returns pred : [N, G]
+
+    N must be a multiple of ``block_n``.
+    """
+    n, vp = u_aug.shape
+    g, f = weights.shape
+    sel = selection_matrices(idx, vp, valid)
+    d = sel.shape[0]
+    if n % block_n != 0:
+        raise ValueError(f"candidate batch {n} not a multiple of {block_n}")
+
+    def kernel(u_ref, w_ref, sel_ref, o_ref):
+        u = u_ref[...]                            # [block_n, V+1]
+        phi = expand_block(u, sel_ref[...])       # [block_n, F]
+        o_ref[...] = phi @ w_ref[...].T           # MXU-shaped matmul
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, vp), lambda i: (i, 0)),
+            pl.BlockSpec((g, f), lambda i: (0, 0)),      # weights broadcast
+            pl.BlockSpec((d, vp, f), lambda i: (0, 0, 0)),  # selection bcast
+        ],
+        out_specs=pl.BlockSpec((block_n, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, g), u_aug.dtype),
+        interpret=interpret,
+    )(u_aug, weights, sel)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def _noop(x, block_n=32):  # pragma: no cover - keeps jit cache warm in tests
+    return x

@@ -1,0 +1,128 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Everything here is the *reference semantics*: the Pallas kernels in
+``poly.py`` / ``ogd.py`` must match these functions to float32 tolerance
+(pytest + hypothesis enforce it), and the Rust native learner mirrors the
+same math (golden files cross-check the monomial order).
+
+Shapes (per app/variant artifact, all static):
+  N = candidate_pad (64)   padded candidate batch
+  V = num_vars (5)         raw knobs; u_aug has V+1 with trailing 1.0
+  F = feature_pad (64)     padded monomial feature dim
+  G = number of groups (unstructured: 1)
+  D = polynomial degree (3)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expand(u_aug, idx, valid):
+    """Monomial feature expansion via gather products.
+
+    u_aug : [..., V+1]  normalized knobs with trailing constant 1.0
+    idx   : [D, F] int32 gather indices into the V+1 axis
+    valid : [F] 0/1 mask for real (non-padded) monomials
+    returns phi : [..., F]
+    """
+    phi = jnp.ones(u_aug.shape[:-1] + (idx.shape[1],), dtype=u_aug.dtype)
+    for d in range(idx.shape[0]):
+        phi = phi * jnp.take(u_aug, idx[d], axis=-1)
+    return phi * valid
+
+
+def predict_groups(u_aug, weights, idx, valid):
+    """Per-group latency predictions for a candidate batch.
+
+    u_aug   : [N, V+1]
+    weights : [G, F]
+    idx     : [G, D, F]   per-group gather indices (groups expand only
+                          their own variable subsets; Sec 2.3/3.3)
+    valid   : [G, F]
+    returns pred : [N, G]
+    """
+    cols = []
+    for g in range(weights.shape[0]):
+        phi = expand(u_aug, idx[g], valid[g])          # [N, F]
+        cols.append(phi @ weights[g])                  # [N]
+    return jnp.stack(cols, axis=-1)
+
+
+def combine(pred, seq_vec, branch_mat, offset):
+    """Critical-path combination (paper Eq. 9 generalized).
+
+    pred       : [N, G] per-group predicted latencies
+    seq_vec    : [G]    1.0 for sequential (non-branch) groups
+    branch_mat : [B, G] membership of groups in parallel branches (B may be 0)
+    offset     : scalar moving-average latency of all non-critical stages
+    returns c : [N] end-to-end latency prediction
+    """
+    c = pred @ seq_vec + offset
+    if branch_mat.shape[0] > 0:
+        per_branch = pred @ branch_mat.T               # [N, B]
+        c = c + jnp.max(per_branch, axis=-1)
+    return c
+
+
+def predict(u_aug, weights, idx, valid, seq_vec, branch_mat, offset):
+    """End-to-end latency prediction for a candidate batch -> [N]."""
+    pred = predict_groups(u_aug, weights, idx, valid)
+    return combine(pred, seq_vec, branch_mat, offset)
+
+
+def ogd_update(weights, u_aug, y, idx, valid, eta, gamma, eps_ins,
+               pa_damping=0.5):
+    """One PA-clipped online-gradient step on the eps-insensitive SVR
+    loss (Eq. 6-8; see rust/src/learner/ogd.rs for the clipping argument).
+
+    weights : [G, F]      current per-group weights
+    u_aug   : [V+1]       the action just played (normalized, aug)
+    y       : [G]         observed per-group latency targets (normalized
+                          latency units — the L3 backend divides ms by
+                          LATENCY_SCALE_MS)
+    eta     : scalar      learning rate ceiling (eta_t = eta0/sqrt(t))
+    gamma   : scalar      L2 regularization (paper: 0.01)
+    eps_ins : scalar      insensitivity zone (normalized units)
+    returns weights' : [G, F]
+
+    step_g = min(eta, damping * max(|err_g|-eps, 0)/||phi_g||^2) * sign(err_g)
+    w_g'   = (w_g - step_g*phi_g - eta*2*gamma*w_g) * valid_g
+
+    The step never overshoots the current sample (passive-aggressive
+    clip); the ``valid`` mask doubles as the subspace projection P(.) of
+    Eq. 6: padded/foreign monomial slots stay exactly zero.
+    """
+    G = weights.shape[0]
+    phis = jnp.stack([expand(u_aug, idx[g], valid[g]) for g in range(G)])  # [G,F]
+    pred = jnp.sum(weights * phis, axis=-1)                                # [G]
+    err = pred - y
+    loss = jnp.maximum(jnp.abs(err) - eps_ins, 0.0)
+    phi_norm2 = jnp.maximum(jnp.sum(phis * phis, axis=-1), 1e-12)
+    tau = jnp.minimum(eta, pa_damping * loss / phi_norm2)                  # [G]
+    step = tau * jnp.sign(err)
+    return (weights - step[:, None] * phis - eta * 2.0 * gamma * weights) * valid
+
+
+def solve(u_aug, weights, idx, valid, seq_vec, branch_mat, offset,
+          reward, cand_valid, bound):
+    """Constrained argmax (paper Eq. 2) over the candidate batch.
+
+    reward     : [N] known fidelity of each candidate (paper Sec 3.1
+                 assumes r is known)
+    cand_valid : [N] 0/1 padding mask over candidates
+    bound      : scalar latency bound L (ms)
+    returns (best_idx : i32 scalar, c : [N] predicted latencies)
+
+    If no candidate is feasible, falls back to the valid candidate with
+    the smallest predicted latency.
+    """
+    c = predict(u_aug, weights, idx, valid, seq_vec, branch_mat, offset)
+    feasible = (c <= bound) & (cand_valid > 0.5)
+    score = jnp.where(feasible, reward, -jnp.inf)
+    any_feasible = jnp.any(feasible)
+    fallback = jnp.where(cand_valid > 0.5, c, jnp.inf)
+    idx_best = jnp.where(
+        any_feasible, jnp.argmax(score), jnp.argmin(fallback)
+    ).astype(jnp.int32)
+    return idx_best, c

@@ -1,0 +1,163 @@
+"""L2: the JAX compute graph of the auto-tuner's predictor, per app/variant.
+
+For every (application, variant) pair this module assembles three jittable
+functions out of the L1 Pallas kernels:
+
+  predict(u_aug, weights, offset)                  -> c_hat[N]
+  update(weights, u_aug, y, eta)                   -> weights'
+  solve(u_aug, weights, offset, reward, valid, L)  -> (best_idx, c_hat[N])
+
+``unstructured`` learns one cubic regressor of all five knobs against the
+end-to-end latency (56 features for 5 vars); ``structured`` keeps one
+regressor per critical-stage group over that group's knob subset (paper
+Sec 2.3/3.3 — 10 + 20 = 30 compact features for MotionSIFT) and combines
+group predictions along the critical path: sum over sequential groups,
+max over parallel branches (Eq. 9), plus a moving-average offset for the
+non-critical stages supplied by the Rust coordinator.
+
+All monomials are enumerated in the *full* variable space (graded-lex) and
+groups carry support masks over that space; this keeps every artifact's
+shapes uniform while preserving exactly the structured math. The compact
+30-feature economics are exercised by the Rust native learner and the
+structure benches.
+
+These functions are lowered once by ``aot.py`` into HLO text artifacts;
+Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ogd as ogd_k
+from .kernels import poly as poly_k
+from .spec import EPS_INSENSITIVE, GAMMA, PA_DAMPING, AppSpec, monomials
+
+VARIANTS = ("unstructured", "structured")
+
+
+def full_space_encoding(spec: AppSpec):
+    """(idx[D, Fpad], valid[Fpad], monos) for the full variable space."""
+    monos = monomials(spec.num_vars, spec.degree)
+    if len(monos) > spec.feature_pad:
+        raise ValueError("feature_pad too small")
+    one = spec.num_vars
+    idx = np.full((spec.degree, spec.feature_pad), one, dtype=np.int32)
+    valid = np.zeros((spec.feature_pad,), dtype=np.float32)
+    for j, mono in enumerate(monos):
+        valid[j] = 1.0
+        for d, var in enumerate(mono):
+            idx[d, j] = var
+    return idx, valid, monos
+
+
+def group_support(spec: AppSpec, variant: str, monos, valid):
+    """Per-group subspace masks over the full monomial space -> [G, Fpad]."""
+    if variant == "unstructured":
+        return valid[None, :].copy()
+    rows = []
+    for grp in spec.groups:
+        allowed = set(grp.params)
+        row = np.zeros_like(valid)
+        for j, mono in enumerate(monos):
+            if set(mono) <= allowed:
+                row[j] = 1.0
+        rows.append(row)
+    return np.stack(rows)
+
+
+def combine_arrays(spec: AppSpec, variant: str):
+    """(seq_vec[G], branch_mat[B, G]) as float32 numpy arrays."""
+    if variant == "unstructured":
+        return np.ones((1,), np.float32), np.zeros((0, 1), np.float32)
+    seq, bmat = spec.combine_matrices()
+    return (
+        np.asarray(seq, np.float32),
+        np.asarray(bmat, np.float32).reshape(len(bmat), spec.num_groups),
+    )
+
+
+@dataclass
+class ModelBundle:
+    """The three jittable tuner functions plus their static metadata."""
+
+    spec: AppSpec
+    variant: str
+    num_groups: int
+    idx: np.ndarray         # [D, Fpad]
+    valid: np.ndarray       # [Fpad]
+    support: np.ndarray     # [G, Fpad]
+    seq_vec: np.ndarray     # [G]
+    branch_mat: np.ndarray  # [B, G]
+
+    def predict(self, u_aug, weights, offset):
+        """End-to-end latency prediction for a padded candidate batch."""
+        pred = poly_k.poly_predict(
+            u_aug, weights, idx=self.idx, valid=self.valid
+        )                                                   # [N, G]
+        c = pred @ jnp.asarray(self.seq_vec) + offset[0]
+        if self.branch_mat.shape[0] > 0:
+            per_branch = pred @ jnp.asarray(self.branch_mat).T
+            c = c + jnp.max(per_branch, axis=-1)
+        return c
+
+    def update(self, weights, u_aug, y, eta):
+        """One fused OGD step (L1 kernel)."""
+        return ogd_k.ogd_update(
+            weights, u_aug, y, eta,
+            idx=self.idx, support=self.support,
+            gamma=GAMMA, eps_ins=EPS_INSENSITIVE, pa_damping=PA_DAMPING,
+        )
+
+    def solve(self, u_aug, weights, offset, reward, cand_valid, bound):
+        """Constrained argmax over candidates (paper Eq. 2) + predictions."""
+        c = self.predict(u_aug, weights, offset)
+        feasible = (c <= bound[0]) & (cand_valid > 0.5)
+        score = jnp.where(feasible, reward, -jnp.inf)
+        fallback = jnp.where(cand_valid > 0.5, c, jnp.inf)
+        idx_best = jnp.where(
+            jnp.any(feasible), jnp.argmax(score), jnp.argmin(fallback)
+        ).astype(jnp.int32)
+        return jnp.reshape(idx_best, (1,)), c
+
+    # --- example arguments for AOT lowering (static shapes) -------------
+    def example_args(self, op: str):
+        n = self.spec.candidate_pad
+        vp = self.spec.num_vars + 1
+        g, f = self.num_groups, self.spec.feature_pad
+        f32 = np.float32
+        u_batch = np.zeros((n, vp), f32)
+        w = np.zeros((g, f), f32)
+        one = np.zeros((1,), f32)
+        if op == "predict":
+            return (u_batch, w, one)
+        if op == "update":
+            return (w, np.zeros((vp,), f32), np.zeros((g,), f32), one)
+        if op == "solve":
+            return (u_batch, w, one, np.zeros((n,), f32), np.zeros((n,), f32), one)
+        raise ValueError(op)
+
+    def fn(self, op: str):
+        return {"predict": self.predict, "update": self.update,
+                "solve": self.solve}[op]
+
+
+def build(spec: AppSpec, variant: str) -> ModelBundle:
+    if variant not in VARIANTS:
+        raise ValueError(variant)
+    idx, valid, monos = full_space_encoding(spec)
+    support = group_support(spec, variant, monos, valid)
+    seq_vec, branch_mat = combine_arrays(spec, variant)
+    return ModelBundle(
+        spec=spec,
+        variant=variant,
+        num_groups=support.shape[0],
+        idx=idx,
+        valid=valid,
+        support=support,
+        seq_vec=seq_vec,
+        branch_mat=branch_mat,
+    )

@@ -1,0 +1,195 @@
+"""Shared application spec loading + monomial feature enumeration.
+
+The spec JSON files in ``specs/`` are the single source of truth for the
+tunable-parameter tables (paper Tables 1 and 2), the data-flow graphs
+(paper Figures 1 and 4), and the structured-learner group decomposition
+(paper Section 2.3). The Rust side (``rust/src/apps``, ``rust/src/learner``)
+parses the same files; the monomial enumeration order defined here is
+golden-tested against the Rust implementation.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import math
+import os
+from dataclasses import dataclass, field
+
+SPEC_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "specs")
+
+# The predictor kernels operate in *normalized latency units*: the Rust
+# backend divides millisecond targets by LATENCY_SCALE_MS before the OGD
+# update and multiplies predictions back (standard eps-SVR target
+# normalization; with raw-ms targets the gamma*||f||^2 shrinkage would
+# bias the bounded subgradient steps).
+LATENCY_SCALE_MS = 100.0
+# epsilon-insensitive zone of the SVR loss: 1 ms, in normalized units
+# (paper Sec 3.2).
+EPS_INSENSITIVE = 1.0 / LATENCY_SCALE_MS
+# L2 regularization weight gamma (paper: "In all of our experiments, 0.01").
+GAMMA = 0.01
+# Damping of the passive-aggressive step clip (see rust/src/learner/ogd.rs).
+PA_DAMPING = 0.5
+
+
+def monomials(num_vars: int, degree: int) -> list[tuple[int, ...]]:
+    """All monomials of total degree <= degree over ``num_vars`` variables.
+
+    Order: graded (by total degree ascending), then lexicographic over the
+    non-decreasing variable-index tuples. Degree 0 is the constant term
+    ``()``. This exact order is mirrored by ``learner::features`` in Rust.
+
+    >>> monomials(2, 2)
+    [(), (0,), (1,), (0, 0), (0, 1), (1, 1)]
+    """
+    out: list[tuple[int, ...]] = [()]
+    for d in range(1, degree + 1):
+        out.extend(itertools.combinations_with_replacement(range(num_vars), d))
+    return out
+
+
+def monomial_count(num_vars: int, degree: int) -> int:
+    """C(num_vars + degree, degree) — e.g. 5 vars, cubic -> 56."""
+    return math.comb(num_vars + degree, degree)
+
+
+def monomial_index_arrays(
+    var_subset: list[int], num_vars: int, degree: int, feature_pad: int
+) -> tuple[list[int], ...]:
+    """Gather-index encoding of the monomial expansion for a Pallas kernel.
+
+    Each monomial is encoded as exactly ``degree`` indices into the
+    augmented parameter vector ``u_aug = concat(u, [1.0])`` (length
+    ``num_vars + 1``); missing factors point at the trailing 1.0 so that
+    ``phi[j] = prod_d u_aug[idx[d][j]]`` holds for every degree. Padded
+    feature slots (beyond the subset's monomial count) index a *zero*: we
+    return a separate ``valid`` 0/1 mask for them.
+
+    The expansion is computed over the monomials of the *subset* variables
+    only (this is what makes the structured predictor's feature space
+    smaller: 10 + 20 = 30 vs 56 for MotionSIFT, paper Sec 4.3), but the
+    indices refer to positions in the full parameter vector so every group
+    kernel can consume the same input.
+    """
+    one = num_vars  # index of the constant 1.0 slot in u_aug
+    monos = monomials(len(var_subset), degree)
+    idx = [[one] * feature_pad for _ in range(degree)]
+    valid = [0.0] * feature_pad
+    if len(monos) > feature_pad:
+        raise ValueError(
+            f"feature_pad={feature_pad} too small for {len(monos)} monomials"
+        )
+    for j, mono in enumerate(monos):
+        valid[j] = 1.0
+        for d, local_var in enumerate(mono):
+            idx[d][j] = var_subset[local_var]
+    return (*idx, valid)
+
+
+@dataclass
+class Param:
+    name: str
+    symbol: str
+    kind: str
+    min: float
+    max: float
+    default: float
+    log: bool
+    description: str
+
+    def normalize(self, k: float) -> float:
+        """Map a raw knob value into [0, 1] (log scale where flagged)."""
+        if self.log:
+            lo, hi = math.log(self.min), math.log(self.max)
+            return (math.log(max(k, self.min)) - lo) / (hi - lo)
+        return (k - self.min) / (self.max - self.min)
+
+
+@dataclass
+class Group:
+    name: str
+    stages: list[str]
+    params: list[int]
+    branch: int | None
+
+
+@dataclass
+class Stage:
+    name: str
+    deps: list[str]
+    critical: bool
+    params: list[int]
+
+
+@dataclass
+class AppSpec:
+    name: str
+    title: str
+    latency_bounds_ms: list[float]
+    params: list[Param]
+    stages: list[Stage]
+    groups: list[Group]
+    degree: int
+    candidate_pad: int
+    feature_pad: int
+    raw: dict = field(repr=False, default_factory=dict)
+
+    @property
+    def num_vars(self) -> int:
+        return len(self.params)
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def branches(self) -> list[int]:
+        """Sorted distinct branch ids among the groups (may be empty)."""
+        return sorted({g.branch for g in self.groups if g.branch is not None})
+
+    def normalize(self, ks: list[float]) -> list[float]:
+        return [p.normalize(k) for p, k in zip(self.params, ks)]
+
+    def structured_feature_count(self) -> int:
+        """Total compact features of the structured predictor (30 for
+        MotionSIFT; the paper's Sec 4.3 economics)."""
+        return sum(monomial_count(len(g.params), self.degree) for g in self.groups)
+
+    def unstructured_feature_count(self) -> int:
+        return monomial_count(self.num_vars, self.degree)
+
+    def combine_matrices(self) -> tuple[list[float], list[list[float]]]:
+        """(seq_vector[G], branch_matrix[B][G]) for critical-path combine.
+
+        end_to_end = offset + pred @ seq_vector
+                     + max_b (pred @ branch_matrix[b])      (if B > 0)
+        """
+        seq = [1.0 if g.branch is None else 0.0 for g in self.groups]
+        bmat = [
+            [1.0 if g.branch == b else 0.0 for g in self.groups]
+            for b in self.branches
+        ]
+        return seq, bmat
+
+
+def load_spec(name: str) -> AppSpec:
+    path = os.path.join(SPEC_DIR, f"{name}.json")
+    with open(path) as f:
+        raw = json.load(f)
+    return AppSpec(
+        name=raw["name"],
+        title=raw["title"],
+        latency_bounds_ms=raw["latency_bounds_ms"],
+        params=[Param(**p) for p in raw["params"]],
+        stages=[Stage(**s) for s in raw["stages"]],
+        groups=[Group(**g) for g in raw["groups"]],
+        degree=raw["degree"],
+        candidate_pad=raw["candidate_pad"],
+        feature_pad=raw["feature_pad"],
+        raw=raw,
+    )
+
+
+def all_specs() -> list[AppSpec]:
+    return [load_spec("pose"), load_spec("motion_sift")]

@@ -1,0 +1,215 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compiled artifacts: hypothesis
+sweeps shapes (variable counts, group counts, degrees, block sizes) and
+asserts allclose between the fused kernels and the reference semantics.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ogd as ogd_k
+from compile.kernels import poly as poly_k
+from compile.kernels import ref
+from compile.spec import monomial_index_arrays, monomials
+
+settings.register_profile("kernels", deadline=None, max_examples=8)
+settings.load_profile("kernels")
+
+
+def full_encoding(v, d, f):
+    """Full-space gather encoding (mirrors model.full_space_encoding)."""
+    monos = monomials(v, d)
+    assert len(monos) <= f
+    idx = np.full((d, f), v, dtype=np.int32)
+    valid = np.zeros((f,), dtype=np.float32)
+    for j, m in enumerate(monos):
+        valid[j] = 1.0
+        for dd, var in enumerate(m):
+            idx[dd, j] = var
+    return idx, valid, monos
+
+
+def aug(rng, n, v):
+    u = rng.random((n, v), dtype=np.float64).astype(np.float32)
+    return np.concatenate([u, np.ones((n, 1), np.float32)], axis=1)
+
+
+def manual_expand(u_row, monos, f):
+    """Monomial expansion straight from the definition, no gathers."""
+    phi = np.zeros(f, np.float32)
+    for j, m in enumerate(monos):
+        val = 1.0
+        for var in m:
+            val *= u_row[var]
+        phi[j] = val
+    return phi
+
+
+class TestExpandAgainstDefinition:
+    @given(v=st.integers(1, 6), d=st.integers(1, 3), seed=st.integers(0, 999))
+    def test_ref_expand_matches_definition(self, v, d, seed):
+        f = len(monomials(v, d)) + 3
+        idx, valid, monos = full_encoding(v, d, f)
+        rng = np.random.default_rng(seed)
+        u = aug(rng, 1, v)
+        got = np.asarray(ref.expand(jnp.asarray(u), jnp.asarray(idx),
+                                    jnp.asarray(valid)))[0]
+        want = manual_expand(u[0], monos, f)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @given(seed=st.integers(0, 999))
+    def test_subset_encoding_matches_definition(self, seed):
+        rng = np.random.default_rng(seed)
+        subset = sorted(rng.choice(5, size=3, replace=False).tolist())
+        i0, i1, i2, valid = monomial_index_arrays(subset, 5, 3, 32)
+        idx = np.asarray([i0, i1, i2], np.int32)
+        valid = np.asarray(valid, np.float32)
+        u = aug(rng, 1, 5)
+        got = np.asarray(ref.expand(jnp.asarray(u), jnp.asarray(idx),
+                                    jnp.asarray(valid)))[0]
+        # definition over the subset variables
+        monos = monomials(3, 3)
+        want = np.zeros(32, np.float32)
+        for j, m in enumerate(monos):
+            val = 1.0
+            for lv in m:
+                val *= u[0][subset[lv]]
+            want[j] = val
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_selection_matrices_equal_gather(self):
+        """The gather-free one-hot encoding (what the artifacts use — see
+        poly.py) reproduces the gather expansion exactly."""
+        rng = np.random.default_rng(0)
+        for v in (2, 5):
+            f = len(monomials(v, 3)) + 5
+            idx, valid, monos = full_encoding(v, 3, f)
+            sel = poly_k.selection_matrices(idx, v + 1, valid)
+            u = aug(rng, 4, v)
+            got = np.asarray(poly_k.expand_block(jnp.asarray(u), jnp.asarray(sel)))
+            want = np.stack([manual_expand(u[i], monos, f) for i in range(4)])
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+class TestPolyPredictKernel:
+    @given(
+        v=st.integers(2, 6),
+        g=st.integers(1, 5),
+        seed=st.integers(0, 10_000),
+        block_n=st.sampled_from([8, 16, 32]),
+    )
+    def test_matches_ref(self, v, g, seed, block_n):
+        d = 3
+        f = len(monomials(v, d)) + 8  # pad past the real monomial count
+        idx, valid, _ = full_encoding(v, d, f)
+        rng = np.random.default_rng(seed)
+        n = block_n * int(rng.integers(1, 4))
+        u = aug(rng, n, v)
+        w = (rng.standard_normal((g, f)).astype(np.float32)) * valid
+        got = np.asarray(poly_k.poly_predict(
+            jnp.asarray(u), jnp.asarray(w), idx=idx, valid=valid,
+            block_n=block_n))
+        idx_g = np.stack([idx] * g)
+        valid_g = np.stack([valid] * g)
+        want = np.asarray(ref.predict_groups(
+            jnp.asarray(u), jnp.asarray(w), jnp.asarray(idx_g),
+            jnp.asarray(valid_g)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_ragged_batch(self):
+        idx, valid, _ = full_encoding(3, 3, 32)
+        u = np.ones((33, 4), np.float32)
+        w = np.ones((2, 32), np.float32)
+        with pytest.raises(ValueError):
+            poly_k.poly_predict(jnp.asarray(u), jnp.asarray(w),
+                                idx=idx, valid=valid, block_n=32)
+
+    def test_zero_weights_zero_output(self):
+        idx, valid, _ = full_encoding(5, 3, 64)
+        u = aug(np.random.default_rng(0), 32, 5)
+        w = np.zeros((3, 64), np.float32)
+        out = np.asarray(poly_k.poly_predict(
+            jnp.asarray(u), jnp.asarray(w), idx=idx, valid=valid))
+        assert np.all(out == 0.0)
+
+
+class TestOgdUpdateKernel:
+    @given(
+        v=st.integers(2, 6),
+        g=st.integers(1, 5),
+        seed=st.integers(0, 10_000),
+        eta=st.floats(1e-4, 0.5),
+    )
+    def test_matches_ref(self, v, g, seed, eta):
+        d = 3
+        f = len(monomials(v, d)) + 8
+        idx, valid, _ = full_encoding(v, d, f)
+        rng = np.random.default_rng(seed)
+        # random per-group support sub-masks of valid
+        support = np.stack([
+            valid * (rng.random(f) < 0.8).astype(np.float32)
+            for _ in range(g)
+        ])
+        u = aug(rng, 1, v)[0]
+        w = rng.standard_normal((g, f)).astype(np.float32) * support
+        y = (rng.random(g) * 50).astype(np.float32)
+        got = np.asarray(ogd_k.ogd_update(
+            jnp.asarray(w), jnp.asarray(u), jnp.asarray(y),
+            jnp.asarray(np.float32(eta)), idx=idx, support=support,
+            gamma=0.01, eps_ins=0.05))
+        idx_g = np.stack([idx] * g)
+        want = np.asarray(ref.ogd_update(
+            jnp.asarray(w), jnp.asarray(u), jnp.asarray(y),
+            jnp.asarray(idx_g), jnp.asarray(support),
+            np.float32(eta), 0.01, 0.05))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_stays_in_subspace(self):
+        """The projection P(.) of Eq. 6: weights never leave the support."""
+        d, f, g, v = 3, 64, 3, 5
+        idx, valid, _ = full_encoding(v, d, f)
+        rng = np.random.default_rng(7)
+        support = np.stack([
+            valid * (rng.random(f) < 0.5).astype(np.float32) for _ in range(g)
+        ])
+        w = np.zeros((g, f), np.float32)
+        for t in range(20):
+            u = aug(rng, 1, v)[0]
+            y = (rng.random(g) * 100).astype(np.float32)
+            w = np.asarray(ogd_k.ogd_update(
+                jnp.asarray(w), jnp.asarray(u), jnp.asarray(y),
+                jnp.asarray(np.float32(0.1)), idx=idx, support=support))
+        assert np.all(w[support == 0.0] == 0.0)
+
+    def test_no_update_inside_insensitive_zone(self):
+        """|err| <= eps and w = 0 -> step and shrink are exactly zero."""
+        d, f, g, v = 3, 64, 2, 4
+        idx, valid, _ = full_encoding(v, d, f)
+        support = np.stack([valid] * g)
+        w = np.zeros((g, f), np.float32)
+        u = np.concatenate([np.full(v, 0.5, np.float32), [1.0]]).astype(np.float32)
+        y = np.zeros(g, np.float32)  # pred = 0, err = 0 -> inside zone
+        w2 = np.asarray(ogd_k.ogd_update(
+            jnp.asarray(w), jnp.asarray(u), jnp.asarray(y),
+            jnp.asarray(np.float32(0.1)), idx=idx, support=support))
+        np.testing.assert_array_equal(w2, w)
+
+    def test_converges_on_fixed_target(self):
+        """The PA-clipped step fits a repeated sample in a few updates."""
+        d, f, g, v = 3, 64, 1, 5
+        idx, valid, _ = full_encoding(v, d, f)
+        support = valid[None, :]
+        rng = np.random.default_rng(3)
+        u = aug(rng, 1, v)[0]
+        y = np.asarray([4.2], np.float32)
+        w = np.zeros((g, f), np.float32)
+        for t in range(1, 25):
+            w = np.asarray(ogd_k.ogd_update(
+                jnp.asarray(w), jnp.asarray(u), jnp.asarray(y),
+                jnp.asarray(np.float32(1.0 / np.sqrt(t))), idx=idx,
+                support=support))
+        phi = manual_expand(u, monomials(v, d), f)
+        assert abs(float(phi @ w[0]) - 4.2) < 0.1

@@ -1,0 +1,190 @@
+"""L2 model bundle tests: predict/update/solve per app/variant vs ref.py,
+combination semantics (Eq. 9), and solver feasibility (Eq. 2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import settings
+
+from compile import model as M
+from compile.kernels import ref
+from compile.spec import all_specs, load_spec
+
+settings.register_profile("model", deadline=None, max_examples=5)
+settings.load_profile("model")
+
+BUNDLES = [(s, v) for s in all_specs() for v in M.VARIANTS]
+IDS = [f"{s.name}-{v}" for s, v in BUNDLES]
+
+
+@pytest.fixture(scope="module")
+def bundles():
+    return {(s.name, v): M.build(s, v) for s, v in BUNDLES}
+
+
+def rand_inputs(b, seed):
+    rng = np.random.default_rng(seed)
+    n = b.spec.candidate_pad
+    v = b.spec.num_vars
+    g, f = b.support.shape
+    u = np.concatenate(
+        [rng.random((n, v)).astype(np.float32), np.ones((n, 1), np.float32)],
+        axis=1)
+    w = rng.standard_normal((g, f)).astype(np.float32) * b.support
+    return rng, u, w
+
+
+class TestPredict:
+    @pytest.mark.parametrize("key", IDS)
+    def test_matches_ref(self, bundles, key):
+        app, variant = key.rsplit("-", 1)
+        b = bundles[(app, variant)]
+        rng, u, w = rand_inputs(b, 42)
+        off = np.asarray([5.0], np.float32)
+        got = np.asarray(b.predict(jnp.asarray(u), jnp.asarray(w),
+                                   jnp.asarray(off)))
+        g = b.support.shape[0]
+        bm = (b.branch_mat if b.branch_mat.shape[0]
+              else np.zeros((0, g), np.float32))
+        want = np.asarray(ref.predict(
+            jnp.asarray(u), jnp.asarray(w),
+            jnp.asarray(np.stack([b.idx] * g)), jnp.asarray(b.support),
+            jnp.asarray(b.seq_vec), jnp.asarray(bm), 5.0))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_offset_shifts_prediction(self, bundles):
+        b = bundles[("pose", "unstructured")]
+        _, u, w = rand_inputs(b, 0)
+        c0 = np.asarray(b.predict(jnp.asarray(u), jnp.asarray(w),
+                                  jnp.asarray(np.asarray([0.0], np.float32))))
+        c9 = np.asarray(b.predict(jnp.asarray(u), jnp.asarray(w),
+                                  jnp.asarray(np.asarray([9.0], np.float32))))
+        np.testing.assert_allclose(c9 - c0, 9.0, rtol=1e-5)
+
+    def test_motion_sift_structured_is_max_of_branches(self, bundles):
+        """Paper Eq. 9: f = max(f_L, f_R) for the two-branch graph."""
+        b = bundles[("motion_sift", "structured")]
+        rng, u, w = rand_inputs(b, 1)
+        off = np.asarray([0.0], np.float32)
+        c = np.asarray(b.predict(jnp.asarray(u), jnp.asarray(w),
+                                 jnp.asarray(off)))
+        from compile.kernels.poly import poly_predict
+        pg = np.asarray(poly_predict(jnp.asarray(u), jnp.asarray(w),
+                                     idx=b.idx, valid=b.valid))
+        np.testing.assert_allclose(c, np.maximum(pg[:, 0], pg[:, 1]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestUpdate:
+    @pytest.mark.parametrize("key", IDS)
+    def test_matches_ref(self, bundles, key):
+        app, variant = key.rsplit("-", 1)
+        b = bundles[(app, variant)]
+        rng, u, w = rand_inputs(b, 7)
+        g = b.support.shape[0]
+        y = (rng.random(g) * 80).astype(np.float32)
+        got = np.asarray(b.update(jnp.asarray(w), jnp.asarray(u[0]),
+                                  jnp.asarray(y),
+                                  jnp.asarray(np.float32(0.03))))
+        want = np.asarray(ref.ogd_update(
+            jnp.asarray(w), jnp.asarray(u[0]), jnp.asarray(y),
+            jnp.asarray(np.stack([b.idx] * g)), jnp.asarray(b.support),
+            np.float32(0.03), 0.01, 0.01))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("seed", [0, 7])
+    def test_learns_a_linear_target(self, bundles, seed):
+        """OGD on the unstructured pose model fits y = 1 + 3*u0 (targets
+        in normalized latency units; 1 unit = 100 ms)."""
+        b = bundles[("pose", "unstructured")]
+        rng = np.random.default_rng(seed)
+        v = b.spec.num_vars
+        w = np.zeros_like(b.support)
+        for t in range(1, 200):
+            u = np.concatenate([rng.random(v).astype(np.float32),
+                                [np.float32(1.0)]])
+            y = np.asarray([1.0 + 3.0 * u[0]], np.float32)
+            w = np.asarray(b.update(jnp.asarray(w), jnp.asarray(u),
+                                    jnp.asarray(y),
+                                    jnp.asarray(np.float32(1.0 / np.sqrt(t)))))
+        # probe
+        errs = []
+        for _ in range(50):
+            u = np.concatenate([rng.random(v).astype(np.float32),
+                                [np.float32(1.0)]])[None, :]
+            c = np.asarray(b.predict(
+                jnp.asarray(np.repeat(u, b.spec.candidate_pad, 0)),
+                jnp.asarray(w),
+                jnp.asarray(np.asarray([0.0], np.float32))))[0]
+            errs.append(abs(c - (1.0 + 3.0 * u[0, 0])))
+        assert np.mean(errs) < 0.5
+
+
+class TestSolve:
+    @pytest.mark.parametrize("key", IDS)
+    def test_feasible_choice(self, bundles, key):
+        """Solver never returns an infeasible action when one is feasible."""
+        app, variant = key.rsplit("-", 1)
+        b = bundles[(app, variant)]
+        rng, u, w = rand_inputs(b, 11)
+        n = b.spec.candidate_pad
+        off = np.asarray([0.0], np.float32)
+        r = rng.random(n).astype(np.float32)
+        cv = np.ones(n, np.float32)
+        c = np.asarray(b.predict(jnp.asarray(u), jnp.asarray(w),
+                                 jnp.asarray(off)))
+        bound = float(np.percentile(c, 60))
+        i, c2 = b.solve(jnp.asarray(u), jnp.asarray(w), jnp.asarray(off),
+                        jnp.asarray(r), jnp.asarray(cv),
+                        jnp.asarray(np.asarray([bound], np.float32)))
+        i = int(np.asarray(i)[0])
+        np.testing.assert_allclose(np.asarray(c2), c, rtol=1e-5)
+        assert c[i] <= bound + 1e-3
+        feas = c <= bound
+        assert r[i] == pytest.approx(float(r[feas].max()))
+
+    def test_fallback_to_min_latency(self, bundles):
+        """With no feasible candidate, pick the min predicted latency."""
+        b = bundles[("motion_sift", "unstructured")]
+        rng, u, w = rand_inputs(b, 13)
+        n = b.spec.candidate_pad
+        off = np.asarray([0.0], np.float32)
+        r = rng.random(n).astype(np.float32)
+        cv = np.ones(n, np.float32)
+        c = np.asarray(b.predict(jnp.asarray(u), jnp.asarray(w),
+                                 jnp.asarray(off)))
+        bound = float(c.min()) - 100.0
+        i, _ = b.solve(jnp.asarray(u), jnp.asarray(w), jnp.asarray(off),
+                       jnp.asarray(r), jnp.asarray(cv),
+                       jnp.asarray(np.asarray([bound], np.float32)))
+        assert int(np.asarray(i)[0]) == int(np.argmin(c))
+
+    def test_padding_mask_respected(self, bundles):
+        """Padded candidates (valid=0) are never selected."""
+        b = bundles[("pose", "structured")]
+        rng, u, w = rand_inputs(b, 17)
+        n = b.spec.candidate_pad
+        off = np.asarray([0.0], np.float32)
+        r = np.zeros(n, np.float32)
+        r[-8:] = 10.0                     # juicy rewards on padded slots
+        cv = np.ones(n, np.float32)
+        cv[-8:] = 0.0                     # ... which are invalid
+        i, _ = b.solve(jnp.asarray(u), jnp.asarray(w), jnp.asarray(off),
+                       jnp.asarray(r), jnp.asarray(cv),
+                       jnp.asarray(np.asarray([1e9], np.float32)))
+        assert int(np.asarray(i)[0]) < n - 8
+
+
+class TestStructuredEconomics:
+    def test_motion_sift_30_vs_56(self):
+        s = load_spec("motion_sift")
+        assert s.structured_feature_count() == 30
+        assert s.unstructured_feature_count() == 56
+
+    def test_support_masks_match_counts(self, bundles):
+        from compile.spec import monomial_count
+        for s in all_specs():
+            b = bundles[(s.name, "structured")]
+            per_group = b.support.sum(axis=1)
+            want = [monomial_count(len(g.params), s.degree) for g in s.groups]
+            np.testing.assert_array_equal(per_group, want)

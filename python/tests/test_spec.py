@@ -1,0 +1,156 @@
+"""Spec loading, normalization, and monomial enumeration tests.
+
+Includes the golden monomial-order vectors that the Rust implementation
+(``learner::features``) is cross-checked against.
+"""
+
+import math
+
+import pytest
+
+from compile.spec import (
+    all_specs,
+    load_spec,
+    monomial_count,
+    monomial_index_arrays,
+    monomials,
+)
+
+
+class TestMonomials:
+    def test_counts_match_binomial(self):
+        for v in range(1, 7):
+            for d in range(1, 5):
+                assert len(monomials(v, d)) == monomial_count(v, d)
+
+    def test_paper_counts(self):
+        # Sec 4.3: "it takes 30 and 56 features to describe the structured
+        # and unstructured spaces" for MotionSIFT, cubic.
+        assert monomial_count(5, 3) == 56
+        assert monomial_count(2, 3) == 10
+        assert monomial_count(3, 3) == 20
+
+    def test_golden_order_2v2d(self):
+        assert monomials(2, 2) == [(), (0,), (1,), (0, 0), (0, 1), (1, 1)]
+
+    def test_golden_order_3v3d_prefix(self):
+        m = monomials(3, 3)
+        assert m[:10] == [
+            (), (0,), (1,), (2,),
+            (0, 0), (0, 1), (0, 2), (1, 1), (1, 2), (2, 2),
+        ]
+        assert m[10] == (0, 0, 0)
+        assert m[-1] == (2, 2, 2)
+
+    def test_graded_order(self):
+        m = monomials(5, 3)
+        degrees = [len(t) for t in m]
+        assert degrees == sorted(degrees)
+
+    def test_all_unique(self):
+        m = monomials(5, 3)
+        assert len(set(m)) == len(m)
+
+    def test_nondecreasing_within_monomial(self):
+        for t in monomials(5, 3):
+            assert list(t) == sorted(t)
+
+
+class TestIndexArrays:
+    def test_padding_points_at_one_slot(self):
+        i0, i1, i2, valid = monomial_index_arrays([0, 1], 5, 3, 16)
+        n_real = monomial_count(2, 3)
+        assert sum(valid) == n_real
+        # constant monomial: all factors are the 1.0 slot (index 5)
+        assert i0[0] == i1[0] == i2[0] == 5
+        # padded tail also all-ones
+        assert all(i0[j] == 5 for j in range(n_real, 16))
+
+    def test_subset_mapping(self):
+        i0, i1, i2, valid = monomial_index_arrays([2, 4], 5, 3, 16)
+        # first-degree monomials are the subset vars themselves
+        assert (i0[1], i1[1], i2[1]) == (2, 5, 5)
+        assert (i0[2], i1[2], i2[2]) == (4, 5, 5)
+
+    def test_overflow_raises(self):
+        with pytest.raises(ValueError):
+            monomial_index_arrays([0, 1, 2, 3, 4], 5, 3, 8)
+
+
+class TestSpecs:
+    def test_both_specs_load(self):
+        names = [s.name for s in all_specs()]
+        assert names == ["pose", "motion_sift"]
+
+    def test_table1_pose_knobs(self):
+        """Paper Table 1, row by row."""
+        s = load_spec("pose")
+        assert [p.symbol for p in s.params] == ["K1", "K2", "K3", "K4", "K5"]
+        k1, k2, k3, k4, k5 = s.params
+        assert (k1.kind, k1.min, k1.max, k1.default) == ("continuous", 1, 10, 1)
+        assert (k2.kind, k2.min, k2.max) == ("continuous", 1, 2**31)
+        assert k2.default == 2**31
+        assert (k3.kind, k3.min, k3.max, k3.default) == ("discrete", 1, 96, 1)
+        assert (k4.kind, k4.min, k4.max, k4.default) == ("discrete", 1, 10, 1)
+        assert (k5.kind, k5.min, k5.max, k5.default) == ("discrete", 1, 10, 1)
+
+    def test_table2_motion_sift_knobs(self):
+        """Paper Table 2, row by row."""
+        s = load_spec("motion_sift")
+        k1, k2, k3, k4, k5 = s.params
+        for k in (k1, k2):
+            assert (k.kind, k.min, k.max, k.default) == ("continuous", 1, 10, 1)
+        assert (k3.kind, k3.min, k3.max, k3.default) == ("discrete", 0, 1, 0)
+        for k in (k4, k5):
+            assert (k.kind, k.min, k.max, k.default) == ("discrete", 1, 96, 1)
+
+    def test_motion_sift_structured_features_30(self):
+        s = load_spec("motion_sift")
+        assert s.structured_feature_count() == 30
+        assert s.unstructured_feature_count() == 56
+
+    def test_normalization_bounds(self):
+        for s in all_specs():
+            for p in s.params:
+                assert p.normalize(p.min) == pytest.approx(0.0)
+                assert p.normalize(p.max) == pytest.approx(1.0)
+                mid = p.normalize((p.min + p.max) / 2)
+                assert 0.0 <= mid <= 1.0
+
+    def test_log_normalization(self):
+        s = load_spec("pose")
+        thr = s.params[1]
+        assert thr.log
+        assert thr.normalize(math.sqrt(thr.min * thr.max)) == pytest.approx(0.5)
+
+    def test_graph_is_dag_and_connected(self):
+        for s in all_specs():
+            names = [st.name for st in s.stages]
+            assert len(set(names)) == len(names)
+            seen = set()
+            for st in s.stages:  # stages listed in topological order
+                for dep in st.deps:
+                    assert dep in seen, f"{s.name}: {st.name} dep {dep}"
+                seen.add(st.name)
+
+    def test_motion_sift_has_two_branches(self):
+        s = load_spec("motion_sift")
+        assert s.branches == [0, 1]
+        seq, bmat = s.combine_matrices()
+        assert seq == [0.0, 0.0]
+        assert bmat == [[1.0, 0.0], [0.0, 1.0]]
+
+    def test_pose_is_a_chain(self):
+        s = load_spec("pose")
+        assert s.branches == []
+        seq, bmat = s.combine_matrices()
+        assert all(x == 1.0 for x in seq)
+
+    def test_group_params_cover_all_tunables(self):
+        # Every knob must be owned by at least one structured group,
+        # otherwise the structured solver could not react to it.
+        for s in all_specs():
+            owned = set()
+            for g in s.groups:
+                owned.update(g.params)
+            assert owned == set(range(s.num_vars))

@@ -1,0 +1,53 @@
+//! Per-figure regeneration benchmarks: one bench per paper table/figure
+//! (DESIGN.md §Experiment index), timing the full regeneration path on a
+//! reduced protocol so `cargo bench` stays fast. The full-protocol run is
+//! `repro figures --all`.
+//!
+//! Run: `cargo bench --bench figures`
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::experiments::{fig6, fig7, fig8};
+use iptune::learner::Variant;
+use iptune::metrics::convex_hull;
+use iptune::trace::TraceSet;
+use iptune::tuner::policy::pure_payoffs;
+use iptune::util::bench::{black_box, Bencher};
+
+fn main() {
+    let spec_dir = find_spec_dir(None).unwrap();
+    let app = app_by_name("pose", &spec_dir).unwrap();
+    let ms = app_by_name("motion_sift", &spec_dir).unwrap();
+    let traces_pose = TraceSet::generate(&app, 15, 200, 7);
+    let traces_ms = TraceSet::generate(&ms, 15, 200, 7);
+    let mut b = Bencher::quick();
+
+    // Fig. 5: payoff cloud + hull
+    b.bench("fig5/payoffs+hull", || {
+        let payoffs = traces_pose.payoffs();
+        black_box(convex_hull(&payoffs));
+    });
+
+    // Fig. 6: three online predictors, 400 frames
+    b.bench("fig6/3_degrees_x_400_frames", || {
+        black_box(fig6::compute(&app.spec, &traces_pose, Variant::Unstructured, 400, 5));
+    });
+
+    // Fig. 7: structured vs unstructured, 400 frames
+    b.bench("fig7/2_variants_x_400_frames", || {
+        black_box(fig7::compute(&ms.spec, &traces_ms, 400, 5));
+    });
+
+    // Fig. 8: one policy run (the sweep is EPSILONS.len() x this)
+    b.bench("fig8/one_policy_400_frames", || {
+        black_box(fig8::run_policy(&ms.spec, &traces_ms, 0.03, 120.0, 400, 5));
+    });
+
+    // Fig. 8 payoff region
+    b.bench("fig8/pure_payoffs+hull", || {
+        let p = pure_payoffs(&traces_ms, 120.0);
+        black_box(convex_hull(&p));
+    });
+
+    println!("\nfull-protocol regeneration: `./target/release/repro figures --all`");
+}

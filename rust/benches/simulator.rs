@@ -1,0 +1,72 @@
+//! Substrate benchmarks: the cluster simulator's frame throughput (it
+//! generates 30×1000-frame trace sets for every experiment), the trace
+//! JSON codec, the critical-path kernel, and the streaming engine's
+//! end-to-end frame rate.
+//!
+//! Run: `cargo bench --bench simulator`
+
+use std::sync::Arc;
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::dataflow::critical_path;
+use iptune::engine::{run_stream_blocking, EngineConfig};
+use iptune::simulator::{Cluster, ClusterSim, NoiseModel};
+use iptune::trace::TraceSet;
+use iptune::util::bench::{black_box, Bencher};
+use iptune::util::Rng;
+
+fn main() {
+    let spec_dir = find_spec_dir(None).unwrap();
+    let mut b = Bencher::default();
+
+    for name in ["pose", "motion_sift"] {
+        let app = app_by_name(name, &spec_dir).unwrap();
+        let ks = app.spec.defaults();
+        let mut sim = ClusterSim::new(Cluster::default(), NoiseModel::default(), 1);
+        let mut f = 0usize;
+        b.bench(&format!("simulator/{name}/run_frame"), || {
+            black_box(sim.run_frame(&app, &ks, f % 1000));
+            f += 1;
+        });
+
+        let g = &app.graph;
+        let mut rng = Rng::new(3);
+        let w: Vec<f64> = (0..g.len()).map(|_| rng.range_f64(0.5, 50.0)).collect();
+        b.bench(&format!("dataflow/{name}/critical_path"), || {
+            black_box(critical_path(g, black_box(&w)));
+        });
+    }
+
+    // trace generation + serialization round-trip
+    let app = app_by_name("pose", &spec_dir).unwrap();
+    b.bench("trace/generate_5cfg_x_100f", || {
+        black_box(TraceSet::generate(&app, 5, 100, 7));
+    });
+    let ts = TraceSet::generate(&app, 10, 200, 7);
+    b.bench("trace/json_encode", || {
+        black_box(ts.to_json().to_string());
+    });
+    let text = ts.to_json().to_string();
+    println!("trace json size: {} KiB (10 cfg x 200 frames)", text.len() / 1024);
+    b.bench("trace/json_decode", || {
+        let v = iptune::util::Json::parse(black_box(&text)).unwrap();
+        black_box(TraceSet::from_json(&v).unwrap());
+    });
+
+    // streaming engine throughput (no pacing)
+    let app = Arc::new(app_by_name("motion_sift", &spec_dir).unwrap());
+    b.bench("engine/stream_100_frames", || {
+        black_box(run_stream_blocking(
+            Arc::clone(&app),
+            app.spec.defaults(),
+            EngineConfig { frames: 100, ..Default::default() },
+        ));
+    });
+    if let Some(r) = b.result("engine/stream_100_frames") {
+        println!(
+            "\nengine throughput ~ {:.0} frames/s (unpaced, 10-stage graph)",
+            100.0 / (r.per_iter_ns() / 1e9)
+        );
+    }
+}

@@ -1,0 +1,72 @@
+//! Paper claim C3 (Sec. 4.3): "it takes 30 and 56 features to describe
+//! the structured and unstructured spaces ... updating of the structured
+//! predictor should be twice as fast in practice."
+//!
+//! Measures online-update and predict throughput of both variants on both
+//! apps, plus the degree sweep (linear/quadratic/cubic cost).
+//!
+//! Run: `cargo bench --bench structure_speedup`
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::learner::{StagePredictor, Variant};
+use iptune::util::bench::{black_box, Bencher};
+use iptune::util::Rng;
+
+fn main() {
+    let spec_dir = find_spec_dir(None).unwrap();
+    let mut b = Bencher::default();
+
+    for name in ["pose", "motion_sift"] {
+        let app = app_by_name(name, &spec_dir).unwrap();
+        let mut rng = Rng::new(2);
+        let n_stages = app.graph.len();
+        let stage_ms: Vec<f64> = (0..n_stages).map(|_| rng.range_f64(1.0, 80.0)).collect();
+        let e2e: f64 = stage_ms.iter().sum();
+        let us: Vec<Vec<f64>> =
+            (0..64).map(|_| (0..5).map(|_| rng.f64()).collect()).collect();
+
+        for variant in [Variant::Unstructured, Variant::Structured] {
+            let mut pred = StagePredictor::new(&app.spec, variant, 3);
+            let feats = pred.num_features();
+            let mut i = 0usize;
+            b.bench(&format!("{name}/{}/update ({feats}f)", variant.as_str()), || {
+                let u = &us[i % us.len()];
+                black_box(pred.observe(u, &stage_ms, e2e));
+                i += 1;
+            });
+            b.bench(&format!("{name}/{}/predict ({feats}f)", variant.as_str()), || {
+                let u = &us[i % us.len()];
+                black_box(pred.predict(u));
+                i += 1;
+            });
+        }
+        for degree in [1usize, 2, 3] {
+            let mut pred = StagePredictor::new(&app.spec, Variant::Unstructured, degree);
+            let mut i = 0usize;
+            b.bench(&format!("{name}/unstructured/deg{degree}/update"), || {
+                let u = &us[i % us.len()];
+                black_box(pred.observe(u, &stage_ms, e2e));
+                i += 1;
+            });
+        }
+    }
+
+    // headline ratio
+    let un = b
+        .results
+        .iter()
+        .find(|r| r.name.starts_with("motion_sift/unstructured/update"))
+        .unwrap()
+        .per_iter_ns();
+    let st = b
+        .results
+        .iter()
+        .find(|r| r.name.starts_with("motion_sift/structured/update"))
+        .unwrap()
+        .per_iter_ns();
+    println!(
+        "\nC3: MotionSIFT structured update speedup = {:.2}x (paper: ~2x from 30 vs 56 features)",
+        un / st
+    );
+}

@@ -1,0 +1,87 @@
+//! Hot-path benchmarks: the per-frame operations of the controller —
+//! predict over the candidate batch, the OGD update, the constrained
+//! solve, and a full tuner step — on both backends. The controller must
+//! stay far below the 33 ms frame budget (and below the 50 ms pose
+//! bound), otherwise the tuner itself would be the bottleneck.
+//!
+//! Run: `cargo bench --bench tuner_hot_path`
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::learner::Variant;
+use iptune::runtime::native::NativeBackend;
+use iptune::runtime::xla::XlaBackend;
+use iptune::runtime::Backend;
+use iptune::trace::TraceSet;
+use iptune::tuner::{EpsGreedyController, TunerConfig};
+use iptune::util::bench::{black_box, Bencher};
+use iptune::util::Rng;
+
+fn main() {
+    let spec_dir = find_spec_dir(None).unwrap();
+    let app = app_by_name("motion_sift", &spec_dir).unwrap();
+    let mut rng = Rng::new(1);
+    let candidates: Vec<Vec<f64>> =
+        (0..30).map(|_| (0..5).map(|_| rng.f64()).collect()).collect();
+    let rewards: Vec<f64> = (0..30).map(|_| rng.f64()).collect();
+    let y = vec![60.0, 90.0];
+    let u = vec![0.4, 0.6, 0.5, 0.3, 0.7];
+
+    let mut b = Bencher::default();
+
+    // --- native backend -------------------------------------------------
+    let mut native = NativeBackend::structured(&app.spec);
+    for _ in 0..200 {
+        native.update(&u, &y);
+    }
+    b.bench("native/predict_30cand", || {
+        black_box(native.predict(black_box(&candidates)));
+    });
+    b.bench("native/update", || {
+        native.update(black_box(&u), black_box(&y));
+    });
+    b.bench("native/solve_30cand", || {
+        black_box(native.solve(black_box(&candidates), &rewards, 100.0));
+    });
+
+    // --- XLA backend (skipped without artifacts) ------------------------
+    match XlaBackend::from_default_artifacts(&app.spec, Variant::Structured) {
+        Ok(mut xla) => {
+            for _ in 0..50 {
+                xla.update(&u, &y);
+            }
+            b.bench("xla/predict_30cand", || {
+                black_box(xla.predict(black_box(&candidates)));
+            });
+            b.bench("xla/update", || {
+                xla.update(black_box(&u), black_box(&y));
+            });
+            b.bench("xla/solve_30cand", || {
+                black_box(xla.solve(black_box(&candidates), &rewards, 100.0));
+            });
+        }
+        Err(e) => eprintln!("skipping xla benches: {e}"),
+    }
+
+    // --- full controller step -------------------------------------------
+    let traces = TraceSet::generate(&app, 30, 300, 7);
+    let backend = NativeBackend::structured(&app.spec);
+    let cfg = TunerConfig { epsilon: 0.03, bound_ms: 100.0, warmup_frames: 20 };
+    let mut ctl = EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, 3);
+    let mut frame = 0usize;
+    b.bench("controller/full_step", || {
+        black_box(ctl.step(frame));
+        frame += 1;
+    });
+
+    // frame-budget report
+    if let Some(step) = b.result("controller/full_step") {
+        let budget_ms = 33.0;
+        let step_ms = step.per_iter_ns() / 1e6;
+        println!(
+            "\ncontroller step = {:.3} ms ({:.2}% of the 33 ms frame budget)",
+            step_ms,
+            100.0 * step_ms / budget_ms
+        );
+    }
+}

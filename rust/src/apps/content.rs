@@ -1,0 +1,111 @@
+//! Synthetic scene content streams — the stand-in for the paper's
+//! annotated video sequences (Sec. 4.1).
+//!
+//! Content drives the data-dependent part of stage costs (paper Sec. 2.2:
+//! "application performance may be data-dependent, and for this reason
+//! may change over time"). The pose stream reproduces the documented
+//! non-stationarity of Fig. 6: "the increase in the pose detection
+//! dataset at frame 600 corresponds to a change in the scene, in which a
+//! notebook appeared", which "increased the number of SIFT features".
+
+/// Scene content for one frame (fields unused by an app stay at their
+/// defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Content {
+    /// Number of SIFT(-like) interest points in the full-resolution frame.
+    pub features: f64,
+    /// Objects of interest in the scene (pose app).
+    pub objects: usize,
+    /// Faces visible (MotionSIFT app).
+    pub faces: usize,
+    /// Is a control gesture being performed this frame (MotionSIFT app)?
+    pub gesture: bool,
+    /// Monotone scene-segment id (bumps at scripted scene changes).
+    pub scene_id: usize,
+}
+
+impl Default for Content {
+    fn default() -> Self {
+        Content { features: 500.0, objects: 1, faces: 1, gesture: false, scene_id: 0 }
+    }
+}
+
+/// The pose-detection scene script: one object, slow feature-count
+/// oscillation from object motion, and a notebook entering at frame 600
+/// (+~75% SIFT features, second object).
+pub fn pose_content(frame: usize) -> Content {
+    let t = frame as f64;
+    let wobble = 40.0 * (t / 37.0).sin() + 25.0 * (t / 11.0).cos();
+    let (base, objects, scene_id) = if frame >= 600 {
+        (1000.0, 2, 1) // notebook appeared (paper Fig. 2 / Sec. 4.2)
+    } else {
+        (570.0, 1, 0)
+    };
+    Content {
+        features: (base + wobble).max(50.0),
+        objects,
+        faces: 0,
+        gesture: false,
+        scene_id,
+    }
+}
+
+/// The TV-control scene script: a single viewer (paper Fig. 3), gestures
+/// performed in bursts (~20-frame gestures every ~90 frames), moderate
+/// motion-energy wobble.
+pub fn motion_sift_content(frame: usize) -> Content {
+    let t = frame as f64;
+    let gesture = (frame % 90) < 20;
+    let motion_boost = if gesture { 140.0 } else { 0.0 };
+    let wobble = 30.0 * (t / 23.0).sin();
+    Content {
+        features: (430.0 + motion_boost + wobble).max(50.0),
+        objects: 0,
+        faces: 1,
+        gesture,
+        scene_id: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pose_scene_change_at_600() {
+        let before = pose_content(599);
+        let after = pose_content(600);
+        assert_eq!(before.scene_id, 0);
+        assert_eq!(after.scene_id, 1);
+        assert!(after.features > before.features * 1.4);
+        assert_eq!(after.objects, 2);
+    }
+
+    #[test]
+    fn pose_content_deterministic() {
+        assert_eq!(pose_content(123), pose_content(123));
+    }
+
+    #[test]
+    fn pose_features_positive_and_bounded() {
+        for f in 0..1000 {
+            let c = pose_content(f);
+            assert!(c.features > 0.0 && c.features < 1200.0);
+        }
+    }
+
+    #[test]
+    fn motion_sift_gesture_schedule() {
+        assert!(motion_sift_content(5).gesture);
+        assert!(!motion_sift_content(45).gesture);
+        // gestures raise motion feature count
+        assert!(motion_sift_content(5).features > motion_sift_content(45).features);
+    }
+
+    #[test]
+    fn gesture_duty_cycle_reasonable() {
+        let on = (0..900).filter(|&f| motion_sift_content(f).gesture).count();
+        // ~22% of frames contain a gesture
+        assert!(on > 150 && on < 300, "{on}");
+    }
+}

@@ -1,0 +1,109 @@
+//! The paper's two case-study applications (Sec. 2.1), rebuilt as
+//! analytic cost + fidelity models over the same data-flow graphs and
+//! tunable-parameter tables.
+//!
+//! The original evaluation ran real vision code (SIFT + RANSAC pose
+//! registration; MotionSIFT + SVM gesture recognition) on a 15-node
+//! cluster. Neither the applications nor the testbed are available, so —
+//! per the substitution ledger in DESIGN.md §1 — each stage's latency is
+//! modeled as a smooth nonlinear function of the knobs and the scene
+//! content, with Amdahl-style data-parallel speedup and per-worker
+//! dispatch overhead. The *learning problem* the tuner faces (predict
+//! stage latencies from knob settings, online, under drift) is preserved.
+
+pub mod content;
+pub mod motion_sift;
+pub mod pose;
+pub mod registry;
+pub mod spec;
+
+pub use content::Content;
+pub use spec::AppSpec;
+
+use crate::dataflow::Graph;
+
+/// Per-stage cost + fidelity model of one application.
+pub trait CostModel: Send + Sync {
+    /// Deterministic content stream (scene script) — frame index to scene
+    /// content. Drives data-dependent costs (paper Sec. 2.2) and the
+    /// Fig. 6 non-stationarity.
+    fn content(&self, frame: usize) -> Content;
+
+    /// Noiseless latency (ms) of one execution of `stage` under raw knob
+    /// vector `ks`, given `workers` granted data-parallel workers.
+    fn stage_latency(&self, stage: usize, ks: &[f64], content: &Content, workers: usize) -> f64;
+
+    /// Data-parallel workers *requested* by `stage` under `ks` (1 for
+    /// sequential stages).
+    fn requested_workers(&self, stage: usize, ks: &[f64]) -> usize;
+
+    /// Noiseless fidelity r(x, k) ∈ [0, 1] (paper Eq. 10 / Eq. 11).
+    fn fidelity(&self, ks: &[f64], content: &Content) -> f64;
+}
+
+/// An application: spec + graph + cost model.
+pub struct App {
+    pub spec: AppSpec,
+    pub graph: Graph,
+    pub model: Box<dyn CostModel>,
+}
+
+impl App {
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Noiseless per-stage latencies for one frame (the simulator adds
+    /// noise and core contention on top).
+    pub fn stage_latencies(&self, ks: &[f64], content: &Content) -> Vec<f64> {
+        (0..self.graph.len())
+            .map(|s| {
+                let w = self.model.requested_workers(s, ks);
+                self.model.stage_latency(s, ks, content, w)
+            })
+            .collect()
+    }
+}
+
+/// Amdahl-style data-parallel execution time: a serial fraction, a
+/// perfectly dividable fraction, and a per-worker dispatch overhead that
+/// makes over-parallelization *hurt* (the U-shape the tuner must learn).
+pub fn amdahl(t: f64, workers: usize, serial_frac: f64, per_worker_ov: f64) -> f64 {
+    let p = workers.max(1) as f64;
+    t * (serial_frac + (1.0 - serial_frac) / p) + per_worker_ov * (p - 1.0)
+}
+
+/// Pixel fraction remaining after proportional down-scaling by factor `s`
+/// (s = 1 keeps the full frame; s = 10 keeps 1% of the pixels).
+pub fn pixel_fraction(s: f64) -> f64 {
+    1.0 / (s * s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn amdahl_monotone_then_overhead() {
+        let t1 = amdahl(100.0, 1, 0.1, 0.1);
+        let t8 = amdahl(100.0, 8, 0.1, 0.1);
+        let t96 = amdahl(100.0, 96, 0.1, 0.5);
+        assert!((t1 - 100.0).abs() < 1e-9);
+        assert!(t8 < t1);
+        // with enough per-worker overhead, 96 workers is worse than 8
+        assert!(t96 > amdahl(100.0, 8, 0.1, 0.5));
+    }
+
+    #[test]
+    fn amdahl_serial_floor() {
+        // even with unbounded parallelism the serial fraction remains
+        let t = amdahl(100.0, 10_000, 0.25, 0.0);
+        assert!(t >= 25.0);
+    }
+
+    #[test]
+    fn pixel_fraction_bounds() {
+        assert_eq!(pixel_fraction(1.0), 1.0);
+        assert!((pixel_fraction(10.0) - 0.01).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,216 @@
+//! Gesture-based TV control application model (paper Fig. 4, Table 2;
+//! Chen et al. 2010): source → copy → { face detection ‖ motion-SIFT
+//! extraction } → feature filter/aggregate → SVM classify.
+//!
+//! Calibration targets: the default configuration costs ~260 ms
+//! end-to-end (vs the 100 ms responsive-UI bound); the critical path is
+//! max(face branch, motion branch), so the tuner must learn *which*
+//! branch dominates where in knob space — the structured predictor's
+//! Eq. 9 case study.
+
+use super::content::{motion_sift_content, Content};
+use super::{amdahl, pixel_fraction, CostModel};
+
+/// Stage indices (topological, matching `specs/motion_sift.json`).
+pub const SOURCE: usize = 0;
+pub const COPY: usize = 1;
+pub const FACE_SCALE: usize = 2;
+pub const FACE_DETECT: usize = 3;
+pub const MOTION_SCALE: usize = 4;
+pub const PAIR_ACCUM: usize = 5;
+pub const MOTION_EXTRACT: usize = 6;
+pub const FILTER_AGG: usize = 7;
+pub const CLASSIFY: usize = 8;
+pub const SINK: usize = 9;
+
+/// Knob indices (Table 2).
+pub const K_SCALE_FACE: usize = 0;
+pub const K_SCALE_MOTION: usize = 1;
+pub const K_FACE_QUALITY: usize = 2;
+pub const K_PAR_EXTRACT: usize = 3;
+pub const K_PAR_FACE: usize = 4;
+
+/// Global cost scale calibrating the simulated testbed so the 100 ms
+/// responsive-UI bound splits the random action space (paper Fig. 5
+/// right: costs ~0.1–0.75 s with the bound near the fast edge).
+const COST_SCALE: f64 = 2.5;
+
+pub struct MotionSiftModel;
+
+impl MotionSiftModel {
+    /// Motion-SIFT features extracted at motion-branch scale `s`.
+    fn motion_features(content: &Content, s: f64) -> f64 {
+        content.features / s.powf(1.3)
+    }
+
+    /// K3 semantics: 0 = highest quality (default, slower), 1 = fast/low.
+    fn high_quality(ks: &[f64]) -> bool {
+        ks[K_FACE_QUALITY].round() < 0.5
+    }
+}
+
+impl CostModel for MotionSiftModel {
+    fn content(&self, frame: usize) -> Content {
+        motion_sift_content(frame)
+    }
+
+    fn requested_workers(&self, stage: usize, ks: &[f64]) -> usize {
+        match stage {
+            FACE_DETECT => ks[K_PAR_FACE].round().max(1.0) as usize,
+            MOTION_EXTRACT => ks[K_PAR_EXTRACT].round().max(1.0) as usize,
+            _ => 1,
+        }
+    }
+
+    fn stage_latency(&self, stage: usize, ks: &[f64], content: &Content, workers: usize) -> f64 {
+        let s_face = ks[K_SCALE_FACE].max(1.0);
+        let s_motion = ks[K_SCALE_MOTION].max(1.0);
+        COST_SCALE * match stage {
+            SOURCE => 0.6,
+            COPY => 1.0,
+            FACE_SCALE => 0.8 + 0.6 * pixel_fraction(s_face),
+            // cascade detector: cost ∝ pixels, higher quality = more
+            // cascade stages + finer sliding-window stride
+            FACE_DETECT => {
+                let quality = if Self::high_quality(ks) { 2.0 } else { 1.0 };
+                let base = 4.0 + 125.0 * pixel_fraction(s_face) * quality
+                    + 1.5 * content.faces as f64;
+                amdahl(base, workers, 0.07, 0.16)
+            }
+            MOTION_SCALE => 0.8 + 0.6 * pixel_fraction(s_motion),
+            PAIR_ACCUM => 1.2,
+            // optical-flow SIFT over frame pairs: pixel term + per-feature
+            // descriptor term, data-parallel over tiles
+            MOTION_EXTRACT => {
+                let base = 6.0
+                    + 145.0 * pixel_fraction(s_motion)
+                    + 0.055 * Self::motion_features(content, s_motion);
+                amdahl(base, workers, 0.06, 0.16)
+            }
+            FILTER_AGG => 2.5,
+            CLASSIFY => 4.0, // fixed SVM bank over the histogram
+            SINK => 0.5,
+            _ => panic!("motion_sift: unknown stage {stage}"),
+        }
+    }
+
+    /// Paper Eq. 11: r = F1 = 2PR/(P+R). Precision suffers from low-
+    /// quality face gating (false positives leak through); recall suffers
+    /// from scaling either branch (missed gestures / missed faces).
+    fn fidelity(&self, ks: &[f64], _content: &Content) -> f64 {
+        let s_face = ks[K_SCALE_FACE].max(1.0);
+        let s_motion = ks[K_SCALE_MOTION].max(1.0);
+        let hq = Self::high_quality(ks);
+        let precision = 0.95
+            * if hq { 1.0 } else { 0.86 }
+            * (-0.022 * (s_face - 1.0)).exp();
+        let recall = 0.93
+            * (-0.055 * (s_motion - 1.0)).exp()
+            * (-0.020 * (s_face - 1.0)).exp()
+            * if hq { 1.0 } else { 0.97 };
+        2.0 * precision * recall / (precision + recall)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::spec::{find_spec_dir, AppSpec};
+    use crate::dataflow::{critical_path, Graph};
+
+    fn spec() -> AppSpec {
+        AppSpec::load_named("motion_sift", find_spec_dir(None).unwrap()).unwrap()
+    }
+
+    fn e2e(ks: &[f64], frame: usize) -> f64 {
+        let m = MotionSiftModel;
+        let c = m.content(frame);
+        let g = Graph::from_spec(&spec());
+        let w: Vec<f64> = (0..g.len())
+            .map(|st| m.stage_latency(st, ks, &c, m.requested_workers(st, ks)))
+            .collect();
+        critical_path(&g, &w)
+    }
+
+    #[test]
+    fn default_config_exceeds_100ms() {
+        let lat = e2e(&spec().defaults(), 100);
+        assert!(lat > 150.0, "default latency {lat}");
+    }
+
+    #[test]
+    fn tuned_config_meets_100ms() {
+        let ks = [2.0, 2.5, 1.0, 8.0, 8.0];
+        let lat = e2e(&ks, 100);
+        assert!(lat < 100.0, "tuned latency {lat}");
+        let m = MotionSiftModel;
+        assert!(m.fidelity(&ks, &m.content(100)) > 0.6);
+    }
+
+    #[test]
+    fn default_fidelity_high() {
+        let m = MotionSiftModel;
+        let f = m.fidelity(&spec().defaults(), &m.content(0));
+        assert!(f > 0.9, "default F1 {f}");
+    }
+
+    #[test]
+    fn critical_path_is_max_of_branches() {
+        // cripple only the motion branch: e2e should track it
+        let fast_face = e2e(&[10.0, 1.0, 1.0, 1.0, 96.0], 100);
+        let fast_motion = e2e(&[1.0, 10.0, 0.0, 96.0, 1.0], 100);
+        let both_fast = e2e(&[10.0, 10.0, 1.0, 8.0, 8.0], 100);
+        assert!(both_fast < fast_face.min(fast_motion));
+    }
+
+    #[test]
+    fn quality_knob_trades_cost_for_precision() {
+        let m = MotionSiftModel;
+        let c = m.content(0);
+        let hq = [1.0, 1.0, 0.0, 1.0, 1.0];
+        let lq = [1.0, 1.0, 1.0, 1.0, 1.0];
+        let t_hq = m.stage_latency(FACE_DETECT, &hq, &c, 1);
+        let t_lq = m.stage_latency(FACE_DETECT, &lq, &c, 1);
+        assert!(t_hq > t_lq * 1.3);
+        assert!(m.fidelity(&hq, &c) > m.fidelity(&lq, &c));
+    }
+
+    #[test]
+    fn branch_scaling_only_hits_its_branch() {
+        let m = MotionSiftModel;
+        let c = m.content(0);
+        let base = [1.0, 1.0, 0.0, 1.0, 1.0];
+        let scaled_motion = [1.0, 8.0, 0.0, 1.0, 1.0];
+        assert_eq!(
+            m.stage_latency(FACE_DETECT, &base, &c, 1),
+            m.stage_latency(FACE_DETECT, &scaled_motion, &c, 1)
+        );
+        assert!(
+            m.stage_latency(MOTION_EXTRACT, &scaled_motion, &c, 1)
+                < m.stage_latency(MOTION_EXTRACT, &base, &c, 1) * 0.3
+        );
+    }
+
+    #[test]
+    fn gesture_frames_cost_more_motion_extraction() {
+        let m = MotionSiftModel;
+        let ks = spec().defaults();
+        let on = m.stage_latency(MOTION_EXTRACT, &ks, &m.content(5), 1);
+        let off = m.stage_latency(MOTION_EXTRACT, &ks, &m.content(45), 1);
+        assert!(on > off);
+    }
+
+    #[test]
+    fn fidelity_in_unit_interval_across_grid() {
+        let m = MotionSiftModel;
+        let c = m.content(0);
+        for sf in [1.0, 5.0, 10.0] {
+            for sm in [1.0, 5.0, 10.0] {
+                for q in [0.0, 1.0] {
+                    let f = m.fidelity(&[sf, sm, q, 4.0, 4.0], &c);
+                    assert!((0.0..=1.0).contains(&f));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Pose-detection application model (paper Fig. 1, Table 1; Collet et
+//! al. 2009): scaler → SIFT → model matching → clustering → RANSAC pose.
+//!
+//! Calibration targets (derived from the paper's setting): the default
+//! configuration (no scaling, unbounded features, no parallelism)
+//! maximizes fidelity and costs ~350 ms end-to-end on the simulated
+//! testbed — far above the 50 ms visual-servoing bound — while aggressive
+//! scaling + parallelism reaches ~25 ms at reduced fidelity, so the 50 ms
+//! constraint is *feasible but tight*, as in the paper's Fig. 5 (left).
+
+use super::content::{pose_content, Content};
+use super::{amdahl, pixel_fraction, CostModel};
+
+/// Stage indices (topological, matching `specs/pose.json`).
+pub const SOURCE: usize = 0;
+pub const SCALER: usize = 1;
+pub const SIFT: usize = 2;
+pub const MATCH: usize = 3;
+pub const CLUSTER: usize = 4;
+pub const RANSAC: usize = 5;
+pub const SINK: usize = 6;
+
+/// Knob indices (Table 1).
+pub const K_SCALE: usize = 0;
+pub const K_THRESHOLD: usize = 1;
+pub const K_PAR_SIFT: usize = 2;
+pub const K_PAR_MATCH: usize = 3;
+pub const K_PAR_CLUSTER: usize = 4;
+
+/// Number of 3D object models matched against (paper: "a set of
+/// previously constructed 3D models").
+const NUM_MODELS: f64 = 6.0;
+
+/// Global cost scale calibrating the simulated testbed so the 50 ms
+/// visual-servoing bound splits the random action space (paper Fig. 5
+/// left: costs ~0.05–0.75 s with the bound at the fast edge).
+const COST_SCALE: f64 = 1.5;
+
+pub struct PoseModel;
+
+impl PoseModel {
+    /// SIFT features surviving the down-scaler at scale factor `s`.
+    fn extracted(content: &Content, s: f64) -> f64 {
+        // interest points die off a bit slower than pixel count
+        content.features / s.powf(1.4)
+    }
+
+    /// Features surviving the K2 threshold.
+    fn used(content: &Content, ks: &[f64]) -> f64 {
+        Self::extracted(content, ks[K_SCALE]).min(ks[K_THRESHOLD])
+    }
+}
+
+impl CostModel for PoseModel {
+    fn content(&self, frame: usize) -> Content {
+        pose_content(frame)
+    }
+
+    fn requested_workers(&self, stage: usize, ks: &[f64]) -> usize {
+        match stage {
+            SIFT => ks[K_PAR_SIFT].round().max(1.0) as usize,
+            MATCH => ks[K_PAR_MATCH].round().max(1.0) as usize,
+            CLUSTER => ks[K_PAR_CLUSTER].round().max(1.0) as usize,
+            _ => 1,
+        }
+    }
+
+    fn stage_latency(&self, stage: usize, ks: &[f64], content: &Content, workers: usize) -> f64 {
+        let s = ks[K_SCALE].max(1.0);
+        let px = pixel_fraction(s);
+        let n_ext = Self::extracted(content, s);
+        let n_used = Self::used(content, ks);
+        COST_SCALE * match stage {
+            SOURCE => 0.8,
+            // proportional down-scaler reads the full frame
+            SCALER => 1.0 + 0.9 * (0.35 + 0.65 * px),
+            // dense interest-point detection + descriptors: pixel term +
+            // per-feature descriptor term, data-parallel over tiles
+            SIFT => amdahl(6.0 + 150.0 * px + 0.10 * n_ext, workers, 0.08, 0.18),
+            // descriptor matching against NUM_MODELS model databases,
+            // data-parallel over models/features
+            MATCH => amdahl(4.0 + 0.028 * n_used * NUM_MODELS, workers, 0.10, 0.09),
+            // position clustering of matched features
+            CLUSTER => amdahl(2.0 + 0.065 * n_used, workers, 0.12, 0.12),
+            // RANSAC + nonlinear 6D pose refinement per instance
+            RANSAC => 3.0 + 1.6 * content.objects as f64 + 0.008 * n_used,
+            SINK => 0.5,
+            _ => panic!("pose: unknown stage {stage}"),
+        }
+    }
+
+    /// Paper Eq. 10: r = (1/n) Σ_i R_i exp(-(wτ·τ_i + wθ·θ_i)) with
+    /// wτ = 0.7, wθ = 0.3. Recognition probability and pose errors are
+    /// analytic functions of feature budget and scaling.
+    fn fidelity(&self, ks: &[f64], content: &Content) -> f64 {
+        let s = ks[K_SCALE].max(1.0);
+        let n_used = Self::used(content, ks);
+        // fraction of the feature budget the matcher needs for reliable
+        // recognition (~35% of the scene's native features)
+        let feat_quality = (n_used / (0.35 * content.features)).min(1.0);
+        let scale_penalty = (-0.06 * (s - 1.0)).exp();
+        let p_rec = (0.98 * feat_quality.powf(0.7) * scale_penalty).clamp(0.0, 1.0);
+        // translation/rotation errors grow as resolution and features drop
+        let tau = 0.10 + 0.35 * (s - 1.0) / 9.0 + 0.30 * (1.0 - feat_quality);
+        let theta = 0.08 + 0.30 * (s - 1.0) / 9.0 + 0.22 * (1.0 - feat_quality);
+        p_rec * (-(0.7 * tau + 0.3 * theta)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::spec::{find_spec_dir, AppSpec};
+
+    fn spec() -> AppSpec {
+        AppSpec::load_named("pose", find_spec_dir(None).unwrap()).unwrap()
+    }
+
+    fn e2e(ks: &[f64], frame: usize) -> f64 {
+        let m = PoseModel;
+        let c = m.content(frame);
+        (0..=SINK)
+            .map(|st| m.stage_latency(st, ks, &c, m.requested_workers(st, ks)))
+            .sum()
+    }
+
+    #[test]
+    fn default_config_is_slow_and_high_fidelity() {
+        let s = spec();
+        let ks = s.defaults();
+        let m = PoseModel;
+        let c = m.content(100);
+        let lat = e2e(&ks, 100);
+        assert!(lat > 250.0, "default latency {lat} should dwarf the 50 ms bound");
+        assert!(m.fidelity(&ks, &c) > 0.85);
+    }
+
+    #[test]
+    fn tuned_config_meets_50ms() {
+        // scaling 3x + parallelism: the kind of operating point the
+        // controller should find under L = 50 ms
+        let ks = [3.0, 2.0_f64.powi(31), 16.0, 10.0, 10.0];
+        let lat = e2e(&ks, 100);
+        assert!(lat < 50.0, "tuned latency {lat}");
+        let m = PoseModel;
+        let f = m.fidelity(&ks, &m.content(100));
+        assert!(f > 0.4, "tuned fidelity {f} should stay useful");
+    }
+
+    #[test]
+    fn fidelity_monotone_in_scale() {
+        let m = PoseModel;
+        let c = m.content(0);
+        let mut prev = f64::INFINITY;
+        for s in [1.0, 2.0, 4.0, 8.0, 10.0] {
+            let f = m.fidelity(&[s, 1e9, 1.0, 1.0, 1.0], &c);
+            assert!(f < prev);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn fidelity_degrades_with_tight_threshold() {
+        let m = PoseModel;
+        let c = m.content(0);
+        let loose = m.fidelity(&[1.0, 1e9, 1.0, 1.0, 1.0], &c);
+        let tight = m.fidelity(&[1.0, 50.0, 1.0, 1.0, 1.0], &c);
+        assert!(tight < loose * 0.75, "tight {tight} loose {loose}");
+    }
+
+    #[test]
+    fn parallelism_does_not_affect_fidelity() {
+        // paper Sec. 2.2: "the degree of parallelism ... generally does
+        // not affect fidelity"
+        let m = PoseModel;
+        let c = m.content(0);
+        let f1 = m.fidelity(&[2.0, 500.0, 1.0, 1.0, 1.0], &c);
+        let f2 = m.fidelity(&[2.0, 500.0, 96.0, 10.0, 10.0], &c);
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn sift_parallelism_u_shape() {
+        let m = PoseModel;
+        let c = m.content(0);
+        let ks = |p: f64| [1.0, 1e9, p, 1.0, 1.0];
+        let t1 = m.stage_latency(SIFT, &ks(1.0), &c, 1);
+        let t16 = m.stage_latency(SIFT, &ks(16.0), &c, 16);
+        let t96 = m.stage_latency(SIFT, &ks(96.0), &c, 96);
+        assert!(t16 < t1 * 0.3);
+        assert!(t96 > t16, "over-parallelization must cost: {t96} vs {t16}");
+    }
+
+    #[test]
+    fn scene_change_increases_sift_cost() {
+        let m = PoseModel;
+        let ks = spec().defaults();
+        let before = m.stage_latency(SIFT, &ks, &m.content(599), 1);
+        let after = m.stage_latency(SIFT, &ks, &m.content(600), 1);
+        assert!(after > before * 1.15, "frame-600 jump: {before} -> {after}");
+    }
+
+    #[test]
+    fn threshold_caps_match_cost() {
+        let m = PoseModel;
+        let c = m.content(0);
+        let uncapped = m.stage_latency(MATCH, &[1.0, 1e9, 1.0, 1.0, 1.0], &c, 1);
+        let capped = m.stage_latency(MATCH, &[1.0, 100.0, 1.0, 1.0, 1.0], &c, 1);
+        assert!(capped < uncapped * 0.5);
+    }
+}

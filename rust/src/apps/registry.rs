@@ -1,0 +1,74 @@
+//! Application registry: name → [`App`] construction.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::motion_sift::MotionSiftModel;
+use super::pose::PoseModel;
+use super::spec::AppSpec;
+use super::App;
+use crate::dataflow::Graph;
+
+/// Canonical application names.
+pub const APP_NAMES: [&str; 2] = ["pose", "motion_sift"];
+
+/// Construct an application by name (`pose` / `motion_sift`; hyphens are
+/// accepted for CLI friendliness), loading its spec from `spec_dir`.
+pub fn app_by_name(name: &str, spec_dir: impl AsRef<Path>) -> Result<App> {
+    let canonical = name.replace('-', "_");
+    let spec = AppSpec::load_named(&canonical, spec_dir)?;
+    let graph = Graph::from_spec(&spec);
+    let model: Box<dyn super::CostModel> = match canonical.as_str() {
+        "pose" => Box::new(PoseModel),
+        "motion_sift" => Box::new(MotionSiftModel),
+        _ => bail!("unknown app {name} (expected one of {APP_NAMES:?})"),
+    };
+    Ok(App { spec, graph, model })
+}
+
+/// All registered applications.
+pub fn all_apps(spec_dir: impl AsRef<Path>) -> Result<Vec<App>> {
+    APP_NAMES
+        .iter()
+        .map(|n| app_by_name(n, spec_dir.as_ref()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::spec::find_spec_dir;
+
+    #[test]
+    fn both_apps_construct() {
+        let dir = find_spec_dir(None).unwrap();
+        for name in APP_NAMES {
+            let app = app_by_name(name, &dir).unwrap();
+            assert_eq!(app.graph.len(), app.spec.stages.len());
+        }
+    }
+
+    #[test]
+    fn hyphenated_name_accepted() {
+        let dir = find_spec_dir(None).unwrap();
+        assert!(app_by_name("motion-sift", &dir).is_ok());
+    }
+
+    #[test]
+    fn unknown_name_rejected() {
+        let dir = find_spec_dir(None).unwrap();
+        assert!(app_by_name("nope", &dir).is_err());
+    }
+
+    #[test]
+    fn stage_latencies_align_with_graph() {
+        let dir = find_spec_dir(None).unwrap();
+        for app in all_apps(&dir).unwrap() {
+            let ks = app.spec.defaults();
+            let content = app.model.content(0);
+            let lats = app.stage_latencies(&ks, &content);
+            assert_eq!(lats.len(), app.graph.len());
+            assert!(lats.iter().all(|&l| l > 0.0));
+        }
+    }
+}

@@ -1,0 +1,431 @@
+//! Application specs: the tunable-parameter tables (paper Tables 1–2),
+//! the data-flow graphs (paper Figures 1 and 4) and the structured-learner
+//! group decomposition (paper Sec. 2.3), parsed from the shared
+//! `specs/*.json` files that the Python AOT pipeline reads too.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One tunable knob (a row of paper Table 1 or 2).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    /// Paper symbol, e.g. `K3`.
+    pub symbol: String,
+    /// `"continuous"` or `"discrete"`.
+    pub kind: String,
+    pub min: f64,
+    pub max: f64,
+    pub default: f64,
+    /// Normalize on a log scale (wide ranges: feature threshold, 1–96
+    /// parallelism).
+    pub log: bool,
+    pub description: String,
+}
+
+impl ParamSpec {
+    pub fn is_discrete(&self) -> bool {
+        self.kind == "discrete"
+    }
+
+    /// Map a raw knob value into `[0, 1]` (log scale where flagged).
+    pub fn normalize(&self, k: f64) -> f64 {
+        if self.log {
+            let (lo, hi) = (self.min.ln(), self.max.ln());
+            (k.max(self.min).ln() - lo) / (hi - lo)
+        } else {
+            (k - self.min) / (self.max - self.min)
+        }
+    }
+
+    /// Inverse of [`normalize`](Self::normalize); discrete knobs round to
+    /// the nearest integer and every result is clamped to the range.
+    pub fn denormalize(&self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0);
+        let raw = if self.log {
+            let (lo, hi) = (self.min.ln(), self.max.ln());
+            (lo + u * (hi - lo)).exp()
+        } else {
+            self.min + u * (self.max - self.min)
+        };
+        let raw = raw.clamp(self.min, self.max);
+        if self.is_discrete() {
+            raw.round().clamp(self.min, self.max)
+        } else {
+            raw
+        }
+    }
+}
+
+/// A vertex of the data-flow graph.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    /// Names of upstream stages (connectors point dep -> this stage).
+    pub deps: Vec<String>,
+    /// Does this stage contribute enough latency to get its own learned
+    /// model (paper Sec. 2.3)? Non-critical stages use a moving average.
+    pub critical: bool,
+    /// Indices (into `params`) of the knobs that affect this stage.
+    pub params: Vec<usize>,
+}
+
+/// A structured-learner group: a critical stage-set plus the knob subset
+/// that the dependency analysis associates with it (paper Sec. 2.3/3.3).
+#[derive(Debug, Clone)]
+pub struct GroupSpec {
+    pub name: String,
+    pub stages: Vec<String>,
+    pub params: Vec<usize>,
+    /// `None` for sequential groups (their predictions are summed);
+    /// `Some(b)` assigns the group to parallel branch `b` (branch sums
+    /// are combined with `max` — paper Eq. 9).
+    pub branch: Option<usize>,
+}
+
+/// A full application spec (the tuple (G, K, L) of paper Sec. 3).
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub name: String,
+    pub title: String,
+    pub description: String,
+    /// Latency bounds L evaluated in the paper's Fig. 8 (ms).
+    pub latency_bounds_ms: Vec<f64>,
+    pub frame_interval_ms: f64,
+    pub trace_frames: usize,
+    pub trace_configs: usize,
+    pub params: Vec<ParamSpec>,
+    pub stages: Vec<StageSpec>,
+    pub groups: Vec<GroupSpec>,
+    /// Polynomial degree of the cubic predictor (3 in the paper).
+    pub degree: usize,
+    /// Padded candidate-batch size of the AOT artifacts.
+    pub candidate_pad: usize,
+    /// Padded monomial-feature size of the AOT artifacts.
+    pub feature_pad: usize,
+}
+
+impl AppSpec {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec {}", path.display()))?;
+        let json = Json::parse(&text)
+            .with_context(|| format!("parsing spec {}", path.display()))?;
+        let spec = Self::from_json(&json)
+            .with_context(|| format!("decoding spec {}", path.display()))?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Decode from the shared JSON schema (`specs/*.json`).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let params = v
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    symbol: p.req("symbol")?.as_str()?.to_string(),
+                    kind: p.req("kind")?.as_str()?.to_string(),
+                    min: p.req("min")?.as_f64()?,
+                    max: p.req("max")?.as_f64()?,
+                    default: p.req("default")?.as_f64()?,
+                    log: p.req("log")?.as_bool()?,
+                    description: p.req("description")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let stages = v
+            .req("stages")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(StageSpec {
+                    name: s.req("name")?.as_str()?.to_string(),
+                    deps: s.req("deps")?.as_str_vec()?,
+                    critical: s.req("critical")?.as_bool()?,
+                    params: s.req("params")?.as_usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let groups = v
+            .req("groups")?
+            .as_arr()?
+            .iter()
+            .map(|g| {
+                let branch = match g.req("branch")? {
+                    Json::Null => None,
+                    b => Some(b.as_usize()?),
+                };
+                Ok(GroupSpec {
+                    name: g.req("name")?.as_str()?.to_string(),
+                    stages: g.req("stages")?.as_str_vec()?,
+                    params: g.req("params")?.as_usize_vec()?,
+                    branch,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AppSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            title: v.req("title")?.as_str()?.to_string(),
+            description: v.req("description")?.as_str()?.to_string(),
+            latency_bounds_ms: v.req("latency_bounds_ms")?.as_f64_vec()?,
+            frame_interval_ms: v.req("frame_interval_ms")?.as_f64()?,
+            trace_frames: v.req("trace_frames")?.as_usize()?,
+            trace_configs: v.req("trace_configs")?.as_usize()?,
+            params,
+            stages,
+            groups,
+            degree: v.req("degree")?.as_usize()?,
+            candidate_pad: v.req("candidate_pad")?.as_usize()?,
+            feature_pad: v.req("feature_pad")?.as_usize()?,
+        })
+    }
+
+    /// Load `specs/{name}.json` under the given directory.
+    pub fn load_named(name: &str, spec_dir: impl AsRef<Path>) -> Result<Self> {
+        Self::load(spec_dir.as_ref().join(format!("{name}.json")))
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Sorted distinct branch ids among the groups (may be empty).
+    pub fn branches(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.groups.iter().filter_map(|g| g.branch).collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+
+    pub fn stage_index(&self, name: &str) -> Option<usize> {
+        self.stages.iter().position(|s| s.name == name)
+    }
+
+    /// Normalize a raw knob vector into `[0,1]^m`.
+    pub fn normalize(&self, ks: &[f64]) -> Vec<f64> {
+        assert_eq!(ks.len(), self.params.len());
+        self.params
+            .iter()
+            .zip(ks)
+            .map(|(p, &k)| p.normalize(k))
+            .collect()
+    }
+
+    /// Denormalize `[0,1]^m` into a valid raw knob vector.
+    pub fn denormalize(&self, us: &[f64]) -> Vec<f64> {
+        assert_eq!(us.len(), self.params.len());
+        self.params
+            .iter()
+            .zip(us)
+            .map(|(p, &u)| p.denormalize(u))
+            .collect()
+    }
+
+    /// The paper's default configuration (maximizes fidelity, ignores
+    /// latency).
+    pub fn defaults(&self) -> Vec<f64> {
+        self.params.iter().map(|p| p.default).collect()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.params.is_empty() || self.stages.is_empty() {
+            bail!("spec {}: empty params or stages", self.name);
+        }
+        for p in &self.params {
+            if !(p.min < p.max) || p.default < p.min || p.default > p.max {
+                bail!("spec {}: bad range for {}", self.name, p.symbol);
+            }
+            if p.log && p.min <= 0.0 {
+                bail!("spec {}: log scale needs positive min ({})", self.name, p.symbol);
+            }
+        }
+        // stages listed in topological order, deps resolve, DAG by construction
+        let mut seen = std::collections::HashSet::new();
+        for s in &self.stages {
+            for d in &s.deps {
+                if !seen.contains(d.as_str()) {
+                    bail!("spec {}: stage {} dep {} not defined earlier", self.name, s.name, d);
+                }
+            }
+            if !seen.insert(s.name.as_str()) {
+                bail!("spec {}: duplicate stage {}", self.name, s.name);
+            }
+            for &pi in &s.params {
+                if pi >= self.params.len() {
+                    bail!("spec {}: stage {} param index {} out of range", self.name, s.name, pi);
+                }
+            }
+        }
+        for g in &self.groups {
+            for st in &g.stages {
+                if self.stage_index(st).is_none() {
+                    bail!("spec {}: group {} references unknown stage {}", self.name, g.name, st);
+                }
+            }
+            for &pi in &g.params {
+                if pi >= self.params.len() {
+                    bail!("spec {}: group {} param index {} out of range", self.name, g.name, pi);
+                }
+            }
+        }
+        // every knob owned by some group, else the structured solver is blind to it
+        let owned: std::collections::HashSet<usize> =
+            self.groups.iter().flat_map(|g| g.params.iter().copied()).collect();
+        if owned.len() != self.params.len() {
+            bail!("spec {}: some knobs not covered by any group", self.name);
+        }
+        Ok(())
+    }
+}
+
+/// Locate the repo's `specs/` directory: explicit arg, `$IPTUNE_SPECS`, or
+/// walking up from the current dir / executable (so tests, examples and
+/// installed binaries all find it).
+pub fn find_spec_dir(explicit: Option<&Path>) -> Result<std::path::PathBuf> {
+    if let Some(p) = explicit {
+        if p.is_dir() {
+            return Ok(p.to_path_buf());
+        }
+        bail!("spec dir {} not found", p.display());
+    }
+    if let Ok(env) = std::env::var("IPTUNE_SPECS") {
+        let p = std::path::PathBuf::from(env);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    let mut candidates: Vec<std::path::PathBuf> = Vec::new();
+    if let Ok(cwd) = std::env::current_dir() {
+        candidates.push(cwd);
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        candidates.push(exe);
+    }
+    candidates.push(std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    for start in candidates {
+        let mut cur: Option<&Path> = Some(start.as_path());
+        while let Some(dir) = cur {
+            let specs = dir.join("specs");
+            if specs.join("pose.json").is_file() {
+                return Ok(specs);
+            }
+            cur = dir.parent();
+        }
+    }
+    bail!("could not locate specs/ (set IPTUNE_SPECS)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_dir() -> std::path::PathBuf {
+        find_spec_dir(None).unwrap()
+    }
+
+    #[test]
+    fn both_specs_load_and_validate() {
+        for name in ["pose", "motion_sift"] {
+            let s = AppSpec::load_named(name, spec_dir()).unwrap();
+            assert_eq!(s.num_vars(), 5);
+            assert_eq!(s.degree, 3);
+        }
+    }
+
+    #[test]
+    fn table1_pose_rows() {
+        let s = AppSpec::load_named("pose", spec_dir()).unwrap();
+        let syms: Vec<&str> = s.params.iter().map(|p| p.symbol.as_str()).collect();
+        assert_eq!(syms, ["K1", "K2", "K3", "K4", "K5"]);
+        assert_eq!(s.params[0].kind, "continuous");
+        assert_eq!((s.params[0].min, s.params[0].max), (1.0, 10.0));
+        assert_eq!(s.params[1].max, 2147483648.0);
+        assert_eq!(s.params[1].default, 2147483648.0);
+        assert_eq!((s.params[2].min, s.params[2].max), (1.0, 96.0));
+        assert_eq!((s.params[3].min, s.params[3].max), (1.0, 10.0));
+        assert_eq!((s.params[4].min, s.params[4].max), (1.0, 10.0));
+    }
+
+    #[test]
+    fn table2_motion_sift_rows() {
+        let s = AppSpec::load_named("motion_sift", spec_dir()).unwrap();
+        assert_eq!(s.params[2].kind, "discrete");
+        assert_eq!((s.params[2].min, s.params[2].max), (0.0, 1.0));
+        for i in [3usize, 4] {
+            assert_eq!((s.params[i].min, s.params[i].max), (1.0, 96.0));
+            assert_eq!(s.params[i].default, 1.0);
+        }
+    }
+
+    #[test]
+    fn normalize_roundtrip() {
+        for name in ["pose", "motion_sift"] {
+            let s = AppSpec::load_named(name, spec_dir()).unwrap();
+            for p in &s.params {
+                assert!((p.normalize(p.min) - 0.0).abs() < 1e-12);
+                assert!((p.normalize(p.max) - 1.0).abs() < 1e-12);
+                for u in [0.0, 0.25, 0.5, 0.75, 1.0] {
+                    let k = p.denormalize(u);
+                    assert!(k >= p.min && k <= p.max);
+                    if !p.is_discrete() {
+                        assert!((p.normalize(k) - u).abs() < 1e-9, "{} u={}", p.symbol, u);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn discrete_denormalize_rounds() {
+        let s = AppSpec::load_named("pose", spec_dir()).unwrap();
+        let k3 = &s.params[2];
+        let k = k3.denormalize(0.5);
+        assert_eq!(k, k.round());
+        assert!(k >= 1.0 && k <= 96.0);
+    }
+
+    #[test]
+    fn branches_detected() {
+        let s = AppSpec::load_named("motion_sift", spec_dir()).unwrap();
+        assert_eq!(s.branches(), vec![0, 1]);
+        let p = AppSpec::load_named("pose", spec_dir()).unwrap();
+        assert!(p.branches().is_empty());
+    }
+
+    #[test]
+    fn defaults_are_fidelity_maximizing_corner() {
+        // Paper: default values maximize fidelity (no scaling, no feature
+        // cap, no parallelism-induced reordering).
+        let s = AppSpec::load_named("pose", spec_dir()).unwrap();
+        assert_eq!(s.defaults()[0], 1.0);
+        assert_eq!(s.defaults()[1], 2147483648.0);
+    }
+
+    #[test]
+    fn bad_spec_rejected() {
+        let mut s = AppSpec::load_named("pose", spec_dir()).unwrap();
+        s.params[0].min = 100.0; // min > max
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn group_coverage_enforced() {
+        let mut s = AppSpec::load_named("pose", spec_dir()).unwrap();
+        s.groups.pop();
+        // dropping the ransac group still leaves all knobs covered? K2 is
+        // shared; removing a group must only fail if coverage breaks.
+        let owned: std::collections::HashSet<usize> =
+            s.groups.iter().flat_map(|g| g.params.iter().copied()).collect();
+        assert_eq!(s.validate().is_ok(), owned.len() == s.params.len());
+    }
+}

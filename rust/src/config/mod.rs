@@ -1,0 +1,311 @@
+//! JSON run-configuration system for the CLI and the examples.
+//!
+//! Everything has sensible defaults; a config file only overrides what it
+//! names. Example:
+//!
+//! ```json
+//! {
+//!   "cluster": { "servers": 4 },
+//!   "tuner":   { "epsilon": 0.1, "backend": "native" }
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Which predictor backend executes the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// AOT-compiled HLO artifacts on the PJRT CPU client (production).
+    #[default]
+    Xla,
+    /// Pure-Rust twin (compact features; no artifacts needed).
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "xla" => Ok(BackendKind::Xla),
+            "native" => Ok(BackendKind::Native),
+            other => bail!("unknown backend '{other}' (expected xla|native)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Xla => "xla",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+/// Which predictor architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VariantKind {
+    #[default]
+    Structured,
+    Unstructured,
+}
+
+impl VariantKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "structured" => Ok(VariantKind::Structured),
+            "unstructured" => Ok(VariantKind::Unstructured),
+            other => bail!("unknown variant '{other}' (expected structured|unstructured)"),
+        }
+    }
+}
+
+impl From<VariantKind> for crate::learner::Variant {
+    fn from(v: VariantKind) -> Self {
+        match v {
+            VariantKind::Structured => crate::learner::Variant::Structured,
+            VariantKind::Unstructured => crate::learner::Variant::Unstructured,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub servers: usize,
+    pub cores_per_server: usize,
+    /// Per-connector communication latency (ms) at full resolution; 0
+    /// reproduces the paper (network modeling is its named future work).
+    pub comm_ms_per_frame: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            servers: crate::simulator::DEFAULT_SERVERS,
+            cores_per_server: crate::simulator::DEFAULT_CORES_PER_SERVER,
+            comm_ms_per_frame: 0.0,
+        }
+    }
+}
+
+impl From<&ClusterConfig> for crate::simulator::Cluster {
+    fn from(c: &ClusterConfig) -> Self {
+        crate::simulator::Cluster {
+            servers: c.servers,
+            cores_per_server: c.cores_per_server,
+            comm_ms_per_frame: c.comm_ms_per_frame,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Random configurations in the action space (paper: 30).
+    pub configs: usize,
+    /// Frames per configuration (paper: 1000).
+    pub frames: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { configs: 30, frames: 1000, seed: 7 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TunerSection {
+    /// Exploration rate; `None` → the paper's 1/√T rule.
+    pub epsilon: Option<f64>,
+    /// Latency bound L (ms); `None` → the spec's first bound.
+    pub bound_ms: Option<f64>,
+    pub warmup_frames: usize,
+    pub backend: BackendKind,
+    pub variant: VariantKind,
+    /// Polynomial degree of the native predictor (XLA artifacts are cubic).
+    pub degree: usize,
+    pub seed: u64,
+}
+
+impl Default for TunerSection {
+    fn default() -> Self {
+        TunerSection {
+            epsilon: None,
+            bound_ms: None,
+            warmup_frames: 20,
+            backend: BackendKind::Xla,
+            variant: VariantKind::Structured,
+            degree: 3,
+            seed: 11,
+        }
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Debug, Clone, Default)]
+pub struct RunConfig {
+    pub cluster: ClusterConfig,
+    pub trace: TraceConfig,
+    pub tuner: TunerSection,
+}
+
+impl RunConfig {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        if let Some(c) = v.get("cluster") {
+            if let Some(x) = c.get("servers") {
+                cfg.cluster.servers = x.as_usize()?;
+            }
+            if let Some(x) = c.get("cores_per_server") {
+                cfg.cluster.cores_per_server = x.as_usize()?;
+            }
+            if let Some(x) = c.get("comm_ms_per_frame") {
+                cfg.cluster.comm_ms_per_frame = x.as_f64()?;
+            }
+        }
+        if let Some(t) = v.get("trace") {
+            if let Some(x) = t.get("configs") {
+                cfg.trace.configs = x.as_usize()?;
+            }
+            if let Some(x) = t.get("frames") {
+                cfg.trace.frames = x.as_usize()?;
+            }
+            if let Some(x) = t.get("seed") {
+                cfg.trace.seed = x.as_u64()?;
+            }
+        }
+        if let Some(t) = v.get("tuner") {
+            if let Some(x) = t.get("epsilon") {
+                cfg.tuner.epsilon = Some(x.as_f64()?);
+            }
+            if let Some(x) = t.get("bound_ms") {
+                cfg.tuner.bound_ms = Some(x.as_f64()?);
+            }
+            if let Some(x) = t.get("warmup_frames") {
+                cfg.tuner.warmup_frames = x.as_usize()?;
+            }
+            if let Some(x) = t.get("backend") {
+                cfg.tuner.backend = BackendKind::parse(x.as_str()?)?;
+            }
+            if let Some(x) = t.get("variant") {
+                cfg.tuner.variant = VariantKind::parse(x.as_str()?)?;
+            }
+            if let Some(x) = t.get("degree") {
+                cfg.tuner.degree = x.as_usize()?;
+            }
+            if let Some(x) = t.get("seed") {
+                cfg.tuner.seed = x.as_u64()?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut tuner = Json::obj()
+            .put("warmup_frames", self.tuner.warmup_frames)
+            .put("backend", self.tuner.backend.as_str())
+            .put(
+                "variant",
+                match self.tuner.variant {
+                    VariantKind::Structured => "structured",
+                    VariantKind::Unstructured => "unstructured",
+                },
+            )
+            .put("degree", self.tuner.degree)
+            .put("seed", self.tuner.seed);
+        if let Some(e) = self.tuner.epsilon {
+            tuner = tuner.put("epsilon", e);
+        }
+        if let Some(b) = self.tuner.bound_ms {
+            tuner = tuner.put("bound_ms", b);
+        }
+        Json::obj()
+            .put(
+                "cluster",
+                Json::obj()
+                    .put("servers", self.cluster.servers)
+                    .put("cores_per_server", self.cluster.cores_per_server)
+                    .put("comm_ms_per_frame", self.cluster.comm_ms_per_frame),
+            )
+            .put(
+                "trace",
+                Json::obj()
+                    .put("configs", self.trace.configs)
+                    .put("frames", self.trace.frames)
+                    .put("seed", self.trace.seed),
+            )
+            .put("tuner", tuner)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(
+            &Json::parse(&text)
+                .with_context(|| format!("parsing config {}", path.display()))?,
+        )
+    }
+
+    pub fn load_or_default(path: Option<&Path>) -> Result<Self> {
+        match path {
+            Some(p) => Self::load(p),
+            None => Ok(Self::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_protocol() {
+        let c = RunConfig::default();
+        assert_eq!(c.trace.configs, 30);
+        assert_eq!(c.trace.frames, 1000);
+        assert_eq!(c.cluster.servers, 15);
+        assert_eq!(c.cluster.cores_per_server, 8);
+        assert_eq!(c.tuner.backend, BackendKind::Xla);
+    }
+
+    #[test]
+    fn partial_json_overrides() {
+        let v = Json::parse(
+            r#"{"tuner": {"epsilon": 0.1, "backend": "native", "variant": "unstructured"},
+                "cluster": {"servers": 4}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.tuner.epsilon, Some(0.1));
+        assert_eq!(cfg.tuner.backend, BackendKind::Native);
+        assert_eq!(cfg.tuner.variant, VariantKind::Unstructured);
+        assert_eq!(cfg.cluster.servers, 4);
+        assert_eq!(cfg.cluster.cores_per_server, 8); // default retained
+        assert_eq!(cfg.trace.frames, 1000);
+    }
+
+    #[test]
+    fn roundtrip_serialization() {
+        let mut c = RunConfig::default();
+        c.tuner.epsilon = Some(0.25);
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.trace.seed, c.trace.seed);
+        assert_eq!(back.tuner.epsilon, Some(0.25));
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        let v = Json::parse(r#"{"tuner": {"backend": "gpu"}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::testdir::TestDir::new("config");
+        let path = dir.join("run.json");
+        std::fs::write(&path, RunConfig::default().to_json().to_string()).unwrap();
+        let cfg = RunConfig::load(&path).unwrap();
+        assert_eq!(cfg.trace.configs, 30);
+    }
+}

@@ -1,0 +1,178 @@
+//! Weighted critical-path computation (paper Sec. 3: the application
+//! latency is the length of the longest weighted path through the DAG).
+
+use super::{Graph, StageId};
+
+/// Length of the critical path where `weights[i]` is stage `i`'s latency.
+///
+/// O(V + E): one pass in topological order (graphs are stored
+/// topologically). Panics if `weights.len() != g.len()`.
+pub fn critical_path(g: &Graph, weights: &[f64]) -> f64 {
+    assert_eq!(weights.len(), g.len());
+    let mut dist = vec![0.0f64; g.len()];
+    let mut best = 0.0f64;
+    for (i, node) in g.nodes().iter().enumerate() {
+        let longest_in = node
+            .deps
+            .iter()
+            .map(|&d| dist[d])
+            .fold(0.0f64, f64::max);
+        dist[i] = longest_in + weights[i];
+        best = best.max(dist[i]);
+    }
+    best
+}
+
+/// The critical path itself, as stage ids from source to sink.
+pub fn critical_path_nodes(g: &Graph, weights: &[f64]) -> Vec<StageId> {
+    assert_eq!(weights.len(), g.len());
+    let mut dist = vec![0.0f64; g.len()];
+    let mut prev: Vec<Option<StageId>> = vec![None; g.len()];
+    for (i, node) in g.nodes().iter().enumerate() {
+        let mut longest_in = 0.0f64;
+        for &d in &node.deps {
+            if dist[d] > longest_in {
+                longest_in = dist[d];
+                prev[i] = Some(d);
+            }
+        }
+        dist[i] = longest_in + weights[i];
+    }
+    let mut end = 0;
+    for i in 0..g.len() {
+        if dist[i] > dist[end] {
+            end = i;
+        }
+    }
+    let mut path = vec![end];
+    while let Some(p) = prev[*path.last().unwrap()] {
+        path.push(p);
+    }
+    path.reverse();
+    path
+}
+
+/// Critical path with *edge* weights (paper Sec. 3: "inter-stage
+/// communication latency ... can be incorporated by adding edge weights
+/// that represent communication costs"). `edge_ms(src, dst)` is the
+/// connector cost; the future-work extension the paper names.
+pub fn critical_path_with_edges(
+    g: &Graph,
+    weights: &[f64],
+    edge_ms: impl Fn(StageId, StageId) -> f64,
+) -> f64 {
+    assert_eq!(weights.len(), g.len());
+    let mut dist = vec![0.0f64; g.len()];
+    let mut best = 0.0f64;
+    for (i, node) in g.nodes().iter().enumerate() {
+        let longest_in = node
+            .deps
+            .iter()
+            .map(|&d| dist[d] + edge_ms(d, i))
+            .fold(0.0f64, f64::max);
+        dist[i] = longest_in + weights[i];
+        best = best.max(dist[i]);
+    }
+    best
+}
+
+/// Brute-force critical path by enumerating every source-to-any path.
+/// Exponential; used only to validate `critical_path` in tests/proptests.
+pub fn critical_path_brute(g: &Graph, weights: &[f64]) -> f64 {
+    fn dfs(g: &Graph, succ: &[Vec<StageId>], w: &[f64], i: StageId, acc: f64, best: &mut f64) {
+        let acc = acc + w[i];
+        *best = best.max(acc);
+        for &s in &succ[i] {
+            dfs(g, succ, w, s, acc, best);
+        }
+    }
+    let succ = g.successors();
+    let mut best = 0.0;
+    for s in g.sources() {
+        dfs(g, &succ, weights, s, 0.0, &mut best);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Graph;
+
+    fn diamond() -> Graph {
+        Graph::new(&[
+            ("src".into(), vec![]),
+            ("l".into(), vec!["src".into()]),
+            ("r".into(), vec!["src".into()]),
+            ("snk".into(), vec!["l".into(), "r".into()]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn chain_is_sum() {
+        let g = Graph::new(&[
+            ("a".into(), vec![]),
+            ("b".into(), vec!["a".into()]),
+            ("c".into(), vec!["b".into()]),
+        ])
+        .unwrap();
+        assert_eq!(critical_path(&g, &[1.0, 2.0, 3.0]), 6.0);
+    }
+
+    #[test]
+    fn diamond_takes_max_branch() {
+        let g = diamond();
+        // paper Sec. 2.3: sum of seq stages + max of the branches
+        assert_eq!(critical_path(&g, &[1.0, 5.0, 2.0, 1.0]), 7.0);
+        assert_eq!(critical_path(&g, &[1.0, 2.0, 9.0, 1.0]), 11.0);
+    }
+
+    #[test]
+    fn matches_brute_force_on_motion_sift() {
+        let dir = crate::apps::spec::find_spec_dir(None).unwrap();
+        let spec = crate::apps::spec::AppSpec::load_named("motion_sift", &dir).unwrap();
+        let g = Graph::from_spec(&spec);
+        let w: Vec<f64> = (0..g.len()).map(|i| (i as f64 * 7.3) % 11.0 + 0.5).collect();
+        assert!((critical_path(&g, &w) - critical_path_brute(&g, &w)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn path_nodes_consistent_with_length() {
+        let g = diamond();
+        let w = [1.0, 5.0, 2.0, 1.0];
+        let path = critical_path_nodes(&g, &w);
+        let len: f64 = path.iter().map(|&i| w[i]).sum();
+        assert_eq!(len, critical_path(&g, &w));
+        assert_eq!(path, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn disconnected_components() {
+        let g = Graph::new(&[
+            ("a".into(), vec![]),
+            ("b".into(), vec![]),
+        ])
+        .unwrap();
+        assert_eq!(critical_path(&g, &[3.0, 4.0]), 4.0);
+    }
+
+    #[test]
+    fn zero_weights() {
+        let g = diamond();
+        assert_eq!(critical_path(&g, &[0.0; 4]), 0.0);
+    }
+
+    #[test]
+    fn edge_weights_extend_the_path() {
+        let g = diamond();
+        let w = [1.0, 5.0, 2.0, 1.0];
+        // no comm cost == plain critical path
+        assert_eq!(critical_path_with_edges(&g, &w, |_, _| 0.0), critical_path(&g, &w));
+        // a uniform 1ms connector cost adds one hop per edge on the path
+        assert_eq!(critical_path_with_edges(&g, &w, |_, _| 1.0), 9.0);
+        // an expensive connector can flip which branch is critical
+        let e = |s: usize, d: usize| if (s, d) == (0, 1) { 10.0 } else { 0.0 };
+        assert_eq!(critical_path_with_edges(&g, &w, e), 17.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! Data-flow graph substrate (paper Sec. 2 / Sec. 3).
+//!
+//! Applications are directed acyclic graphs whose vertices are
+//! coarse-grained sequential *stages* and whose edges are *connectors*
+//! (data dependencies). Stage weights are per-execution latencies; the
+//! application latency is the length of the weighted critical path
+//! through the graph (paper Sec. 3: `c = Σ_{i∈C} w_i`).
+
+pub mod critical_path;
+
+pub use critical_path::{critical_path, critical_path_nodes};
+
+use anyhow::{bail, Result};
+
+use crate::apps::spec::AppSpec;
+
+/// Stage index within a [`Graph`].
+pub type StageId = usize;
+
+/// A stage vertex.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    /// Upstream stages (connector sources).
+    pub deps: Vec<StageId>,
+}
+
+/// A data-flow DAG in topological order.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    nodes: Vec<Node>,
+}
+
+impl Graph {
+    /// Build from (name, deps-by-name) pairs listed in topological order.
+    pub fn new(stages: &[(String, Vec<String>)]) -> Result<Self> {
+        let mut nodes: Vec<Node> = Vec::with_capacity(stages.len());
+        for (name, deps) in stages {
+            let mut dep_ids = Vec::with_capacity(deps.len());
+            for d in deps {
+                match nodes.iter().position(|n| &n.name == d) {
+                    Some(i) => dep_ids.push(i),
+                    None => bail!("stage {name}: dep {d} not defined earlier (not topological?)"),
+                }
+            }
+            if nodes.iter().any(|n| &n.name == name) {
+                bail!("duplicate stage {name}");
+            }
+            nodes.push(Node { name: name.clone(), deps: dep_ids });
+        }
+        Ok(Graph { nodes })
+    }
+
+    /// Build the application graph declared in a spec.
+    pub fn from_spec(spec: &AppSpec) -> Self {
+        let stages: Vec<(String, Vec<String>)> = spec
+            .stages
+            .iter()
+            .map(|s| (s.name.clone(), s.deps.clone()))
+            .collect();
+        Graph::new(&stages).expect("spec graphs are validated at load")
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: StageId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<StageId> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+
+    /// Stages with no outgoing connectors.
+    pub fn sinks(&self) -> Vec<StageId> {
+        let mut has_out = vec![false; self.nodes.len()];
+        for n in &self.nodes {
+            for &d in &n.deps {
+                has_out[d] = true;
+            }
+        }
+        (0..self.nodes.len()).filter(|&i| !has_out[i]).collect()
+    }
+
+    /// Stages with no incoming connectors.
+    pub fn sources(&self) -> Vec<StageId> {
+        (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].deps.is_empty())
+            .collect()
+    }
+
+    /// Downstream adjacency (successors of every stage).
+    pub fn successors(&self) -> Vec<Vec<StageId>> {
+        let mut succ = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &d in &n.deps {
+                succ[d].push(i);
+            }
+        }
+        succ
+    }
+
+    /// Graphviz DOT rendering (used by `repro spec --graph`, reproducing
+    /// the paper's Figures 1 and 4).
+    pub fn to_dot(&self, title: &str) -> String {
+        let mut out = format!("digraph \"{title}\" {{\n  rankdir=LR;\n");
+        for n in &self.nodes {
+            out.push_str(&format!("  \"{}\" [shape=box];\n", n.name));
+        }
+        for n in &self.nodes {
+            for &d in &n.deps {
+                out.push_str(&format!("  \"{}\" -> \"{}\";\n", self.nodes[d].name, n.name));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> Graph {
+        Graph::new(&[
+            ("a".into(), vec![]),
+            ("b".into(), vec!["a".into()]),
+            ("c".into(), vec!["b".into()]),
+        ])
+        .unwrap()
+    }
+
+    fn diamond() -> Graph {
+        Graph::new(&[
+            ("src".into(), vec![]),
+            ("l".into(), vec!["src".into()]),
+            ("r".into(), vec!["src".into()]),
+            ("snk".into(), vec!["l".into(), "r".into()]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn chain_sources_sinks() {
+        let g = chain();
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![2]);
+    }
+
+    #[test]
+    fn diamond_structure() {
+        let g = diamond();
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+        assert_eq!(g.successors()[0], vec![1, 2]);
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let r = Graph::new(&[("a".into(), vec!["b".into()]), ("b".into(), vec![])]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let r = Graph::new(&[("a".into(), vec![]), ("a".into(), vec![])]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn dot_contains_edges() {
+        let dot = diamond().to_dot("d");
+        assert!(dot.contains("\"src\" -> \"l\""));
+        assert!(dot.contains("\"r\" -> \"snk\""));
+    }
+
+    #[test]
+    fn spec_graphs_build() {
+        let dir = crate::apps::spec::find_spec_dir(None).unwrap();
+        for name in ["pose", "motion_sift"] {
+            let spec = AppSpec::load_named(name, &dir).unwrap();
+            let g = Graph::from_spec(&spec);
+            assert_eq!(g.len(), spec.stages.len());
+            assert_eq!(g.sinks().len(), 1, "{name} should have one sink");
+        }
+    }
+}

@@ -1,0 +1,373 @@
+//! Streaming data-flow engine — the runtime-system substrate (paper
+//! Sec. 2: "an application-independent runtime system to distribute and
+//! execute applications in parallel", SLIPStream-like).
+//!
+//! Stages run as concurrent OS threads connected by *bounded* channels
+//! (connectors with backpressure). Each frame token carries a virtual
+//! timestamp: a stage joins its input connectors (max of dependency
+//! timestamps — the critical-path semantics), "computes" for its modeled
+//! latency (an optional scaled real sleep keeps execution genuinely
+//! concurrent), advances the timestamp, and forwards. The engine exports
+//! exactly the interface the paper's tuner needs: per-stage latency
+//! probes and dynamically settable knobs that take effect on the next
+//! frame entering the pipe.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, RwLock};
+use std::thread;
+
+use crate::apps::App;
+use crate::simulator::NoiseModel;
+use crate::util::Rng;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Wall-clock seconds per simulated millisecond (e.g. 1e-5 → a 100 ms
+    /// frame sleeps 1 ms of real time). 0 disables sleeping entirely.
+    pub realtime_scale: f64,
+    /// Connector (channel) capacity — the backpressure bound.
+    pub queue_capacity: usize,
+    /// Frames emitted by the source; the source paces itself by the app's
+    /// `frame_interval_ms` when `realtime_scale > 0`.
+    pub frames: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { realtime_scale: 0.0, queue_capacity: 8, frames: 100, seed: 0 }
+    }
+}
+
+/// A frame token flowing through the connectors.
+#[derive(Debug, Clone)]
+struct Token {
+    id: usize,
+    /// Virtual time (ms) at which this frame's data became available on
+    /// this path.
+    vt: f64,
+    /// The knob vector latched when the frame entered the pipeline.
+    knobs: Arc<Vec<f64>>,
+}
+
+/// One completed frame at the sink.
+#[derive(Debug, Clone)]
+pub struct FrameRecord {
+    pub frame: usize,
+    /// End-to-end virtual latency (ms): critical path through the stages.
+    pub end_to_end_ms: f64,
+    /// Per-stage virtual latencies (ms).
+    pub stage_ms: Vec<f64>,
+    pub fidelity: f64,
+    /// The knob vector this frame ran under.
+    pub knobs: Vec<f64>,
+}
+
+enum Evt {
+    StageLat { frame: usize, stage: usize, lat: f64 },
+    Done { frame: usize, vt: f64, knobs: Arc<Vec<f64>> },
+}
+
+/// Handle to a running stream: consume [`FrameRecord`]s, retune knobs.
+pub struct StreamHandle {
+    pub records: Receiver<FrameRecord>,
+    knobs: Arc<RwLock<Arc<Vec<f64>>>>,
+}
+
+impl StreamHandle {
+    /// Set the knob vector for subsequently emitted frames (the paper's
+    /// "changes in parameter settings are then applied to the running
+    /// application").
+    pub fn set_knobs(&self, ks: Vec<f64>) {
+        *self.knobs.write().unwrap() = Arc::new(ks);
+    }
+
+    pub fn current_knobs(&self) -> Vec<f64> {
+        self.knobs.read().unwrap().as_ref().clone()
+    }
+}
+
+fn sleep_scaled(ms: f64, scale: f64) {
+    if scale > 0.0 {
+        thread::sleep(std::time::Duration::from_secs_f64(ms * scale));
+    }
+}
+
+/// Spawn the full data-flow of `app` as threads and return a
+/// [`StreamHandle`]. The pipeline finishes after `cfg.frames` frames; the
+/// record channel then closes and all threads exit.
+pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -> StreamHandle {
+    let n_stages = app.graph.len();
+    let knobs = Arc::new(RwLock::new(Arc::new(initial_knobs)));
+    let (rec_tx, rec_rx) = channel::<FrameRecord>();
+    let (evt_tx, evt_rx) = channel::<Evt>();
+
+    // connectors: one bounded channel per graph edge
+    let succ = app.graph.successors();
+    let mut stage_inputs: Vec<Vec<Receiver<Token>>> =
+        (0..n_stages).map(|_| Vec::new()).collect();
+    let mut stage_outputs: Vec<Vec<SyncSender<Token>>> =
+        (0..n_stages).map(|_| Vec::new()).collect();
+    for (src, dsts) in succ.iter().enumerate() {
+        for &dst in dsts {
+            let (tx, rx) = sync_channel::<Token>(cfg.queue_capacity);
+            stage_outputs[src].push(tx);
+            stage_inputs[dst].push(rx);
+        }
+    }
+
+    let sources = app.graph.sources();
+    let sinks = app.graph.sinks();
+    assert_eq!(sinks.len(), 1, "engine expects a single sink stage");
+    let sink_id = sinks[0];
+
+    for stage in 0..n_stages {
+        let inputs = std::mem::take(&mut stage_inputs[stage]);
+        let outputs = std::mem::take(&mut stage_outputs[stage]);
+        let app = Arc::clone(&app);
+        let evt_tx = evt_tx.clone();
+        let knobs_cell = Arc::clone(&knobs);
+        let cfg2 = cfg.clone();
+        let is_source = sources.contains(&stage);
+        let is_sink = stage == sink_id;
+        thread::Builder::new()
+            .name(format!("stage-{}", app.graph.node(stage).name))
+            .spawn(move || {
+                let mut rng = Rng::new(cfg2.seed.wrapping_add(stage as u64 * 7919));
+                let noise = NoiseModel::default();
+                let interval_ms = app.spec.frame_interval_ms;
+                for frame in 0..cfg2.frames {
+                    // join all input connectors (critical-path max)
+                    let token = if is_source {
+                        sleep_scaled(interval_ms, cfg2.realtime_scale); // camera pace
+                        let ks = knobs_cell.read().unwrap().clone();
+                        Token { id: frame, vt: 0.0, knobs: ks }
+                    } else {
+                        let mut joined: Option<Token> = None;
+                        for rx in &inputs {
+                            match rx.recv() {
+                                Ok(t) => {
+                                    joined = Some(match joined {
+                                        None => t,
+                                        Some(prev) => Token {
+                                            id: prev.id,
+                                            vt: prev.vt.max(t.vt),
+                                            knobs: prev.knobs,
+                                        },
+                                    });
+                                }
+                                Err(_) => return, // upstream closed
+                            }
+                        }
+                        match joined {
+                            Some(t) => t,
+                            None => return,
+                        }
+                    };
+                    debug_assert_eq!(token.id, frame);
+
+                    // compute: modeled latency (+noise), optionally slept
+                    let content = app.model.content(frame);
+                    let workers = app.model.requested_workers(stage, &token.knobs);
+                    let base =
+                        app.model.stage_latency(stage, &token.knobs, &content, workers);
+                    let lat = noise.apply(base, &mut rng);
+                    sleep_scaled(lat, cfg2.realtime_scale);
+                    let _ = evt_tx.send(Evt::StageLat { frame, stage, lat });
+                    let out = Token { id: token.id, vt: token.vt + lat, knobs: token.knobs };
+
+                    if is_sink {
+                        let _ = evt_tx.send(Evt::Done {
+                            frame,
+                            vt: out.vt,
+                            knobs: Arc::clone(&out.knobs),
+                        });
+                    }
+                    for tx in &outputs {
+                        if tx.send(out.clone()).is_err() {
+                            return;
+                        }
+                    }
+                }
+            })
+            .expect("spawn stage thread");
+    }
+    drop(evt_tx);
+
+    // assembler: joins per-stage latencies + sink completions into records
+    let app2 = Arc::clone(&app);
+    let frames = cfg.frames;
+    thread::Builder::new()
+        .name("assembler".into())
+        .spawn(move || {
+            use std::collections::HashMap;
+            let n_stages = app2.graph.len();
+            let mut lat_acc: HashMap<usize, Vec<f64>> = HashMap::new();
+            let mut lat_count: HashMap<usize, usize> = HashMap::new();
+            let mut done: HashMap<usize, (f64, Arc<Vec<f64>>)> = HashMap::new();
+            let mut emitted = 0usize;
+            while let Ok(evt) = evt_rx.recv() {
+                match evt {
+                    Evt::StageLat { frame, stage, lat } => {
+                        lat_acc.entry(frame).or_insert_with(|| vec![0.0; n_stages])[stage] =
+                            lat;
+                        *lat_count.entry(frame).or_insert(0) += 1;
+                    }
+                    Evt::Done { frame, vt, knobs } => {
+                        done.insert(frame, (vt, knobs));
+                    }
+                }
+                // emit in frame order once complete
+                while let (Some(&count), Some((vt, ks))) =
+                    (lat_count.get(&emitted), done.get(&emitted))
+                {
+                    if count < n_stages {
+                        break;
+                    }
+                    let stage_ms = lat_acc.remove(&emitted).unwrap();
+                    let content = app2.model.content(emitted);
+                    let fidelity = app2.model.fidelity(ks, &content);
+                    let rec = FrameRecord {
+                        frame: emitted,
+                        end_to_end_ms: *vt,
+                        stage_ms,
+                        fidelity,
+                        knobs: ks.as_ref().clone(),
+                    };
+                    lat_count.remove(&emitted);
+                    done.remove(&emitted);
+                    if rec_tx.send(rec).is_err() {
+                        return;
+                    }
+                    emitted += 1;
+                    if emitted == frames {
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawn assembler");
+
+    StreamHandle { records: rec_rx, knobs }
+}
+
+/// Run a stream to completion, collecting all records (convenience for
+/// tests and non-interactive use).
+pub fn run_stream_blocking(app: Arc<App>, knobs: Vec<f64>, cfg: EngineConfig) -> Vec<FrameRecord> {
+    let frames = cfg.frames;
+    let handle = spawn_stream(app, knobs, cfg);
+    let mut out = Vec::with_capacity(frames);
+    while let Ok(rec) = handle.records.recv() {
+        out.push(rec);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry::app_by_name;
+    use crate::apps::spec::find_spec_dir;
+    use crate::dataflow::critical_path;
+
+    fn app(name: &str) -> Arc<App> {
+        Arc::new(app_by_name(name, find_spec_dir(None).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn stream_delivers_all_frames_in_order() {
+        let a = app("pose");
+        let ks = a.spec.defaults();
+        let recs = run_stream_blocking(
+            Arc::clone(&a),
+            ks,
+            EngineConfig { frames: 50, ..Default::default() },
+        );
+        assert_eq!(recs.len(), 50);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.frame, i);
+            assert_eq!(r.stage_ms.len(), a.graph.len());
+            assert!(r.end_to_end_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn virtual_time_is_critical_path() {
+        let a = app("motion_sift");
+        let ks = a.spec.defaults();
+        let recs = run_stream_blocking(
+            Arc::clone(&a),
+            ks,
+            EngineConfig { frames: 20, ..Default::default() },
+        );
+        for r in &recs {
+            let cp = critical_path(&a.graph, &r.stage_ms);
+            assert!(
+                (r.end_to_end_ms - cp).abs() < 1e-6,
+                "vt {} != critical path {cp}",
+                r.end_to_end_ms
+            );
+        }
+    }
+
+    #[test]
+    fn retuning_applies_to_later_frames() {
+        let a = app("pose");
+        let cfg = EngineConfig { frames: 60, realtime_scale: 1e-6, ..Default::default() };
+        let handle = spawn_stream(Arc::clone(&a), a.spec.defaults(), cfg);
+        let fast = vec![3.0, 2.0_f64.powi(31), 16.0, 10.0, 10.0];
+        let mut records = Vec::new();
+        let mut switched = false;
+        while let Ok(rec) = handle.records.recv() {
+            if rec.frame == 10 && !switched {
+                handle.set_knobs(fast.clone());
+                switched = true;
+            }
+            records.push(rec);
+        }
+        assert_eq!(records.len(), 60);
+        // some later frame must run under the fast knobs
+        assert!(records.iter().any(|r| r.knobs == fast));
+        let early: f64 =
+            records[..10].iter().map(|r| r.end_to_end_ms).sum::<f64>() / 10.0;
+        let late: f64 =
+            records[50..].iter().map(|r| r.end_to_end_ms).sum::<f64>() / 10.0;
+        assert!(late < early * 0.5, "retune must speed the pipe: {early} -> {late}");
+    }
+
+    #[test]
+    fn no_frame_lost_under_tiny_queues() {
+        let a = app("motion_sift");
+        let recs = run_stream_blocking(
+            Arc::clone(&a),
+            a.spec.defaults(),
+            EngineConfig { frames: 40, queue_capacity: 1, ..Default::default() },
+        );
+        assert_eq!(recs.len(), 40);
+    }
+
+    #[test]
+    fn knob_latch_is_per_frame_consistent() {
+        // every record's knob vector must be one of the two configs set,
+        // never a mix
+        let a = app("motion_sift");
+        let slow = a.spec.defaults();
+        let fast = vec![4.0, 4.0, 1.0, 8.0, 8.0];
+        let handle = spawn_stream(
+            Arc::clone(&a),
+            slow.clone(),
+            EngineConfig { frames: 40, realtime_scale: 1e-6, ..Default::default() },
+        );
+        let mut recs = Vec::new();
+        while let Ok(rec) = handle.records.recv() {
+            if rec.frame == 5 {
+                handle.set_knobs(fast.clone());
+            }
+            recs.push(rec);
+        }
+        for r in &recs {
+            assert!(r.knobs == slow || r.knobs == fast, "mixed knobs {:?}", r.knobs);
+        }
+    }
+}

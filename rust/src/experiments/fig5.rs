@@ -1,0 +1,82 @@
+//! Figure 5: average reward (fidelity) vs average cost (latency) of the
+//! 30 random action configurations, plus the convex hull — the payoffs
+//! feasible by randomized strategies over the action space.
+
+use anyhow::Result;
+
+use super::{f, ExperimentCtx};
+use crate::metrics::convex_hull;
+
+/// Per-app result (exposed for tests and the claims module).
+pub struct Fig5 {
+    pub app: String,
+    /// (avg cost ms, avg reward) per configuration — the gray crosses.
+    pub payoffs: Vec<(f64, f64)>,
+    /// CCW hull of the payoffs.
+    pub hull: Vec<(f64, f64)>,
+}
+
+pub fn compute(ctx: &ExperimentCtx, app_name: &str) -> Result<Fig5> {
+    let (_, traces) = ctx.app_traces(app_name)?;
+    let payoffs = traces.payoffs();
+    let hull = convex_hull(&payoffs);
+    Ok(Fig5 { app: app_name.to_string(), payoffs, hull })
+}
+
+pub fn run(ctx: &ExperimentCtx) -> Result<()> {
+    for app in ["pose", "motion_sift"] {
+        let r = compute(ctx, app)?;
+        let mut csv = ctx.csv(&format!("fig5_{app}"), "kind,cost_ms,reward")?;
+        for &(c, rew) in &r.payoffs {
+            csv.row(&["point".into(), f(c), f(rew)])?;
+        }
+        for &(c, rew) in &r.hull {
+            csv.row(&["hull".into(), f(c), f(rew)])?;
+        }
+        let path = csv.finish()?;
+        let (cmin, cmax) = r
+            .payoffs
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &(c, _)| (lo.min(c), hi.max(c)));
+        println!(
+            "fig5[{app}]: {} configs, cost {:.1}..{:.1} ms, hull {} vertices -> {}",
+            r.payoffs.len(),
+            cmin,
+            cmax,
+            r.hull.len(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::hull::hull_contains;
+
+    #[test]
+    fn payoff_cloud_and_hull() {
+        let dir = crate::apps::spec::find_spec_dir(None).unwrap();
+        let mut app = crate::apps::registry::app_by_name("pose", &dir).unwrap();
+        app.spec.trace_configs = 8;
+        app.spec.trace_frames = 30;
+        let traces = crate::trace::TraceSet::generate_default(&app, 1);
+        let payoffs = traces.payoffs();
+        let hull = convex_hull(&payoffs);
+        for &p in &payoffs {
+            assert!(hull_contains(&hull, p));
+        }
+        // fidelity/cost trade-off visible: the cheapest config should not
+        // also be the most accurate
+        let cheapest = payoffs
+            .iter()
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap();
+        let best = payoffs
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert!(best.0 > cheapest.0, "best-fidelity config must cost more");
+    }
+}

@@ -1,0 +1,152 @@
+//! Figure 6: quality of online latency predictors vs their complexity —
+//! linear, quadratic, and cubic kernels, learned online by randomly
+//! sampling an action each frame, compared by the cumulative average of
+//! their expected and max-norm errors up to each frame; dashed lines are
+//! the corresponding offline (batch) predictors.
+
+use anyhow::Result;
+
+use crate::util::Rng;
+
+use super::{f, ExperimentCtx};
+use crate::apps::spec::AppSpec;
+use crate::learner::offline::{self, samples_from_traces};
+use crate::learner::{StagePredictor, Variant};
+use crate::metrics::ErrorTracker;
+use crate::trace::TraceSet;
+
+pub const DEGREES: [usize; 3] = [1, 2, 3];
+
+/// Error series of one online predictor.
+pub struct Series {
+    pub degree: usize,
+    /// (cumulative expected error, cumulative max-norm error) per frame.
+    pub per_frame: Vec<(f64, f64)>,
+    /// Offline baseline: (expected, max-norm) over the full trace.
+    pub offline: (f64, f64),
+}
+
+/// Run the Fig. 6 protocol for one app: random action every frame, online
+/// update, cumulative errors.
+pub fn compute(
+    spec: &AppSpec,
+    traces: &TraceSet,
+    variant: Variant,
+    frames: usize,
+    seed: u64,
+) -> Vec<Series> {
+    let candidates: Vec<Vec<f64>> =
+        traces.configs().iter().map(|c| spec.normalize(c)).collect();
+    DEGREES
+        .iter()
+        .map(|&degree| {
+            let mut pred = StagePredictor::new(spec, variant, degree);
+            let mut tracker = ErrorTracker::new();
+            let mut rng = Rng::new(seed);
+            let mut per_frame = Vec::with_capacity(frames);
+            for t in 0..frames {
+                let a = rng.below(candidates.len());
+                let rec = traces.frame(a, t % traces.num_frames());
+                let before =
+                    pred.observe(&candidates[a], &rec.stage_ms, rec.end_to_end_ms);
+                per_frame.push(tracker.observe((before - rec.end_to_end_ms).abs()));
+            }
+            // offline baseline (dashed): batch fit on the whole trace set
+            let samples = samples_from_traces(spec, traces);
+            let mut off = offline::fit(spec, variant, degree, &samples, 15, seed);
+            let offline = (
+                offline::mean_abs_error(&mut off, &samples),
+                offline::max_abs_error(&mut off, &samples),
+            );
+            Series { degree, per_frame, offline }
+        })
+        .collect()
+}
+
+pub fn run(ctx: &ExperimentCtx) -> Result<()> {
+    for app in ["pose", "motion_sift"] {
+        let (app_obj, traces) = ctx.app_traces(app)?;
+        let series =
+            compute(&app_obj.spec, &traces, Variant::Unstructured, ctx.frames, ctx.seed);
+        let mut csv = ctx.csv(
+            &format!("fig6_{app}"),
+            "frame,linear_expected,linear_maxnorm,quadratic_expected,quadratic_maxnorm,cubic_expected,cubic_maxnorm",
+        )?;
+        for t in 0..ctx.frames {
+            let mut row = vec![t.to_string()];
+            for s in &series {
+                row.push(f(s.per_frame[t].0));
+                row.push(f(s.per_frame[t].1));
+            }
+            csv.row(&row)?;
+        }
+        // offline dashed lines as sentinel rows (frame = -1)
+        let mut off_row = vec!["-1".to_string()];
+        for s in &series {
+            off_row.push(f(s.offline.0));
+            off_row.push(f(s.offline.1));
+        }
+        csv.row(&off_row)?;
+        let path = csv.finish()?;
+        let finals: Vec<String> = series
+            .iter()
+            .map(|s| {
+                format!(
+                    "deg{}: exp {:.2} (off {:.2}) max {:.1}",
+                    s.degree,
+                    s.per_frame.last().unwrap().0,
+                    s.offline.0,
+                    s.per_frame.last().unwrap().1
+                )
+            })
+            .collect();
+        println!("fig6[{app}]: {} -> {}", finals.join(" | "), path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry::app_by_name;
+    use crate::apps::spec::find_spec_dir;
+
+    #[test]
+    fn cubic_beats_linear_and_errors_shrink() {
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
+        let traces = TraceSet::generate(&app, 12, 250, 3);
+        let series = compute(&app.spec, &traces, Variant::Unstructured, 1000, 5);
+        let lin = &series[0];
+        let cub = &series[2];
+        // errors decrease over time (paper: "errors ... tend to decrease")
+        let early = cub.per_frame[60].0;
+        let late = cub.per_frame.last().unwrap().0;
+        assert!(late < early, "cubic expected err should fall: {early} -> {late}");
+        // cubic < linear in final expected error
+        assert!(
+            cub.per_frame.last().unwrap().0 < lin.per_frame.last().unwrap().0,
+            "cubic {} vs linear {}",
+            cub.per_frame.last().unwrap().0,
+            lin.per_frame.last().unwrap().0
+        );
+    }
+
+    #[test]
+    fn online_approaches_offline() {
+        let app = app_by_name("motion_sift", find_spec_dir(None).unwrap()).unwrap();
+        let traces = TraceSet::generate(&app, 12, 250, 4);
+        let series = compute(&app.spec, &traces, Variant::Unstructured, 1500, 6);
+        for s in &series {
+            let online_final = s.per_frame.last().unwrap().0;
+            // "all predictors are almost as good as their offline
+            // counterparts" — allow a generous online/offline gap
+            assert!(
+                online_final < s.offline.0 * 4.0 + 10.0,
+                "deg {}: online {} offline {}",
+                s.degree,
+                online_final,
+                s.offline.0
+            );
+        }
+    }
+}

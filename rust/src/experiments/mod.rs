@@ -1,0 +1,122 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (Sec. 4) as CSV series + printed summary rows.
+//!
+//! | module    | paper artifact |
+//! |-----------|----------------|
+//! | [`fig5`]  | Fig. 5 — payoff clouds + randomized-strategy convex hull |
+//! | [`fig6`]  | Fig. 6 — linear/quadratic/cubic online predictors vs offline |
+//! | [`fig7`]  | Fig. 7 — structured vs unstructured predictors |
+//! | [`fig8`]  | Fig. 8 — reward & constraint violation vs ε, payoff regions |
+//! | [`claims`]| headline claims: 90%-of-optimum @ 3% exploration, violation |
+//!
+//! Absolute numbers come from the simulated testbed, not the authors'
+//! cluster; the *shapes* (orderings, crossovers, U-curves) are the
+//! reproduction targets — see EXPERIMENTS.md.
+
+pub mod claims;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::apps::registry::app_by_name;
+use crate::apps::App;
+use crate::trace::TraceSet;
+
+/// Shared context: where specs/traces/results live.
+pub struct ExperimentCtx {
+    pub spec_dir: PathBuf,
+    pub trace_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+    /// Frames per experiment run (paper: 1000).
+    pub frames: usize,
+}
+
+impl ExperimentCtx {
+    pub fn new(
+        spec_dir: impl Into<PathBuf>,
+        trace_dir: impl Into<PathBuf>,
+        out_dir: impl Into<PathBuf>,
+    ) -> Self {
+        ExperimentCtx {
+            spec_dir: spec_dir.into(),
+            trace_dir: trace_dir.into(),
+            out_dir: out_dir.into(),
+            seed: 7,
+            frames: 1000,
+        }
+    }
+
+    /// Load (or generate + cache) an app and its 30×1000 trace set.
+    pub fn app_traces(&self, name: &str) -> Result<(App, TraceSet)> {
+        let app = app_by_name(name, &self.spec_dir)?;
+        let traces = TraceSet::load_or_generate(&app, &self.trace_dir, self.seed)?;
+        Ok((app, traces))
+    }
+
+    /// Open `results/<name>.csv` with a header row.
+    pub fn csv(&self, name: &str, header: &str) -> Result<CsvWriter> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(format!("{name}.csv"));
+        let mut file = std::io::BufWriter::new(
+            std::fs::File::create(&path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        writeln!(file, "{header}")?;
+        Ok(CsvWriter { file, path })
+    }
+}
+
+/// Minimal CSV emitter.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    pub path: PathBuf,
+}
+
+impl CsvWriter {
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, fields: std::fmt::Arguments<'_>) -> Result<()> {
+        writeln!(self.file, "{fields}")?;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<PathBuf> {
+        self.file.flush()?;
+        Ok(self.path)
+    }
+}
+
+/// Format a float compactly for CSV.
+pub fn f(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+/// Run every experiment (the `repro figures --all` entry point).
+pub fn run_all(ctx: &ExperimentCtx) -> Result<()> {
+    fig5::run(ctx)?;
+    fig6::run(ctx)?;
+    fig7::run(ctx)?;
+    fig8::run(ctx)?;
+    claims::run(ctx)?;
+    Ok(())
+}
+
+/// Resolve default context directories relative to the repo root.
+pub fn default_ctx(out_dir: Option<&Path>) -> Result<ExperimentCtx> {
+    let spec_dir = crate::apps::spec::find_spec_dir(None)?;
+    let root = spec_dir.parent().unwrap().to_path_buf();
+    Ok(ExperimentCtx::new(
+        spec_dir,
+        root.join("traces"),
+        out_dir.map(|p| p.to_path_buf()).unwrap_or_else(|| root.join("results")),
+    ))
+}

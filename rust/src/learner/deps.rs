@@ -1,0 +1,258 @@
+//! Dependency analysis (paper Sec. 2.3): identify *critical stages* from
+//! a few observations of stage latencies, then associate with each
+//! critical stage the knobs whose value correlates with the stage's
+//! latency above a threshold (0.9 in the paper).
+//!
+//! The probes vary one knob at a time over its normalized range while the
+//! others sit at a mid-range operating point — the "additional periodic
+//! observations" the paper describes — so correlations are not diluted by
+//! simultaneous variation of other knobs. The dependence measure is the
+//! *correlation ratio* η (between-bucket over total standard deviation):
+//! unlike Pearson/Spearman it detects the U-shaped responses that
+//! data-parallelism knobs produce (speedup first, dispatch overhead
+//! later), while staying in [0, 1] with the paper's 0.9 threshold
+//! semantics.
+
+use crate::apps::App;
+use crate::simulator::{Cluster, ClusterSim, NoiseModel};
+
+/// Paper's association threshold.
+pub const CORRELATION_THRESHOLD: f64 = 0.9;
+/// A stage is critical if its mean latency exceeds this fraction of the
+/// mean end-to-end latency.
+pub const CRITICAL_FRACTION: f64 = 0.05;
+
+/// Result of the analysis.
+#[derive(Debug, Clone)]
+pub struct DependencyAnalysis {
+    /// Stage ids deemed critical.
+    pub critical_stages: Vec<usize>,
+    /// For every stage (critical or not): knob indices with η ≥ 0.9.
+    pub associated_params: Vec<Vec<usize>>,
+    /// Correlation-ratio matrix η, `[stage][param]`.
+    pub correlation: Vec<Vec<f64>>,
+}
+
+/// Dependence measure: max of the correlation ratio on raw values and on
+/// rank-transformed values. Ranks make smooth monotone *and* U-shaped
+/// responses score near 1 regardless of curvature; raw values catch
+/// regime effects (e.g. a feature-count cap binding only at one end of
+/// the sweep) whose rank signal is diluted. Independent noise stays well
+/// below the 0.9 threshold for our probe counts.
+pub fn dependence(xs: &[f64], ys: &[f64], buckets: usize) -> f64 {
+    let raw = correlation_ratio(xs, ys, buckets);
+    let ranked = correlation_ratio(xs, &rank_transform(ys), buckets);
+    raw.max(ranked)
+}
+
+fn rank_transform(ys: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..ys.len()).collect();
+    idx.sort_by(|&a, &b| ys[a].partial_cmp(&ys[b]).unwrap());
+    let mut r = vec![0.0; ys.len()];
+    for (rank, &i) in idx.iter().enumerate() {
+        r[i] = rank as f64;
+    }
+    r
+}
+
+/// Correlation ratio η of `ys` grouped by the (sorted-x) bucket index:
+/// sqrt(between-bucket variance / total variance) ∈ [0, 1]. `xs` must be
+/// the swept knob values; buckets partition its range evenly.
+pub fn correlation_ratio(xs: &[f64], ys: &[f64], buckets: usize) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(buckets >= 2);
+    let (lo, hi) = xs
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+    if hi <= lo {
+        return 0.0;
+    }
+    let mut sums = vec![0.0; buckets];
+    let mut counts = vec![0usize; buckets];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let b = (((x - lo) / (hi - lo)) * buckets as f64).min(buckets as f64 - 1.0) as usize;
+        sums[b] += y;
+        counts[b] += 1;
+    }
+    let n = ys.len() as f64;
+    let grand = ys.iter().sum::<f64>() / n;
+    let mut ss_between = 0.0;
+    for b in 0..buckets {
+        if counts[b] > 0 {
+            let m = sums[b] / counts[b] as f64;
+            ss_between += counts[b] as f64 * (m - grand).powi(2);
+        }
+    }
+    let ss_total: f64 = ys.iter().map(|&y| (y - grand).powi(2)).sum();
+    if ss_total <= 0.0 {
+        0.0
+    } else {
+        (ss_between / ss_total).sqrt()
+    }
+}
+
+/// Run the probe schedule and compute the analysis.
+///
+/// `probes_per_param` observations are taken per knob, sweeping it over
+/// its normalized range at a *fixed* frame (content held constant, so
+/// within-sweep variance is pure measurement noise). The mid-range base
+/// point keeps every stage exercised so effects are visible.
+pub fn analyze(app: &App, probes_per_param: usize, seed: u64) -> DependencyAnalysis {
+    let m = app.spec.num_vars();
+    let n_stages = app.graph.len();
+    let mut sim = ClusterSim::new(Cluster::default(), NoiseModel::default(), seed);
+    let base_u = vec![0.5; m];
+
+    let mut correlation = vec![vec![0.0; m]; n_stages];
+    let mut stage_means = vec![0.0; n_stages];
+    let mut e2e_mean = 0.0;
+    let mut total_obs = 0usize;
+
+    for p in 0..m {
+        let mut knob_vals: Vec<f64> = Vec::with_capacity(probes_per_param);
+        let mut stage_obs: Vec<Vec<f64>> = vec![Vec::with_capacity(probes_per_param); n_stages];
+        for i in 0..probes_per_param {
+            let mut u = base_u.clone();
+            u[p] = i as f64 / (probes_per_param.max(2) - 1) as f64;
+            let ks = app.spec.denormalize(&u);
+            // median of 3 repetitions at a fixed frame: content constant
+            // within a sweep and load spikes cannot masquerade as knob
+            // effects
+            let mut reps: Vec<crate::simulator::FrameResult> = (0..3)
+                .map(|_| sim.run_frame(app, &ks, (p * 37) % 500))
+                .collect();
+            knob_vals.push(u[p]);
+            for s in 0..n_stages {
+                let mut vals: Vec<f64> = reps.iter().map(|r| r.stage_ms[s]).collect();
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let med = vals[1];
+                stage_obs[s].push(med);
+                stage_means[s] += med;
+            }
+            reps.sort_by(|a, b| a.end_to_end_ms.partial_cmp(&b.end_to_end_ms).unwrap());
+            e2e_mean += reps[1].end_to_end_ms;
+            total_obs += 1;
+        }
+        for s in 0..n_stages {
+            correlation[s][p] = dependence(&knob_vals, &stage_obs[s], 9);
+        }
+    }
+    for s in 0..n_stages {
+        stage_means[s] /= total_obs as f64;
+    }
+    e2e_mean /= total_obs as f64;
+
+    let critical_stages: Vec<usize> = (0..n_stages)
+        .filter(|&s| stage_means[s] >= CRITICAL_FRACTION * e2e_mean)
+        .collect();
+    let associated_params: Vec<Vec<usize>> = (0..n_stages)
+        .map(|s| {
+            (0..m)
+                .filter(|&p| correlation[s][p] >= CORRELATION_THRESHOLD)
+                .collect()
+        })
+        .collect();
+
+    DependencyAnalysis { critical_stages, associated_params, correlation }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry::app_by_name;
+    use crate::apps::spec::find_spec_dir;
+
+    #[test]
+    fn eta_monotone_dependence_high() {
+        let xs: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| x * x).collect();
+        assert!(correlation_ratio(&xs, &ys, 4) > 0.9);
+    }
+
+    #[test]
+    fn eta_u_shaped_dependence_high() {
+        // the data-parallelism response shape Pearson/Spearman would miss
+        let xs: Vec<f64> = (0..36).map(|i| i as f64 / 35.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| (x - 0.5).powi(2) * 100.0).collect();
+        assert!(dependence(&xs, &ys, 6) > 0.9, "{}", dependence(&xs, &ys, 6));
+    }
+
+    #[test]
+    fn sharp_regime_switch_detected() {
+        // cap binding only at the low end of the sweep (rank-diluted)
+        let xs: Vec<f64> = (0..36).map(|i| i as f64 / 35.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| if x < 0.2 { x * 50.0 } else { 10.0 }).collect();
+        assert!(dependence(&xs, &ys, 6) > 0.9, "{}", dependence(&xs, &ys, 6));
+    }
+
+    #[test]
+    fn eta_independent_low() {
+        let xs: Vec<f64> = (0..200).map(|i| (i as f64 * 17.0) % 13.0).collect();
+        let ys: Vec<f64> = (0..200).map(|i| ((i + 31) as f64 * 7.0) % 11.0).collect();
+        assert!(dependence(&xs, &ys, 6) < 0.4);
+    }
+
+    #[test]
+    fn eta_constant_is_zero() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        assert_eq!(correlation_ratio(&xs, &[5.0; 10], 4), 0.0);
+    }
+
+    #[test]
+    fn pose_analysis_recovers_structure() {
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
+        let a = analyze(&app, 36, 1);
+        // SIFT (stage 2) must be critical and owned by K1 (scale) + K3 (par)
+        assert!(a.critical_stages.contains(&2), "critical: {:?}", a.critical_stages);
+        assert!(a.associated_params[2].contains(&0), "sift<-K1: {:?}", a.correlation[2]);
+        assert!(a.associated_params[2].contains(&2), "sift<-K3: {:?}", a.correlation[2]);
+        // ... and NOT by the feature threshold (sift emits before capping)
+        assert!(!a.associated_params[2].contains(&1), "sift!<-K2: {:?}", a.correlation[2]);
+        // match (stage 3) responds to K4 and to the K2 cap
+        assert!(a.associated_params[3].contains(&3), "match<-K4: {:?}", a.correlation[3]);
+        assert!(a.associated_params[3].contains(&1), "match<-K2: {:?}", a.correlation[3]);
+        // source (stage 0) is constant: no associations, not critical
+        assert!(a.associated_params[0].is_empty(), "{:?}", a.correlation[0]);
+        assert!(!a.critical_stages.contains(&0));
+    }
+
+    #[test]
+    fn motion_sift_branch_separation() {
+        let app = app_by_name("motion_sift", find_spec_dir(None).unwrap()).unwrap();
+        let a = analyze(&app, 36, 2);
+        let fd = 3; // face_detect
+        let me = 6; // motion_extract
+        assert!(a.critical_stages.contains(&fd));
+        assert!(a.critical_stages.contains(&me));
+        // face branch knobs attach to face_detect, not motion_extract
+        assert!(a.associated_params[fd].contains(&0), "{:?}", a.correlation[fd]);
+        assert!(a.associated_params[fd].contains(&4), "{:?}", a.correlation[fd]);
+        assert!(!a.associated_params[me].contains(&0), "{:?}", a.correlation[me]);
+        // motion branch knobs attach to motion_extract only
+        assert!(a.associated_params[me].contains(&1), "{:?}", a.correlation[me]);
+        assert!(a.associated_params[me].contains(&3), "{:?}", a.correlation[me]);
+        assert!(!a.associated_params[fd].contains(&1), "{:?}", a.correlation[fd]);
+    }
+
+    #[test]
+    fn analysis_matches_spec_groups() {
+        // the declared group structure must be recoverable: every declared
+        // (group param -> group stage) association has high correlation
+        for name in ["pose", "motion_sift"] {
+            let app = app_by_name(name, find_spec_dir(None).unwrap()).unwrap();
+            let a = analyze(&app, 36, 3);
+            for g in &app.spec.groups {
+                // at least one stage of the group must show |rho| >= 0.9
+                // for each of the group's knobs that drive latency
+                for &p in &g.params {
+                    // skip knobs that only affect fidelity (none today)
+                    let hit = g.stages.iter().any(|sn| {
+                        let s = app.spec.stage_index(sn).unwrap();
+                        a.correlation[s][p] >= CORRELATION_THRESHOLD
+                    });
+                    assert!(hit, "{name}: group {} knob {p} unrecovered", g.name);
+                }
+            }
+        }
+    }
+}

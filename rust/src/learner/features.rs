@@ -1,0 +1,184 @@
+//! Polynomial (monomial) feature expansion — the kernel trick by explicit
+//! feature-space expansion (paper Sec. 3.3: "expand the original feature
+//! space by non-linear features and learn a linear regressor in the new
+//! space ... suitable for quadratic and cubic kernels").
+//!
+//! The enumeration order (graded, then lexicographic over non-decreasing
+//! variable tuples) is shared with `python/compile/spec.py::monomials`
+//! and golden-tested in `rust/tests/golden_features.rs`.
+
+/// All monomials of total degree ≤ `degree` over variables `vars`
+/// (global variable indices). Each monomial is the non-decreasing list of
+/// its factors' variable indices; `vec![]` is the constant term.
+pub fn monomials_of(vars: &[usize], degree: usize) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = vec![vec![]];
+    for d in 1..=degree {
+        // combinations with replacement of `vars`, lexicographic
+        let mut stack: Vec<(usize, Vec<usize>)> = vec![(0, Vec::new())];
+        let mut level: Vec<Vec<usize>> = Vec::new();
+        while let Some((start, cur)) = stack.pop() {
+            if cur.len() == d {
+                level.push(cur);
+                continue;
+            }
+            // push in reverse so pop order is lexicographic
+            for i in (start..vars.len()).rev() {
+                let mut next = cur.clone();
+                next.push(vars[i]);
+                stack.push((i, next));
+            }
+        }
+        out.extend(level);
+    }
+    out
+}
+
+/// `C(v + d, d)` — the number of monomials of degree ≤ d over v variables
+/// (56 for the paper's 5-knob cubic predictors).
+pub fn monomial_count(num_vars: usize, degree: usize) -> usize {
+    // binomial(v + d, d) without overflow for our tiny sizes
+    let (v, d) = (num_vars as u64, degree as u64);
+    let mut num = 1u64;
+    let mut den = 1u64;
+    for i in 1..=d {
+        num *= v + i;
+        den *= i;
+    }
+    (num / den) as usize
+}
+
+/// A compact feature map for one regressor: monomials over a variable
+/// subset, evaluated against the *full* normalized knob vector.
+#[derive(Debug, Clone)]
+pub struct FeatureMap {
+    monos: Vec<Vec<usize>>,
+}
+
+impl FeatureMap {
+    /// Expansion over a subset of the knobs (structured groups own only
+    /// their own knob subsets — the 10+20 = 30 vs 56 economics of
+    /// paper Sec. 4.3).
+    pub fn new(vars: &[usize], degree: usize) -> Self {
+        FeatureMap { monos: monomials_of(vars, degree) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.monos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.monos.is_empty()
+    }
+
+    pub fn monomials(&self) -> &[Vec<usize>] {
+        &self.monos
+    }
+
+    /// Evaluate φ(u) into `out` (len must equal `self.len()`).
+    /// Allocation-free: callers reuse the buffer on the hot path.
+    pub fn expand_into(&self, u: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.monos.len());
+        for (slot, mono) in out.iter_mut().zip(&self.monos) {
+            let mut v = 1.0;
+            for &var in mono {
+                v *= u[var];
+            }
+            *slot = v;
+        }
+    }
+
+    /// Convenience allocating variant.
+    pub fn expand(&self, u: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.monos.len()];
+        self.expand_into(u, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_binomial() {
+        for v in 1..=6 {
+            for d in 1..=4 {
+                let vars: Vec<usize> = (0..v).collect();
+                assert_eq!(monomials_of(&vars, d).len(), monomial_count(v, d));
+            }
+        }
+    }
+
+    #[test]
+    fn paper_counts() {
+        assert_eq!(monomial_count(5, 3), 56);
+        assert_eq!(monomial_count(2, 3), 10);
+        assert_eq!(monomial_count(3, 3), 20);
+    }
+
+    #[test]
+    fn golden_order_2v2d() {
+        let m = monomials_of(&[0, 1], 2);
+        let want: Vec<Vec<usize>> =
+            vec![vec![], vec![0], vec![1], vec![0, 0], vec![0, 1], vec![1, 1]];
+        assert_eq!(m, want);
+    }
+
+    #[test]
+    fn golden_order_3v3d_prefix() {
+        let m = monomials_of(&[0, 1, 2], 3);
+        assert_eq!(
+            &m[..10],
+            &[
+                vec![],
+                vec![0],
+                vec![1],
+                vec![2],
+                vec![0, 0],
+                vec![0, 1],
+                vec![0, 2],
+                vec![1, 1],
+                vec![1, 2],
+                vec![2, 2],
+            ]
+        );
+        assert_eq!(m[10], vec![0, 0, 0]);
+        assert_eq!(*m.last().unwrap(), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn subset_vars_used_globally() {
+        let fm = FeatureMap::new(&[2, 4], 2);
+        // u has 5 entries; only u[2], u[4] matter
+        let phi = fm.expand(&[9.0, 9.0, 2.0, 9.0, 3.0]);
+        assert_eq!(phi, vec![1.0, 2.0, 3.0, 4.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn expand_constant_term_first() {
+        let fm = FeatureMap::new(&[0], 3);
+        let phi = fm.expand(&[0.5]);
+        assert_eq!(phi, vec![1.0, 0.5, 0.25, 0.125]);
+    }
+
+    #[test]
+    fn expand_into_no_alloc_matches() {
+        let fm = FeatureMap::new(&[0, 1, 2], 3);
+        let u = [0.3, 0.7, 0.9];
+        let mut buf = vec![0.0; fm.len()];
+        fm.expand_into(&u, &mut buf);
+        assert_eq!(buf, fm.expand(&u));
+    }
+
+    #[test]
+    fn graded_degree_order() {
+        let m = monomials_of(&[0, 1, 2, 3, 4], 3);
+        let degs: Vec<usize> = m.iter().map(|t| t.len()).collect();
+        let mut sorted = degs.clone();
+        sorted.sort_unstable();
+        assert_eq!(degs, sorted);
+        // uniqueness
+        let set: std::collections::HashSet<_> = m.iter().collect();
+        assert_eq!(set.len(), m.len());
+    }
+}

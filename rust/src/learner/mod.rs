@@ -1,0 +1,369 @@
+//! Online latency learning (paper Sec. 3).
+//!
+//! * [`features`] — explicit polynomial feature expansion (linear /
+//!   quadratic / cubic kernels, Sec. 3.3).
+//! * [`ogd`] — the ε-insensitive online-gradient regressor (Eq. 6–8) and
+//!   the moving average used for non-critical stages.
+//! * [`GroupMap`] / [`StagePredictor`] — the structured and unstructured
+//!   end-to-end latency predictors of Sec. 2.3/3.3: per-group regressors
+//!   combined along the critical path (sum for sequential groups, max
+//!   over parallel branches, Eq. 9) plus a moving-average offset.
+//! * [`offline`] — batch-trained baselines (the dashed lines of Fig. 6).
+//! * [`deps`] — the correlation-based dependency analysis of Sec. 2.3.
+
+pub mod deps;
+pub mod features;
+pub mod offline;
+pub mod ogd;
+
+pub use features::FeatureMap;
+pub use ogd::{MovingAverage, OgdRegressor};
+
+use crate::apps::spec::AppSpec;
+
+/// Which predictor architecture (paper Fig. 7 compares the two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// One regressor of all knobs against end-to-end latency.
+    Unstructured,
+    /// Per-group regressors over knob subsets, combined by critical path.
+    Structured,
+}
+
+impl Variant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Unstructured => "unstructured",
+            Variant::Structured => "structured",
+        }
+    }
+}
+
+/// How per-frame observations map onto learning targets for each group,
+/// and how group predictions combine into an end-to-end latency.
+#[derive(Debug, Clone)]
+pub struct GroupMap {
+    /// Per group: stage ids whose summed latency is the group's target.
+    pub group_stages: Vec<Vec<usize>>,
+    /// Per group: knob subset (global indices) its regressor sees.
+    pub group_vars: Vec<Vec<usize>>,
+    /// Per group: `None` = sequential (summed), `Some(b)` = parallel
+    /// branch b (branch totals combined with max; paper Eq. 9).
+    pub branch: Vec<Option<usize>>,
+    /// Stages outside all groups; their summed latency is tracked with a
+    /// moving average (the offset term).
+    pub offset_stages: Vec<usize>,
+}
+
+impl GroupMap {
+    /// The structured decomposition declared in the spec (Sec. 2.3 —
+    /// recovered online by [`deps::analyze`], validated in tests).
+    pub fn structured(spec: &AppSpec) -> Self {
+        let in_group: std::collections::HashSet<usize> = spec
+            .groups
+            .iter()
+            .flat_map(|g| g.stages.iter().map(|s| spec.stage_index(s).unwrap()))
+            .collect();
+        GroupMap {
+            group_stages: spec
+                .groups
+                .iter()
+                .map(|g| g.stages.iter().map(|s| spec.stage_index(s).unwrap()).collect())
+                .collect(),
+            group_vars: spec.groups.iter().map(|g| g.params.clone()).collect(),
+            branch: spec.groups.iter().map(|g| g.branch).collect(),
+            offset_stages: (0..spec.stages.len()).filter(|i| !in_group.contains(i)).collect(),
+        }
+    }
+
+    /// The flat decomposition: one pseudo-group targeting the end-to-end
+    /// latency directly, seeing every knob.
+    pub fn unstructured(spec: &AppSpec) -> Self {
+        GroupMap {
+            group_stages: vec![(0..spec.stages.len()).collect()],
+            group_vars: vec![(0..spec.num_vars()).collect()],
+            branch: vec![None],
+            offset_stages: vec![],
+        }
+    }
+
+    pub fn for_variant(spec: &AppSpec, variant: Variant) -> Self {
+        match variant {
+            Variant::Structured => Self::structured(spec),
+            Variant::Unstructured => Self::unstructured(spec),
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.group_stages.len()
+    }
+
+    /// Is this the single-group end-to-end mapping?
+    pub fn is_unstructured(&self) -> bool {
+        self.num_groups() == 1 && self.offset_stages.is_empty()
+    }
+
+    /// Learning targets from one frame's measurements:
+    /// (per-group target latencies, offset observation).
+    ///
+    /// Unstructured maps the end-to-end latency to its single group;
+    /// structured sums each group's stage latencies (the runtime exposes
+    /// stage-level latency probes — paper Sec. 2) and the leftover stages
+    /// feed the moving-average offset.
+    pub fn targets(&self, stage_ms: &[f64], end_to_end_ms: f64) -> (Vec<f64>, f64) {
+        if self.is_unstructured() {
+            return (vec![end_to_end_ms], 0.0);
+        }
+        let y = self
+            .group_stages
+            .iter()
+            .map(|stages| stages.iter().map(|&s| stage_ms[s]).sum())
+            .collect();
+        let offset = self.offset_stages.iter().map(|&s| stage_ms[s]).sum();
+        (y, offset)
+    }
+
+    /// Combine per-group predictions + offset into an end-to-end estimate
+    /// (paper Eq. 9 generalized: Σ sequential + max over branch sums).
+    pub fn combine(&self, group_pred: &[f64], offset: f64) -> f64 {
+        debug_assert_eq!(group_pred.len(), self.num_groups());
+        let mut total = offset;
+        let mut branch_sums: std::collections::BTreeMap<usize, f64> =
+            std::collections::BTreeMap::new();
+        for (g, &p) in group_pred.iter().enumerate() {
+            match self.branch[g] {
+                None => total += p,
+                Some(b) => *branch_sums.entry(b).or_insert(0.0) += p,
+            }
+        }
+        if !branch_sums.is_empty() {
+            total += branch_sums.values().cloned().fold(f64::MIN, f64::max);
+        }
+        total
+    }
+
+    /// Total compact feature count across groups for a given degree
+    /// (30 for MotionSIFT structured cubic — paper Sec. 4.3).
+    pub fn feature_count(&self, degree: usize) -> usize {
+        self.group_vars
+            .iter()
+            .map(|v| features::monomial_count(v.len(), degree))
+            .sum()
+    }
+}
+
+/// End-to-end latency predictor: per-group OGD regressors + moving-average
+/// offset, combined along the critical path.
+pub struct StagePredictor {
+    pub map: GroupMap,
+    regs: Vec<OgdRegressor>,
+    offset: MovingAverage,
+    /// Scratch for group predictions (avoids hot-loop allocation).
+    scratch: Vec<f64>,
+    pub degree: usize,
+}
+
+impl StagePredictor {
+    pub fn new(spec: &AppSpec, variant: Variant, degree: usize) -> Self {
+        let map = GroupMap::for_variant(spec, variant);
+        let regs = map
+            .group_vars
+            .iter()
+            .map(|vars| OgdRegressor::new(vars, degree))
+            .collect();
+        StagePredictor {
+            scratch: vec![0.0; map.num_groups()],
+            map,
+            regs,
+            offset: MovingAverage::new(50),
+            degree,
+        }
+    }
+
+    pub fn with_eta0(mut self, eta0: f64) -> Self {
+        for r in &mut self.regs {
+            r.eta0 = eta0;
+        }
+        self
+    }
+
+    /// Override the ε-insensitive zone (ms) of every group regressor
+    /// (ablation hook; the AOT artifacts bake the shipped 1 ms value).
+    pub fn with_eps(mut self, eps_ms: f64) -> Self {
+        for r in &mut self.regs {
+            r.eps = eps_ms;
+        }
+        self
+    }
+
+    /// Predicted end-to-end latency (ms) for normalized knobs `u`.
+    pub fn predict(&mut self, u: &[f64]) -> f64 {
+        for g in 0..self.regs.len() {
+            self.scratch[g] = self.regs[g].predict(u);
+        }
+        self.map.combine(&self.scratch, self.offset.value())
+    }
+
+    /// Learn from one frame: returns the pre-update end-to-end prediction
+    /// (for error tracking à la Fig. 6).
+    pub fn observe(&mut self, u: &[f64], stage_ms: &[f64], end_to_end_ms: f64) -> f64 {
+        let pred = self.predict(u);
+        let (targets, offset_obs) = self.map.targets(stage_ms, end_to_end_ms);
+        for (g, &y) in targets.iter().enumerate() {
+            self.regs[g].update(u, y);
+        }
+        if !self.map.offset_stages.is_empty() {
+            self.offset.observe(offset_obs);
+        }
+        pred
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.regs.iter().map(|r| r.num_features()).sum()
+    }
+
+    pub fn regressors(&self) -> &[OgdRegressor] {
+        &self.regs
+    }
+
+    /// Drive one group's regressor directly (used by backends that split
+    /// targets themselves).
+    pub fn regressor_update(&mut self, group: usize, u: &[f64], y: f64) {
+        self.regs[group].update(u, y);
+    }
+
+    /// Feed one observation of the non-critical-stage offset.
+    pub fn observe_offset(&mut self, offset_ms: f64) {
+        if !self.map.offset_stages.is_empty() {
+            self.offset.observe(offset_ms);
+        }
+    }
+
+    pub fn offset_ms(&self) -> f64 {
+        self.offset.value()
+    }
+
+    /// Forget all learned state.
+    pub fn reset(&mut self) {
+        for r in &mut self.regs {
+            r.reset();
+        }
+        self.offset = MovingAverage::new(50);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry::app_by_name;
+    use crate::apps::spec::find_spec_dir;
+    use crate::simulator::{Cluster, ClusterSim, NoiseModel};
+    use crate::util::Rng;
+
+    fn app(name: &str) -> crate::apps::App {
+        app_by_name(name, find_spec_dir(None).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn feature_counts_paper() {
+        let ms = app("motion_sift");
+        let s = GroupMap::structured(&ms.spec);
+        let u = GroupMap::unstructured(&ms.spec);
+        assert_eq!(s.feature_count(3), 30);
+        assert_eq!(u.feature_count(3), 56);
+    }
+
+    #[test]
+    fn unstructured_targets_e2e() {
+        let p = app("pose");
+        let m = GroupMap::unstructured(&p.spec);
+        let (y, off) = m.targets(&[1.0; 7], 42.0);
+        assert_eq!(y, vec![42.0]);
+        assert_eq!(off, 0.0);
+    }
+
+    #[test]
+    fn structured_targets_sum_group_stages() {
+        let p = app("pose");
+        let m = GroupMap::structured(&p.spec);
+        let stage_ms = [1.0, 2.0, 30.0, 20.0, 10.0, 5.0, 0.5];
+        let (y, off) = m.targets(&stage_ms, 68.5);
+        assert_eq!(y, vec![30.0, 20.0, 10.0, 5.0]);
+        assert!((off - 3.5).abs() < 1e-12); // source + scaler + sink
+    }
+
+    #[test]
+    fn combine_chain_is_sum() {
+        let p = app("pose");
+        let m = GroupMap::structured(&p.spec);
+        let total = m.combine(&[10.0, 20.0, 5.0, 2.0], 3.0);
+        assert!((total - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn combine_branches_take_max() {
+        let ms = app("motion_sift");
+        let m = GroupMap::structured(&ms.spec);
+        assert_eq!(m.num_groups(), 2);
+        let total = m.combine(&[50.0, 80.0], 10.0);
+        assert!((total - 90.0).abs() < 1e-12);
+        let total2 = m.combine(&[90.0, 80.0], 10.0);
+        assert!((total2 - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn structured_predictor_learns_cluster_frames() {
+        // end-to-end sanity: train on simulated frames with random knobs,
+        // probe held-out knobs; error should be far below signal scale
+        for name in ["pose", "motion_sift"] {
+            let a = app(name);
+            let mut sim = ClusterSim::new(Cluster::default(), NoiseModel::default(), 3);
+            let mut pred = StagePredictor::new(&a.spec, Variant::Structured, 3);
+            let mut rng = Rng::new(5);
+            for f in 0..3000 {
+                let u: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+                let ks = a.spec.denormalize(&u);
+                let r = sim.run_frame(&a, &ks, f % 500);
+                pred.observe(&a.spec.normalize(&ks), &r.stage_ms, r.end_to_end_ms);
+            }
+            let mut err_sum = 0.0;
+            let mut scale_sum = 0.0;
+            for f in 0..200 {
+                let u: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+                let ks = a.spec.denormalize(&u);
+                let r = sim.run_frame(&a, &ks, f % 500);
+                err_sum += (pred.predict(&a.spec.normalize(&ks)) - r.end_to_end_ms).abs();
+                scale_sum += r.end_to_end_ms;
+            }
+            let rel = err_sum / scale_sum;
+            assert!(rel < 0.35, "{name}: relative err {rel}");
+        }
+    }
+
+    #[test]
+    fn structured_and_unstructured_agree_on_scale() {
+        let a = app("motion_sift");
+        let mut sim = ClusterSim::new(Cluster::default(), NoiseModel::default(), 4);
+        let mut s = StagePredictor::new(&a.spec, Variant::Structured, 3);
+        let mut un = StagePredictor::new(&a.spec, Variant::Unstructured, 3);
+        let mut rng = Rng::new(6);
+        for f in 0..2000 {
+            let u: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+            let ks = a.spec.denormalize(&u);
+            let r = sim.run_frame(&a, &ks, f % 500);
+            let un_norm = a.spec.normalize(&ks);
+            s.observe(&un_norm, &r.stage_ms, r.end_to_end_ms);
+            un.observe(&un_norm, &r.stage_ms, r.end_to_end_ms);
+        }
+        let u = vec![0.5; 5];
+        let (ps, pu) = (s.predict(&u), un.predict(&u));
+        assert!(ps > 0.0 && pu > 0.0);
+        assert!((ps - pu).abs() / ps.max(pu) < 0.5, "{ps} vs {pu}");
+    }
+
+    #[test]
+    fn variant_str() {
+        assert_eq!(Variant::Structured.as_str(), "structured");
+        assert_eq!(Variant::Unstructured.as_str(), "unstructured");
+    }
+}

@@ -1,0 +1,58 @@
+//! # iptune — Automatic Tuning of Interactive Perception Applications
+//!
+//! A production-shaped reproduction of *Automatic Tuning of Interactive
+//! Perception Applications* (Zhu, Kveton, Mummert, Pillai; 2012): an
+//! online auto-tuner for parallel perception pipelines structured as
+//! data-flow graphs. The tuner learns per-stage latency models online
+//! (online gradient descent on the ε-insensitive SVR loss over polynomial
+//! feature expansions), composes them along the graph's critical path
+//! (sum for sequential stages, max for parallel branches — paper Eq. 9),
+//! and drives an ε-greedy controller that maximizes fidelity subject to a
+//! latency bound (paper Eq. 1–2).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: the data-flow substrate
+//!   ([`dataflow`], [`engine`]), the cluster simulator standing in for
+//!   the paper's 15-node testbed ([`simulator`]), the two case-study
+//!   application models ([`apps`]), trace collection ([`trace`]), the
+//!   learner and controller ([`learner`], [`tuner`]), metrics
+//!   ([`metrics`]) and the experiment harness ([`experiments`]).
+//! * **L2/L1 (build-time Python)** — the predictor compute graph and its
+//!   Pallas kernels, AOT-lowered to HLO text artifacts that the
+//!   [`runtime`] module loads and executes through the PJRT CPU client.
+//!   Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use iptune::apps::registry::app_by_name;
+//! use iptune::trace::TraceSet;
+//! use iptune::tuner::{EpsGreedyController, TunerConfig};
+//! use iptune::runtime::native::NativeBackend;
+//!
+//! let app = app_by_name("motion_sift", "specs").unwrap();
+//! let traces = TraceSet::generate(&app, 30, 1000, 7);
+//! let backend = NativeBackend::structured(&app.spec);
+//! let cfg = TunerConfig { epsilon: 0.03, bound_ms: 100.0, ..Default::default() };
+//! let mut ctl = EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, 11);
+//! let outcome = ctl.run(1000);
+//! println!("avg fidelity {:.3}, avg violation {:.1} ms",
+//!          outcome.avg_reward, outcome.avg_violation_ms);
+//! ```
+
+pub mod apps;
+pub mod config;
+pub mod dataflow;
+pub mod engine;
+pub mod experiments;
+pub mod learner;
+pub mod metrics;
+pub mod runtime;
+pub mod simulator;
+pub mod trace;
+pub mod tuner;
+pub mod util;
+
+/// Milliseconds, the time unit used throughout the crate.
+pub type Ms = f64;

@@ -1,0 +1,338 @@
+//! `repro` — the iptune CLI (L3 leader entrypoint).
+//!
+//! ```text
+//! repro spec [APP] [--graph]
+//! repro trace --app APP [--out DIR] [--configs N] [--frames N] [--seed N]
+//! repro tune --app APP [--epsilon E] [--bound MS] [--frames N]
+//!            [--backend xla|native] [--trace-dir DIR]
+//! repro figures (--all | --fig N | --claims) [--out DIR] [--frames N]
+//! repro engine --app APP [--frames N] [--bound MS] [--period N]
+//! ```
+//!
+//! Global flags: `--config FILE` (JSON run config), `--specs DIR`.
+//! Argument parsing is in-tree (`cli` module below) — the workspace
+//! builds offline without clap.
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::config::{BackendKind, RunConfig};
+use iptune::engine::{spawn_stream, EngineConfig};
+use iptune::experiments;
+use iptune::learner::Variant;
+use iptune::runtime::native::NativeBackend;
+use iptune::runtime::xla::XlaBackend;
+use iptune::runtime::Backend;
+use iptune::trace::TraceSet;
+use iptune::tuner::{EpsGreedyController, TunerConfig};
+
+/// Minimal flag parser: positionals + `--key value` + `--switch`.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String], switches: &[&str]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.push((k.to_string(), Some(v.to_string())));
+                } else if switches.contains(&name) {
+                    flags.push((name.to_string(), None));
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .with_context(|| format!("--{name} needs a value"))?;
+                    flags.push((name.to_string(), Some(v.clone())));
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+}
+
+const USAGE: &str = "usage: repro [--config FILE] [--specs DIR] <command>
+
+commands:
+  spec [APP] [--graph]                     print Tables 1-2 / DOT graphs
+  trace --app APP [--out DIR] [--configs N] [--frames N] [--seed N]
+  tune --app APP [--epsilon E] [--bound MS] [--frames N]
+       [--backend xla|native] [--trace-dir DIR]
+  figures (--all | --fig N | --claims) [--out DIR] [--frames N]
+  engine --app APP [--frames N] [--bound MS] [--period N]";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..], &["graph", "all", "claims"])?;
+
+    let run_cfg = RunConfig::load_or_default(args.get("config").map(std::path::Path::new))?;
+    let spec_dir = find_spec_dir(args.get("specs").map(std::path::Path::new))?;
+
+    match cmd.as_str() {
+        "spec" => cmd_spec(&args, &spec_dir),
+        "trace" => cmd_trace(&args, &spec_dir, &run_cfg),
+        "tune" => cmd_tune(&args, &spec_dir, &run_cfg),
+        "figures" => cmd_figures(&args),
+        "engine" => cmd_engine(&args, &spec_dir),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_spec(args: &Args, spec_dir: &std::path::Path) -> Result<()> {
+    let names: Vec<String> = match args.positional.first() {
+        Some(a) => vec![a.clone()],
+        None => iptune::apps::registry::APP_NAMES
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    for name in names {
+        let app = app_by_name(&name, spec_dir)?;
+        if args.has("graph") {
+            println!("{}", app.graph.to_dot(&app.spec.title));
+            continue;
+        }
+        println!("# {} — {}", app.spec.name, app.spec.title);
+        println!("{}", app.spec.description);
+        println!(
+            "latency bounds: {:?} ms | trace protocol: {} configs x {} frames\n",
+            app.spec.latency_bounds_ms, app.spec.trace_configs, app.spec.trace_frames
+        );
+        println!(
+            "{:<6} {:<24} {:<11} {:>14} {:>14} {:>12}  description",
+            "symbol", "name", "type", "min", "max", "default"
+        );
+        for p in &app.spec.params {
+            println!(
+                "{:<6} {:<24} {:<11} {:>14} {:>14} {:>12}  {}",
+                p.symbol, p.name, p.kind, p.min, p.max, p.default, p.description
+            );
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args, spec_dir: &std::path::Path, run_cfg: &RunConfig) -> Result<()> {
+    let app_name = args.get("app").context("trace: --app required")?;
+    let app = app_by_name(app_name, spec_dir)?;
+    let out = PathBuf::from(args.get("out").unwrap_or("traces"));
+    let n_cfg = args.get_parse::<usize>("configs")?.unwrap_or(run_cfg.trace.configs);
+    let n_frames = args.get_parse::<usize>("frames")?.unwrap_or(run_cfg.trace.frames);
+    let seed = args.get_parse::<u64>("seed")?.unwrap_or(run_cfg.trace.seed);
+    eprintln!(
+        "generating {n_cfg} configs x {n_frames} frames for {} (seed {seed}) ...",
+        app.spec.name
+    );
+    let ts = TraceSet::generate(&app, n_cfg, n_frames, seed);
+    let path = TraceSet::default_path(&out, &app.spec.name);
+    ts.save(&path)?;
+    let payoffs = ts.payoffs();
+    let (lo, hi) = payoffs
+        .iter()
+        .fold((f64::INFINITY, 0.0f64), |(l, h), &(c, _)| (l.min(c), h.max(c)));
+    println!(
+        "wrote {} ({} configs, cost {lo:.1}..{hi:.1} ms)",
+        path.display(),
+        ts.num_configs()
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args, spec_dir: &std::path::Path, run_cfg: &RunConfig) -> Result<()> {
+    let app_name = args.get("app").context("tune: --app required")?;
+    let app = app_by_name(app_name, spec_dir)?;
+    let trace_dir = PathBuf::from(args.get("trace-dir").unwrap_or("traces"));
+    let frames = args.get_parse::<usize>("frames")?.unwrap_or(1000);
+    let traces = TraceSet::load_or_generate(&app, &trace_dir, run_cfg.trace.seed)?;
+    let eps = args
+        .get_parse::<f64>("epsilon")?
+        .or(run_cfg.tuner.epsilon)
+        .unwrap_or_else(|| TunerConfig::epsilon_for_horizon(frames));
+    let bound = args
+        .get_parse::<f64>("bound")?
+        .or(run_cfg.tuner.bound_ms)
+        .unwrap_or(app.spec.latency_bounds_ms[0]);
+    let kind = match args.get("backend") {
+        Some(s) => BackendKind::parse(s)?,
+        None => run_cfg.tuner.backend,
+    };
+    let be: Box<dyn Backend> = match kind {
+        BackendKind::Native => Box::new(NativeBackend::structured(&app.spec)),
+        BackendKind::Xla => {
+            Box::new(XlaBackend::from_default_artifacts(&app.spec, Variant::Structured)?)
+        }
+    };
+    eprintln!(
+        "tuning {} for {frames} frames: eps={eps:.3}, L={bound} ms, backend={}",
+        app.spec.name,
+        be.name()
+    );
+    let cfg = TunerConfig {
+        epsilon: eps,
+        bound_ms: bound,
+        warmup_frames: run_cfg.tuner.warmup_frames,
+    };
+    let mut ctl = EpsGreedyController::new(&app.spec, &traces, be, cfg, run_cfg.tuner.seed);
+    let out = ctl.run(frames);
+    let oracle = iptune::tuner::policy::oracle_best(&traces, frames, bound);
+    println!(
+        "avg fidelity {:.3} ({:.1}% of oracle {:.3}) | avg violation {:.1} ms | max violation {:.1} ms | violation rate {:.1}% | explored {} / {frames}",
+        out.avg_reward,
+        100.0 * out.avg_reward / oracle.avg_reward.max(1e-9),
+        oracle.avg_reward,
+        out.avg_violation_ms,
+        out.max_violation_ms,
+        100.0 * out.violation_rate,
+        out.explore_frames,
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    let mut ctx = experiments::default_ctx(Some(&out))?;
+    ctx.frames = args.get_parse::<usize>("frames")?.unwrap_or(1000);
+    let mut ran = false;
+    if args.has("all") {
+        experiments::run_all(&ctx)?;
+        ran = true;
+    } else {
+        if let Some(n) = args.get_parse::<u32>("fig")? {
+            match n {
+                5 => experiments::fig5::run(&ctx)?,
+                6 => experiments::fig6::run(&ctx)?,
+                7 => experiments::fig7::run(&ctx)?,
+                8 => experiments::fig8::run(&ctx)?,
+                _ => bail!("unknown figure {n} (5..8)"),
+            }
+            ran = true;
+        }
+        if args.has("claims") {
+            experiments::claims::run(&ctx)?;
+            ran = true;
+        }
+    }
+    if !ran {
+        bail!("nothing to do: pass --all, --fig N or --claims");
+    }
+    Ok(())
+}
+
+fn cmd_engine(args: &Args, spec_dir: &std::path::Path) -> Result<()> {
+    let app_name = args.get("app").context("engine: --app required")?;
+    let app = Arc::new(app_by_name(app_name, spec_dir)?);
+    let frames = args.get_parse::<usize>("frames")?.unwrap_or(300);
+    let bound = args
+        .get_parse::<f64>("bound")?
+        .unwrap_or(app.spec.latency_bounds_ms[0]);
+    let period = args.get_parse::<usize>("period")?.unwrap_or(25);
+    run_engine_demo(app, frames, bound, period)
+}
+
+/// Closed loop: stream frames through the threaded engine, learn
+/// per-stage latencies online, retune the running pipeline every
+/// `period` frames.
+fn run_engine_demo(
+    app: Arc<iptune::apps::App>,
+    frames: usize,
+    bound: f64,
+    period: usize,
+) -> Result<()> {
+    let handle = spawn_stream(
+        Arc::clone(&app),
+        app.spec.defaults(),
+        EngineConfig { frames, realtime_scale: 1e-5, queue_capacity: 8, seed: 3 },
+    );
+
+    let mut backend = NativeBackend::structured(&app.spec);
+    let mut rng = iptune::util::Rng::new(17);
+    // candidate grid: random valid configs + the defaults
+    let mut candidates: Vec<Vec<f64>> = (0..48)
+        .map(|_| (0..app.spec.num_vars()).map(|_| rng.f64()).collect())
+        .collect();
+    candidates.push(app.spec.normalize(&app.spec.defaults()));
+    let content = app.model.content(0);
+    let rewards: Vec<f64> = candidates
+        .iter()
+        .map(|u| app.model.fidelity(&app.spec.denormalize(u), &content))
+        .collect();
+
+    let mut lat_sum = 0.0;
+    let mut fid_sum = 0.0;
+    let mut over = 0usize;
+    let mut n = 0usize;
+    while let Ok(rec) = handle.records.recv() {
+        let u = app.spec.normalize(&rec.knobs);
+        let (y, off) = backend.group_map().targets(&rec.stage_ms, rec.end_to_end_ms);
+        backend.update(&u, &y);
+        backend.observe_offset(off);
+        lat_sum += rec.end_to_end_ms;
+        fid_sum += rec.fidelity;
+        if rec.end_to_end_ms > bound {
+            over += 1;
+        }
+        n += 1;
+        if rec.frame % period == period - 1 {
+            let pick = backend.solve(&candidates, &rewards, bound);
+            let ks = app.spec.denormalize(&candidates[pick]);
+            println!(
+                "frame {:>4}: avg latency {:>7.1} ms, avg fidelity {:.3}, over-bound {:>3} -> retune to {:?}",
+                rec.frame,
+                lat_sum / n as f64,
+                fid_sum / n as f64,
+                over,
+                ks.iter().map(|k| (k * 100.0).round() / 100.0).collect::<Vec<_>>()
+            );
+            handle.set_knobs(ks);
+            lat_sum = 0.0;
+            fid_sum = 0.0;
+            over = 0;
+            n = 0;
+        }
+    }
+    println!("engine demo complete ({frames} frames, L={bound} ms)");
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! 2-D convex hull (Andrew's monotone chain) — the payoff region of
+//! randomized strategies over the action space (paper Fig. 5: "the convex
+//! hull represents payoffs which are feasible by playing a randomized
+//! strategy over the 30 action configurations"; also the gray regions of
+//! Fig. 8).
+
+/// Convex hull of `points`, counter-clockwise starting at the lowest-x
+/// point. Returns the input (deduplicated) when there are < 3 distinct
+/// points.
+pub fn convex_hull(points: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut pts: Vec<(f64, f64)> = points.to_vec();
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pts.dedup();
+    if pts.len() < 3 {
+        return pts;
+    }
+    let cross = |o: (f64, f64), a: (f64, f64), b: (f64, f64)| {
+        (a.0 - o.0) * (b.1 - o.1) - (a.1 - o.1) * (b.0 - o.0)
+    };
+    let mut lower: Vec<(f64, f64)> = Vec::new();
+    for &p in &pts {
+        while lower.len() >= 2 && cross(lower[lower.len() - 2], lower[lower.len() - 1], p) <= 0.0 {
+            lower.pop();
+        }
+        lower.push(p);
+    }
+    let mut upper: Vec<(f64, f64)> = Vec::new();
+    for &p in pts.iter().rev() {
+        while upper.len() >= 2 && cross(upper[upper.len() - 2], upper[upper.len() - 1], p) <= 0.0 {
+            upper.pop();
+        }
+        upper.push(p);
+    }
+    lower.pop();
+    upper.pop();
+    lower.extend(upper);
+    lower
+}
+
+/// Is `p` inside (or on) the convex hull given as a CCW polygon?
+pub fn hull_contains(hull: &[(f64, f64)], p: (f64, f64)) -> bool {
+    if hull.len() < 3 {
+        // degenerate: point-or-segment membership with tolerance
+        return hull.iter().any(|&(x, y)| {
+            ((x - p.0).powi(2) + (y - p.1).powi(2)).sqrt() < 1e-9
+        }) || (hull.len() == 2 && on_segment(hull[0], hull[1], p));
+    }
+    let n = hull.len();
+    for i in 0..n {
+        let a = hull[i];
+        let b = hull[(i + 1) % n];
+        let cross = (b.0 - a.0) * (p.1 - a.1) - (b.1 - a.1) * (p.0 - a.0);
+        if cross < -1e-9 {
+            return false;
+        }
+    }
+    true
+}
+
+fn on_segment(a: (f64, f64), b: (f64, f64), p: (f64, f64)) -> bool {
+    let cross = (b.0 - a.0) * (p.1 - a.1) - (b.1 - a.1) * (p.0 - a.0);
+    if cross.abs() > 1e-9 {
+        return false;
+    }
+    p.0 >= a.0.min(b.0) - 1e-9
+        && p.0 <= a.0.max(b.0) + 1e-9
+        && p.1 >= a.1.min(b.1) - 1e-9
+        && p.1 <= a.1.max(b.1) + 1e-9
+}
+
+/// The best reward achievable at violation ≤ `x` by mixing the given
+/// (violation, reward) payoff points — the upper frontier of the hull.
+/// Used to score policies against randomized strategies (Fig. 8).
+pub fn best_mixture_reward(payoffs: &[(f64, f64)], x: f64) -> f64 {
+    // upper concave envelope evaluated at x: maximize over pairs (i, j)
+    // of mixtures with mixed violation <= x, plus pure strategies
+    let mut best = f64::NEG_INFINITY;
+    for &(vi, ri) in payoffs {
+        if vi <= x + 1e-12 {
+            best = best.max(ri);
+        }
+    }
+    for (i, &(vi, ri)) in payoffs.iter().enumerate() {
+        for &(vj, rj) in &payoffs[i + 1..] {
+            let (lo, hi, rlo, rhi) = if vi <= vj { (vi, vj, ri, rj) } else { (vj, vi, rj, ri) };
+            if x >= lo && x <= hi && hi > lo {
+                let t = (x - lo) / (hi - lo);
+                best = best.max(rlo + t * (rhi - rlo));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_hull() {
+        let pts = [(0.0, 0.0), (1.0, 0.0), (1.0, 1.0), (0.0, 1.0), (0.5, 0.5)];
+        let h = convex_hull(&pts);
+        assert_eq!(h.len(), 4);
+        assert!(!h.contains(&(0.5, 0.5)));
+    }
+
+    #[test]
+    fn hull_contains_all_inputs() {
+        let pts: Vec<(f64, f64)> = (0..40)
+            .map(|i| {
+                let t = i as f64;
+                ((t * 7.3) % 5.0, (t * 3.1) % 4.0)
+            })
+            .collect();
+        let h = convex_hull(&pts);
+        for &p in &pts {
+            assert!(hull_contains(&h, p), "{p:?} outside hull");
+        }
+    }
+
+    #[test]
+    fn collinear_degenerate() {
+        let pts = [(0.0, 0.0), (1.0, 1.0), (2.0, 2.0)];
+        let h = convex_hull(&pts);
+        assert!(h.len() <= 3);
+        assert!(hull_contains(&h, (1.0, 1.0)) || h.len() == 2);
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        assert_eq!(convex_hull(&[]).len(), 0);
+        assert_eq!(convex_hull(&[(1.0, 2.0)]), vec![(1.0, 2.0)]);
+        assert_eq!(convex_hull(&[(1.0, 2.0), (1.0, 2.0)]).len(), 1);
+    }
+
+    #[test]
+    fn mixture_frontier() {
+        // two pure strategies: (violation 0, reward 0.5), (10, 0.9)
+        let payoffs = [(0.0, 0.5), (10.0, 0.9)];
+        assert!((best_mixture_reward(&payoffs, 0.0) - 0.5).abs() < 1e-12);
+        assert!((best_mixture_reward(&payoffs, 5.0) - 0.7).abs() < 1e-12);
+        assert!((best_mixture_reward(&payoffs, 10.0) - 0.9).abs() < 1e-12);
+        assert!((best_mixture_reward(&payoffs, 20.0) - 0.9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Metrics: the error measures of Fig. 6/7 (cumulative expected and
+//! max-norm prediction errors) and the payoff machinery of Fig. 5/8
+//! (convex hulls of randomized-strategy payoffs, constraint violation).
+
+pub mod hull;
+
+pub use hull::convex_hull;
+
+/// Tracks the paper's two prediction-error measures as a stream of
+/// |prediction − observation| values arrives:
+/// * expected error — cumulative average of |err| up to each frame;
+/// * max-norm error — running max of |err| up to each frame.
+#[derive(Debug, Clone, Default)]
+pub struct ErrorTracker {
+    sum_abs: f64,
+    max_abs: f64,
+    n: u64,
+}
+
+impl ErrorTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one |prediction − observation| and return the pair
+    /// (cumulative expected error, cumulative max-norm error).
+    pub fn observe(&mut self, abs_err: f64) -> (f64, f64) {
+        debug_assert!(abs_err >= 0.0);
+        self.sum_abs += abs_err;
+        self.max_abs = self.max_abs.max(abs_err);
+        self.n += 1;
+        (self.expected(), self.max_norm())
+    }
+
+    pub fn expected(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_abs / self.n as f64
+        }
+    }
+
+    pub fn max_norm(&self) -> f64 {
+        self.max_abs
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Running policy-outcome accumulator for Fig. 8: average reward and
+/// average constraint violation E[max(c − L, 0)].
+#[derive(Debug, Clone, Default)]
+pub struct PolicyStats {
+    sum_reward: f64,
+    sum_violation: f64,
+    max_violation: f64,
+    violated_frames: u64,
+    n: u64,
+}
+
+impl PolicyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, reward: f64, latency_ms: f64, bound_ms: f64) {
+        let v = (latency_ms - bound_ms).max(0.0);
+        self.sum_reward += reward;
+        self.sum_violation += v;
+        self.max_violation = self.max_violation.max(v);
+        if v > 0.0 {
+            self.violated_frames += 1;
+        }
+        self.n += 1;
+    }
+
+    pub fn avg_reward(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_reward / self.n as f64
+        }
+    }
+
+    /// E[max(c − L, 0)] in ms.
+    pub fn avg_violation_ms(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_violation / self.n as f64
+        }
+    }
+
+    pub fn max_violation_ms(&self) -> f64 {
+        self.max_violation
+    }
+
+    pub fn violation_rate(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.violated_frames as f64 / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_tracker_cumulative() {
+        let mut t = ErrorTracker::new();
+        assert_eq!(t.observe(2.0), (2.0, 2.0));
+        assert_eq!(t.observe(4.0), (3.0, 4.0));
+        let (e, m) = t.observe(0.0);
+        assert!((e - 2.0).abs() < 1e-12);
+        assert_eq!(m, 4.0);
+        assert_eq!(t.count(), 3);
+    }
+
+    #[test]
+    fn error_tracker_empty() {
+        let t = ErrorTracker::new();
+        assert_eq!(t.expected(), 0.0);
+        assert_eq!(t.max_norm(), 0.0);
+    }
+
+    #[test]
+    fn policy_stats_violation_semantics() {
+        let mut p = PolicyStats::new();
+        p.observe(0.8, 45.0, 50.0); // no violation
+        p.observe(0.6, 80.0, 50.0); // 30ms over
+        assert!((p.avg_reward() - 0.7).abs() < 1e-12);
+        assert!((p.avg_violation_ms() - 15.0).abs() < 1e-12);
+        assert_eq!(p.max_violation_ms(), 30.0);
+        assert!((p.violation_rate() - 0.5).abs() < 1e-12);
+    }
+}

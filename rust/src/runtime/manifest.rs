@@ -1,0 +1,202 @@
+//! `artifacts/manifest.json` — the inventory `python/compile/aot.py`
+//! writes next to the HLO artifacts. The runtime validates what it loads
+//! against this before compiling anything.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ShapeSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ShapeSig {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(ShapeSig {
+            shape: v.req("shape")?.as_usize_vec()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub app: String,
+    pub variant: String,
+    pub op: String,
+    pub inputs: Vec<ShapeSig>,
+    pub outputs: Vec<ShapeSig>,
+    pub num_groups: usize,
+    pub feature_pad: usize,
+    pub candidate_pad: usize,
+    pub num_vars: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct AppEntry {
+    pub num_vars: usize,
+    pub num_groups: usize,
+    pub feature_pad: usize,
+    pub candidate_pad: usize,
+    pub structured_features: usize,
+    pub unstructured_features: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactEntry>,
+    pub apps: HashMap<String, AppEntry>,
+}
+
+impl Manifest {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let path = artifact_dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text)?;
+        let mut artifacts = HashMap::new();
+        for (name, e) in v.req("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    file: e.req("file")?.as_str()?.to_string(),
+                    app: e.req("app")?.as_str()?.to_string(),
+                    variant: e.req("variant")?.as_str()?.to_string(),
+                    op: e.req("op")?.as_str()?.to_string(),
+                    inputs: e
+                        .req("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(ShapeSig::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: e
+                        .req("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(ShapeSig::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    num_groups: e.req("num_groups")?.as_usize()?,
+                    feature_pad: e.req("feature_pad")?.as_usize()?,
+                    candidate_pad: e.req("candidate_pad")?.as_usize()?,
+                    num_vars: e.req("num_vars")?.as_usize()?,
+                },
+            );
+        }
+        let mut apps = HashMap::new();
+        for (name, a) in v.req("apps")?.as_obj()? {
+            apps.insert(
+                name.clone(),
+                AppEntry {
+                    num_vars: a.req("num_vars")?.as_usize()?,
+                    num_groups: a.req("num_groups")?.as_usize()?,
+                    feature_pad: a.req("feature_pad")?.as_usize()?,
+                    candidate_pad: a.req("candidate_pad")?.as_usize()?,
+                    structured_features: a.req("structured_features")?.as_usize()?,
+                    unstructured_features: a.req("unstructured_features")?.as_usize()?,
+                },
+            );
+        }
+        Ok(Manifest { artifacts, apps })
+    }
+
+    /// The artifact entry for (app, variant, op), with existence check.
+    pub fn entry(
+        &self,
+        artifact_dir: impl AsRef<Path>,
+        app: &str,
+        variant: &str,
+        op: &str,
+    ) -> Result<(&ArtifactEntry, PathBuf)> {
+        let key = format!("{app}_{variant}_{op}");
+        let Some(e) = self.artifacts.get(&key) else {
+            bail!("artifact {key} not in manifest");
+        };
+        let path = artifact_dir.as_ref().join(&e.file);
+        if !path.is_file() {
+            bail!("artifact file {} missing (run `make artifacts`)", path.display());
+        }
+        Ok((e, path))
+    }
+}
+
+/// Locate the repo's `artifacts/` dir: explicit, `$IPTUNE_ARTIFACTS`, or
+/// walk up from cwd/exe looking for `artifacts/manifest.json`.
+pub fn find_artifact_dir(explicit: Option<&Path>) -> Result<PathBuf> {
+    if let Some(p) = explicit {
+        if p.join("manifest.json").is_file() {
+            return Ok(p.to_path_buf());
+        }
+        bail!("no manifest.json under {}", p.display());
+    }
+    if let Ok(env) = std::env::var("IPTUNE_ARTIFACTS") {
+        let p = PathBuf::from(env);
+        if p.join("manifest.json").is_file() {
+            return Ok(p);
+        }
+    }
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    if let Ok(cwd) = std::env::current_dir() {
+        candidates.push(cwd);
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        candidates.push(exe);
+    }
+    candidates.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    for start in candidates {
+        let mut cur: Option<&Path> = Some(start.as_path());
+        while let Some(dir) = cur {
+            let arts = dir.join("artifacts");
+            if arts.join("manifest.json").is_file() {
+                return Ok(arts);
+            }
+            cur = dir.parent();
+        }
+    }
+    bail!("could not locate artifacts/ (run `make artifacts` or set IPTUNE_ARTIFACTS)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> Option<PathBuf> {
+        find_artifact_dir(None).ok()
+    }
+
+    #[test]
+    fn manifest_loads_if_built() {
+        let Some(dir) = have_artifacts() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 12);
+        for app in ["pose", "motion_sift"] {
+            for variant in ["structured", "unstructured"] {
+                for op in ["predict", "update", "solve"] {
+                    let (e, path) = m.entry(&dir, app, variant, op).unwrap();
+                    assert_eq!(e.op, op);
+                    assert!(path.is_file());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_feature_counts_in_manifest() {
+        let Some(dir) = have_artifacts() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let ms = &m.apps["motion_sift"];
+        assert_eq!(ms.structured_features, 30);
+        assert_eq!(ms.unstructured_features, 56);
+    }
+
+    #[test]
+    fn missing_entry_rejected() {
+        let Some(dir) = have_artifacts() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entry(&dir, "pose", "structured", "nope").is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Predictor runtime backends.
+//!
+//! The tuner's hot path — batched latency prediction over the candidate
+//! action set, the fused OGD weight update, and the constrained-argmax
+//! solve — runs behind the [`Backend`] trait:
+//!
+//! * [`xla::XlaBackend`] executes the AOT-compiled HLO artifacts
+//!   (`artifacts/*.hlo.txt`, produced once by `make artifacts`) on the
+//!   PJRT CPU client. This is the production path: Python never runs.
+//! * [`native::NativeBackend`] is the pure-Rust twin with *compact*
+//!   per-group feature spaces (the 30-vs-56 economics of Sec. 4.3). It
+//!   serves as the cross-check oracle for the artifacts and as the
+//!   fallback when artifacts are absent.
+//!
+//! Both share identical math; `rust/tests/integration_runtime.rs` asserts
+//! they agree to float32 tolerance.
+
+pub mod manifest;
+pub mod native;
+pub mod xla;
+
+use crate::learner::GroupMap;
+
+/// A latency-predictor backend: state (per-group weights + offset) plus
+/// the three tuner operations.
+///
+/// Not `Send`: the XLA backend holds PJRT handles that are pinned to the
+/// thread that created them; the controller is single-threaded anyway.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// The group decomposition this backend learns over.
+    fn group_map(&self) -> &GroupMap;
+
+    /// Predicted end-to-end latency (ms) for each normalized candidate.
+    fn predict(&mut self, u_batch: &[Vec<f64>]) -> Vec<f64>;
+
+    /// One OGD step: played action `u` (normalized), per-group observed
+    /// latency targets `y_groups` (ms). The backend manages its own
+    /// η_t = η₀/√t schedule.
+    fn update(&mut self, u: &[f64], y_groups: &[f64]);
+
+    /// Feed one observation of the non-critical-stage offset (ms).
+    fn observe_offset(&mut self, offset_ms: f64);
+
+    /// Constrained argmax (paper Eq. 2): index of the candidate with the
+    /// highest reward among those predicted to satisfy `bound_ms`, or the
+    /// predicted-fastest candidate when none are feasible.
+    fn solve(&mut self, u_batch: &[Vec<f64>], rewards: &[f64], bound_ms: f64) -> usize {
+        self.solve_with_costs(u_batch, rewards, bound_ms).0
+    }
+
+    /// [`solve`](Self::solve) that also returns the predicted latency of
+    /// every candidate — the hot path uses this to avoid a second
+    /// predictor dispatch per frame (the XLA solve artifact computes the
+    /// costs anyway).
+    fn solve_with_costs(
+        &mut self,
+        u_batch: &[Vec<f64>],
+        rewards: &[f64],
+        bound_ms: f64,
+    ) -> (usize, Vec<f64>);
+
+    /// Reset learned state (fresh weights, schedule, offset).
+    fn reset(&mut self);
+}
+
+/// Reference solve implementation shared by backends that expose
+/// `predict` (native; also used to validate the XLA `solve` artifact).
+pub fn solve_by_predict(
+    backend: &mut dyn Backend,
+    u_batch: &[Vec<f64>],
+    rewards: &[f64],
+    bound_ms: f64,
+) -> (usize, Vec<f64>) {
+    let costs = backend.predict(u_batch);
+    let mut best: Option<usize> = None;
+    for (i, &c) in costs.iter().enumerate() {
+        if c <= bound_ms {
+            match best {
+                Some(b) if rewards[b] >= rewards[i] => {}
+                _ => best = Some(i),
+            }
+        }
+    }
+    let idx = best.unwrap_or_else(|| {
+        costs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    });
+    (idx, costs)
+}

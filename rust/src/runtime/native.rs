@@ -1,0 +1,177 @@
+//! Pure-Rust predictor backend with compact per-group feature spaces.
+
+use super::Backend;
+use crate::apps::spec::AppSpec;
+use crate::learner::{GroupMap, StagePredictor, Variant};
+
+/// Native backend: wraps [`StagePredictor`] (compact monomial expansions
+/// — 30 structured features vs 56 unstructured on MotionSIFT).
+pub struct NativeBackend {
+    pred: StagePredictor,
+}
+
+impl NativeBackend {
+    pub fn new(spec: &AppSpec, variant: Variant, degree: usize) -> Self {
+        NativeBackend { pred: StagePredictor::new(spec, variant, degree) }
+    }
+
+    /// Cubic structured predictor (the paper's headline configuration).
+    pub fn structured(spec: &AppSpec) -> Self {
+        Self::new(spec, Variant::Structured, 3)
+    }
+
+    /// Cubic unstructured predictor.
+    pub fn unstructured(spec: &AppSpec) -> Self {
+        Self::new(spec, Variant::Unstructured, 3)
+    }
+
+    pub fn with_eta0(mut self, eta0: f64) -> Self {
+        self.pred = self.pred.with_eta0(eta0);
+        self
+    }
+
+    pub fn predictor(&self) -> &StagePredictor {
+        &self.pred
+    }
+
+    /// Total compact feature count (Sec. 4.3 economics).
+    pub fn num_features(&self) -> usize {
+        self.pred.num_features()
+    }
+
+    /// Single-candidate prediction without batching overhead.
+    pub fn predict_one(&mut self, u: &[f64]) -> f64 {
+        self.pred.predict(u)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn group_map(&self) -> &GroupMap {
+        &self.pred.map
+    }
+
+    fn predict(&mut self, u_batch: &[Vec<f64>]) -> Vec<f64> {
+        u_batch.iter().map(|u| self.pred.predict(u)).collect()
+    }
+
+    fn update(&mut self, u: &[f64], y_groups: &[f64]) {
+        debug_assert_eq!(y_groups.len(), self.pred.map.num_groups());
+        // StagePredictor::observe recomputes targets; here targets are
+        // already split, so drive the regressors directly.
+        for (g, &y) in y_groups.iter().enumerate() {
+            self.pred.regressor_update(g, u, y);
+        }
+    }
+
+    fn observe_offset(&mut self, offset_ms: f64) {
+        self.pred.observe_offset(offset_ms);
+    }
+
+    fn solve_with_costs(
+        &mut self,
+        u_batch: &[Vec<f64>],
+        rewards: &[f64],
+        bound_ms: f64,
+    ) -> (usize, Vec<f64>) {
+        super::solve_by_predict(self, u_batch, rewards, bound_ms)
+    }
+
+    fn reset(&mut self) {
+        self.pred.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry::app_by_name;
+    use crate::apps::spec::find_spec_dir;
+
+    fn spec(name: &str) -> AppSpec {
+        app_by_name(name, find_spec_dir(None).unwrap()).unwrap().spec
+    }
+
+    #[test]
+    fn feature_counts() {
+        let s = spec("motion_sift");
+        assert_eq!(NativeBackend::structured(&s).num_features(), 30);
+        assert_eq!(NativeBackend::unstructured(&s).num_features(), 56);
+    }
+
+    #[test]
+    fn update_then_predict_moves_toward_target() {
+        let s = spec("pose");
+        let mut b = NativeBackend::structured(&s);
+        let u = vec![0.5; 5];
+        let y = vec![40.0, 30.0, 10.0, 5.0];
+        let before = b.predict(&[u.clone()])[0];
+        for _ in 0..200 {
+            b.update(&u, &y);
+            b.observe_offset(3.0);
+        }
+        let after = b.predict(&[u.clone()])[0];
+        let target = 85.0 + 3.0;
+        assert!((after - target).abs() < (before - target).abs());
+        assert!((after - target).abs() < 10.0, "after {after}");
+    }
+
+    #[test]
+    fn solve_picks_feasible_max_reward() {
+        let s = spec("pose");
+        let mut b = NativeBackend::unstructured(&s);
+        // train: latency = 200*u0
+        for i in 0..3000 {
+            let x = (i % 100) as f64 / 99.0;
+            b.update(&[x, 0.5, 0.5, 0.5, 0.5], &[200.0 * x]);
+        }
+        let cands: Vec<Vec<f64>> = (0..10)
+            .map(|i| vec![i as f64 / 9.0, 0.5, 0.5, 0.5, 0.5])
+            .collect();
+        // reward increases with u0 (slower = better fidelity here)
+        let rewards: Vec<f64> = (0..10).map(|i| i as f64 / 9.0).collect();
+        let pick = b.solve(&cands, &rewards, 100.0);
+        let costs = b.predict(&cands);
+        assert!(costs[pick] <= 100.0, "picked infeasible {}", costs[pick]);
+        // it should be the largest feasible u0
+        for (i, &c) in costs.iter().enumerate() {
+            if c <= 100.0 {
+                assert!(rewards[pick] >= rewards[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_fallback_min_cost() {
+        let s = spec("pose");
+        let mut b = NativeBackend::unstructured(&s);
+        for i in 0..2000 {
+            let x = (i % 100) as f64 / 99.0;
+            b.update(&[x, 0.5, 0.5, 0.5, 0.5], &[100.0 + 200.0 * x]);
+        }
+        let cands: Vec<Vec<f64>> =
+            (0..5).map(|i| vec![i as f64 / 4.0, 0.5, 0.5, 0.5, 0.5]).collect();
+        let pick = b.solve(&cands, &[0.0; 5], 1.0); // nothing feasible
+        let costs = b.predict(&cands);
+        let min_i = costs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(pick, min_i);
+    }
+
+    #[test]
+    fn reset_forgets() {
+        let s = spec("pose");
+        let mut b = NativeBackend::unstructured(&s);
+        b.update(&[0.5; 5], &[100.0]);
+        assert_ne!(b.predict(&[vec![0.5; 5]])[0], 0.0);
+        b.reset();
+        assert_eq!(b.predict(&[vec![0.5; 5]])[0], 0.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! PJRT execution of the AOT-compiled predictor artifacts.
+//!
+//! Loads `artifacts/{app}_{variant}_{predict,update,solve}.hlo.txt` (HLO
+//! *text* — see DESIGN.md and /opt/xla-example/README.md for why text,
+//! not serialized protos), compiles each once on the PJRT CPU client, and
+//! serves the [`Backend`] operations from the compiled executables. The
+//! per-group weight matrix lives host-side as `Vec<f32>` and rides along
+//! on every call (shapes are tiny: G×64 f32).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::manifest::Manifest;
+use super::Backend;
+use crate::apps::spec::AppSpec;
+use crate::learner::ogd::{DEFAULT_ETA0, LATENCY_SCALE_MS};
+use crate::learner::{GroupMap, MovingAverage, Variant};
+
+/// PJRT-backed predictor backend.
+pub struct XlaBackend {
+    map: GroupMap,
+    predict_exe: ::xla::PjRtLoadedExecutable,
+    update_exe: ::xla::PjRtLoadedExecutable,
+    solve_exe: ::xla::PjRtLoadedExecutable,
+    /// Host copy of the per-group weights, row-major [G, F].
+    weights: Vec<f32>,
+    num_groups: usize,
+    feature_pad: usize,
+    candidate_pad: usize,
+    num_vars: usize,
+    offset: MovingAverage,
+    t: u64,
+    pub eta0: f64,
+}
+
+impl XlaBackend {
+    /// Load + compile the three artifacts for (app spec, variant).
+    pub fn new(spec: &AppSpec, variant: Variant, artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let client = ::xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let mut exes = Vec::with_capacity(3);
+        let mut meta = None;
+        for op in ["predict", "update", "solve"] {
+            let (entry, path) = manifest.entry(dir, &spec.name, variant.as_str(), op)?;
+            if entry.num_vars != spec.num_vars() {
+                bail!(
+                    "artifact {} built for {} vars, spec has {} — rerun `make artifacts`",
+                    path.display(),
+                    entry.num_vars,
+                    spec.num_vars()
+                );
+            }
+            let proto = ::xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = ::xla::XlaComputation::from_proto(&proto);
+            exes.push(client.compile(&comp).with_context(|| format!("compiling {op}"))?);
+            meta = Some((
+                entry.num_groups,
+                entry.feature_pad,
+                entry.candidate_pad,
+                entry.num_vars,
+            ));
+        }
+        let (num_groups, feature_pad, candidate_pad, num_vars) = meta.unwrap();
+        let solve_exe = exes.pop().unwrap();
+        let update_exe = exes.pop().unwrap();
+        let predict_exe = exes.pop().unwrap();
+
+        Ok(XlaBackend {
+            map: GroupMap::for_variant(spec, variant),
+            predict_exe,
+            update_exe,
+            solve_exe,
+            weights: vec![0.0; num_groups * feature_pad],
+            num_groups,
+            feature_pad,
+            candidate_pad,
+            num_vars,
+            offset: MovingAverage::new(50),
+            t: 0,
+            eta0: DEFAULT_ETA0,
+        })
+    }
+
+    /// Convenience: locate artifacts automatically.
+    pub fn from_default_artifacts(spec: &AppSpec, variant: Variant) -> Result<Self> {
+        let dir = super::manifest::find_artifact_dir(None)?;
+        Self::new(spec, variant, dir)
+    }
+
+    pub fn with_eta0(mut self, eta0: f64) -> Self {
+        self.eta0 = eta0;
+        self
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    /// Build the padded `[N, V+1]` candidate literal (+ validity mask).
+    fn candidate_literal(&self, u_batch: &[Vec<f64>]) -> Result<(::xla::Literal, Vec<f32>)> {
+        let n = self.candidate_pad;
+        let vp = self.num_vars + 1;
+        if u_batch.len() > n {
+            bail!("candidate batch {} exceeds artifact pad {}", u_batch.len(), n);
+        }
+        let mut data = vec![0.0f32; n * vp];
+        let mut valid = vec![0.0f32; n];
+        for (i, u) in u_batch.iter().enumerate() {
+            debug_assert_eq!(u.len(), self.num_vars);
+            for (j, &x) in u.iter().enumerate() {
+                data[i * vp + j] = x as f32;
+            }
+            data[i * vp + self.num_vars] = 1.0; // trailing constant slot
+            valid[i] = 1.0;
+        }
+        // padded rows keep the trailing 1.0 too (harmless; masked out)
+        for i in u_batch.len()..n {
+            data[i * vp + self.num_vars] = 1.0;
+        }
+        let lit = ::xla::Literal::vec1(&data).reshape(&[n as i64, vp as i64])?;
+        Ok((lit, valid))
+    }
+
+    fn weights_literal(&self) -> Result<::xla::Literal> {
+        ::xla::Literal::vec1(&self.weights)
+            .reshape(&[self.num_groups as i64, self.feature_pad as i64])
+            .map_err(Into::into)
+    }
+
+    fn scalar1(x: f64) -> ::xla::Literal {
+        ::xla::Literal::vec1(&[x as f32])
+    }
+
+    fn exec(
+        exe: &::xla::PjRtLoadedExecutable,
+        args: &[::xla::Literal],
+    ) -> Result<::xla::Literal> {
+        let result = exe.execute::<::xla::Literal>(args)?;
+        Ok(result[0][0].to_literal_sync()?)
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn group_map(&self) -> &GroupMap {
+        &self.map
+    }
+
+    fn predict(&mut self, u_batch: &[Vec<f64>]) -> Vec<f64> {
+        let n_real = u_batch.len();
+        let (u_lit, _) = self.candidate_literal(u_batch).expect("candidate literal");
+        let w = self.weights_literal().expect("weights literal");
+        // the artifacts compute in normalized latency units (1 = 100 ms)
+        let off = Self::scalar1(self.offset.value() / LATENCY_SCALE_MS);
+        let out = Self::exec(&self.predict_exe, &[u_lit, w, off])
+            .expect("predict exec")
+            .to_tuple1()
+            .expect("predict tuple");
+        let c: Vec<f32> = out.to_vec().expect("predict read");
+        c[..n_real].iter().map(|&x| x as f64 * LATENCY_SCALE_MS).collect()
+    }
+
+    fn update(&mut self, u: &[f64], y_groups: &[f64]) {
+        debug_assert_eq!(y_groups.len(), self.num_groups);
+        self.t += 1;
+        let eta = self.eta0 / (self.t as f64).sqrt();
+        let vp = self.num_vars + 1;
+        let mut u_aug = vec![0.0f32; vp];
+        for (j, &x) in u.iter().enumerate() {
+            u_aug[j] = x as f32;
+        }
+        u_aug[self.num_vars] = 1.0;
+        let y: Vec<f32> = y_groups
+            .iter()
+            .map(|&x| (x / LATENCY_SCALE_MS) as f32)
+            .collect();
+        let w = self.weights_literal().expect("weights literal");
+        let out = Self::exec(
+            &self.update_exe,
+            &[
+                w,
+                ::xla::Literal::vec1(&u_aug),
+                ::xla::Literal::vec1(&y),
+                Self::scalar1(eta),
+            ],
+        )
+        .expect("update exec")
+        .to_tuple1()
+        .expect("update tuple");
+        self.weights = out.to_vec().expect("update read");
+    }
+
+    fn observe_offset(&mut self, offset_ms: f64) {
+        if !self.map.offset_stages.is_empty() {
+            self.offset.observe(offset_ms);
+        }
+    }
+
+    fn solve_with_costs(
+        &mut self,
+        u_batch: &[Vec<f64>],
+        rewards: &[f64],
+        bound_ms: f64,
+    ) -> (usize, Vec<f64>) {
+        let n = self.candidate_pad;
+        let (u_lit, valid) = self.candidate_literal(u_batch).expect("candidate literal");
+        let mut r = vec![0.0f32; n];
+        for (i, &x) in rewards.iter().enumerate() {
+            r[i] = x as f32;
+        }
+        let w = self.weights_literal().expect("weights literal");
+        let off = Self::scalar1(self.offset.value() / LATENCY_SCALE_MS);
+        let out = Self::exec(
+            &self.solve_exe,
+            &[
+                u_lit,
+                w,
+                off,
+                ::xla::Literal::vec1(&r),
+                ::xla::Literal::vec1(&valid),
+                Self::scalar1(bound_ms / LATENCY_SCALE_MS),
+            ],
+        )
+        .expect("solve exec");
+        let (idx, costs) = out.to_tuple2().expect("solve tuple");
+        let idx: Vec<i32> = idx.to_vec().expect("solve idx");
+        let costs: Vec<f32> = costs.to_vec().expect("solve costs");
+        let costs_ms: Vec<f64> = costs[..u_batch.len()]
+            .iter()
+            .map(|&c| c as f64 * LATENCY_SCALE_MS)
+            .collect();
+        ((idx[0] as usize).min(u_batch.len().saturating_sub(1)), costs_ms)
+    }
+
+    fn reset(&mut self) {
+        self.weights.iter_mut().for_each(|w| *w = 0.0);
+        self.offset = MovingAverage::new(50);
+        self.t = 0;
+    }
+}

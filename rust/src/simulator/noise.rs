@@ -1,0 +1,94 @@
+//! Measurement-noise model for the simulated testbed.
+//!
+//! Real stage latencies on the paper's cluster jitter from cache effects,
+//! scheduler preemption and external load. We model this as multiplicative
+//! log-normal noise (~5% sigma) plus rare load spikes — enough roughness
+//! that the online learner sees realistic residuals, without burying the
+//! knob signal.
+
+use crate::util::rng::Rng;
+
+/// Default multiplicative jitter sigma.
+pub const DEFAULT_SIGMA: f64 = 0.05;
+/// Probability of a load spike on any stage execution.
+pub const SPIKE_PROB: f64 = 0.01;
+/// Latency multiplier during a spike.
+pub const SPIKE_FACTOR: f64 = 1.5;
+
+/// Noise generator (deterministic given its seed).
+pub struct NoiseModel {
+    pub sigma: f64,
+    pub spike_prob: f64,
+    pub spike_factor: f64,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel {
+            sigma: DEFAULT_SIGMA,
+            spike_prob: SPIKE_PROB,
+            spike_factor: SPIKE_FACTOR,
+        }
+    }
+}
+
+impl NoiseModel {
+    /// Noise-free model (for deterministic tests).
+    pub fn none() -> Self {
+        NoiseModel { sigma: 0.0, spike_prob: 0.0, spike_factor: 1.0 }
+    }
+
+    /// Apply noise to a base latency.
+    pub fn apply(&self, base_ms: f64, rng: &mut Rng) -> f64 {
+        let mut t = base_ms;
+        if self.sigma > 0.0 {
+            t *= (self.sigma * rng.normal()).exp();
+        }
+        if self.spike_prob > 0.0 && rng.f64() < self.spike_prob {
+            t *= self.spike_factor;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_is_identity() {
+        let mut rng = Rng::new(1);
+        let n = NoiseModel::none();
+        assert_eq!(n.apply(42.0, &mut rng), 42.0);
+    }
+
+    #[test]
+    fn noise_is_multiplicative_and_centered() {
+        let mut rng = Rng::new(2);
+        let n = NoiseModel { spike_prob: 0.0, ..Default::default() };
+        let samples: Vec<f64> = (0..20_000).map(|_| n.apply(100.0, &mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((mean - 100.0).abs() < 1.0, "mean {mean}");
+        assert!(samples.iter().all(|&s| s > 60.0 && s < 160.0));
+    }
+
+    #[test]
+    fn spikes_occur_at_configured_rate() {
+        let mut rng = Rng::new(3);
+        let n = NoiseModel { sigma: 0.0, spike_prob: 0.1, spike_factor: 2.0 };
+        let spikes = (0..10_000)
+            .filter(|_| n.apply(1.0, &mut rng) > 1.5)
+            .count();
+        assert!((800..1200).contains(&spikes), "{spikes}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let n = NoiseModel::default();
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..100 {
+            assert_eq!(n.apply(10.0, &mut a), n.apply(10.0, &mut b));
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Execution traces — the paper's experimental methodology (Sec. 4.1).
+//!
+//! "For each application, we created 30 configurations by selecting
+//! random valid values for the tunable parameters. We ran each of these
+//! static configurations on a sequence of 1000 frames, collected
+//! performance logs from the runtime, and extracted latency measures for
+//! each frame. We use the set of configurations as a point-based
+//! approximation of the total space, and use the traces as predefined
+//! alternative futures between which the simulated system switches."
+//!
+//! [`TraceSet::generate`] reproduces exactly that protocol on the
+//! simulated cluster; [`TraceSet::save`]/[`TraceSet::load`] persist the
+//! result so experiments are replayable.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::apps::App;
+use crate::simulator::{Cluster, ClusterSim, NoiseModel};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// One frame's measurements under a fixed configuration.
+#[derive(Debug, Clone)]
+pub struct TraceFrame {
+    /// Per-stage latencies (ms), indexed like the app graph.
+    pub stage_ms: Vec<f64>,
+    /// End-to-end latency (ms): critical path.
+    pub end_to_end_ms: f64,
+    /// Frame fidelity r.
+    pub fidelity: f64,
+}
+
+/// A 1000-frame run of one static configuration.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Raw knob vector.
+    pub config: Vec<f64>,
+    pub frames: Vec<TraceFrame>,
+}
+
+impl Trace {
+    pub fn avg_cost_ms(&self) -> f64 {
+        self.frames.iter().map(|f| f.end_to_end_ms).sum::<f64>() / self.frames.len() as f64
+    }
+
+    pub fn avg_fidelity(&self) -> f64 {
+        self.frames.iter().map(|f| f.fidelity).sum::<f64>() / self.frames.len() as f64
+    }
+}
+
+/// The full point-based approximation of the action space for one app.
+#[derive(Debug, Clone)]
+pub struct TraceSet {
+    pub app: String,
+    pub seed: u64,
+    pub traces: Vec<Trace>,
+    /// Stage names (graph order) for self-describing trace files.
+    pub stage_names: Vec<String>,
+}
+
+impl TraceSet {
+    /// Sample `n_configs` random valid configurations (uniform in the
+    /// normalized knob space, so log-scaled knobs are log-uniform) and
+    /// run each for `n_frames` frames on the simulated cluster.
+    pub fn generate(app: &App, n_configs: usize, n_frames: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut traces = Vec::with_capacity(n_configs);
+        for ci in 0..n_configs {
+            let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
+            let config = app.spec.denormalize(&u);
+            let mut sim = ClusterSim::new(
+                Cluster::default(),
+                NoiseModel::default(),
+                seed.wrapping_mul(1_000_003).wrapping_add(ci as u64),
+            );
+            let frames = (0..n_frames)
+                .map(|f| {
+                    let r = sim.run_frame(app, &config, f);
+                    TraceFrame {
+                        stage_ms: r.stage_ms,
+                        end_to_end_ms: r.end_to_end_ms,
+                        fidelity: r.fidelity,
+                    }
+                })
+                .collect();
+            traces.push(Trace { config, frames });
+        }
+        TraceSet {
+            app: app.spec.name.clone(),
+            seed,
+            traces,
+            stage_names: app.spec.stages.iter().map(|s| s.name.clone()).collect(),
+        }
+    }
+
+    /// Generate with the spec's own trace protocol (30 × 1000).
+    pub fn generate_default(app: &App, seed: u64) -> Self {
+        Self::generate(app, app.spec.trace_configs, app.spec.trace_frames, seed)
+    }
+
+    pub fn num_configs(&self) -> usize {
+        self.traces.len()
+    }
+
+    pub fn num_frames(&self) -> usize {
+        self.traces.first().map(|t| t.frames.len()).unwrap_or(0)
+    }
+
+    /// Raw knob vectors of all configurations (the candidate action set).
+    pub fn configs(&self) -> Vec<Vec<f64>> {
+        self.traces.iter().map(|t| t.config.clone()).collect()
+    }
+
+    /// Average (cost, reward) per configuration — the gray crosses of the
+    /// paper's Fig. 5.
+    pub fn payoffs(&self) -> Vec<(f64, f64)> {
+        self.traces.iter().map(|t| (t.avg_cost_ms(), t.avg_fidelity())).collect()
+    }
+
+    /// The frame record for playing action `config_idx` at time `frame`
+    /// (the paper's "predefined alternative futures").
+    pub fn frame(&self, config_idx: usize, frame: usize) -> &TraceFrame {
+        &self.traces[config_idx].frames[frame]
+    }
+
+    // ---- (de)serialization via the in-tree JSON codec -------------------
+
+    pub fn to_json(&self) -> Json {
+        let traces: Vec<Json> = self
+            .traces
+            .iter()
+            .map(|t| {
+                // frames stored column-major-ish: flat stage matrix + the
+                // per-frame scalars, which keeps files compact
+                let mut stage_flat =
+                    Vec::with_capacity(t.frames.len() * self.stage_names.len());
+                let mut e2e = Vec::with_capacity(t.frames.len());
+                let mut fid = Vec::with_capacity(t.frames.len());
+                for f in &t.frames {
+                    stage_flat.extend_from_slice(&f.stage_ms);
+                    e2e.push(f.end_to_end_ms);
+                    fid.push(f.fidelity);
+                }
+                Json::obj()
+                    .put("config", Json::from_f64_slice(&t.config))
+                    .put("stage_ms_flat", Json::from_f64_slice(&stage_flat))
+                    .put("end_to_end_ms", Json::from_f64_slice(&e2e))
+                    .put("fidelity", Json::from_f64_slice(&fid))
+            })
+            .collect();
+        Json::obj()
+            .put("app", self.app.as_str())
+            .put("seed", self.seed)
+            .put(
+                "stage_names",
+                Json::Arr(self.stage_names.iter().map(|s| Json::from(s.as_str())).collect()),
+            )
+            .put("traces", Json::Arr(traces))
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let stage_names = v.req("stage_names")?.as_str_vec()?;
+        let n_stages = stage_names.len();
+        let traces = v
+            .req("traces")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                let config = t.req("config")?.as_f64_vec()?;
+                let flat = t.req("stage_ms_flat")?.as_f64_vec()?;
+                let e2e = t.req("end_to_end_ms")?.as_f64_vec()?;
+                let fid = t.req("fidelity")?.as_f64_vec()?;
+                anyhow::ensure!(flat.len() == e2e.len() * n_stages, "ragged trace");
+                anyhow::ensure!(fid.len() == e2e.len(), "ragged fidelity");
+                let frames = e2e
+                    .iter()
+                    .zip(&fid)
+                    .enumerate()
+                    .map(|(i, (&end_to_end_ms, &fidelity))| TraceFrame {
+                        stage_ms: flat[i * n_stages..(i + 1) * n_stages].to_vec(),
+                        end_to_end_ms,
+                        fidelity,
+                    })
+                    .collect();
+                Ok(Trace { config, frames })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TraceSet {
+            app: v.req("app")?.as_str()?.to_string(),
+            seed: v.req("seed")?.as_u64()?,
+            traces,
+            stage_names,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("opening trace {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Conventional trace filename for an app under `dir`.
+    pub fn default_path(dir: impl AsRef<Path>, app: &str) -> std::path::PathBuf {
+        dir.as_ref().join(format!("{app}_traces.json"))
+    }
+
+    /// Load if present, else generate and save (used by experiments).
+    pub fn load_or_generate(app: &App, dir: impl AsRef<Path>, seed: u64) -> Result<Self> {
+        let path = Self::default_path(&dir, &app.spec.name);
+        if path.is_file() {
+            let ts = Self::load(&path)?;
+            if ts.num_configs() > 0 {
+                return Ok(ts);
+            }
+        }
+        let ts = Self::generate_default(app, seed);
+        ts.save(&path)?;
+        Ok(ts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry::app_by_name;
+    use crate::apps::spec::find_spec_dir;
+
+    fn small(app_name: &str) -> (App, TraceSet) {
+        let app = app_by_name(app_name, find_spec_dir(None).unwrap()).unwrap();
+        let ts = TraceSet::generate(&app, 6, 40, 42);
+        (app, ts)
+    }
+
+    #[test]
+    fn protocol_shape() {
+        let (_, ts) = small("pose");
+        assert_eq!(ts.num_configs(), 6);
+        assert_eq!(ts.num_frames(), 40);
+        assert_eq!(ts.stage_names.len(), 7);
+    }
+
+    #[test]
+    fn configs_are_valid() {
+        let (app, ts) = small("pose");
+        for cfg in ts.configs() {
+            for (p, &k) in app.spec.params.iter().zip(&cfg) {
+                assert!(k >= p.min && k <= p.max, "{} = {k}", p.symbol);
+                if p.is_discrete() {
+                    assert_eq!(k, k.round());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
+        let a = TraceSet::generate(&app, 3, 10, 7);
+        let b = TraceSet::generate(&app, 3, 10, 7);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        let c = TraceSet::generate(&app, 3, 10, 8);
+        assert_ne!(a.to_json().to_string(), c.to_json().to_string());
+    }
+
+    #[test]
+    fn payoffs_spread_over_cost_space() {
+        let (_, ts) = small("motion_sift");
+        let payoffs = ts.payoffs();
+        let min = payoffs.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+        let max = payoffs.iter().map(|p| p.0).fold(0.0, f64::max);
+        assert!(max > min * 1.5, "configs should differ: {min}..{max}");
+        assert!(payoffs.iter().all(|p| (0.0..=1.0).contains(&p.1)));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (_, ts) = small("pose");
+        let dir = crate::util::testdir::TestDir::new("trace");
+        let path = dir.join("t.json");
+        ts.save(&path).unwrap();
+        let back = TraceSet::load(&path).unwrap();
+        assert_eq!(back.num_configs(), ts.num_configs());
+        assert_eq!(back.traces[0].frames[3].end_to_end_ms, ts.traces[0].frames[3].end_to_end_ms);
+    }
+
+    #[test]
+    fn load_or_generate_idempotent() {
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
+        let dir = crate::util::testdir::TestDir::new("trace-gen");
+        // override the protocol to keep the test fast
+        let mut small_app = app;
+        small_app.spec.trace_configs = 3;
+        small_app.spec.trace_frames = 5;
+        let a = TraceSet::load_or_generate(&small_app, dir.path(), 1).unwrap();
+        let b = TraceSet::load_or_generate(&small_app, dir.path(), 999).unwrap();
+        assert_eq!(a.seed, b.seed, "second call must hit the cache");
+    }
+
+    #[test]
+    fn scene_change_visible_in_pose_traces() {
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
+        let ts = TraceSet::generate(&app, 2, 700, 3);
+        let t = &ts.traces[0];
+        let before: f64 =
+            (550..600).map(|f| t.frames[f].end_to_end_ms).sum::<f64>() / 50.0;
+        let after: f64 =
+            (600..650).map(|f| t.frames[f].end_to_end_ms).sum::<f64>() / 50.0;
+        assert!(after > before * 1.1, "frame-600 jump: {before} -> {after}");
+    }
+}

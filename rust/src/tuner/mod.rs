@@ -1,0 +1,268 @@
+//! The ε-greedy constrained controller (paper Sec. 3.1 / 4.4).
+//!
+//! At every frame the controller either *explores* (probability ε: play a
+//! uniformly random action, so the latency model keeps learning off-policy
+//! regions) or *exploits* (solve Eq. 2: the feasible-fidelity argmax under
+//! the current latency model). Either way the observation of the played
+//! action updates the model. ε = 1/√T is the paper's recommended setting
+//! (≈ 0.03 for T = 1000 — "90% of the optimal fidelity by exploring the
+//! parameter space only 3% of the time").
+
+pub mod policy;
+
+use crate::apps::spec::AppSpec;
+use crate::metrics::PolicyStats;
+use crate::runtime::Backend;
+use crate::trace::TraceSet;
+use crate::util::Rng;
+
+/// Controller configuration.
+#[derive(Debug, Clone)]
+pub struct TunerConfig {
+    /// Exploration rate ε ∈ [0, 1].
+    pub epsilon: f64,
+    /// Latency bound L (ms).
+    pub bound_ms: f64,
+    /// Warm-up frames of forced exploration before the first exploit
+    /// (the model starts at zero; a handful of samples keeps the first
+    /// exploit from being arbitrary).
+    pub warmup_frames: usize,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig { epsilon: 0.03, bound_ms: 100.0, warmup_frames: 20 }
+    }
+}
+
+impl TunerConfig {
+    /// The paper's ε = 1/√T rule.
+    pub fn epsilon_for_horizon(t: usize) -> f64 {
+        1.0 / (t as f64).sqrt()
+    }
+}
+
+/// One frame's controller decision + observed outcome.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    pub frame: usize,
+    /// Index into the trace-set's action space.
+    pub action: usize,
+    pub explored: bool,
+    /// Model's latency prediction for the played action (ms).
+    pub predicted_ms: f64,
+    /// Observed end-to-end latency (ms).
+    pub latency_ms: f64,
+    /// Observed fidelity.
+    pub reward: f64,
+    /// max(latency − L, 0) (ms).
+    pub violation_ms: f64,
+}
+
+/// Aggregate outcome of a controller run.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub avg_reward: f64,
+    pub avg_violation_ms: f64,
+    pub max_violation_ms: f64,
+    pub violation_rate: f64,
+    pub explore_frames: usize,
+    pub steps: Vec<StepOutcome>,
+}
+
+/// ε-greedy controller over a trace-based action space (the paper's
+/// "predefined alternative futures" methodology, Sec. 4.1).
+pub struct EpsGreedyController<'a> {
+    traces: &'a TraceSet,
+    backend: Box<dyn Backend>,
+    cfg: TunerConfig,
+    rng: Rng,
+    /// Normalized knob vectors of the candidate actions.
+    candidates: Vec<Vec<f64>>,
+    /// Known per-action expected fidelity (the paper assumes r is known;
+    /// these are the Fig. 5 rewards).
+    rewards: Vec<f64>,
+}
+
+impl<'a> EpsGreedyController<'a> {
+    pub fn new(
+        spec: &AppSpec,
+        traces: &'a TraceSet,
+        backend: Box<dyn Backend>,
+        cfg: TunerConfig,
+        seed: u64,
+    ) -> Self {
+        assert!(traces.num_configs() > 0, "empty action space");
+        assert!((0.0..=1.0).contains(&cfg.epsilon));
+        let candidates = traces
+            .configs()
+            .iter()
+            .map(|c| spec.normalize(c))
+            .collect();
+        let rewards = traces.traces.iter().map(|t| t.avg_fidelity()).collect();
+        EpsGreedyController {
+            traces,
+            backend,
+            cfg,
+            rng: Rng::new(seed),
+            candidates,
+            rewards,
+        }
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    pub fn action_rewards(&self) -> &[f64] {
+        &self.rewards
+    }
+
+    /// Run one frame: choose an action, observe its trace outcome, learn.
+    pub fn step(&mut self, frame: usize) -> StepOutcome {
+        let explore =
+            frame < self.cfg.warmup_frames || self.rng.f64() < self.cfg.epsilon;
+        let (action, predicted_ms) = if explore {
+            let a = self.rng.below(self.candidates.len());
+            let p = self.backend.predict(std::slice::from_ref(&self.candidates[a]))[0];
+            (a, p)
+        } else {
+            // the solve artifact computes every candidate's predicted
+            // latency anyway — reuse it instead of a second dispatch
+            let (a, costs) =
+                self.backend
+                    .solve_with_costs(&self.candidates, &self.rewards, self.cfg.bound_ms);
+            (a, costs[a])
+        };
+        let u = self.candidates[action].clone();
+
+        // "switch futures": observe the pre-recorded frame of that action
+        let rec = self.traces.frame(action, frame % self.traces.num_frames());
+        let (y, offset_obs) = self
+            .backend
+            .group_map()
+            .targets(&rec.stage_ms, rec.end_to_end_ms);
+        self.backend.update(&u, &y);
+        self.backend.observe_offset(offset_obs);
+
+        StepOutcome {
+            frame,
+            action,
+            explored: explore,
+            predicted_ms,
+            latency_ms: rec.end_to_end_ms,
+            reward: rec.fidelity,
+            violation_ms: (rec.end_to_end_ms - self.cfg.bound_ms).max(0.0),
+        }
+    }
+
+    /// Run `frames` frames and aggregate.
+    pub fn run(&mut self, frames: usize) -> RunOutcome {
+        let mut stats = PolicyStats::new();
+        let mut steps = Vec::with_capacity(frames);
+        let mut explore_frames = 0;
+        for f in 0..frames {
+            let s = self.step(f);
+            stats.observe(s.reward, s.latency_ms, self.cfg.bound_ms);
+            if s.explored {
+                explore_frames += 1;
+            }
+            steps.push(s);
+        }
+        RunOutcome {
+            avg_reward: stats.avg_reward(),
+            avg_violation_ms: stats.avg_violation_ms(),
+            max_violation_ms: stats.max_violation_ms(),
+            violation_rate: stats.violation_rate(),
+            explore_frames,
+            steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry::app_by_name;
+    use crate::apps::spec::find_spec_dir;
+    use crate::learner::Variant;
+    use crate::runtime::native::NativeBackend;
+
+    fn setup(name: &str) -> (crate::apps::App, TraceSet) {
+        let app = app_by_name(name, find_spec_dir(None).unwrap()).unwrap();
+        let traces = TraceSet::generate(&app, 20, 300, 9);
+        (app, traces)
+    }
+
+    #[test]
+    fn epsilon_rule() {
+        assert!((TunerConfig::epsilon_for_horizon(1000) - 0.0316).abs() < 0.01);
+    }
+
+    #[test]
+    fn explores_at_configured_rate() {
+        let (app, traces) = setup("pose");
+        let backend = NativeBackend::new(&app.spec, Variant::Structured, 3);
+        let cfg = TunerConfig { epsilon: 0.5, bound_ms: 60.0, warmup_frames: 0 };
+        let mut ctl =
+            EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, 1);
+        let out = ctl.run(300);
+        let rate = out.explore_frames as f64 / 300.0;
+        assert!((0.38..0.62).contains(&rate), "explore rate {rate}");
+    }
+
+    #[test]
+    fn pure_exploit_after_warmup_converges_to_feasible() {
+        let (app, traces) = setup("pose");
+        let backend = NativeBackend::new(&app.spec, Variant::Structured, 3);
+        let cfg = TunerConfig { epsilon: 0.05, bound_ms: 80.0, warmup_frames: 30 };
+        let mut ctl =
+            EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, 2);
+        let out = ctl.run(300);
+        // tail of the run should mostly satisfy the bound
+        let tail: Vec<&StepOutcome> =
+            out.steps.iter().filter(|s| s.frame >= 150 && !s.explored).collect();
+        assert!(!tail.is_empty());
+        let viol_rate = tail.iter().filter(|s| s.violation_ms > 0.0).count() as f64
+            / tail.len() as f64;
+        assert!(viol_rate < 0.5, "late exploit violation rate {viol_rate}");
+    }
+
+    #[test]
+    fn higher_epsilon_means_lower_reward() {
+        // the right arm of the paper's U-shape: mostly-exploring policies
+        // sacrifice fidelity
+        let (app, traces) = setup("motion_sift");
+        let run_with = |eps: f64| {
+            let backend = NativeBackend::new(&app.spec, Variant::Structured, 3);
+            let cfg = TunerConfig { epsilon: eps, bound_ms: 150.0, warmup_frames: 20 };
+            let mut ctl = EpsGreedyController::new(
+                &app.spec,
+                &traces,
+                Box::new(backend),
+                cfg,
+                3,
+            );
+            ctl.run(300).avg_reward
+        };
+        let greedy = run_with(0.05);
+        let random = run_with(1.0);
+        assert!(
+            greedy > random - 0.02,
+            "greedy {greedy} should beat mostly-random {random}"
+        );
+    }
+
+    #[test]
+    fn steps_record_consistent_violation() {
+        let (app, traces) = setup("pose");
+        let backend = NativeBackend::new(&app.spec, Variant::Unstructured, 3);
+        let cfg = TunerConfig { epsilon: 0.2, bound_ms: 70.0, warmup_frames: 5 };
+        let mut ctl =
+            EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, 4);
+        for s in ctl.run(100).steps {
+            assert!((s.violation_ms - (s.latency_ms - 70.0).max(0.0)).abs() < 1e-9);
+            assert!(s.action < 20);
+        }
+    }
+}

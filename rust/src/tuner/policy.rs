@@ -1,0 +1,152 @@
+//! Reference policies the controller is scored against (paper Sec. 4.4):
+//! the clairvoyant optimum of Eq. 2 and randomized strategies over the
+//! action space (the gray payoff regions of Fig. 5/8).
+
+use crate::metrics::PolicyStats;
+use crate::trace::TraceSet;
+
+/// Outcome of a reference policy over a trace set.
+#[derive(Debug, Clone)]
+pub struct PolicyOutcome {
+    pub avg_reward: f64,
+    pub avg_violation_ms: f64,
+    pub max_violation_ms: f64,
+}
+
+/// The clairvoyant per-frame optimum (Eq. 2 with the *true* cost): for
+/// every frame play the action maximizing fidelity among those whose true
+/// latency satisfies the bound. This is the "optimal offline solution"
+/// the paper's 90%-of-optimum claim is measured against.
+pub fn oracle_best(traces: &TraceSet, frames: usize, bound_ms: f64) -> PolicyOutcome {
+    let mut stats = PolicyStats::new();
+    let n_frames = traces.num_frames();
+    for f in 0..frames {
+        let ff = f % n_frames;
+        let mut best: Option<(f64, f64)> = None; // (reward, latency)
+        let mut fallback: Option<(f64, f64)> = None;
+        for c in 0..traces.num_configs() {
+            let rec = traces.frame(c, ff);
+            if rec.end_to_end_ms <= bound_ms {
+                if best.map_or(true, |(r, _)| rec.fidelity > r) {
+                    best = Some((rec.fidelity, rec.end_to_end_ms));
+                }
+            }
+            if fallback.map_or(true, |(_, l)| rec.end_to_end_ms < l) {
+                fallback = Some((rec.fidelity, rec.end_to_end_ms));
+            }
+        }
+        let (r, l) = best.or(fallback).expect("non-empty action space");
+        stats.observe(r, l, bound_ms);
+    }
+    PolicyOutcome {
+        avg_reward: stats.avg_reward(),
+        avg_violation_ms: stats.avg_violation_ms(),
+        max_violation_ms: stats.max_violation_ms(),
+    }
+}
+
+/// The *best fixed action* under the bound (average-case): the pure
+/// strategy a static configuration would give you.
+pub fn best_fixed_action(traces: &TraceSet, bound_ms: f64) -> (usize, PolicyOutcome) {
+    let mut best: Option<(usize, f64)> = None;
+    for c in 0..traces.num_configs() {
+        let avg_cost = traces.traces[c].avg_cost_ms();
+        let avg_rew = traces.traces[c].avg_fidelity();
+        if avg_cost <= bound_ms && best.map_or(true, |(_, r)| avg_rew > r) {
+            best = Some((c, avg_rew));
+        }
+    }
+    let c = best.map(|(c, _)| c).unwrap_or_else(|| {
+        // nothing feasible on average: least-violating action
+        (0..traces.num_configs())
+            .min_by(|&a, &b| {
+                traces.traces[a]
+                    .avg_cost_ms()
+                    .partial_cmp(&traces.traces[b].avg_cost_ms())
+                    .unwrap()
+            })
+            .unwrap()
+    });
+    (c, fixed_action(traces, c, bound_ms))
+}
+
+/// Outcome of always playing action `c`.
+pub fn fixed_action(traces: &TraceSet, c: usize, bound_ms: f64) -> PolicyOutcome {
+    let mut stats = PolicyStats::new();
+    for rec in &traces.traces[c].frames {
+        stats.observe(rec.fidelity, rec.end_to_end_ms, bound_ms);
+    }
+    PolicyOutcome {
+        avg_reward: stats.avg_reward(),
+        avg_violation_ms: stats.avg_violation_ms(),
+        max_violation_ms: stats.max_violation_ms(),
+    }
+}
+
+/// (violation, reward) payoff of every pure strategy — the points whose
+/// convex hull is the Fig. 8 gray region.
+pub fn pure_payoffs(traces: &TraceSet, bound_ms: f64) -> Vec<(f64, f64)> {
+    (0..traces.num_configs())
+        .map(|c| {
+            let o = fixed_action(traces, c, bound_ms);
+            (o.avg_violation_ms, o.avg_reward)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry::app_by_name;
+    use crate::apps::spec::find_spec_dir;
+
+    fn traces() -> TraceSet {
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
+        TraceSet::generate(&app, 15, 200, 11)
+    }
+
+    #[test]
+    fn oracle_dominates_fixed_actions() {
+        let ts = traces();
+        let bound = 80.0;
+        let oracle = oracle_best(&ts, 200, bound);
+        let (_, fixed) = best_fixed_action(&ts, bound);
+        assert!(oracle.avg_reward >= fixed.avg_reward - 1e-9);
+    }
+
+    #[test]
+    fn oracle_violation_zero_when_feasible_exists() {
+        let ts = traces();
+        // generous bound: every frame has some feasible action
+        let oracle = oracle_best(&ts, 200, 500.0);
+        assert_eq!(oracle.avg_violation_ms, 0.0);
+    }
+
+    #[test]
+    fn tight_bound_forces_violations() {
+        let ts = traces();
+        let oracle = oracle_best(&ts, 200, 1.0); // impossible bound
+        assert!(oracle.avg_violation_ms > 0.0);
+    }
+
+    #[test]
+    fn pure_payoffs_shape() {
+        let ts = traces();
+        let p = pure_payoffs(&ts, 80.0);
+        assert_eq!(p.len(), 15);
+        assert!(p.iter().all(|&(v, r)| v >= 0.0 && (0.0..=1.0).contains(&r)));
+    }
+
+    #[test]
+    fn fixed_action_consistency() {
+        let ts = traces();
+        let o = fixed_action(&ts, 3, 60.0);
+        let manual: f64 = ts.traces[3]
+            .frames
+            .iter()
+            .map(|f| (f.end_to_end_ms - 60.0).max(0.0))
+            .sum::<f64>()
+            / ts.traces[3].frames.len() as f64;
+        assert!((o.avg_violation_ms - manual).abs() < 1e-9);
+    }
+}

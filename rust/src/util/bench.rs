@@ -1,0 +1,155 @@
+//! Micro-benchmark harness (offline stand-in for criterion): warmup,
+//! repeated timed runs, median/mean/min reporting, and a tiny black-box.
+//!
+//! Used by every target under `rust/benches/` (all declared with
+//! `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Bench runner: measures `f` (one logical iteration per call).
+pub struct Bencher {
+    /// Target wall-clock budget per benchmark.
+    pub budget: Duration,
+    pub warmup: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_millis(900),
+            warmup: Duration::from_millis(150),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            budget: Duration::from_millis(250),
+            warmup: Duration::from_millis(50),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, print a criterion-style line, and record the result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warmup + calibration
+        let mut n: u64 = 1;
+        loop {
+            let start = Instant::now();
+            for _ in 0..n {
+                f();
+            }
+            let el = start.elapsed();
+            if el >= self.warmup {
+                // aim for ~30 samples inside the budget
+                let per = el.as_secs_f64() / n as f64;
+                let per_sample = (self.budget.as_secs_f64() / 30.0 / per).max(1.0);
+                n = per_sample as u64;
+                break;
+            }
+            n = n.saturating_mul(2);
+        }
+        // sampling
+        let mut samples: Vec<Duration> = Vec::new();
+        let start_all = Instant::now();
+        while start_all.elapsed() < self.budget || samples.len() < 5 {
+            let start = Instant::now();
+            for _ in 0..n {
+                f();
+            }
+            samples.push(start.elapsed() / (n as u32));
+            if samples.len() >= 100 {
+                break;
+            }
+        }
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let min = samples[0];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let result = BenchResult { name: name.to_string(), iters: n, mean, median, min };
+        println!(
+            "bench {:<44} median {:>12} mean {:>12} min {:>12} ({} samples x {} iters)",
+            result.name,
+            fmt_dur(median),
+            fmt_dur(mean),
+            fmt_dur(min),
+            samples.len(),
+            n
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Look up a previous result by name.
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            budget: Duration::from_millis(30),
+            warmup: Duration::from_millis(5),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let r = b.result("noop-ish").unwrap();
+        assert!(r.median.as_nanos() < 1_000_000);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree substrates that keep the workspace building offline: a JSON
+//! codec ([`json`]), a deterministic PRNG ([`rng`]), a micro-benchmark
+//! harness ([`bench`]), a property-testing loop ([`prop`]) and test
+//! tempdir helpers ([`testdir`]).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod testdir;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,87 @@
+//! Lightweight property-based testing loop (offline stand-in for
+//! proptest): run a property over many seeded random cases and report the
+//! first failing seed so the case can be replayed.
+
+use super::rng::Rng;
+
+/// Number of cases per property by default.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop(rng, case_index)` for `cases` seeded cases; panic with the
+/// failing seed on the first failure. `prop` should panic/assert inside.
+pub fn check<F: FnMut(&mut Rng, usize)>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000_0000u64 ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random vector of `len` uniform values in [0,1).
+pub fn unit_vec(rng: &mut Rng, len: usize) -> Vec<f64> {
+    (0..len).map(|_| rng.f64()).collect()
+}
+
+/// Random weighted DAG in topological order: returns (deps per node,
+/// weights). Node 0 is always a source.
+pub fn random_dag(rng: &mut Rng, max_nodes: usize) -> (Vec<Vec<usize>>, Vec<f64>) {
+    let n = 2 + rng.below(max_nodes.saturating_sub(2).max(1));
+    let mut deps: Vec<Vec<usize>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut d = Vec::new();
+        if i > 0 {
+            // each node depends on a random non-empty subset of earlier nodes
+            let k = 1 + rng.below(i.min(3));
+            for _ in 0..k {
+                let cand = rng.below(i);
+                if !d.contains(&cand) {
+                    d.push(cand);
+                }
+            }
+        }
+        deps.push(d);
+    }
+    let weights = (0..n).map(|_| rng.range_f64(0.1, 50.0)).collect();
+    (deps, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 10, |_rng, _case| {
+            count += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fails", 5, |_rng, case| {
+            assert!(case < 3, "boom");
+        });
+    }
+
+    #[test]
+    fn random_dag_is_topological() {
+        check("dag", 20, |rng, _| {
+            let (deps, w) = random_dag(rng, 12);
+            assert_eq!(deps.len(), w.len());
+            for (i, d) in deps.iter().enumerate() {
+                for &dep in d {
+                    assert!(dep < i);
+                }
+            }
+        });
+    }
+}

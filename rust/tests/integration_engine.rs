@@ -1,0 +1,128 @@
+//! Integration: the streaming data-flow engine + closed-loop retuning —
+//! the live system of paper Sec. 2 ("changes in parameter settings are
+//! then applied to the running application").
+
+use std::sync::Arc;
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::engine::{run_stream_blocking, spawn_stream, EngineConfig};
+use iptune::runtime::native::NativeBackend;
+use iptune::runtime::Backend;
+use iptune::util::Rng;
+
+fn app(name: &str) -> Arc<iptune::apps::App> {
+    Arc::new(app_by_name(name, find_spec_dir(None).unwrap()).unwrap())
+}
+
+#[test]
+fn closed_loop_tuner_brings_stream_under_bound() {
+    // start at defaults (way over bound), learn online from the live
+    // stream, retune every 20 frames; by the end the pipe must run under
+    // the bound most of the time
+    let a = app("pose");
+    let bound = 60.0;
+    let frames = 400;
+    let handle = spawn_stream(
+        Arc::clone(&a),
+        a.spec.defaults(),
+        EngineConfig { frames, realtime_scale: 0.0, queue_capacity: 8, seed: 4 },
+    );
+
+    let mut backend = NativeBackend::structured(&a.spec);
+    let mut rng = Rng::new(23);
+    let mut candidates: Vec<Vec<f64>> = (0..48)
+        .map(|_| (0..a.spec.num_vars()).map(|_| rng.f64()).collect())
+        .collect();
+    candidates.push(a.spec.normalize(&a.spec.defaults()));
+    let content = a.model.content(0);
+    let rewards: Vec<f64> = candidates
+        .iter()
+        .map(|u| a.model.fidelity(&a.spec.denormalize(u), &content))
+        .collect();
+
+    let mut tail_over = 0usize;
+    let mut tail_n = 0usize;
+    while let Ok(rec) = handle.records.recv() {
+        let u = a.spec.normalize(&rec.knobs);
+        let (y, off) = backend.group_map().targets(&rec.stage_ms, rec.end_to_end_ms);
+        backend.update(&u, &y);
+        backend.observe_offset(off);
+        if rec.frame % 20 == 19 {
+            let pick = backend.solve(&candidates, &rewards, bound);
+            handle.set_knobs(a.spec.denormalize(&candidates[pick]));
+        }
+        if rec.frame >= frames - 150 {
+            tail_n += 1;
+            if rec.end_to_end_ms > bound {
+                tail_over += 1;
+            }
+        }
+    }
+    assert!(tail_n > 0);
+    let rate = tail_over as f64 / tail_n as f64;
+    assert!(rate < 0.3, "tail over-bound rate {rate} (bound {bound} ms)");
+}
+
+#[test]
+fn stream_fidelity_matches_model() {
+    let a = app("motion_sift");
+    let ks = vec![2.0, 2.0, 1.0, 8.0, 8.0];
+    let recs = run_stream_blocking(
+        Arc::clone(&a),
+        ks.clone(),
+        EngineConfig { frames: 30, ..Default::default() },
+    );
+    for r in &recs {
+        let want = a.model.fidelity(&ks, &a.model.content(r.frame));
+        assert!((r.fidelity - want).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn branch_stages_overlap_in_stream() {
+    // virtual time must reflect branch parallelism: e2e < sum of stages
+    let a = app("motion_sift");
+    let recs = run_stream_blocking(
+        Arc::clone(&a),
+        a.spec.defaults(),
+        EngineConfig { frames: 15, ..Default::default() },
+    );
+    for r in &recs {
+        let sum: f64 = r.stage_ms.iter().sum();
+        assert!(r.end_to_end_ms < sum - 1.0, "no overlap: {} vs {}", r.end_to_end_ms, sum);
+    }
+}
+
+#[test]
+fn realtime_pacing_slows_wallclock() {
+    let a = app("pose");
+    let t0 = std::time::Instant::now();
+    let _ = run_stream_blocking(
+        Arc::clone(&a),
+        vec![3.0, 1e6, 16.0, 10.0, 10.0],
+        EngineConfig { frames: 20, realtime_scale: 0.0, ..Default::default() },
+    );
+    let fast = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _ = run_stream_blocking(
+        Arc::clone(&a),
+        vec![3.0, 1e6, 16.0, 10.0, 10.0],
+        EngineConfig { frames: 20, realtime_scale: 2e-4, ..Default::default() },
+    );
+    let paced = t1.elapsed();
+    assert!(paced > fast, "pacing must cost wall-clock: {fast:?} vs {paced:?}");
+}
+
+#[test]
+fn engine_cli_demo_smoke() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(exe)
+        .args(["engine", "--app", "pose", "--frames", "120", "--period", "30"])
+        .output()
+        .expect("run repro engine");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("retune to"));
+    assert!(text.contains("engine demo complete"));
+}

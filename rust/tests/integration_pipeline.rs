@@ -1,0 +1,163 @@
+//! Integration: the full trace → learn → tune pipeline on both apps —
+//! the end-to-end controller behavior the paper's Sec. 4.4 evaluates.
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::learner::deps::analyze;
+use iptune::learner::offline::{fit, mean_abs_error, samples_from_traces};
+use iptune::learner::{StagePredictor, Variant};
+use iptune::runtime::native::NativeBackend;
+use iptune::trace::TraceSet;
+use iptune::tuner::policy::{best_fixed_action, oracle_best};
+use iptune::tuner::{EpsGreedyController, TunerConfig};
+use iptune::util::testdir::TestDir;
+
+fn setup(name: &str, configs: usize, frames: usize, seed: u64) -> (iptune::apps::App, TraceSet) {
+    let app = app_by_name(name, find_spec_dir(None).unwrap()).unwrap();
+    let traces = TraceSet::generate(&app, configs, frames, seed);
+    (app, traces)
+}
+
+#[test]
+fn tuner_beats_best_fixed_feasible_action_or_close() {
+    // the whole point of online tuning: at the paper's eps = 1/sqrt(T) the
+    // controller should be competitive with the best static configuration
+    for (name, bound) in [("pose", 60.0), ("motion_sift", 120.0)] {
+        let (app, traces) = setup(name, 25, 500, 21);
+        let eps = TunerConfig::epsilon_for_horizon(1000);
+        let backend = NativeBackend::structured(&app.spec);
+        let cfg = TunerConfig { epsilon: eps, bound_ms: bound, warmup_frames: 25 };
+        let mut ctl =
+            EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, 5);
+        let out = ctl.run(1000);
+        let (_, fixed) = best_fixed_action(&traces, bound);
+        assert!(
+            out.avg_reward > fixed.avg_reward * 0.8,
+            "{name}: tuned {} vs best-fixed {}",
+            out.avg_reward,
+            fixed.avg_reward
+        );
+    }
+}
+
+#[test]
+fn ninety_percent_of_oracle_at_three_percent_exploration() {
+    // headline claim (C1) on the motion_sift app with its spec bound
+    let (app, traces) = setup("motion_sift", 30, 1000, 7);
+    let bound = app.spec.latency_bounds_ms[0];
+    let eps = TunerConfig::epsilon_for_horizon(1000); // ~0.03
+    let backend = NativeBackend::structured(&app.spec);
+    let cfg = TunerConfig { epsilon: eps, bound_ms: bound, warmup_frames: 25 };
+    let mut ctl = EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, 5);
+    let out = ctl.run(1000);
+    let oracle = oracle_best(&traces, 1000, bound);
+    let ratio = out.avg_reward / oracle.avg_reward;
+    assert!(
+        ratio >= 0.85,
+        "reward {} is {:.1}% of oracle {}",
+        out.avg_reward,
+        100.0 * ratio,
+        oracle.avg_reward
+    );
+}
+
+#[test]
+fn trace_roundtrip_preserves_controller_behavior() {
+    let (app, traces) = setup("pose", 10, 120, 3);
+    let dir = TestDir::new("pipeline");
+    let path = dir.join("t.json");
+    traces.save(&path).unwrap();
+    let reloaded = TraceSet::load(&path).unwrap();
+
+    let run = |ts: &TraceSet| {
+        let backend = NativeBackend::structured(&app.spec);
+        let cfg = TunerConfig { epsilon: 0.1, bound_ms: 70.0, warmup_frames: 10 };
+        let mut ctl = EpsGreedyController::new(&app.spec, ts, Box::new(backend), cfg, 9);
+        let out = ctl.run(120);
+        (out.avg_reward, out.avg_violation_ms)
+    };
+    let a = run(&traces);
+    let b = run(&reloaded);
+    assert!((a.0 - b.0).abs() < 1e-9, "reward drifted through serialization");
+    assert!((a.1 - b.1).abs() < 1e-6, "violation drifted through serialization");
+}
+
+#[test]
+fn dependency_analysis_feeds_consistent_structure() {
+    // end-to-end Sec. 2.3 story: analysis recovers knob associations that
+    // the spec's declared groups rely on
+    let app = app_by_name("motion_sift", find_spec_dir(None).unwrap()).unwrap();
+    let a = analyze(&app, 36, 17);
+    for g in &app.spec.groups {
+        for &p in &g.params {
+            let hit = g.stages.iter().any(|sn| {
+                let s = app.spec.stage_index(sn).unwrap();
+                a.correlation[s][p] >= iptune::learner::deps::CORRELATION_THRESHOLD
+            });
+            assert!(hit, "group {} knob {p} not recovered", g.name);
+        }
+    }
+}
+
+#[test]
+fn offline_fit_close_to_noise_floor_on_pose() {
+    let (app, traces) = setup("pose", 15, 150, 31);
+    let samples = samples_from_traces(&app.spec, &traces);
+    let mut pred = fit(&app.spec, Variant::Structured, 3, &samples, 25, 1);
+    let err = mean_abs_error(&mut pred, &samples);
+    let scale: f64 =
+        samples.iter().map(|s| s.end_to_end_ms).sum::<f64>() / samples.len() as f64;
+    assert!(err < scale * 0.25, "offline err {err} vs scale {scale}");
+}
+
+#[test]
+fn predictor_adapts_after_scene_change() {
+    // C4: error bumps at frame 600, then falls again as the model adapts
+    let (app, traces) = setup("pose", 15, 900, 41);
+    let candidates: Vec<Vec<f64>> =
+        traces.configs().iter().map(|c| app.spec.normalize(c)).collect();
+    let mut pred = StagePredictor::new(&app.spec, Variant::Structured, 3);
+    let mut rng = iptune::util::Rng::new(2);
+    let mut errs = Vec::new();
+    for t in 0..900 {
+        let a = rng.below(candidates.len());
+        let rec = traces.frame(a, t);
+        let before = pred.observe(&candidates[a], &rec.stage_ms, rec.end_to_end_ms);
+        errs.push((before - rec.end_to_end_ms).abs());
+    }
+    let win = |lo: usize, hi: usize| errs[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+    let before = win(520, 590);
+    let at_change = win(600, 650);
+    let adapted = win(780, 880);
+    assert!(at_change > before, "no bump at scene change: {before} -> {at_change}");
+    assert!(adapted < at_change, "no re-adaptation: {at_change} -> {adapted}");
+}
+
+#[test]
+fn cli_binary_spec_smoke() {
+    // the `repro` binary prints the Tables 1-2 rows
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(exe)
+        .args(["spec", "pose"])
+        .output()
+        .expect("run repro spec");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("K1"));
+    assert!(text.contains("The degree of image scaling"));
+    assert!(text.contains("2147483648"));
+}
+
+#[test]
+fn cli_binary_graph_dot() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(exe)
+        .args(["spec", "motion-sift", "--graph"])
+        .output()
+        .expect("run repro spec --graph");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("digraph"));
+    assert!(text.contains("\"copy\" -> \"face_scale\""));
+    assert!(text.contains("\"motion_extract\" -> \"filter_agg\""));
+}

@@ -1,0 +1,173 @@
+//! Integration: the XLA (PJRT, AOT-compiled HLO) backend against the
+//! native Rust twin — the cross-layer correctness signal for the whole
+//! AOT pipeline (Pallas kernel → JAX model → HLO text → PJRT execute).
+//!
+//! These tests are skipped gracefully when `make artifacts` has not run.
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::learner::Variant;
+use iptune::runtime::manifest::find_artifact_dir;
+use iptune::runtime::native::NativeBackend;
+use iptune::runtime::xla::XlaBackend;
+use iptune::runtime::Backend;
+use iptune::util::Rng;
+
+fn backends(app: &str, variant: Variant) -> Option<(NativeBackend, XlaBackend)> {
+    let spec_dir = find_spec_dir(None).unwrap();
+    let app = app_by_name(app, spec_dir).unwrap();
+    let Ok(artifact_dir) = find_artifact_dir(None) else {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    };
+    let xla = match XlaBackend::new(&app.spec, variant, artifact_dir) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return None;
+        }
+    };
+    Some((NativeBackend::new(&app.spec, variant, 3), xla))
+}
+
+fn rand_candidates(rng: &mut Rng, n: usize) -> Vec<Vec<f64>> {
+    (0..n).map(|_| (0..5).map(|_| rng.f64()).collect()).collect()
+}
+
+/// Drive both backends through an identical observation stream and check
+/// predictions agree to float32 tolerance at every step.
+fn parity_case(app: &str, variant: Variant, seed: u64, steps: usize) {
+    let Some((mut native, mut xla)) = backends(app, variant) else { return };
+    let g = native.group_map().num_groups();
+    let mut rng = Rng::new(seed);
+    for t in 0..steps {
+        let u: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+        // plausible per-group latency targets in ms
+        let y: Vec<f64> = (0..g).map(|_| rng.range_f64(2.0, 250.0)).collect();
+        native.update(&u, &y);
+        xla.update(&u, &y);
+        let off = rng.range_f64(2.0, 12.0);
+        native.observe_offset(off);
+        xla.observe_offset(off);
+
+        if t % 7 == 0 {
+            let cands = rand_candidates(&mut rng, 9);
+            let pn = native.predict(&cands);
+            let px = xla.predict(&cands);
+            for (i, (a, b)) in pn.iter().zip(&px).enumerate() {
+                assert!(
+                    (a - b).abs() < 0.35 + 1e-3 * a.abs().max(b.abs()),
+                    "{app}/{variant:?} step {t} cand {i}: native {a} vs xla {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_pose_structured() {
+    parity_case("pose", Variant::Structured, 1, 60);
+}
+
+#[test]
+fn parity_pose_unstructured() {
+    parity_case("pose", Variant::Unstructured, 2, 60);
+}
+
+#[test]
+fn parity_motion_sift_structured() {
+    parity_case("motion_sift", Variant::Structured, 3, 60);
+}
+
+#[test]
+fn parity_motion_sift_unstructured() {
+    parity_case("motion_sift", Variant::Unstructured, 4, 60);
+}
+
+#[test]
+fn solve_parity_on_trained_models() {
+    let Some((mut native, mut xla)) = backends("motion_sift", Variant::Structured) else {
+        return;
+    };
+    let g = native.group_map().num_groups();
+    let mut rng = Rng::new(9);
+    // train both on the same stream
+    for _ in 0..120 {
+        let u: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = (0..g)
+            .map(|_| 20.0 + 150.0 * u[0] + 60.0 * rng.f64())
+            .collect();
+        native.update(&u, &y);
+        xla.update(&u, &y);
+        native.observe_offset(8.0);
+        xla.observe_offset(8.0);
+    }
+    // solve over a shared candidate set for a sweep of bounds
+    let cands = rand_candidates(&mut rng, 16);
+    let rewards: Vec<f64> = (0..16).map(|i| 0.2 + 0.05 * (i as f64 % 7.0)).collect();
+    for bound in [40.0, 80.0, 120.0, 200.0] {
+        let a = native.solve(&cands, &rewards, bound);
+        let b = xla.solve(&cands, &rewards, bound);
+        // ties between equal rewards can legitimately differ; compare the
+        // achieved (reward, feasibility) instead of indices
+        let ca = native.predict(&cands)[a];
+        let cb = xla.predict(&cands)[b];
+        let feas_a = ca <= bound;
+        let feas_b = cb <= bound + 0.35; // float32 edge tolerance
+        assert_eq!(feas_a, feas_b, "bound {bound}: {ca} vs {cb}");
+        if feas_a {
+            assert!(
+                (rewards[a] - rewards[b]).abs() < 1e-9,
+                "bound {bound}: native picked r={}, xla r={}",
+                rewards[a],
+                rewards[b]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_weights_stay_in_subspace() {
+    let Some((native, mut xla)) = backends("motion_sift", Variant::Structured) else {
+        return;
+    };
+    drop(native);
+    let mut rng = Rng::new(11);
+    for _ in 0..40 {
+        let u: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+        xla.update(&u, &[rng.range_f64(5.0, 300.0), rng.range_f64(5.0, 300.0)]);
+    }
+    // group 0 = face branch over vars {0,2,4}: any monomial touching vars
+    // 1 or 3 must have zero weight. Group feature layout is the shared
+    // graded-lex order over all 5 vars.
+    let monos = iptune::learner::features::monomials_of(&[0, 1, 2, 3, 4], 3);
+    let w = xla.weights();
+    for (j, mono) in monos.iter().enumerate() {
+        let touches_foreign = mono.iter().any(|&v| v == 1 || v == 3);
+        if touches_foreign {
+            assert_eq!(w[j], 0.0, "face-branch weight leaked into monomial {mono:?}");
+        }
+    }
+}
+
+#[test]
+fn xla_reset_clears_state() {
+    let Some((_, mut xla)) = backends("pose", Variant::Unstructured) else { return };
+    xla.update(&[0.5; 5], &[120.0]);
+    assert!(xla.weights().iter().any(|&w| w != 0.0));
+    xla.reset();
+    assert!(xla.weights().iter().all(|&w| w == 0.0));
+    let c = xla.predict(&[vec![0.5; 5]]);
+    assert_eq!(c[0], 0.0);
+}
+
+#[test]
+fn xla_rejects_oversized_batch() {
+    let Some((_, mut xla)) = backends("pose", Variant::Structured) else { return };
+    let mut rng = Rng::new(13);
+    let cands = rand_candidates(&mut rng, 65); // candidate_pad is 64
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        xla.predict(&cands)
+    }));
+    assert!(result.is_err(), "oversized batch must be rejected");
+}

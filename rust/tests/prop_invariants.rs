@@ -1,0 +1,218 @@
+//! Property-based invariants (in-tree harness: `iptune::util::prop`).
+//!
+//! * critical path == brute force, and ≥ any single path, on random DAGs
+//! * normalization round-trips for arbitrary knob values
+//! * GroupMap targets + combine are consistent with the critical path
+//! * the solver never picks a predicted-infeasible action when a
+//!   predicted-feasible one exists
+//! * convex hulls contain every input point; mixture frontier dominates
+//!   pure strategies
+//! * the engine loses no frames and keeps them in order under random
+//!   queue capacities (routing/batching invariants)
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::dataflow::{critical_path, critical_path::critical_path_brute, Graph};
+use iptune::learner::{GroupMap, Variant};
+use iptune::metrics::hull::{best_mixture_reward, convex_hull, hull_contains};
+use iptune::runtime::native::NativeBackend;
+use iptune::runtime::Backend;
+use iptune::util::prop::{check, random_dag, unit_vec};
+
+fn graph_from(deps: &[Vec<usize>]) -> Graph {
+    let stages: Vec<(String, Vec<String>)> = deps
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            (format!("s{i}"), d.iter().map(|&j| format!("s{j}")).collect())
+        })
+        .collect();
+    Graph::new(&stages).unwrap()
+}
+
+#[test]
+fn prop_critical_path_matches_brute_force() {
+    check("critical-path-brute", 80, |rng, _| {
+        let (deps, weights) = random_dag(rng, 10);
+        let g = graph_from(&deps);
+        let fast = critical_path(&g, &weights);
+        let brute = critical_path_brute(&g, &weights);
+        assert!((fast - brute).abs() < 1e-9, "{fast} vs {brute}");
+    });
+}
+
+#[test]
+fn prop_critical_path_dominates_random_walks() {
+    check("critical-path-dominates", 40, |rng, _| {
+        let (deps, weights) = random_dag(rng, 10);
+        let g = graph_from(&deps);
+        let cp = critical_path(&g, &weights);
+        // random downstream walk from a random source
+        let succ = g.successors();
+        let mut node = g.sources()[rng.below(g.sources().len())];
+        let mut acc = weights[node];
+        while !succ[node].is_empty() {
+            node = succ[node][rng.below(succ[node].len())];
+            acc += weights[node];
+        }
+        assert!(cp >= acc - 1e-9, "cp {cp} < path {acc}");
+    });
+}
+
+#[test]
+fn prop_normalize_denormalize_valid() {
+    let spec_dir = find_spec_dir(None).unwrap();
+    for name in ["pose", "motion_sift"] {
+        let app = app_by_name(name, &spec_dir).unwrap();
+        check("normalize-roundtrip", 60, |rng, _| {
+            let u = unit_vec(rng, app.spec.num_vars());
+            let ks = app.spec.denormalize(&u);
+            for (p, &k) in app.spec.params.iter().zip(&ks) {
+                assert!(k >= p.min && k <= p.max);
+                if p.is_discrete() {
+                    assert_eq!(k, k.round());
+                }
+            }
+            // re-normalizing stays in [0,1]
+            for v in app.spec.normalize(&ks) {
+                assert!((-1e-9..=1.0 + 1e-9).contains(&v));
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_group_targets_consistent_with_critical_path() {
+    // structured targets + combine must reproduce the end-to-end latency
+    // when fed the exact per-stage values (up to the offset moving-average
+    // semantics, which we bypass by feeding the true offset)
+    let spec_dir = find_spec_dir(None).unwrap();
+    for name in ["pose", "motion_sift"] {
+        let app = app_by_name(name, &spec_dir).unwrap();
+        let map = GroupMap::structured(&app.spec);
+        check("targets-combine", 60, |rng, _| {
+            // run the true cost model on a random config to get stage times
+            let u = unit_vec(rng, app.spec.num_vars());
+            let ks = app.spec.denormalize(&u);
+            let content = app.model.content(rng.below(900));
+            let stage_ms = app.stage_latencies(&ks, &content);
+            let e2e = critical_path(&app.graph, &stage_ms);
+            let (y, offset) = map.targets(&stage_ms, e2e);
+            let combined = map.combine(&y, offset);
+            // combine sums per-group stage latencies along the critical
+            // path; for these graphs it must equal the true e2e
+            assert!(
+                (combined - e2e).abs() < 1e-9,
+                "{name}: combined {combined} vs e2e {e2e}"
+            );
+        });
+    }
+}
+
+#[test]
+fn prop_solver_feasibility() {
+    let spec_dir = find_spec_dir(None).unwrap();
+    let app = app_by_name("pose", &spec_dir).unwrap();
+    check("solver-feasibility", 25, |rng, case| {
+        let mut backend = NativeBackend::structured(&app.spec);
+        // random training
+        for _ in 0..80 {
+            let u = unit_vec(rng, 5);
+            let y: Vec<f64> = (0..4).map(|_| rng.range_f64(1.0, 200.0)).collect();
+            backend.update(&u, &y);
+        }
+        let cands: Vec<Vec<f64>> = (0..12).map(|_| unit_vec(rng, 5)).collect();
+        let rewards: Vec<f64> = (0..12).map(|_| rng.f64()).collect();
+        let costs = backend.predict(&cands);
+        let bound = costs[case % 12].max(1.0); // ensures >=1 feasible
+        let pick = backend.solve(&cands, &rewards, bound);
+        assert!(costs[pick] <= bound + 1e-9, "picked infeasible");
+        for (i, &c) in costs.iter().enumerate() {
+            if c <= bound {
+                assert!(rewards[pick] >= rewards[i] - 1e-12);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_hull_contains_inputs_and_frontier_dominates() {
+    check("hull", 50, |rng, _| {
+        let n = 3 + rng.below(40);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.range_f64(0.0, 50.0), rng.f64()))
+            .collect();
+        let hull = convex_hull(&pts);
+        for &p in &pts {
+            assert!(hull_contains(&hull, p), "{p:?} escaped its hull");
+        }
+        // mixture frontier at x >= max violation equals the best reward
+        let best = pts.iter().map(|p| p.1).fold(f64::MIN, f64::max);
+        let frontier = best_mixture_reward(&pts, 60.0);
+        assert!((frontier - best).abs() < 1e-9);
+        // frontier is monotone in the violation budget
+        let lo = best_mixture_reward(&pts, 1.0);
+        let hi = best_mixture_reward(&pts, 10.0);
+        assert!(hi >= lo - 1e-12);
+    });
+}
+
+#[test]
+fn prop_engine_no_frame_lost_any_capacity() {
+    let spec_dir = find_spec_dir(None).unwrap();
+    let app = std::sync::Arc::new(app_by_name("motion_sift", &spec_dir).unwrap());
+    check("engine-no-loss", 6, |rng, case| {
+        let cap = 1 + rng.below(6);
+        let frames = 15 + rng.below(25);
+        let recs = iptune::engine::run_stream_blocking(
+            std::sync::Arc::clone(&app),
+            app.spec.defaults(),
+            iptune::engine::EngineConfig {
+                frames,
+                queue_capacity: cap,
+                realtime_scale: 0.0,
+                seed: case as u64,
+            },
+        );
+        assert_eq!(recs.len(), frames, "cap {cap}");
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.frame, i, "out-of-order delivery");
+            assert!(r.stage_ms.iter().all(|&x| x > 0.0));
+        }
+    });
+}
+
+#[test]
+fn prop_ogd_prediction_error_bounded_after_training() {
+    // after T observations of a bounded target, predictions on the
+    // training distribution stay within a sane multiple of the range
+    check("ogd-bounded", 20, |rng, _| {
+        let mut reg = iptune::learner::OgdRegressor::new(&[0, 1, 2], 3);
+        for _ in 0..300 {
+            let u = unit_vec(rng, 3);
+            let y = rng.range_f64(10.0, 300.0);
+            reg.update(&u, y);
+        }
+        for _ in 0..50 {
+            let u = unit_vec(rng, 3);
+            let p = reg.predict(&u);
+            assert!(
+                (-200.0..800.0).contains(&p),
+                "prediction {p} blew past the target range"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_variant_feature_counts() {
+    let spec_dir = find_spec_dir(None).unwrap();
+    for name in ["pose", "motion_sift"] {
+        let app = app_by_name(name, &spec_dir).unwrap();
+        let s = GroupMap::for_variant(&app.spec, Variant::Structured);
+        let u = GroupMap::for_variant(&app.spec, Variant::Unstructured);
+        // structured compact space is never larger than unstructured
+        assert!(s.feature_count(3) <= u.feature_count(3) + 16, "{name}");
+        assert_eq!(u.feature_count(3), 56);
+    }
+}
