@@ -12,16 +12,33 @@ use crate::dataflow::Graph;
 /// Canonical application names.
 pub const APP_NAMES: [&str; 2] = ["pose", "motion_sift"];
 
-/// Construct an application by name (`pose` / `motion_sift`; hyphens are
-/// accepted for CLI friendliness), loading its spec from `spec_dir`.
+/// Parse a procedural-workload name: `gen:SEED` (or `gen_SEED`, so the
+/// CLI-friendly `gen-SEED` also works after hyphen canonicalization).
+fn parse_generated(canonical: &str) -> Option<u64> {
+    let rest = canonical
+        .strip_prefix("gen:")
+        .or_else(|| canonical.strip_prefix("gen_"))?;
+    rest.parse::<u64>().ok()
+}
+
+/// Construct an application by name, loading its spec from `spec_dir`:
+/// `pose` / `motion_sift` (hyphens are accepted for CLI friendliness), or
+/// `gen:SEED` for a procedurally generated pipeline (`workloads` module;
+/// no spec file involved — the spec is synthesized from the seed).
 pub fn app_by_name(name: &str, spec_dir: impl AsRef<Path>) -> Result<App> {
     let canonical = name.replace('-', "_");
+    if let Some(seed) = parse_generated(&canonical) {
+        return Ok(crate::workloads::generate(
+            seed,
+            &crate::workloads::WorkloadConfig::default(),
+        ));
+    }
     let spec = AppSpec::load_named(&canonical, spec_dir)?;
     let graph = Graph::from_spec(&spec);
     let model: Box<dyn super::CostModel> = match canonical.as_str() {
         "pose" => Box::new(PoseModel),
         "motion_sift" => Box::new(MotionSiftModel),
-        _ => bail!("unknown app {name} (expected one of {APP_NAMES:?})"),
+        _ => bail!("unknown app {name} (expected one of {APP_NAMES:?} or gen:SEED)"),
     };
     Ok(App { spec, graph, model })
 }
@@ -58,6 +75,23 @@ mod tests {
     fn unknown_name_rejected() {
         let dir = find_spec_dir(None).unwrap();
         assert!(app_by_name("nope", &dir).is_err());
+        // malformed generated names fall through to the spec path and fail
+        assert!(app_by_name("gen:abc", &dir).is_err());
+    }
+
+    #[test]
+    fn generated_names_resolve() {
+        let dir = find_spec_dir(None).unwrap();
+        for name in ["gen:5", "gen_5", "gen-5"] {
+            let app = app_by_name(name, &dir).unwrap();
+            assert_eq!(app.spec.name, "gen5");
+            assert_eq!(app.graph.len(), app.spec.stages.len());
+        }
+        // different seeds give different pipelines under the same scheme
+        let a = app_by_name("gen:1", &dir).unwrap();
+        let b = app_by_name("gen:2", &dir).unwrap();
+        assert_eq!(a.spec.name, "gen1");
+        assert_eq!(b.spec.name, "gen2");
     }
 
     #[test]

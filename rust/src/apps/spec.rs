@@ -237,7 +237,11 @@ impl AppSpec {
         self.params.iter().map(|p| p.default).collect()
     }
 
-    fn validate(&self) -> Result<()> {
+    /// Structural validation: non-empty tables, sane ranges, topological
+    /// stages, resolvable group references, and full knob coverage by the
+    /// groups. Public so generated specs (`workloads`) can be checked with
+    /// the exact same rules as the JSON-loaded ones.
+    pub fn validate(&self) -> Result<()> {
         if self.params.is_empty() || self.stages.is_empty() {
             bail!("spec {}: empty params or stages", self.name);
         }

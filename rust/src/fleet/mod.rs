@@ -1,0 +1,440 @@
+//! Fleet runner — tune many generated applications concurrently.
+//!
+//! The paper evaluates one tuner on one application at a time; a
+//! production deployment runs *fleets* of perception pipelines side by
+//! side. This module is that scale/stress path: it splits the simulated
+//! cluster evenly across N procedurally generated apps
+//! ([`workloads`](crate::workloads)), tunes each with its own ε-greedy
+//! controller on its own OS thread, and aggregates the per-app
+//! [`PolicyStats`] (fidelity vs. the clairvoyant oracle, constraint
+//! violations, convergence frames) into a single JSON report.
+//!
+//! Results are deterministic for a given `(seed, apps, frames)` triple
+//! regardless of thread count: every app's pipeline, traces and
+//! controller derive their randomness from `seed + index` alone, and the
+//! report is assembled by index.
+//!
+//! The controller targets `bound × bound_headroom` while violations are
+//! scored against the spec bound itself — standard SLO headroom so the
+//! learned operating point does not sit exactly on the constraint where
+//! measurement noise pushes half the frames over. On top of that, the
+//! fleet enables the controller's per-action empirical cost blend
+//! ([`EpsGreedyController::with_empirical_blend`]): across hundreds of
+//! generated apps, some action space always contains a high-fidelity
+//! config the polynomial model persistently under-predicts, and blending
+//! in each action's own observed latency keeps such configs from being
+//! exploited into chronic violations.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::PolicyStats;
+use crate::runtime::native::NativeBackend;
+use crate::simulator::Cluster;
+use crate::trace::TraceSet;
+use crate::tuner::policy::oracle_best;
+use crate::tuner::{EpsGreedyController, TunerConfig};
+use crate::util::json::Json;
+use crate::workloads::{self, WorkloadConfig};
+
+/// Post-warmup bound-met fraction every app is expected to clear.
+pub const FLEET_SLO_FRAC: f64 = 0.80;
+
+/// Fleet run configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of generated applications tuned concurrently.
+    pub apps: usize,
+    /// Frames each controller runs.
+    pub frames: usize,
+    /// Master seed; app `i` derives everything from `seed + i`.
+    pub seed: u64,
+    /// Size of each app's trace-based action space.
+    pub configs_per_app: usize,
+    /// Exploration rate; `None` → the paper's 1/√T rule.
+    pub epsilon: Option<f64>,
+    pub warmup_frames: usize,
+    /// The controller solves against `bound × headroom` (violations are
+    /// still scored against the spec bound).
+    pub bound_headroom: f64,
+    /// Shrinkage count of the controller's per-action empirical cost
+    /// blend (see [`EpsGreedyController::with_empirical_blend`]); 0 runs
+    /// the paper's pure-model exploit.
+    pub empirical_blend_k: f64,
+    /// Worker OS threads; 0 → one per available core, capped at `apps`.
+    pub threads: usize,
+    /// The shared cluster divided across the fleet.
+    pub cluster: Cluster,
+    /// Generation envelope for the workloads.
+    pub workload: WorkloadConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            apps: 4,
+            frames: 500,
+            seed: 7,
+            configs_per_app: 24,
+            epsilon: None,
+            warmup_frames: 20,
+            bound_headroom: 0.90,
+            empirical_blend_k: 8.0,
+            threads: 0,
+            cluster: Cluster::default(),
+            workload: WorkloadConfig::default(),
+        }
+    }
+}
+
+/// Outcome of tuning one generated app.
+#[derive(Debug, Clone)]
+pub struct AppReport {
+    pub index: usize,
+    pub name: String,
+    pub seed: u64,
+    pub stages: usize,
+    pub knobs: usize,
+    pub branches: usize,
+    /// The calibrated latency bound L (ms) violations are scored against.
+    pub bound_ms: f64,
+    pub avg_fidelity: f64,
+    pub oracle_fidelity: f64,
+    /// avg_fidelity / oracle_fidelity (the paper's 90%-of-optimum axis).
+    pub fidelity_vs_oracle: f64,
+    pub avg_violation_ms: f64,
+    pub max_violation_ms: f64,
+    pub violation_rate: f64,
+    /// Fraction of post-warmup frames under the bound (the fleet SLO).
+    pub post_warmup_bound_met_frac: f64,
+    /// Candidate actions whose trace meets the bound on ≥95% of frames —
+    /// how much robustly feasible room the controller had to work with.
+    pub robust_feasible_actions: usize,
+    /// First frame whose trailing-50 mean fidelity reached 90% of oracle.
+    pub convergence_frame: Option<usize>,
+    pub explore_frames: usize,
+    /// Raw accumulator (kept for fleet-wide merging).
+    pub stats: PolicyStats,
+}
+
+impl AppReport {
+    pub fn to_json(&self) -> Json {
+        let conv = match self.convergence_frame {
+            Some(f) => Json::from(f),
+            None => Json::Null,
+        };
+        Json::obj()
+            .put("index", self.index)
+            .put("name", self.name.as_str())
+            .put("seed", self.seed)
+            .put("stages", self.stages)
+            .put("knobs", self.knobs)
+            .put("branches", self.branches)
+            .put("bound_ms", self.bound_ms)
+            .put("avg_fidelity", self.avg_fidelity)
+            .put("oracle_fidelity", self.oracle_fidelity)
+            .put("fidelity_vs_oracle", self.fidelity_vs_oracle)
+            .put("avg_violation_ms", self.avg_violation_ms)
+            .put("max_violation_ms", self.max_violation_ms)
+            .put("violation_rate", self.violation_rate)
+            .put("post_warmup_bound_met_frac", self.post_warmup_bound_met_frac)
+            .put("robust_feasible_actions", self.robust_feasible_actions)
+            .put("convergence_frame", conv)
+            .put("explore_frames", self.explore_frames)
+    }
+}
+
+/// Aggregated fleet outcome.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub apps: Vec<AppReport>,
+    pub frames: usize,
+    pub seed: u64,
+    pub epsilon: f64,
+    pub warmup_frames: usize,
+    pub bound_headroom: f64,
+    pub cores_per_app: usize,
+    pub avg_fidelity_vs_oracle: f64,
+    pub min_bound_met_frac: f64,
+    pub apps_meeting_slo: usize,
+    pub merged: PolicyStats,
+}
+
+impl FleetReport {
+    pub fn all_apps_meet_slo(&self) -> bool {
+        self.apps_meeting_slo == self.apps.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let details: Vec<Json> = self.apps.iter().map(|a| a.to_json()).collect();
+        Json::obj()
+            .put("apps", self.apps.len())
+            .put("frames", self.frames)
+            .put("seed", self.seed)
+            .put("epsilon", self.epsilon)
+            .put("warmup_frames", self.warmup_frames)
+            .put("bound_headroom", self.bound_headroom)
+            .put("cores_per_app", self.cores_per_app)
+            .put(
+                "aggregate",
+                Json::obj()
+                    .put("avg_fidelity_vs_oracle", self.avg_fidelity_vs_oracle)
+                    .put("min_post_warmup_bound_met_frac", self.min_bound_met_frac)
+                    .put("slo_frac", FLEET_SLO_FRAC)
+                    .put("apps_meeting_slo", self.apps_meeting_slo)
+                    .put("all_apps_meet_slo", self.all_apps_meet_slo())
+                    .put("avg_violation_ms", self.merged.avg_violation_ms())
+                    .put("max_violation_ms", self.merged.max_violation_ms())
+                    .put("violation_rate", self.merged.violation_rate()),
+            )
+            .put("apps_detail", Json::Arr(details))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing fleet report {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Each app's even slice of the shared cluster: exactly
+/// `total_cores / apps` cores (expressed as one virtual server, so the
+/// fleet never oversubscribes the shared budget), floored at one physical
+/// server's worth — fleets larger than the server count deliberately
+/// co-tenant at that floor.
+pub fn cluster_slice(total: &Cluster, apps: usize) -> Cluster {
+    let per_app_cores = (total.total_cores() / apps.max(1)).max(total.cores_per_server);
+    Cluster {
+        servers: 1,
+        cores_per_server: per_app_cores,
+        comm_ms_per_frame: total.comm_ms_per_frame,
+    }
+}
+
+/// Generate, trace and tune fleet member `index`. Pure function of
+/// `(cfg, index)` — this is what makes multi-threaded runs reproducible.
+pub fn run_app(cfg: &FleetConfig, index: usize) -> AppReport {
+    let slice = cluster_slice(&cfg.cluster, cfg.apps);
+    let app_seed = cfg.seed.wrapping_add(index as u64);
+    let app = workloads::generate_on(app_seed, &cfg.workload, &slice);
+    let bound = app.spec.latency_bounds_ms[0];
+
+    let trace_frames = cfg.frames.max(100);
+    let traces = TraceSet::generate_on(
+        &app,
+        &slice,
+        cfg.configs_per_app,
+        trace_frames,
+        app_seed ^ 0x7A3E_5EED,
+    );
+
+    let eps = cfg
+        .epsilon
+        .unwrap_or_else(|| TunerConfig::epsilon_for_horizon(cfg.frames.max(1)));
+    let tuner_cfg = TunerConfig {
+        epsilon: eps,
+        bound_ms: bound * cfg.bound_headroom,
+        warmup_frames: cfg.warmup_frames,
+    };
+    let backend = NativeBackend::structured(&app.spec);
+    let mut ctl = EpsGreedyController::new(
+        &app.spec,
+        &traces,
+        Box::new(backend),
+        tuner_cfg,
+        app_seed ^ 0x00C0_FFEE,
+    )
+    .with_empirical_blend(cfg.empirical_blend_k);
+    let out = ctl.run(cfg.frames);
+    let oracle = oracle_best(&traces, cfg.frames, bound);
+
+    // violations scored against the spec bound, not the headroom target
+    let mut stats = PolicyStats::new();
+    for s in &out.steps {
+        stats.observe(s.reward, s.latency_ms, bound);
+    }
+    let oracle_fid = oracle.avg_reward.max(1e-9);
+    AppReport {
+        index,
+        name: app.spec.name.clone(),
+        seed: app_seed,
+        stages: app.spec.stages.len(),
+        knobs: app.spec.num_vars(),
+        branches: app.spec.branches().len(),
+        bound_ms: bound,
+        avg_fidelity: stats.avg_reward(),
+        oracle_fidelity: oracle.avg_reward,
+        fidelity_vs_oracle: stats.avg_reward() / oracle_fid,
+        avg_violation_ms: stats.avg_violation_ms(),
+        max_violation_ms: stats.max_violation_ms(),
+        violation_rate: stats.violation_rate(),
+        post_warmup_bound_met_frac: out.bound_met_frac_after(cfg.warmup_frames, bound),
+        robust_feasible_actions: traces
+            .traces
+            .iter()
+            .filter(|t| t.frac_under(bound) >= 0.95)
+            .count(),
+        convergence_frame: out.convergence_frame(50, 0.9 * oracle.avg_reward),
+        explore_frames: out.explore_frames,
+        stats,
+    }
+}
+
+/// Run the whole fleet across OS threads and aggregate.
+pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
+    assert!(cfg.apps > 0, "fleet needs at least one app");
+    assert!(cfg.frames > 0, "fleet needs at least one frame");
+    assert!(
+        cfg.warmup_frames < cfg.frames,
+        "warmup ({}) must leave post-warmup frames to score the SLO on ({})",
+        cfg.warmup_frames,
+        cfg.frames
+    );
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        cfg.threads
+    }
+    .clamp(1, cfg.apps);
+
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<AppReport>>> =
+        Mutex::new((0..cfg.apps).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= cfg.apps {
+                    break;
+                }
+                let report = run_app(cfg, i);
+                slots.lock().unwrap()[i] = Some(report);
+            });
+        }
+    });
+    let apps: Vec<AppReport> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every fleet slot is filled before the scope ends"))
+        .collect();
+
+    let n = apps.len() as f64;
+    let avg_ratio = apps.iter().map(|a| a.fidelity_vs_oracle).sum::<f64>() / n;
+    let min_met = apps
+        .iter()
+        .map(|a| a.post_warmup_bound_met_frac)
+        .fold(f64::INFINITY, f64::min);
+    let meeting = apps
+        .iter()
+        .filter(|a| a.post_warmup_bound_met_frac >= FLEET_SLO_FRAC)
+        .count();
+    let mut merged = PolicyStats::new();
+    for a in &apps {
+        merged.merge(&a.stats);
+    }
+    FleetReport {
+        frames: cfg.frames,
+        seed: cfg.seed,
+        epsilon: cfg
+            .epsilon
+            .unwrap_or_else(|| TunerConfig::epsilon_for_horizon(cfg.frames)),
+        warmup_frames: cfg.warmup_frames,
+        bound_headroom: cfg.bound_headroom,
+        cores_per_app: cluster_slice(&cfg.cluster, cfg.apps).total_cores(),
+        avg_fidelity_vs_oracle: avg_ratio,
+        min_bound_met_frac: min_met,
+        apps_meeting_slo: meeting,
+        merged,
+        apps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> FleetConfig {
+        FleetConfig {
+            apps: 3,
+            frames: 120,
+            seed: 42,
+            configs_per_app: 10,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cluster_slice_splits_evenly() {
+        let total = Cluster::default(); // 15 x 8 = 120 cores
+        assert_eq!(cluster_slice(&total, 8).total_cores(), 15);
+        assert_eq!(cluster_slice(&total, 1).total_cores(), 120);
+        // the fleet never oversubscribes the shared budget ...
+        for apps in 1..=15 {
+            assert!(cluster_slice(&total, apps).total_cores() * apps <= 120, "{apps}");
+        }
+        // ... until fleets exceed the server count, which co-tenant at
+        // one server's worth each
+        assert_eq!(cluster_slice(&total, 1000).total_cores(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "warmup")]
+    fn warmup_exceeding_frames_is_rejected() {
+        let mut cfg = small_cfg();
+        cfg.warmup_frames = cfg.frames;
+        run_fleet(&cfg);
+    }
+
+    #[test]
+    fn fleet_runs_every_app() {
+        let report = run_fleet(&small_cfg());
+        assert_eq!(report.apps.len(), 3);
+        for (i, a) in report.apps.iter().enumerate() {
+            assert_eq!(a.index, i);
+            assert_eq!(a.seed, 42 + i as u64);
+            assert!(a.bound_ms > 0.0);
+            assert!((0.0..=1.0).contains(&a.post_warmup_bound_met_frac));
+            assert!((0.0..=1.0).contains(&a.violation_rate));
+            assert!(a.avg_fidelity > 0.0, "app {i} learned nothing");
+        }
+        assert!(report.avg_fidelity_vs_oracle > 0.0);
+        assert!(report.min_bound_met_frac <= 1.0);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let report = run_fleet(&small_cfg());
+        let j = report.to_json();
+        assert_eq!(j.req("apps").unwrap().as_usize().unwrap(), 3);
+        let agg = j.req("aggregate").unwrap();
+        assert!(agg.req("min_post_warmup_bound_met_frac").unwrap().as_f64().is_ok());
+        let details = j.req("apps_detail").unwrap().as_arr().unwrap();
+        assert_eq!(details.len(), 3);
+        assert_eq!(details[1].req("index").unwrap().as_usize().unwrap(), 1);
+        // round-trips through the in-tree parser
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req("seed").unwrap().as_u64().unwrap(), 42);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut a_cfg = small_cfg();
+        a_cfg.threads = 1;
+        let mut b_cfg = small_cfg();
+        b_cfg.threads = 3;
+        let a = run_fleet(&a_cfg);
+        let b = run_fleet(&b_cfg);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+}

@@ -46,6 +46,7 @@ pub mod config;
 pub mod dataflow;
 pub mod engine;
 pub mod experiments;
+pub mod fleet;
 pub mod learner;
 pub mod metrics;
 pub mod runtime;
@@ -53,6 +54,7 @@ pub mod simulator;
 pub mod trace;
 pub mod tuner;
 pub mod util;
+pub mod workloads;
 
 /// Milliseconds, the time unit used throughout the crate.
 pub type Ms = f64;

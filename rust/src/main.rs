@@ -96,7 +96,12 @@ commands:
   tune --app APP [--epsilon E] [--bound MS] [--frames N]
        [--backend xla|native] [--trace-dir DIR]
   figures (--all | --fig N | --claims) [--out DIR] [--frames N]
-  engine --app APP [--frames N] [--bound MS] [--period N]";
+  engine --app APP [--frames N] [--bound MS] [--period N]
+  fleet [--apps N] [--frames N] [--seed N] [--configs N] [--epsilon E]
+        [--warmup N] [--headroom F] [--blend K] [--threads N] [--out FILE]
+
+APP is pose, motion-sift, or gen:SEED (a procedurally generated
+pipeline; see the workloads module).";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -116,8 +121,89 @@ fn main() -> Result<()> {
         "tune" => cmd_tune(&args, &spec_dir, &run_cfg),
         "figures" => cmd_figures(&args),
         "engine" => cmd_engine(&args, &spec_dir),
+        "fleet" => cmd_fleet(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
+}
+
+/// Tune N generated apps concurrently and write the aggregate JSON report.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let mut cfg = iptune::fleet::FleetConfig::default();
+    if let Some(n) = args.get_parse::<usize>("apps")? {
+        cfg.apps = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("frames")? {
+        cfg.frames = n;
+    }
+    if let Some(n) = args.get_parse::<u64>("seed")? {
+        cfg.seed = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("configs")? {
+        cfg.configs_per_app = n;
+    }
+    if let Some(e) = args.get_parse::<f64>("epsilon")? {
+        cfg.epsilon = Some(e);
+    }
+    if let Some(n) = args.get_parse::<usize>("warmup")? {
+        cfg.warmup_frames = n;
+    }
+    if let Some(h) = args.get_parse::<f64>("headroom")? {
+        cfg.bound_headroom = h;
+    }
+    if let Some(k) = args.get_parse::<f64>("blend")? {
+        cfg.empirical_blend_k = k; // 0 = the paper's pure-model exploit
+    }
+    if let Some(n) = args.get_parse::<usize>("threads")? {
+        cfg.threads = n;
+    }
+    let out = PathBuf::from(args.get("out").unwrap_or("fleet_report.json"));
+
+    eprintln!(
+        "fleet: tuning {} generated apps x {} frames (seed {}, {} cores/app) ...",
+        cfg.apps,
+        cfg.frames,
+        cfg.seed,
+        iptune::fleet::cluster_slice(&cfg.cluster, cfg.apps).total_cores()
+    );
+    let report = iptune::fleet::run_fleet(&cfg);
+    println!(
+        "{:<8} {:>7} {:>6} {:>8} {:>10} {:>10} {:>10} {:>12} {:>11}",
+        "app", "stages", "knobs", "bound", "fidelity", "oracle", "%oracle", "bound-met%", "conv-frame"
+    );
+    for a in &report.apps {
+        println!(
+            "{:<8} {:>7} {:>6} {:>8.1} {:>10.3} {:>10.3} {:>9.1}% {:>11.1}% {:>11}",
+            a.name,
+            a.stages,
+            a.knobs,
+            a.bound_ms,
+            a.avg_fidelity,
+            a.oracle_fidelity,
+            100.0 * a.fidelity_vs_oracle,
+            100.0 * a.post_warmup_bound_met_frac,
+            a.convergence_frame.map(|f| f.to_string()).unwrap_or_else(|| "-".into()),
+        );
+    }
+    println!(
+        "fleet: avg {:.1}% of oracle | min bound-met {:.1}% | {}/{} apps meet the {:.0}% SLO",
+        100.0 * report.avg_fidelity_vs_oracle,
+        100.0 * report.min_bound_met_frac,
+        report.apps_meeting_slo,
+        report.apps.len(),
+        100.0 * iptune::fleet::FLEET_SLO_FRAC,
+    );
+    report.save(&out)?;
+    println!("report -> {}", out.display());
+    if !report.all_apps_meet_slo() {
+        bail!(
+            "{} of {} apps missed the {:.0}% bound-met SLO (report saved to {})",
+            report.apps.len() - report.apps_meeting_slo,
+            report.apps.len(),
+            100.0 * iptune::fleet::FLEET_SLO_FRAC,
+            out.display()
+        );
+    }
+    Ok(())
 }
 
 fn cmd_spec(args: &Args, spec_dir: &std::path::Path) -> Result<()> {

@@ -108,6 +108,16 @@ impl PolicyStats {
     pub fn count(&self) -> u64 {
         self.n
     }
+
+    /// Fold another accumulator into this one — the fleet runner merges
+    /// per-app stats into cluster-wide aggregates with this.
+    pub fn merge(&mut self, other: &PolicyStats) {
+        self.sum_reward += other.sum_reward;
+        self.sum_violation += other.sum_violation;
+        self.max_violation = self.max_violation.max(other.max_violation);
+        self.violated_frames += other.violated_frames;
+        self.n += other.n;
+    }
 }
 
 #[cfg(test)]
@@ -141,5 +151,37 @@ mod tests {
         assert!((p.avg_violation_ms() - 15.0).abs() < 1e-12);
         assert_eq!(p.max_violation_ms(), 30.0);
         assert!((p.violation_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_stats_merge_equals_combined_stream() {
+        let obs = [(0.8, 45.0), (0.6, 80.0), (0.9, 30.0), (0.5, 120.0)];
+        let mut whole = PolicyStats::new();
+        for &(r, l) in &obs {
+            whole.observe(r, l, 50.0);
+        }
+        let mut a = PolicyStats::new();
+        let mut b = PolicyStats::new();
+        for &(r, l) in &obs[..2] {
+            a.observe(r, l, 50.0);
+        }
+        for &(r, l) in &obs[2..] {
+            b.observe(r, l, 50.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.avg_reward() - whole.avg_reward()).abs() < 1e-12);
+        assert!((a.avg_violation_ms() - whole.avg_violation_ms()).abs() < 1e-12);
+        assert_eq!(a.max_violation_ms(), whole.max_violation_ms());
+        assert!((a.violation_rate() - whole.violation_rate()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_stats_merge_empty_is_identity() {
+        let mut a = PolicyStats::new();
+        a.observe(0.7, 60.0, 50.0);
+        let before = (a.avg_reward(), a.avg_violation_ms(), a.count());
+        a.merge(&PolicyStats::new());
+        assert_eq!((a.avg_reward(), a.avg_violation_ms(), a.count()), before);
     }
 }

@@ -17,6 +17,16 @@
 
 pub mod manifest;
 pub mod native;
+
+// The PJRT-backed XLA backend needs the external `xla` crate (vendored in
+// environments that run `make artifacts`); everywhere else a stub with an
+// identical public surface keeps the workspace building offline — its
+// constructors return Err, and every call site already falls back to the
+// native backend on that path.
+#[cfg(feature = "pjrt")]
+pub mod xla;
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
 pub mod xla;
 
 use crate::learner::GroupMap;
@@ -65,15 +75,12 @@ pub trait Backend {
     fn reset(&mut self);
 }
 
-/// Reference solve implementation shared by backends that expose
-/// `predict` (native; also used to validate the XLA `solve` artifact).
-pub fn solve_by_predict(
-    backend: &mut dyn Backend,
-    u_batch: &[Vec<f64>],
-    rewards: &[f64],
-    bound_ms: f64,
-) -> (usize, Vec<f64>) {
-    let costs = backend.predict(u_batch);
+/// The constrained argmax of paper Eq. 2 over precomputed costs: highest
+/// reward among candidates predicted feasible (first wins ties), else the
+/// predicted-fastest candidate. Shared by [`solve_by_predict`] and the
+/// controller's empirical-blend exploit so tie-breaking can never drift
+/// between the two paths.
+pub fn constrained_argmax(costs: &[f64], rewards: &[f64], bound_ms: f64) -> usize {
     let mut best: Option<usize> = None;
     for (i, &c) in costs.iter().enumerate() {
         if c <= bound_ms {
@@ -83,13 +90,25 @@ pub fn solve_by_predict(
             }
         }
     }
-    let idx = best.unwrap_or_else(|| {
+    best.unwrap_or_else(|| {
         costs
             .iter()
             .enumerate()
             .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i)
             .unwrap_or(0)
-    });
+    })
+}
+
+/// Reference solve implementation shared by backends that expose
+/// `predict` (native; also used to validate the XLA `solve` artifact).
+pub fn solve_by_predict(
+    backend: &mut dyn Backend,
+    u_batch: &[Vec<f64>],
+    rewards: &[f64],
+    bound_ms: f64,
+) -> (usize, Vec<f64>) {
+    let costs = backend.predict(u_batch);
+    let idx = constrained_argmax(&costs, rewards, bound_ms);
     (idx, costs)
 }

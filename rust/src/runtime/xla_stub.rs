@@ -1,0 +1,79 @@
+//! Stub twin of the PJRT/XLA backend, compiled when the `pjrt` feature is
+//! off (the default — the external `xla` crate is only vendored in
+//! artifact-building environments).
+//!
+//! The public surface matches `xla.rs` exactly so call sites type-check
+//! unchanged; both constructors return an error, and every caller in the
+//! tree (CLI, quickstart, benches, parity tests) already treats that as
+//! "artifacts unavailable" and falls back to the native backend or skips.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::Backend;
+use crate::apps::spec::AppSpec;
+use crate::learner::{GroupMap, Variant};
+
+/// Placeholder for [`xla.rs`]'s PJRT-backed predictor backend.
+pub struct XlaBackend {
+    map: GroupMap,
+    weights: Vec<f32>,
+    pub eta0: f64,
+}
+
+impl XlaBackend {
+    /// Always fails: this build carries no PJRT runtime.
+    pub fn new(
+        _spec: &AppSpec,
+        _variant: Variant,
+        _artifact_dir: impl AsRef<Path>,
+    ) -> Result<Self> {
+        bail!(
+            "this build has no PJRT runtime (compiled without the `pjrt` \
+             feature); use the native backend"
+        )
+    }
+
+    /// Always fails: this build carries no PJRT runtime.
+    pub fn from_default_artifacts(spec: &AppSpec, variant: Variant) -> Result<Self> {
+        Self::new(spec, variant, "artifacts")
+    }
+
+    pub fn with_eta0(mut self, eta0: f64) -> Self {
+        self.eta0 = eta0;
+        self
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-stub"
+    }
+
+    fn group_map(&self) -> &GroupMap {
+        &self.map
+    }
+
+    fn predict(&mut self, u_batch: &[Vec<f64>]) -> Vec<f64> {
+        vec![0.0; u_batch.len()]
+    }
+
+    fn update(&mut self, _u: &[f64], _y_groups: &[f64]) {}
+
+    fn observe_offset(&mut self, _offset_ms: f64) {}
+
+    fn solve_with_costs(
+        &mut self,
+        u_batch: &[Vec<f64>],
+        _rewards: &[f64],
+        _bound_ms: f64,
+    ) -> (usize, Vec<f64>) {
+        (0, vec![0.0; u_batch.len()])
+    }
+
+    fn reset(&mut self) {}
+}

@@ -47,6 +47,16 @@ impl Trace {
     pub fn avg_fidelity(&self) -> f64 {
         self.frames.iter().map(|f| f.fidelity).sum::<f64>() / self.frames.len() as f64
     }
+
+    /// Fraction of frames whose end-to-end latency satisfies `bound_ms`
+    /// (the fleet's `robust_feasible_actions` count is built from this).
+    pub fn frac_under(&self, bound_ms: f64) -> f64 {
+        if self.frames.is_empty() {
+            return 0.0;
+        }
+        let ok = self.frames.iter().filter(|f| f.end_to_end_ms <= bound_ms).count();
+        ok as f64 / self.frames.len() as f64
+    }
 }
 
 /// The full point-based approximation of the action space for one app.
@@ -62,15 +72,27 @@ pub struct TraceSet {
 impl TraceSet {
     /// Sample `n_configs` random valid configurations (uniform in the
     /// normalized knob space, so log-scaled knobs are log-uniform) and
-    /// run each for `n_frames` frames on the simulated cluster.
+    /// run each for `n_frames` frames on the default simulated cluster.
     pub fn generate(app: &App, n_configs: usize, n_frames: usize, seed: u64) -> Self {
+        Self::generate_on(app, &Cluster::default(), n_configs, n_frames, seed)
+    }
+
+    /// [`generate`](Self::generate) against an explicit cluster — the
+    /// fleet runner traces each app on its slice of the shared cluster.
+    pub fn generate_on(
+        app: &App,
+        cluster: &Cluster,
+        n_configs: usize,
+        n_frames: usize,
+        seed: u64,
+    ) -> Self {
         let mut rng = Rng::new(seed);
         let mut traces = Vec::with_capacity(n_configs);
         for ci in 0..n_configs {
             let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
             let config = app.spec.denormalize(&u);
             let mut sim = ClusterSim::new(
-                Cluster::default(),
+                cluster.clone(),
                 NoiseModel::default(),
                 seed.wrapping_mul(1_000_003).wrapping_add(ci as u64),
             );
@@ -249,6 +271,22 @@ mod tests {
         assert_eq!(ts.num_configs(), 6);
         assert_eq!(ts.num_frames(), 40);
         assert_eq!(ts.stage_names.len(), 7);
+    }
+
+    #[test]
+    fn frac_under_counts_frames() {
+        let t = Trace {
+            config: vec![1.0],
+            frames: [40.0, 60.0, 50.0, 45.0]
+                .iter()
+                .map(|&e| TraceFrame { stage_ms: vec![e], end_to_end_ms: e, fidelity: 0.5 })
+                .collect(),
+        };
+        assert!((t.frac_under(50.0) - 0.75).abs() < 1e-12);
+        assert_eq!(t.frac_under(10.0), 0.0);
+        assert_eq!(t.frac_under(100.0), 1.0);
+        let empty = Trace { config: vec![], frames: vec![] };
+        assert_eq!(empty.frac_under(1.0), 0.0);
     }
 
     #[test]

@@ -70,6 +70,45 @@ pub struct RunOutcome {
     pub steps: Vec<StepOutcome>,
 }
 
+impl RunOutcome {
+    /// Fraction of frames at index `>= warmup` whose observed latency met
+    /// `bound_ms` — the fleet acceptance metric ("post-warmup frames under
+    /// the bound"). Returns 1.0 when no frames remain past the warmup.
+    pub fn bound_met_frac_after(&self, warmup: usize, bound_ms: f64) -> f64 {
+        let (mut tail, mut met) = (0usize, 0usize);
+        for s in self.steps.iter().filter(|s| s.frame >= warmup) {
+            tail += 1;
+            if s.latency_ms <= bound_ms {
+                met += 1;
+            }
+        }
+        if tail == 0 {
+            return 1.0;
+        }
+        met as f64 / tail as f64
+    }
+
+    /// First frame index at which the trailing-`window` mean reward
+    /// reaches `target` (and the window is full) — the convergence-frame
+    /// measure aggregated in fleet reports. `None` if never reached.
+    pub fn convergence_frame(&self, window: usize, target: f64) -> Option<usize> {
+        if self.steps.len() < window || window == 0 {
+            return None;
+        }
+        let mut sum: f64 = self.steps[..window].iter().map(|s| s.reward).sum();
+        if sum / window as f64 >= target {
+            return Some(self.steps[window - 1].frame);
+        }
+        for i in window..self.steps.len() {
+            sum += self.steps[i].reward - self.steps[i - window].reward;
+            if sum / window as f64 >= target {
+                return Some(self.steps[i].frame);
+            }
+        }
+        None
+    }
+}
+
 /// ε-greedy controller over a trace-based action space (the paper's
 /// "predefined alternative futures" methodology, Sec. 4.1).
 pub struct EpsGreedyController<'a> {
@@ -82,6 +121,13 @@ pub struct EpsGreedyController<'a> {
     /// Known per-action expected fidelity (the paper assumes r is known;
     /// these are the Fig. 5 rewards).
     rewards: Vec<f64>,
+    /// Shrinkage count of the per-action empirical cost blend; 0 disables
+    /// it and reproduces the paper's pure-model exploit exactly.
+    blend_k: f64,
+    /// EMA rate of the per-action observed-cost tracker.
+    ema_alpha: f64,
+    obs_count: Vec<u64>,
+    obs_ema_ms: Vec<f64>,
 }
 
 impl<'a> EpsGreedyController<'a> {
@@ -94,12 +140,13 @@ impl<'a> EpsGreedyController<'a> {
     ) -> Self {
         assert!(traces.num_configs() > 0, "empty action space");
         assert!((0.0..=1.0).contains(&cfg.epsilon));
-        let candidates = traces
+        let candidates: Vec<Vec<f64>> = traces
             .configs()
             .iter()
             .map(|c| spec.normalize(c))
             .collect();
         let rewards = traces.traces.iter().map(|t| t.avg_fidelity()).collect();
+        let n = candidates.len();
         EpsGreedyController {
             traces,
             backend,
@@ -107,7 +154,25 @@ impl<'a> EpsGreedyController<'a> {
             rng: Rng::new(seed),
             candidates,
             rewards,
+            blend_k: 0.0,
+            ema_alpha: 0.2,
+            obs_count: vec![0; n],
+            obs_ema_ms: vec![0.0; n],
         }
+    }
+
+    /// Enable per-action empirical cost blending in the exploit path:
+    /// feasibility is judged on `(k·model + n_a·ema_a) / (k + n_a)`
+    /// instead of the model alone. The polynomial model generalizes
+    /// across actions but can carry a persistent bias at specific corners
+    /// of the knob space; after an action has been played a few times its
+    /// own observed latency dominates, so a systematically under-predicted
+    /// infeasible action cannot be exploited forever. With `k = 0` (the
+    /// default) behavior is exactly the paper's Eq. 2 exploit.
+    pub fn with_empirical_blend(mut self, k: f64) -> Self {
+        assert!(k >= 0.0);
+        self.blend_k = k;
+        self
     }
 
     pub fn backend(&self) -> &dyn Backend {
@@ -118,6 +183,20 @@ impl<'a> EpsGreedyController<'a> {
         &self.rewards
     }
 
+    /// Blended cost estimates for every candidate (exploit path of the
+    /// empirical-blend mode).
+    fn blended_costs(&mut self) -> Vec<f64> {
+        let costs = self.backend.predict(&self.candidates);
+        costs
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let n = self.obs_count[i] as f64;
+                (self.blend_k * c + n * self.obs_ema_ms[i]) / (self.blend_k + n)
+            })
+            .collect()
+    }
+
     /// Run one frame: choose an action, observe its trace outcome, learn.
     pub fn step(&mut self, frame: usize) -> StepOutcome {
         let explore =
@@ -126,6 +205,12 @@ impl<'a> EpsGreedyController<'a> {
             let a = self.rng.below(self.candidates.len());
             let p = self.backend.predict(std::slice::from_ref(&self.candidates[a]))[0];
             (a, p)
+        } else if self.blend_k > 0.0 {
+            // constrained argmax over the blended estimates, through the
+            // same routine the backend solve uses (identical tie-breaking)
+            let est = self.blended_costs();
+            let a = crate::runtime::constrained_argmax(&est, &self.rewards, self.cfg.bound_ms);
+            (a, est[a])
         } else {
             // the solve artifact computes every candidate's predicted
             // latency anyway — reuse it instead of a second dispatch
@@ -144,6 +229,16 @@ impl<'a> EpsGreedyController<'a> {
             .targets(&rec.stage_ms, rec.end_to_end_ms);
         self.backend.update(&u, &y);
         self.backend.observe_offset(offset_obs);
+
+        // per-action observed-cost tracker (drives the empirical blend;
+        // updated unconditionally — with blend_k == 0 it is inert)
+        if self.obs_count[action] == 0 {
+            self.obs_ema_ms[action] = rec.end_to_end_ms;
+        } else {
+            self.obs_ema_ms[action] +=
+                self.ema_alpha * (rec.end_to_end_ms - self.obs_ema_ms[action]);
+        }
+        self.obs_count[action] += 1;
 
         StepOutcome {
             frame,
@@ -251,6 +346,109 @@ mod tests {
             greedy > random - 0.02,
             "greedy {greedy} should beat mostly-random {random}"
         );
+    }
+
+    #[test]
+    fn zero_blend_is_identity() {
+        // with_empirical_blend(0) must reproduce the default trajectory
+        let (app, traces) = setup("pose");
+        let run = |blend: Option<f64>| {
+            let backend = NativeBackend::structured(&app.spec);
+            let cfg = TunerConfig { epsilon: 0.2, bound_ms: 70.0, warmup_frames: 5 };
+            let mut ctl =
+                EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, 4);
+            if let Some(k) = blend {
+                ctl = ctl.with_empirical_blend(k);
+            }
+            ctl.run(100)
+        };
+        let a = run(None);
+        let b = run(Some(0.0));
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.action, sb.action);
+            assert_eq!(sa.explored, sb.explored);
+            assert_eq!(sa.predicted_ms, sb.predicted_ms);
+        }
+    }
+
+    #[test]
+    fn empirical_blend_steers_off_underpredicted_actions() {
+        // two-action synthetic space: the high-fidelity action costs 100.5
+        // ms against a 50 ms bound; with blending the controller must park
+        // on the feasible action once it has observed the slow one
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
+        let spec = &app.spec;
+        let mk_frames = |stage_ms: Vec<f64>, fid: f64| -> Vec<crate::trace::TraceFrame> {
+            let e2e: f64 = stage_ms.iter().sum();
+            (0..60)
+                .map(|_| crate::trace::TraceFrame {
+                    stage_ms: stage_ms.clone(),
+                    end_to_end_ms: e2e,
+                    fidelity: fid,
+                })
+                .collect()
+        };
+        let slow = crate::trace::Trace {
+            config: spec.defaults(),
+            frames: mk_frames(vec![1.0, 2.0, 30.0, 30.0, 20.0, 16.0, 1.0], 0.9),
+        };
+        let fast = crate::trace::Trace {
+            config: spec.denormalize(&[0.9; 5]),
+            frames: mk_frames(vec![0.5, 0.5, 2.0, 3.0, 2.0, 1.5, 0.5], 0.5),
+        };
+        let traces = TraceSet {
+            app: "pose".into(),
+            seed: 0,
+            traces: vec![slow, fast],
+            stage_names: spec.stages.iter().map(|s| s.name.clone()).collect(),
+        };
+        let backend = NativeBackend::structured(spec);
+        let cfg = TunerConfig { epsilon: 0.0, bound_ms: 50.0, warmup_frames: 2 };
+        let mut ctl =
+            EpsGreedyController::new(spec, &traces, Box::new(backend), cfg, 99)
+                .with_empirical_blend(8.0);
+        let out = ctl.run(60);
+        for s in &out.steps[40..] {
+            assert_eq!(s.action, 1, "frame {} drifted back to the slow action", s.frame);
+        }
+        let violations = out.steps.iter().filter(|s| s.violation_ms > 0.0).count();
+        assert!(violations <= 6, "{violations} violations");
+    }
+
+    #[test]
+    fn bound_met_and_convergence_helpers() {
+        let mk = |frame: usize, latency_ms: f64, reward: f64| StepOutcome {
+            frame,
+            action: 0,
+            explored: false,
+            predicted_ms: latency_ms,
+            latency_ms,
+            reward,
+            violation_ms: (latency_ms - 50.0).max(0.0),
+        };
+        let steps = vec![
+            mk(0, 80.0, 0.1),
+            mk(1, 80.0, 0.1),
+            mk(2, 40.0, 0.9),
+            mk(3, 60.0, 0.9),
+            mk(4, 40.0, 0.9),
+            mk(5, 40.0, 0.9),
+        ];
+        let out = RunOutcome {
+            avg_reward: 0.0,
+            avg_violation_ms: 0.0,
+            max_violation_ms: 0.0,
+            violation_rate: 0.0,
+            explore_frames: 0,
+            steps,
+        };
+        // frames 2..=5: latencies 40,60,40,40 -> 3/4 under the 50ms bound
+        assert!((out.bound_met_frac_after(2, 50.0) - 0.75).abs() < 1e-12);
+        // past the end: vacuously met
+        assert_eq!(out.bound_met_frac_after(10, 50.0), 1.0);
+        // trailing-2 mean reward first reaches 0.9 at frame 3
+        assert_eq!(out.convergence_frame(2, 0.9), Some(3));
+        assert_eq!(out.convergence_frame(2, 0.95), None);
     }
 
     #[test]

@@ -1,0 +1,643 @@
+//! Procedural workload generation — the scenario space behind the repo's
+//! scale-out story.
+//!
+//! The paper demonstrates the tuner on two hand-modeled applications; the
+//! north star demands "as many scenarios as you can imagine". This module
+//! emits randomized-but-valid perception pipelines from a seed: a
+//! series-parallel data-flow graph (sequential prefix → fan-out into 1–3
+//! parallel branches → join → sequential suffix), per-stage polynomial
+//! cost models, data-parallel stages with Amdahl speedup, knob sets with
+//! frame-scaling / window-threshold / parallelism / quality semantics,
+//! and a composable fidelity model — packaged as a regular
+//! [`App`](crate::apps::App) whose [`AppSpec`] passes the exact same
+//! validation as the JSON-loaded case studies. Every existing layer
+//! (simulator, traces, engine, learner, tuner, experiments) runs on
+//! generated apps unmodified; the registry resolves `gen:SEED` names to
+//! this generator.
+//!
+//! The series-parallel shape is deliberate: it is the largest graph
+//! family for which the structured predictor's combination rule (sum of
+//! sequential groups + max over branch sums, paper Eq. 9) reproduces the
+//! weighted critical path *exactly*, so generated apps stress the learner
+//! without breaking the decomposition the paper's Sec. 2.3 relies on.
+//!
+//! Latency bounds are calibrated per app: a deterministic probe of random
+//! configurations on the target cluster picks the bound so that roughly a
+//! quarter of the action space is robustly feasible — tight enough that
+//! tuning matters, loose enough that an oracle exists (the regime of the
+//! paper's Fig. 5).
+
+pub mod model;
+
+pub use model::{ContentScript, GeneratedModel, KnobKind, KnobRole, SegmentKnobs, StageCost};
+
+use crate::apps::spec::{AppSpec, GroupSpec, ParamSpec, StageSpec};
+use crate::apps::App;
+use crate::dataflow::Graph;
+use crate::simulator::{Cluster, ClusterSim};
+use crate::util::Rng;
+
+/// Generation envelope: topology and knob-count ranges, trace protocol,
+/// and bound-calibration policy.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Max parallel branches between fan-out and join (min 1).
+    pub max_branches: usize,
+    /// Max stages in the sequential prefix (min 1).
+    pub max_prefix: usize,
+    /// Max stages per branch (min 1).
+    pub max_branch_len: usize,
+    /// Max stages in the sequential suffix (0 allowed).
+    pub max_suffix: usize,
+    /// Knob-count range (every branch always gets a scale knob, so the
+    /// effective minimum is `max(min_knobs, branches)`).
+    pub min_knobs: usize,
+    pub max_knobs: usize,
+    /// Random configurations probed for bound calibration.
+    pub probe_configs: usize,
+    /// Quantile of per-config worst-case cost the bound sits at.
+    pub feasible_quantile: f64,
+    /// Multiplicative slack on top of the quantile cost.
+    pub bound_margin: f64,
+    /// Trace protocol baked into the generated spec.
+    pub trace_configs: usize,
+    pub trace_frames: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            max_branches: 3,
+            max_prefix: 3,
+            max_branch_len: 3,
+            max_suffix: 2,
+            min_knobs: 3,
+            max_knobs: 6,
+            probe_configs: 48,
+            feasible_quantile: 0.25,
+            bound_margin: 1.10,
+            trace_configs: 24,
+            trace_frames: 500,
+        }
+    }
+}
+
+/// Segment ids: 0 is the prefix, `1..=branches` the branches,
+/// `branches + 1` the suffix.
+fn segment_label(segment: usize, branches: usize) -> String {
+    if segment == 0 {
+        "pre".to_string()
+    } else if segment <= branches {
+        format!("b{}", segment - 1)
+    } else {
+        "post".to_string()
+    }
+}
+
+/// Generate a pipeline, calibrating its latency bounds on the default
+/// (paper) cluster. Same seed → byte-identical app.
+pub fn generate(seed: u64, cfg: &WorkloadConfig) -> App {
+    generate_on(seed, cfg, &Cluster::default())
+}
+
+/// Generate a pipeline with bounds calibrated for `cluster` — the fleet
+/// runner passes each app's slice of the shared cluster here so bounds
+/// stay achievable under contention.
+pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
+    assert!(cfg.max_branches >= 1 && cfg.max_prefix >= 1 && cfg.max_branch_len >= 1);
+    assert!(cfg.min_knobs >= 1 && cfg.max_knobs >= cfg.min_knobs);
+    let mut rng = Rng::new(seed);
+
+    // ---- topology -------------------------------------------------------
+    let branches = 1 + rng.below(cfg.max_branches);
+    let prefix_len = 1 + rng.below(cfg.max_prefix);
+    let branch_lens: Vec<usize> =
+        (0..branches).map(|_| 1 + rng.below(cfg.max_branch_len)).collect();
+    let suffix_len = rng.below(cfg.max_suffix + 1);
+    let n_segments = branches + 2;
+    let suffix_seg = branches + 1;
+
+    struct StageDraft {
+        names: Vec<String>,
+        deps: Vec<Vec<String>>,
+        seg_of: Vec<usize>,
+        is_heavy: Vec<bool>,
+    }
+    impl StageDraft {
+        fn push(&mut self, name: String, dep: Vec<String>, seg: usize, heavy: bool) {
+            self.names.push(name);
+            self.deps.push(dep);
+            self.seg_of.push(seg);
+            self.is_heavy.push(heavy);
+        }
+        fn last_name(&self) -> String {
+            self.names.last().unwrap().clone()
+        }
+    }
+    let mut draft = StageDraft {
+        names: Vec::new(),
+        deps: Vec::new(),
+        seg_of: Vec::new(),
+        is_heavy: Vec::new(),
+    };
+
+    draft.push("source".into(), vec![], 0, false);
+    for i in 0..prefix_len {
+        let dep = draft.last_name();
+        draft.push(format!("pre{i}"), vec![dep], 0, true);
+    }
+    let prefix_tail = draft.last_name();
+    let mut branch_tails: Vec<String> = Vec::new();
+    for (b, &len) in branch_lens.iter().enumerate() {
+        for j in 0..len {
+            let dep = if j == 0 { prefix_tail.clone() } else { draft.last_name() };
+            draft.push(format!("br{b}_{j}"), vec![dep], 1 + b, true);
+        }
+        branch_tails.push(draft.last_name());
+    }
+    draft.push("join".into(), branch_tails, suffix_seg, false);
+    for i in 0..suffix_len {
+        let dep = draft.last_name();
+        draft.push(format!("post{i}"), vec![dep], suffix_seg, true);
+    }
+    let dep = draft.last_name();
+    draft.push("sink".into(), vec![dep], suffix_seg, false);
+    let StageDraft { names, deps, seg_of, is_heavy } = draft;
+    let n_stages = names.len();
+
+    // heavy stages per segment (knob targets)
+    let mut seg_heavy: Vec<Vec<usize>> = vec![Vec::new(); n_segments];
+    for i in 0..n_stages {
+        if is_heavy[i] {
+            seg_heavy[seg_of[i]].push(i);
+        }
+    }
+
+    // ---- knob roles -----------------------------------------------------
+    let min_k = cfg.min_knobs.max(branches);
+    let max_k = cfg.max_knobs.max(min_k);
+    let target_knobs = min_k + rng.below(max_k - min_k + 1);
+
+    let mut roles: Vec<KnobRole> = Vec::new();
+    let mut seg_scale: Vec<Option<usize>> = vec![None; n_segments];
+    let mut seg_thresh: Vec<Option<usize>> = vec![None; n_segments];
+    let mut seg_quality: Vec<Option<usize>> = vec![None; n_segments];
+    let mut stage_par: Vec<Option<usize>> = vec![None; n_stages];
+    let mut quality_stage: Vec<Option<usize>> = vec![None; n_stages];
+
+    // every branch is scale-tunable — the fidelity/latency trade-off the
+    // tuner exists for
+    for b in 0..branches {
+        let k = roles.len();
+        seg_scale[1 + b] = Some(k);
+        roles.push(KnobRole {
+            kind: KnobKind::Scale,
+            segment: 1 + b,
+            stage: None,
+            fidelity_coef: rng.range_f64(0.03, 0.08),
+            need_frac: 0.0,
+        });
+    }
+    // remaining knobs cycle through threshold / parallel / quality kinds,
+    // landing on a random segment that still has room for that kind
+    let extra_kinds = [KnobKind::Threshold, KnobKind::Parallel, KnobKind::Quality];
+    let mut attempt = 0usize;
+    while roles.len() < target_knobs && attempt < 24 {
+        let kind = extra_kinds[attempt % extra_kinds.len()];
+        attempt += 1;
+        let eligible: Vec<usize> = (0..n_segments)
+            .filter(|&s| !seg_heavy[s].is_empty())
+            .filter(|&s| match kind {
+                KnobKind::Threshold => seg_thresh[s].is_none(),
+                KnobKind::Quality => seg_quality[s].is_none(),
+                KnobKind::Parallel => {
+                    seg_heavy[s].iter().any(|&st| stage_par[st].is_none())
+                }
+                KnobKind::Scale => false,
+            })
+            .collect();
+        if eligible.is_empty() {
+            continue;
+        }
+        let s = eligible[rng.below(eligible.len())];
+        let k = roles.len();
+        match kind {
+            KnobKind::Threshold => {
+                seg_thresh[s] = Some(k);
+                roles.push(KnobRole {
+                    kind,
+                    segment: s,
+                    stage: None,
+                    fidelity_coef: rng.range_f64(0.4, 0.8),
+                    need_frac: rng.range_f64(0.25, 0.45),
+                });
+            }
+            KnobKind::Parallel => {
+                let free: Vec<usize> = seg_heavy[s]
+                    .iter()
+                    .copied()
+                    .filter(|&st| stage_par[st].is_none())
+                    .collect();
+                let st = free[rng.below(free.len())];
+                stage_par[st] = Some(k);
+                roles.push(KnobRole {
+                    kind,
+                    segment: s,
+                    stage: Some(st),
+                    fidelity_coef: 0.0,
+                    need_frac: 0.0,
+                });
+            }
+            KnobKind::Quality => {
+                let st = seg_heavy[s][rng.below(seg_heavy[s].len())];
+                seg_quality[s] = Some(k);
+                quality_stage[st] = Some(k);
+                roles.push(KnobRole {
+                    kind,
+                    segment: s,
+                    stage: Some(st),
+                    fidelity_coef: rng.range_f64(0.85, 0.95),
+                    need_frac: 0.0,
+                });
+            }
+            KnobKind::Scale => unreachable!(),
+        }
+    }
+    let num_knobs = roles.len();
+
+    // ---- per-stage polynomial cost coefficients -------------------------
+    let mut stage_costs: Vec<StageCost> = Vec::with_capacity(n_stages);
+    for i in 0..n_stages {
+        let (base, px, feat, feat2) = if is_heavy[i] {
+            (
+                rng.range_f64(0.5, 2.0),
+                rng.range_f64(15.0, 80.0),
+                rng.range_f64(1.0, 6.0),
+                rng.range_f64(0.0, 1.2),
+            )
+        } else {
+            (rng.range_f64(0.3, 1.2), 0.0, 0.0, 0.0)
+        };
+        // drawn unconditionally so the rng stream does not depend on the
+        // knob assignment above
+        let quality_mult = rng.range_f64(1.5, 2.2);
+        let serial_frac = rng.range_f64(0.05, 0.15);
+        let per_worker_ov = rng.range_f64(0.04, 0.18);
+        stage_costs.push(StageCost {
+            segment: seg_of[i],
+            base,
+            px,
+            feat,
+            feat2,
+            par_knob: stage_par[i],
+            quality_knob: quality_stage[i],
+            quality_mult,
+            serial_frac,
+            per_worker_ov,
+        });
+    }
+
+    // ---- content script + global scales ---------------------------------
+    let script = ContentScript {
+        base_features: rng.range_f64(350.0, 750.0),
+        amp1: rng.range_f64(20.0, 60.0),
+        per1: rng.range_f64(9.0, 45.0),
+        amp2: rng.range_f64(10.0, 40.0),
+        per2: rng.range_f64(9.0, 45.0),
+        change_frame: 300 + rng.below(400),
+        change_mult: rng.range_f64(1.2, 1.8),
+    };
+    let cost_scale = rng.range_f64(0.8, 1.6);
+    let base_fidelity = rng.range_f64(0.90, 0.98);
+
+    // ---- spec tables ----------------------------------------------------
+    let params: Vec<ParamSpec> = roles
+        .iter()
+        .enumerate()
+        .map(|(k, role)| {
+            let label = segment_label(role.segment, branches);
+            match role.kind {
+                KnobKind::Scale => ParamSpec {
+                    name: format!("scale_{label}"),
+                    symbol: format!("K{}", k + 1),
+                    kind: "continuous".into(),
+                    min: 1.0,
+                    max: 10.0,
+                    default: 1.0,
+                    log: false,
+                    description: format!(
+                        "The degree of image scaling on segment {label} (1 = full resolution)"
+                    ),
+                },
+                KnobKind::Threshold => ParamSpec {
+                    name: format!("threshold_{label}"),
+                    symbol: format!("K{}", k + 1),
+                    kind: "continuous".into(),
+                    min: 1.0,
+                    max: 65536.0,
+                    default: 65536.0,
+                    log: true,
+                    description: format!(
+                        "Cap on the features segment {label} forwards downstream"
+                    ),
+                },
+                KnobKind::Parallel => ParamSpec {
+                    name: format!("par_{}", names[role.stage.unwrap()]),
+                    symbol: format!("K{}", k + 1),
+                    kind: "discrete".into(),
+                    min: 1.0,
+                    max: 32.0,
+                    default: 1.0,
+                    log: true,
+                    description: format!(
+                        "Data-parallel workers for stage {}",
+                        names[role.stage.unwrap()]
+                    ),
+                },
+                KnobKind::Quality => ParamSpec {
+                    name: format!("quality_{}", names[role.stage.unwrap()]),
+                    symbol: format!("K{}", k + 1),
+                    kind: "discrete".into(),
+                    min: 0.0,
+                    max: 1.0,
+                    default: 0.0,
+                    log: false,
+                    description: format!(
+                        "Quality mode of stage {}: 0 = high (default), 1 = fast",
+                        names[role.stage.unwrap()]
+                    ),
+                },
+            }
+        })
+        .collect();
+
+    let stages: Vec<StageSpec> = (0..n_stages)
+        .map(|i| {
+            let s = seg_of[i];
+            let mut ps: Vec<usize> = Vec::new();
+            if is_heavy[i] {
+                if let Some(k) = seg_scale[s] {
+                    ps.push(k);
+                }
+                if let Some(k) = seg_thresh[s] {
+                    ps.push(k);
+                }
+            }
+            if let Some(k) = stage_par[i] {
+                ps.push(k);
+            }
+            if let Some(k) = quality_stage[i] {
+                ps.push(k);
+            }
+            ps.sort_unstable();
+            StageSpec {
+                name: names[i].clone(),
+                deps: deps[i].clone(),
+                critical: is_heavy[i],
+                params: ps,
+            }
+        })
+        .collect();
+
+    let seg_params = |s: usize| -> Vec<usize> {
+        roles
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.segment == s)
+            .map(|(k, _)| k)
+            .collect()
+    };
+    let seg_stage_names = |s: usize| -> Vec<String> {
+        seg_heavy[s].iter().map(|&i| names[i].clone()).collect()
+    };
+    let mut groups: Vec<GroupSpec> = Vec::new();
+    if !seg_params(0).is_empty() {
+        groups.push(GroupSpec {
+            name: "pre".into(),
+            stages: seg_stage_names(0),
+            params: seg_params(0),
+            branch: None,
+        });
+    }
+    for b in 0..branches {
+        groups.push(GroupSpec {
+            name: format!("branch{b}"),
+            stages: seg_stage_names(1 + b),
+            params: seg_params(1 + b),
+            branch: Some(b),
+        });
+    }
+    if !seg_params(suffix_seg).is_empty() {
+        groups.push(GroupSpec {
+            name: "post".into(),
+            stages: seg_stage_names(suffix_seg),
+            params: seg_params(suffix_seg),
+            branch: None,
+        });
+    }
+
+    let spec = AppSpec {
+        name: format!("gen{seed}"),
+        title: format!(
+            "generated perception pipeline #{seed} ({branches}-branch, {n_stages} stages)"
+        ),
+        description: format!(
+            "Procedurally generated workload (seed {seed}): {n_stages}-stage \
+             series-parallel pipeline with {branches} parallel branch(es) and \
+             {num_knobs} tunable knobs."
+        ),
+        latency_bounds_ms: vec![100.0], // placeholder until calibration below
+        frame_interval_ms: 33.3,
+        trace_frames: cfg.trace_frames,
+        trace_configs: cfg.trace_configs,
+        params,
+        stages,
+        groups,
+        degree: 3,
+        candidate_pad: 64,
+        feature_pad: 64,
+    };
+    spec.validate().expect("generated spec must validate");
+
+    let graph = Graph::from_spec(&spec);
+    let model = GeneratedModel {
+        script,
+        roles,
+        segments: (0..n_segments)
+            .map(|s| SegmentKnobs { scale: seg_scale[s], threshold: seg_thresh[s] })
+            .collect(),
+        stages: stage_costs,
+        cost_scale,
+        base_fidelity,
+    };
+    let mut app = App { spec, graph, model: Box::new(model) };
+
+    // ---- bound calibration ----------------------------------------------
+    let costs = probe_costs(&app, cluster, cfg.probe_configs, seed);
+    let bound = calibrated_bound(&costs, cfg.feasible_quantile, cfg.bound_margin);
+    app.spec.latency_bounds_ms = vec![bound, bound * 1.5, bound * 2.0];
+    app
+}
+
+/// Worst-case (over a deterministic frame spread spanning the scene
+/// change) end-to-end cost of `n` random configurations on `cluster` —
+/// the calibration sample the generated bounds are derived from.
+pub fn probe_costs(app: &App, cluster: &Cluster, n: usize, seed: u64) -> Vec<f64> {
+    const PROBE_FRAMES: [usize; 9] = [0, 61, 137, 253, 389, 491, 645, 811, 953];
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    (0..n)
+        .map(|_| {
+            let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
+            let ks = app.spec.denormalize(&u);
+            let mut sim = ClusterSim::deterministic(cluster.clone());
+            PROBE_FRAMES
+                .iter()
+                .map(|&f| sim.run_frame(app, &ks, f).end_to_end_ms)
+                .fold(0.0f64, f64::max)
+        })
+        .collect()
+}
+
+/// The bound sitting at `quantile` of the sorted worst-case costs, padded
+/// by `margin`: configs below it stay feasible even under the simulator's
+/// measurement noise.
+pub fn calibrated_bound(costs: &[f64], quantile: f64, margin: f64) -> f64 {
+    assert!(!costs.is_empty());
+    let mut sorted = costs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sorted.len() - 1) as f64 * quantile.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx] * margin
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::critical_path;
+    use crate::learner::GroupMap;
+
+    #[test]
+    fn generated_specs_validate_across_seeds() {
+        let cfg = WorkloadConfig::default();
+        for seed in 0..25 {
+            let app = generate(seed, &cfg);
+            app.spec.validate().unwrap();
+            assert_eq!(app.graph.len(), app.spec.stages.len());
+            assert_eq!(app.graph.sources().len(), 1, "seed {seed}");
+            assert_eq!(app.graph.sinks().len(), 1, "seed {seed}");
+            assert!(app.spec.num_vars() >= 3, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_app() {
+        let cfg = WorkloadConfig::default();
+        let a = generate(123, &cfg);
+        let b = generate(123, &cfg);
+        assert_eq!(a.spec.name, b.spec.name);
+        assert_eq!(a.spec.latency_bounds_ms, b.spec.latency_bounds_ms);
+        let names_a: Vec<&str> = a.spec.stages.iter().map(|s| s.name.as_str()).collect();
+        let names_b: Vec<&str> = b.spec.stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names_a, names_b);
+        let ks = a.spec.defaults();
+        let ca = a.model.content(7);
+        let cb = b.model.content(7);
+        assert_eq!(ca, cb);
+        assert_eq!(a.stage_latencies(&ks, &ca), b.stage_latencies(&ks, &cb));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let cfg = WorkloadConfig::default();
+        let a = generate(1, &cfg);
+        let b = generate(2, &cfg);
+        let differs = a.spec.stages.len() != b.spec.stages.len()
+            || a.spec.num_vars() != b.spec.num_vars()
+            || a.spec.latency_bounds_ms != b.spec.latency_bounds_ms;
+        assert!(differs, "seeds 1 and 2 generated identical apps");
+    }
+
+    #[test]
+    fn defaults_are_fidelity_max_corner() {
+        let cfg = WorkloadConfig::default();
+        for seed in [3u64, 11, 42] {
+            let app = generate(seed, &cfg);
+            let content = app.model.content(0);
+            let best = app.model.fidelity(&app.spec.defaults(), &content);
+            let mut rng = Rng::new(seed + 1000);
+            for _ in 0..30 {
+                let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
+                let ks = app.spec.denormalize(&u);
+                assert!(app.model.fidelity(&ks, &content) <= best + 1e-9, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_combine_reproduces_critical_path() {
+        let cfg = WorkloadConfig::default();
+        for seed in 0..15 {
+            let app = generate(seed, &cfg);
+            let map = GroupMap::structured(&app.spec);
+            let mut rng = Rng::new(seed ^ 0xABCD);
+            for _ in 0..10 {
+                let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
+                let ks = app.spec.denormalize(&u);
+                let content = app.model.content(rng.below(900));
+                let stage_ms = app.stage_latencies(&ks, &content);
+                let e2e = critical_path(&app.graph, &stage_ms);
+                let (y, offset) = map.targets(&stage_ms, e2e);
+                let combined = map.combine(&y, offset);
+                assert!(
+                    (combined - e2e).abs() < 1e-9,
+                    "seed {seed}: combined {combined} vs e2e {e2e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bound_leaves_a_feasible_quarter() {
+        let cfg = WorkloadConfig::default();
+        for seed in [0u64, 7, 19] {
+            let app = generate(seed, &cfg);
+            let bound = app.spec.latency_bounds_ms[0];
+            let costs = probe_costs(&app, &Cluster::default(), cfg.probe_configs, seed);
+            let feasible = costs.iter().filter(|&&c| c <= bound).count();
+            let frac = feasible as f64 / costs.len() as f64;
+            assert!(frac >= 0.2, "seed {seed}: only {frac} of probes feasible");
+            assert!(frac <= 0.9, "seed {seed}: bound too loose ({frac} feasible)");
+        }
+    }
+
+    #[test]
+    fn parallel_knobs_do_not_move_fidelity() {
+        // paper Sec. 2.2: parallelism trades latency, not fidelity
+        let cfg = WorkloadConfig::default();
+        for seed in 0..10 {
+            let app = generate(seed, &cfg);
+            let content = app.model.content(5);
+            let mut lo = app.spec.defaults();
+            let mut hi = app.spec.defaults();
+            for (k, p) in app.spec.params.iter().enumerate() {
+                if p.name.starts_with("par_") {
+                    lo[k] = p.min;
+                    hi[k] = p.max;
+                }
+            }
+            assert_eq!(
+                app.model.fidelity(&lo, &content),
+                app.model.fidelity(&hi, &content),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn calibrated_bound_is_quantile_times_margin() {
+        let costs = vec![10.0, 20.0, 30.0, 40.0, 50.0];
+        let b = calibrated_bound(&costs, 0.25, 1.1);
+        assert!((b - 22.0).abs() < 1e-9);
+        let b0 = calibrated_bound(&costs, 0.0, 1.0);
+        assert!((b0 - 10.0).abs() < 1e-9);
+    }
+}

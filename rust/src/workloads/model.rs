@@ -1,0 +1,227 @@
+//! The analytic cost + fidelity model backing a generated pipeline.
+//!
+//! Mirrors the hand-written [`pose`](crate::apps::pose) /
+//! [`motion_sift`](crate::apps::motion_sift) models, but every coefficient
+//! is drawn (seeded) at generation time: per-stage polynomial costs in the
+//! scene content and the knob-derived quantities (pixel fraction, capped
+//! feature count), Amdahl-style data-parallel speedup with per-worker
+//! dispatch overhead, and a fidelity model composed of one multiplicative
+//! factor per knob (parallelism knobs contribute none — paper Sec. 2.2).
+
+use crate::apps::content::Content;
+use crate::apps::{amdahl, pixel_fraction, CostModel};
+
+/// How a generated knob enters the cost and fidelity models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnobKind {
+    /// Frame down-scaling for one segment (continuous 1–10, default 1).
+    Scale,
+    /// Cap on the features a segment forwards (continuous, log, default
+    /// = max, i.e. effectively uncapped).
+    Threshold,
+    /// Data-parallel worker count for one stage (discrete 1–32, log).
+    Parallel,
+    /// Quality toggle for one stage: 0 = high quality (default, slower),
+    /// 1 = fast low-quality mode.
+    Quality,
+}
+
+/// One knob's role: which segment (and, for stage-targeted kinds, which
+/// stage) it acts on, plus its fidelity-model coefficients.
+#[derive(Debug, Clone)]
+pub struct KnobRole {
+    pub kind: KnobKind,
+    /// Segment the knob acts on (0 = prefix, 1..=B branches, B+1 suffix).
+    pub segment: usize,
+    /// Target stage (global index) for `Parallel` / `Quality` knobs.
+    pub stage: Option<usize>,
+    /// Scale: decay rate a in exp(-a(s-1)). Threshold: exponent p of the
+    /// feature-quality factor. Quality: the fast-mode fidelity penalty
+    /// multiplier. Parallel: unused.
+    pub fidelity_coef: f64,
+    /// Threshold only: fraction of the scene's native features the
+    /// downstream consumer needs for full quality.
+    pub need_frac: f64,
+}
+
+/// Knob lookup for one segment of the generated graph.
+#[derive(Debug, Clone, Default)]
+pub struct SegmentKnobs {
+    pub scale: Option<usize>,
+    pub threshold: Option<usize>,
+}
+
+/// Per-stage polynomial cost coefficients.
+#[derive(Debug, Clone)]
+pub struct StageCost {
+    pub segment: usize,
+    /// Constant term (ms).
+    pub base: f64,
+    /// Weight on the segment's pixel fraction.
+    pub px: f64,
+    /// Weight on features_used / 100.
+    pub feat: f64,
+    /// Weight on (features_used / 100)^2 — the nonlinearity the cubic
+    /// predictor must pick up.
+    pub feat2: f64,
+    /// Knob index granting data-parallel workers, if any.
+    pub par_knob: Option<usize>,
+    /// Knob index toggling the quality mode, if any.
+    pub quality_knob: Option<usize>,
+    /// Cost multiplier while in high-quality mode (> 1).
+    pub quality_mult: f64,
+    pub serial_frac: f64,
+    pub per_worker_ov: f64,
+}
+
+/// Deterministic scene script of a generated app: baseline feature count,
+/// two wobble harmonics, and one scripted scene change (the Fig. 6-style
+/// non-stationarity every generated workload carries).
+#[derive(Debug, Clone)]
+pub struct ContentScript {
+    pub base_features: f64,
+    pub amp1: f64,
+    pub per1: f64,
+    pub amp2: f64,
+    pub per2: f64,
+    pub change_frame: usize,
+    pub change_mult: f64,
+}
+
+impl ContentScript {
+    pub fn content(&self, frame: usize) -> Content {
+        let t = frame as f64;
+        let (mult, objects, scene_id) = if frame >= self.change_frame {
+            (self.change_mult, 2, 1)
+        } else {
+            (1.0, 1, 0)
+        };
+        let wobble = self.amp1 * (t / self.per1).sin() + self.amp2 * (t / self.per2).cos();
+        Content {
+            features: (self.base_features * mult + wobble).max(50.0),
+            objects,
+            faces: 0,
+            gesture: false,
+            scene_id,
+        }
+    }
+}
+
+/// Feature-survival exponent under down-scaling (interest points die off
+/// a little slower than pixel count — same shape as the two case studies).
+pub const FEATURE_DECAY: f64 = 1.35;
+
+/// The generated cost model: pure data, deterministic, `Send + Sync`.
+pub struct GeneratedModel {
+    pub script: ContentScript,
+    pub roles: Vec<KnobRole>,
+    pub segments: Vec<SegmentKnobs>,
+    pub stages: Vec<StageCost>,
+    pub cost_scale: f64,
+    pub base_fidelity: f64,
+}
+
+impl GeneratedModel {
+    /// Features a segment's consumers see under raw knobs `ks`: the scene
+    /// features decayed by the segment's scale, capped by its threshold.
+    fn features_used(&self, segment: usize, ks: &[f64], content: &Content) -> f64 {
+        let seg = &self.segments[segment];
+        let s = seg.scale.map(|k| ks[k].max(1.0)).unwrap_or(1.0);
+        let raw = content.features / s.powf(FEATURE_DECAY);
+        match seg.threshold {
+            Some(k) => raw.min(ks[k]),
+            None => raw,
+        }
+    }
+}
+
+impl CostModel for GeneratedModel {
+    fn content(&self, frame: usize) -> Content {
+        self.script.content(frame)
+    }
+
+    fn requested_workers(&self, stage: usize, ks: &[f64]) -> usize {
+        match self.stages[stage].par_knob {
+            Some(k) => ks[k].round().max(1.0) as usize,
+            None => 1,
+        }
+    }
+
+    fn stage_latency(&self, stage: usize, ks: &[f64], content: &Content, workers: usize) -> f64 {
+        let sc = &self.stages[stage];
+        let seg = &self.segments[sc.segment];
+        let s = seg.scale.map(|k| ks[k].max(1.0)).unwrap_or(1.0);
+        let fu = self.features_used(sc.segment, ks, content) / 100.0;
+        let mut t = sc.base + sc.px * pixel_fraction(s) + sc.feat * fu + sc.feat2 * fu * fu;
+        if let Some(qk) = sc.quality_knob {
+            if ks[qk].round() < 0.5 {
+                t *= sc.quality_mult;
+            }
+        }
+        if sc.par_knob.is_some() {
+            t = amdahl(t, workers, sc.serial_frac, sc.per_worker_ov);
+        }
+        self.cost_scale * t
+    }
+
+    fn fidelity(&self, ks: &[f64], content: &Content) -> f64 {
+        let mut r = self.base_fidelity;
+        for (k, role) in self.roles.iter().enumerate() {
+            match role.kind {
+                KnobKind::Scale => {
+                    r *= (-role.fidelity_coef * (ks[k].max(1.0) - 1.0)).exp();
+                }
+                KnobKind::Threshold => {
+                    let used = self.features_used(role.segment, ks, content);
+                    let q = (used / (role.need_frac * content.features)).min(1.0);
+                    r *= q.powf(role.fidelity_coef);
+                }
+                KnobKind::Parallel => {}
+                KnobKind::Quality => {
+                    if ks[k].round() >= 0.5 {
+                        r *= role.fidelity_coef;
+                    }
+                }
+            }
+        }
+        r.clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn script() -> ContentScript {
+        ContentScript {
+            base_features: 500.0,
+            amp1: 30.0,
+            per1: 17.0,
+            amp2: 20.0,
+            per2: 41.0,
+            change_frame: 400,
+            change_mult: 1.5,
+        }
+    }
+
+    #[test]
+    fn content_scene_change() {
+        let s = script();
+        let before = s.content(399);
+        let after = s.content(400);
+        assert_eq!(before.scene_id, 0);
+        assert_eq!(after.scene_id, 1);
+        assert!(after.features > before.features * 1.2);
+    }
+
+    #[test]
+    fn content_deterministic_and_positive() {
+        let s = script();
+        for f in 0..1000 {
+            let a = s.content(f);
+            let b = s.content(f);
+            assert_eq!(a, b);
+            assert!(a.features >= 50.0);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Golden convergence tests for the OGD learner (paper Sec. 3.2–3.3).
+//!
+//! * On a synthetic linear latency function the regressor's prediction
+//!   error falls below a fixed threshold within a fixed update budget.
+//! * Structure-aware (per-group, per-stage-target) learning converges in
+//!   fewer frames than the monolithic end-to-end model — the Sec. 3.3 /
+//!   Fig. 7 claim — on the two-branch MotionSIFT app and on a generated
+//!   multi-branch pipeline.
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::apps::App;
+use iptune::learner::{OgdRegressor, StagePredictor, Variant};
+use iptune::simulator::{Cluster, ClusterSim};
+use iptune::util::Rng;
+use iptune::workloads::{self, WorkloadConfig};
+
+/// Fixed budget/threshold constants of the golden linear case.
+const LINEAR_BUDGET: usize = 2000;
+const LINEAR_MEAN_THRESHOLD_MS: f64 = 5.0;
+const LINEAR_WORST_THRESHOLD_MS: f64 = 10.0;
+
+#[test]
+fn golden_linear_latency_converges_within_budget() {
+    // y = 20 + 30*u0 - 10*u1 ms: realizable by the degree-1 expansion, so
+    // the error must sink into the eps-insensitive zone within the budget
+    let mut reg = OgdRegressor::new(&[0, 1], 1);
+    let mut rng = Rng::new(0);
+    let f = |u: &[f64]| 20.0 + 30.0 * u[0] - 10.0 * u[1];
+    for _ in 0..LINEAR_BUDGET {
+        let u = [rng.f64(), rng.f64()];
+        reg.update(&u, f(&u));
+    }
+    let mut sum = 0.0;
+    let mut worst = 0.0f64;
+    let probes = 100;
+    for i in 0..probes {
+        for j in 0..2 {
+            let u = [i as f64 / (probes - 1) as f64, j as f64];
+            let e = (reg.predict(&u) - f(&u)).abs();
+            sum += e;
+            worst = worst.max(e);
+        }
+    }
+    let mean = sum / (2 * probes) as f64;
+    assert!(
+        mean < LINEAR_MEAN_THRESHOLD_MS,
+        "mean |err| {mean} ms after {LINEAR_BUDGET} updates"
+    );
+    assert!(
+        worst < LINEAR_WORST_THRESHOLD_MS,
+        "worst |err| {worst} ms after {LINEAR_BUDGET} updates"
+    );
+}
+
+#[test]
+fn golden_linear_error_shrinks_with_budget() {
+    // the same stream probed at increasing budgets: error must decrease
+    let f = |u: &[f64]| 50.0 + 60.0 * u[0];
+    let err_after = |budget: usize| {
+        let mut reg = OgdRegressor::new(&[0], 1);
+        let mut rng = Rng::new(3);
+        for _ in 0..budget {
+            let u = [rng.f64()];
+            reg.update(&u, f(&u));
+        }
+        let mut sum = 0.0;
+        for i in 0..50 {
+            let u = [i as f64 / 49.0];
+            sum += (reg.predict(&u) - f(&u)).abs();
+        }
+        sum / 50.0
+    };
+    let early = err_after(50);
+    let mid = err_after(400);
+    let late = err_after(2000);
+    assert!(mid < early, "400-update error {mid} vs 50-update {early}");
+    assert!(late <= mid + 1e-9, "2000-update error {late} vs 400-update {mid}");
+    assert!(late < 4.0, "converged error {late} ms too high");
+}
+
+/// Drive both predictor variants over the same deterministic frame
+/// stream; returns per-frame absolute end-to-end prediction errors.
+fn error_series(app: &App, variant: Variant, frames: usize) -> Vec<f64> {
+    let mut sim = ClusterSim::deterministic(Cluster::default());
+    let mut pred = StagePredictor::new(&app.spec, variant, 3);
+    let mut rng = Rng::new(1234);
+    let mut errs = Vec::with_capacity(frames);
+    for t in 0..frames {
+        let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
+        let ks = app.spec.denormalize(&u);
+        let r = sim.run_frame(app, &ks, t % 500);
+        let before = pred.observe(&app.spec.normalize(&ks), &r.stage_ms, r.end_to_end_ms);
+        errs.push((before - r.end_to_end_ms).abs());
+    }
+    errs
+}
+
+/// First frame at which the trailing-`window` mean of `errs` drops below
+/// `threshold`; `None` if it never does.
+fn frames_to_threshold(errs: &[f64], window: usize, threshold: f64) -> Option<usize> {
+    if errs.len() < window {
+        return None;
+    }
+    let mut sum: f64 = errs[..window].iter().sum();
+    if sum / window as f64 <= threshold {
+        return Some(window - 1);
+    }
+    for i in window..errs.len() {
+        sum += errs[i] - errs[i - window];
+        if sum / window as f64 <= threshold {
+            return Some(i);
+        }
+    }
+    None
+}
+
+fn mean_latency(app: &App, frames: usize) -> f64 {
+    let mut sim = ClusterSim::deterministic(Cluster::default());
+    let mut rng = Rng::new(1234);
+    let mut sum = 0.0;
+    for t in 0..frames {
+        let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
+        let ks = app.spec.denormalize(&u);
+        sum += sim.run_frame(app, &ks, t % 500).end_to_end_ms;
+    }
+    sum / frames as f64
+}
+
+fn assert_structured_converges_faster(app: &App) {
+    const FRAMES: usize = 600;
+    const WINDOW: usize = 50;
+    let scale = mean_latency(app, 200);
+    let s = error_series(app, Variant::Structured, FRAMES);
+    let u = error_series(app, Variant::Unstructured, FRAMES);
+
+    // cumulative error after the shared cold-start: structured lower
+    let cum_s: f64 = s[50..400].iter().sum();
+    let cum_u: f64 = u[50..400].iter().sum();
+    assert!(
+        cum_s < cum_u,
+        "{}: structured cumulative error {cum_s:.1} !< unstructured {cum_u:.1}",
+        app.spec.name
+    );
+
+    // frames-to-threshold: structured reaches the band no later
+    let threshold = 0.20 * scale;
+    let conv_s = frames_to_threshold(&s, WINDOW, threshold);
+    let conv_u = frames_to_threshold(&u, WINDOW, threshold);
+    assert!(
+        conv_s.is_some(),
+        "{}: structured never reached {threshold:.1} ms trailing error",
+        app.spec.name
+    );
+    if let (Some(fs), Some(fu)) = (conv_s, conv_u) {
+        assert!(
+            fs <= fu,
+            "{}: structured converged at {fs}, unstructured earlier at {fu}",
+            app.spec.name
+        );
+    }
+}
+
+#[test]
+fn structured_beats_monolithic_on_motion_sift() {
+    let app = app_by_name("motion_sift", find_spec_dir(None).unwrap()).unwrap();
+    assert_structured_converges_faster(&app);
+}
+
+#[test]
+fn structured_beats_monolithic_on_generated_branchy_app() {
+    // first generated pipeline with >= 2 parallel branches
+    let cfg = WorkloadConfig::default();
+    let app = (0u64..50)
+        .map(|seed| workloads::generate(seed, &cfg))
+        .find(|a| a.spec.branches().len() >= 2)
+        .expect("a multi-branch pipeline exists in the first 50 seeds");
+    assert_structured_converges_faster(&app);
+}

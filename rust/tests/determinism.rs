@@ -1,0 +1,143 @@
+//! Determinism guarantees: identical seeds reproduce byte-identical
+//! traces and identical controller outcomes — on the hand-written apps
+//! and on procedurally generated ones — and the multi-threaded fleet
+//! report is a pure function of its seed.
+
+use iptune::apps::registry::app_by_name;
+use iptune::apps::spec::find_spec_dir;
+use iptune::fleet::{run_fleet, FleetConfig};
+use iptune::runtime::native::NativeBackend;
+use iptune::trace::TraceSet;
+use iptune::tuner::{EpsGreedyController, TunerConfig};
+use iptune::util::testdir::TestDir;
+use iptune::workloads::{self, WorkloadConfig};
+
+fn apps_under_test() -> Vec<iptune::apps::App> {
+    let dir = find_spec_dir(None).unwrap();
+    vec![
+        app_by_name("pose", &dir).unwrap(),
+        app_by_name("motion_sift", &dir).unwrap(),
+        workloads::generate(7, &WorkloadConfig::default()),
+        workloads::generate(1234, &WorkloadConfig::default()),
+    ]
+}
+
+#[test]
+fn trace_sets_are_byte_identical_across_runs() {
+    for app in apps_under_test() {
+        let a = TraceSet::generate(&app, 6, 50, 99);
+        let b = TraceSet::generate(&app, 6, 50, 99);
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "{}: same seed must give byte-identical traces",
+            app.spec.name
+        );
+        let c = TraceSet::generate(&app, 6, 50, 100);
+        assert_ne!(
+            a.to_json().to_string(),
+            c.to_json().to_string(),
+            "{}: different seed must change the traces",
+            app.spec.name
+        );
+    }
+}
+
+#[test]
+fn trace_files_are_byte_identical_on_disk() {
+    let dir = TestDir::new("determinism");
+    for app in apps_under_test() {
+        let ts1 = TraceSet::generate(&app, 4, 30, 5);
+        let ts2 = TraceSet::generate(&app, 4, 30, 5);
+        let p1 = dir.join(&format!("{}_a.json", app.spec.name));
+        let p2 = dir.join(&format!("{}_b.json", app.spec.name));
+        ts1.save(&p1).unwrap();
+        ts2.save(&p2).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        assert_eq!(b1, b2, "{}: on-disk trace bytes differ", app.spec.name);
+    }
+}
+
+#[test]
+fn controller_outcomes_identical_across_runs() {
+    for app in apps_under_test() {
+        let traces = TraceSet::generate(&app, 10, 120, 3);
+        let bound = app.spec.latency_bounds_ms[0];
+        let run = |seed: u64| {
+            let backend = NativeBackend::structured(&app.spec);
+            let cfg = TunerConfig { epsilon: 0.1, bound_ms: bound, warmup_frames: 10 };
+            let mut ctl =
+                EpsGreedyController::new(&app.spec, &traces, Box::new(backend), cfg, seed);
+            ctl.run(120)
+        };
+        let a = run(17);
+        let b = run(17);
+        assert_eq!(a.explore_frames, b.explore_frames, "{}", app.spec.name);
+        assert_eq!(a.steps.len(), b.steps.len());
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.action, sb.action, "{}: action diverged", app.spec.name);
+            assert_eq!(sa.explored, sb.explored);
+            assert_eq!(sa.latency_ms, sb.latency_ms);
+            assert_eq!(sa.reward, sb.reward);
+            assert_eq!(sa.predicted_ms, sb.predicted_ms);
+        }
+        // a different controller seed must actually change the trajectory
+        let c = run(18);
+        assert!(
+            a.steps.iter().zip(&c.steps).any(|(x, y)| x.action != y.action),
+            "{}: controller seed had no effect",
+            app.spec.name
+        );
+    }
+}
+
+#[test]
+fn generated_apps_identical_across_runs() {
+    // generation itself is a pure function of the seed: spec tables and
+    // model outputs agree element-wise
+    let cfg = WorkloadConfig::default();
+    for seed in [0u64, 7, 19, 255] {
+        let a = workloads::generate(seed, &cfg);
+        let b = workloads::generate(seed, &cfg);
+        assert_eq!(a.spec.latency_bounds_ms, b.spec.latency_bounds_ms);
+        assert_eq!(a.spec.num_vars(), b.spec.num_vars());
+        for (pa, pb) in a.spec.params.iter().zip(&b.spec.params) {
+            assert_eq!(pa.name, pb.name);
+            assert_eq!((pa.min, pa.max, pa.default, pa.log), (pb.min, pb.max, pb.default, pb.log));
+        }
+        for (sa, sb) in a.spec.stages.iter().zip(&b.spec.stages) {
+            assert_eq!(sa.name, sb.name);
+            assert_eq!(sa.deps, sb.deps);
+            assert_eq!(sa.params, sb.params);
+        }
+        for frame in [0usize, 100, 650] {
+            let ca = a.model.content(frame);
+            let cb = b.model.content(frame);
+            assert_eq!(ca, cb);
+            let ks = a.spec.defaults();
+            assert_eq!(a.stage_latencies(&ks, &ca), b.stage_latencies(&ks, &cb));
+            assert_eq!(a.model.fidelity(&ks, &ca), b.model.fidelity(&ks, &cb));
+        }
+    }
+}
+
+#[test]
+fn fleet_report_is_seed_deterministic() {
+    let cfg = FleetConfig {
+        apps: 2,
+        frames: 80,
+        seed: 11,
+        configs_per_app: 8,
+        threads: 2,
+        ..Default::default()
+    };
+    let a = run_fleet(&cfg);
+    let b = run_fleet(&cfg);
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+
+    let mut other = cfg.clone();
+    other.seed = 12;
+    let c = run_fleet(&other);
+    assert_ne!(a.to_json().to_string(), c.to_json().to_string());
+}

@@ -1,0 +1,235 @@
+//! Property tests over procedurally generated workloads and the
+//! critical-path machinery they rely on (ISSUE: ≥200 seeded DAGs).
+//!
+//! * critical path is monotone in stage weights
+//! * critical path equals the weight sum on chain graphs and the max on
+//!   pure fan-out graphs
+//! * `critical_path_nodes` is a real dependency path whose weight sum
+//!   equals `critical_path`
+//! * every generated pipeline validates, is series-parallel consistent
+//!   (structured combine == critical path), has a calibrated feasible
+//!   bound, and respects the paper's knob-semantics invariants
+
+use iptune::dataflow::critical_path::{critical_path_brute, critical_path_nodes};
+use iptune::dataflow::{critical_path, Graph};
+use iptune::learner::GroupMap;
+use iptune::simulator::{Cluster, ClusterSim};
+use iptune::trace::TraceSet;
+use iptune::util::prop::{check, random_dag, unit_vec};
+use iptune::workloads::{self, WorkloadConfig};
+
+fn graph_from(deps: &[Vec<usize>]) -> Graph {
+    let stages: Vec<(String, Vec<String>)> = deps
+        .iter()
+        .enumerate()
+        .map(|(i, d)| (format!("s{i}"), d.iter().map(|&j| format!("s{j}")).collect()))
+        .collect();
+    Graph::new(&stages).unwrap()
+}
+
+// ---- critical-path properties on 200+ random DAGs -----------------------
+
+#[test]
+fn prop_critical_path_monotone_in_weights() {
+    check("cp-monotone", 220, |rng, _| {
+        let (deps, weights) = random_dag(rng, 12);
+        let g = graph_from(&deps);
+        let before = critical_path(&g, &weights);
+        let mut bumped = weights.clone();
+        let i = rng.below(bumped.len());
+        bumped[i] += rng.range_f64(0.1, 20.0);
+        let after = critical_path(&g, &bumped);
+        assert!(
+            after >= before - 1e-12,
+            "raising w[{i}] shrank the critical path: {before} -> {after}"
+        );
+        // and lowering a weight never raises it
+        let mut cut = weights.clone();
+        cut[i] *= rng.f64();
+        assert!(critical_path(&g, &cut) <= before + 1e-12);
+    });
+}
+
+#[test]
+fn prop_chain_critical_path_is_sum() {
+    check("cp-chain-sum", 200, |rng, _| {
+        let n = 1 + rng.below(12);
+        let deps: Vec<Vec<usize>> =
+            (0..n).map(|i| if i == 0 { vec![] } else { vec![i - 1] }).collect();
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 50.0)).collect();
+        let g = graph_from(&deps);
+        let sum: f64 = weights.iter().sum();
+        assert!((critical_path(&g, &weights) - sum).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_pure_fanout_critical_path_is_max() {
+    check("cp-fanout-max", 200, |rng, _| {
+        // star: one source fanning out to k leaves
+        let k = 1 + rng.below(10);
+        let mut deps: Vec<Vec<usize>> = vec![vec![]];
+        for _ in 0..k {
+            deps.push(vec![0]);
+        }
+        let weights: Vec<f64> = (0..=k).map(|_| rng.range_f64(0.1, 50.0)).collect();
+        let g = graph_from(&deps);
+        let max_leaf = weights[1..].iter().cloned().fold(f64::MIN, f64::max);
+        let want = weights[0] + max_leaf;
+        assert!((critical_path(&g, &weights) - want).abs() < 1e-9);
+
+        // fully disconnected nodes: plain max
+        let free: Vec<Vec<usize>> = (0..=k).map(|_| vec![]).collect();
+        let g2 = graph_from(&free);
+        let max_all = weights.iter().cloned().fold(f64::MIN, f64::max);
+        assert!((critical_path(&g2, &weights) - max_all).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_critical_path_nodes_consistent() {
+    check("cp-nodes", 220, |rng, _| {
+        let (deps, weights) = random_dag(rng, 12);
+        let g = graph_from(&deps);
+        let path = critical_path_nodes(&g, &weights);
+        assert!(!path.is_empty() && path.len() <= g.len());
+        // consecutive path entries are real connectors
+        for pair in path.windows(2) {
+            assert!(
+                g.node(pair[1]).deps.contains(&pair[0]),
+                "{:?} is not an edge",
+                pair
+            );
+        }
+        // the path's weight sum is exactly the critical-path length
+        let len: f64 = path.iter().map(|&i| weights[i]).sum();
+        let cp = critical_path(&g, &weights);
+        assert!((len - cp).abs() < 1e-9, "path sum {len} vs cp {cp}");
+        // which also matches brute force
+        assert!((cp - critical_path_brute(&g, &weights)).abs() < 1e-9);
+    });
+}
+
+// ---- generated-pipeline properties (200 seeds) --------------------------
+
+#[test]
+fn prop_generated_pipelines_are_valid_apps() {
+    let cfg = WorkloadConfig::default();
+    check("gen-valid", 200, |rng, case| {
+        let app = workloads::generate(case as u64, &cfg);
+        app.spec.validate().expect("generated spec validates");
+        assert_eq!(app.graph.sources().len(), 1);
+        assert_eq!(app.graph.sinks().len(), 1);
+        assert_eq!(app.graph.len(), app.spec.stages.len());
+        assert!(app.spec.num_vars() >= 3 && app.spec.num_vars() <= 6);
+        let bound = app.spec.latency_bounds_ms[0];
+        assert!(bound.is_finite() && bound > 0.0);
+
+        // structured combine reproduces the critical path on a random knob
+        let map = GroupMap::structured(&app.spec);
+        let u = unit_vec(rng, app.spec.num_vars());
+        let ks = app.spec.denormalize(&u);
+        let content = app.model.content(rng.below(900));
+        let stage_ms = app.stage_latencies(&ks, &content);
+        assert!(stage_ms.iter().all(|&t| t > 0.0 && t.is_finite()));
+        let e2e = critical_path(&app.graph, &stage_ms);
+        let (y, offset) = map.targets(&stage_ms, e2e);
+        assert!((map.combine(&y, offset) - e2e).abs() < 1e-9);
+
+        // fidelity is a proper reward and the defaults are its argmax
+        let best = app.model.fidelity(&app.spec.defaults(), &content);
+        assert!((0.0..=1.0).contains(&best));
+        let f = app.model.fidelity(&ks, &content);
+        assert!((0.0..=1.0).contains(&f));
+        assert!(f <= best + 1e-9, "random config beat the default corner");
+
+        // denormalized knobs are valid (discrete ones integral, in range)
+        for (p, &k) in app.spec.params.iter().zip(&ks) {
+            assert!(k >= p.min && k <= p.max);
+            if p.is_discrete() {
+                assert_eq!(k, k.round());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_generated_bounds_keep_a_feasible_region() {
+    let cfg = WorkloadConfig::default();
+    check("gen-feasible", 24, |_rng, case| {
+        let seed = case as u64 * 13 + 1;
+        let app = workloads::generate(seed, &cfg);
+        let bound = app.spec.latency_bounds_ms[0];
+        let costs = workloads::probe_costs(&app, &Cluster::default(), cfg.probe_configs, seed);
+        let feasible = costs.iter().filter(|&&c| c <= bound).count() as f64;
+        let frac = feasible / costs.len() as f64;
+        assert!(
+            frac >= 0.2,
+            "seed {seed}: bound {bound} leaves only {frac} of the space feasible"
+        );
+    });
+}
+
+#[test]
+fn prop_generated_traces_have_protocol_shape() {
+    let cfg = WorkloadConfig::default();
+    check("gen-traces", 12, |_rng, case| {
+        let app = workloads::generate(case as u64 + 500, &cfg);
+        let ts = TraceSet::generate(&app, 5, 30, 9);
+        assert_eq!(ts.num_configs(), 5);
+        assert_eq!(ts.num_frames(), 30);
+        assert_eq!(ts.stage_names.len(), app.spec.stages.len());
+        for t in &ts.traces {
+            for f in &t.frames {
+                assert!(f.end_to_end_ms > 0.0);
+                assert!((0.0..=1.0).contains(&f.fidelity));
+                // e2e never exceeds the stage sum (series-parallel graphs)
+                let sum: f64 = f.stage_ms.iter().sum();
+                assert!(f.end_to_end_ms <= sum + 1e-9);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_generated_worker_requests_respect_grant_budget() {
+    let cfg = WorkloadConfig::default();
+    check("gen-workers", 40, |rng, case| {
+        let app = workloads::generate(case as u64 + 900, &cfg);
+        let sim = ClusterSim::deterministic(Cluster { servers: 2, cores_per_server: 4, comm_ms_per_frame: 0.0 });
+        let u = unit_vec(rng, app.spec.num_vars());
+        let ks = app.spec.denormalize(&u);
+        let requested: Vec<usize> = (0..app.graph.len())
+            .map(|s| app.model.requested_workers(s, &ks))
+            .collect();
+        assert!(requested.iter().all(|&w| w >= 1));
+        let granted = sim.grant_workers(&requested);
+        assert_eq!(granted.len(), requested.len());
+        assert!(granted.iter().zip(&requested).all(|(&g, &r)| g <= r.max(1)));
+    });
+}
+
+#[test]
+fn prop_scale_knobs_trade_latency_for_fidelity() {
+    // turning any scale knob up from the default must not raise cost and
+    // must not raise fidelity (the monotone trade-off the tuner exploits)
+    let cfg = WorkloadConfig::default();
+    check("gen-scale-tradeoff", 30, |_rng, case| {
+        let app = workloads::generate(case as u64 + 1300, &cfg);
+        let content = app.model.content(10);
+        let base = app.spec.defaults();
+        let base_fid = app.model.fidelity(&base, &content);
+        let base_cost: f64 = app.stage_latencies(&base, &content).iter().sum();
+        for (k, p) in app.spec.params.iter().enumerate() {
+            if !p.name.starts_with("scale_") {
+                continue;
+            }
+            let mut scaled = base.clone();
+            scaled[k] = p.max;
+            let fid = app.model.fidelity(&scaled, &content);
+            let cost: f64 = app.stage_latencies(&scaled, &content).iter().sum();
+            assert!(fid <= base_fid + 1e-9, "scaling raised fidelity");
+            assert!(cost <= base_cost + 1e-9, "scaling raised total cost");
+        }
+    });
+}
