@@ -8,6 +8,10 @@ asserts allclose between the fused kernels and the reference semantics.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# container images may lack hypothesis (only CI installs it) — skip
+# cleanly instead of erroring at collection (see requirements-dev.txt)
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ogd as ogd_k

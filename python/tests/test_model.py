@@ -4,6 +4,10 @@ combination semantics (Eq. 9), and solver feasibility (Eq. 2)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# container images may lack hypothesis (only CI installs it) — skip
+# cleanly instead of erroring at collection (see requirements-dev.txt)
+pytest.importorskip("hypothesis")
 from hypothesis import settings
 
 from compile import model as M

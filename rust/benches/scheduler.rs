@@ -1,0 +1,102 @@
+//! Scheduler hot-path benchmarks: the reallocation-epoch cost (utility
+//! curves + water-filling) and the per-frame overhead the budgeted
+//! controller adds on top of the plain ε-greedy step. The scheduler runs
+//! once per epoch (~50 frames) and the controller once per frame, so
+//! both must stay far below the 33 ms frame budget.
+//!
+//! Run: `cargo bench --bench scheduler`
+
+use iptune::runtime::native::NativeBackend;
+use iptune::scheduler::{allocate, core_levels};
+use iptune::simulator::Cluster;
+use iptune::trace::{LadderTraceSet, TraceSet};
+use iptune::tuner::{BudgetedController, EpsGreedyController, TunerConfig};
+use iptune::util::bench::{black_box, Bencher};
+use iptune::util::Rng;
+use iptune::workloads::{self, AppProfile, WorkloadConfig};
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // ---- water-filling allocator over synthetic utility curves ---------
+    let levels = core_levels(120, 8, 7, 6, 3.0);
+    let mut rng = Rng::new(3);
+    let curves8: Vec<Vec<f64>> = (0..8)
+        .map(|_| {
+            let mut u: Vec<f64> = (0..levels.len()).map(|_| rng.f64()).collect();
+            u.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            u
+        })
+        .collect();
+    b.bench("allocate/8apps_6rungs", || {
+        black_box(allocate(black_box(&curves8), &levels, 120));
+    });
+
+    let big_levels = core_levels(4096, 64, 32, 8, 3.0);
+    let curves64: Vec<Vec<f64>> = (0..64)
+        .map(|_| {
+            let mut u: Vec<f64> = (0..big_levels.len()).map(|_| rng.f64()).collect();
+            u.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            u
+        })
+        .collect();
+    b.bench("allocate/64apps_8rungs", || {
+        black_box(allocate(black_box(&curves64), &big_levels, 4096));
+    });
+
+    // ---- per-app machinery on a generated heavy workload ---------------
+    let wcfg = WorkloadConfig { profile: AppProfile::Heavy, ..Default::default() };
+    let cluster = Cluster::default();
+    let app = workloads::generate_on(11, &wcfg, &cluster);
+    let bound = app.spec.latency_bounds_ms[0];
+    let ladder = LadderTraceSet::generate_on(&app, &cluster, &levels, 24, 200, 5);
+    let cfg = TunerConfig { epsilon: 0.05, bound_ms: bound * 0.9, warmup_frames: 20 };
+
+    // utility-curve query: the scheduler's whole per-app epoch cost
+    let mut ctl = BudgetedController::new(
+        &app,
+        &ladder,
+        Box::new(NativeBackend::structured(&app.spec)),
+        cfg.clone(),
+        9,
+    )
+    .with_empirical_blend(8.0);
+    for f in 0..200 {
+        ctl.step(f);
+    }
+    b.bench("scheduler/utility_curve_6rungs_24cand", || {
+        black_box(ctl.utility_curve());
+    });
+
+    // budgeted step vs the plain fixed-cluster step (same action space)
+    let mut frame = 200usize;
+    b.bench("scheduler/budgeted_step", || {
+        black_box(ctl.step(black_box(frame % ladder.num_frames())));
+        frame += 1;
+    });
+
+    let traces = TraceSet::generate_on(&app, &cluster, 24, 200, 5);
+    let mut plain = EpsGreedyController::new(
+        &app.spec,
+        &traces,
+        Box::new(NativeBackend::structured(&app.spec)),
+        cfg,
+        9,
+    )
+    .with_empirical_blend(8.0);
+    for f in 0..200 {
+        plain.step(f);
+    }
+    let mut pframe = 200usize;
+    b.bench("scheduler/plain_step_baseline", || {
+        black_box(plain.step(black_box(pframe % traces.num_frames())));
+        pframe += 1;
+    });
+
+    // ---- ladder tracing (fleet construction cost, per app) -------------
+    b.bench("scheduler/ladder_traces_6x8cfg_100f", || {
+        black_box(LadderTraceSet::generate_on(&app, &cluster, &levels, 8, 100, 5));
+    });
+
+    println!("\n{} benchmarks complete", b.results.len());
+}

@@ -37,6 +37,16 @@ pub trait CostModel: Send + Sync {
     /// sequential stages).
     fn requested_workers(&self, stage: usize, ks: &[f64]) -> usize;
 
+    /// Index of the knob that sets `stage`'s data-parallel worker count,
+    /// if any. The scheduler uses this to clamp a candidate's parallelism
+    /// to what a hypothetical core quota would actually grant, so the
+    /// learned latency model can be queried at k cores without
+    /// re-exploring (models without parallel knobs are budget-insensitive
+    /// and may keep the default).
+    fn par_knob(&self, _stage: usize) -> Option<usize> {
+        None
+    }
+
     /// Noiseless fidelity r(x, k) ∈ [0, 1] (paper Eq. 10 / Eq. 11).
     fn fidelity(&self, ks: &[f64], content: &Content) -> f64;
 }

@@ -62,6 +62,14 @@ impl CostModel for MotionSiftModel {
         }
     }
 
+    fn par_knob(&self, stage: usize) -> Option<usize> {
+        match stage {
+            FACE_DETECT => Some(K_PAR_FACE),
+            MOTION_EXTRACT => Some(K_PAR_EXTRACT),
+            _ => None,
+        }
+    }
+
     fn stage_latency(&self, stage: usize, ks: &[f64], content: &Content, workers: usize) -> f64 {
         let s_face = ks[K_SCALE_FACE].max(1.0);
         let s_motion = ks[K_SCALE_MOTION].max(1.0);

@@ -65,6 +65,15 @@ impl CostModel for PoseModel {
         }
     }
 
+    fn par_knob(&self, stage: usize) -> Option<usize> {
+        match stage {
+            SIFT => Some(K_PAR_SIFT),
+            MATCH => Some(K_PAR_MATCH),
+            CLUSTER => Some(K_PAR_CLUSTER),
+            _ => None,
+        }
+    }
+
     fn stage_latency(&self, stage: usize, ks: &[f64], content: &Content, workers: usize) -> f64 {
         let s = ks[K_SCALE].max(1.0);
         let px = pixel_fraction(s);

@@ -86,6 +86,29 @@ impl StreamHandle {
     pub fn current_knobs(&self) -> Vec<f64> {
         self.knobs.read().unwrap().as_ref().clone()
     }
+
+    /// A cloneable retuning handle that can live on a different thread
+    /// than the record receiver. The live fleet scheduler forwards each
+    /// stream's records from a dedicated thread while the scheduler
+    /// thread keeps the knob handles and retunes every epoch.
+    pub fn knob_handle(&self) -> KnobHandle {
+        KnobHandle(Arc::clone(&self.knobs))
+    }
+}
+
+/// Cloneable, thread-safe knob setter detached from a [`StreamHandle`]
+/// (see [`StreamHandle::knob_handle`]).
+#[derive(Clone)]
+pub struct KnobHandle(Arc<RwLock<Arc<Vec<f64>>>>);
+
+impl KnobHandle {
+    pub fn set(&self, ks: Vec<f64>) {
+        *self.0.write().unwrap() = Arc::new(ks);
+    }
+
+    pub fn get(&self) -> Vec<f64> {
+        self.0.read().unwrap().as_ref().clone()
+    }
 }
 
 fn sleep_scaled(ms: f64, scale: f64) {
@@ -334,6 +357,32 @@ mod tests {
         let late: f64 =
             records[50..].iter().map(|r| r.end_to_end_ms).sum::<f64>() / 10.0;
         assert!(late < early * 0.5, "retune must speed the pipe: {early} -> {late}");
+    }
+
+    #[test]
+    fn knob_handle_retunes_from_another_thread() {
+        let a = app("pose");
+        let handle = spawn_stream(
+            Arc::clone(&a),
+            a.spec.defaults(),
+            EngineConfig { frames: 40, realtime_scale: 1e-6, ..Default::default() },
+        );
+        let knobs = handle.knob_handle();
+        assert_eq!(knobs.get(), a.spec.defaults());
+        let fast = vec![3.0, 2.0_f64.powi(31), 16.0, 10.0, 10.0];
+        let setter = {
+            let knobs = knobs.clone();
+            let fast = fast.clone();
+            std::thread::spawn(move || knobs.set(fast))
+        };
+        setter.join().unwrap();
+        assert_eq!(knobs.get(), fast);
+        assert_eq!(handle.current_knobs(), fast);
+        let mut n = 0;
+        while handle.records.recv().is_ok() {
+            n += 1;
+        }
+        assert_eq!(n, 40);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use super::{f, ExperimentCtx};
+use super::{app_tag, f, ExperimentCtx};
 use crate::metrics::convex_hull;
 
 /// Per-app result (exposed for tests and the claims module).
@@ -24,9 +24,9 @@ pub fn compute(ctx: &ExperimentCtx, app_name: &str) -> Result<Fig5> {
 }
 
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
-    for app in ["pose", "motion_sift"] {
+    for app in &ctx.experiment_apps() {
         let r = compute(ctx, app)?;
-        let mut csv = ctx.csv(&format!("fig5_{app}"), "kind,cost_ms,reward")?;
+        let mut csv = ctx.csv(&format!("fig5_{}", app_tag(app)), "kind,cost_ms,reward")?;
         for &(c, rew) in &r.payoffs {
             csv.row(&["point".into(), f(c), f(rew)])?;
         }

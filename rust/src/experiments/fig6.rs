@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::util::Rng;
 
-use super::{f, ExperimentCtx};
+use super::{app_tag, f, ExperimentCtx};
 use crate::apps::spec::AppSpec;
 use crate::learner::offline::{self, samples_from_traces};
 use crate::learner::{StagePredictor, Variant};
@@ -64,12 +64,12 @@ pub fn compute(
 }
 
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
-    for app in ["pose", "motion_sift"] {
+    for app in &ctx.experiment_apps() {
         let (app_obj, traces) = ctx.app_traces(app)?;
         let series =
             compute(&app_obj.spec, &traces, Variant::Unstructured, ctx.frames, ctx.seed);
         let mut csv = ctx.csv(
-            &format!("fig6_{app}"),
+            &format!("fig6_{}", app_tag(app)),
             "frame,linear_expected,linear_maxnorm,quadratic_expected,quadratic_maxnorm,cubic_expected,cubic_maxnorm",
         )?;
         for t in 0..ctx.frames {

@@ -7,7 +7,7 @@ use anyhow::Result;
 
 use crate::util::Rng;
 
-use super::{f, ExperimentCtx};
+use super::{app_tag, f, ExperimentCtx};
 use crate::apps::spec::AppSpec;
 use crate::learner::{StagePredictor, Variant};
 use crate::metrics::ErrorTracker;
@@ -49,11 +49,11 @@ pub fn compute(spec: &AppSpec, traces: &TraceSet, frames: usize, seed: u64) -> F
 }
 
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
-    for app in ["pose", "motion_sift"] {
+    for app in &ctx.experiment_apps() {
         let (app_obj, traces) = ctx.app_traces(app)?;
         let r = compute(&app_obj.spec, &traces, ctx.frames, ctx.seed);
         let mut csv = ctx.csv(
-            &format!("fig7_{app}"),
+            &format!("fig7_{}", app_tag(app)),
             "frame,unstructured_expected,unstructured_maxnorm,structured_expected,structured_maxnorm",
         )?;
         for (t, &(ue, um, se, sm)) in r.per_frame.iter().enumerate() {

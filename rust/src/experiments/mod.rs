@@ -35,6 +35,10 @@ pub struct ExperimentCtx {
     pub seed: u64,
     /// Frames per experiment run (paper: 1000).
     pub frames: usize,
+    /// Generated workloads (`gen:SEED` registry names) each experiment
+    /// additionally runs for a scenario-diversity variant beside the two
+    /// paper apps. Empty disables the variants.
+    pub generated: Vec<String>,
 }
 
 impl ExperimentCtx {
@@ -49,7 +53,16 @@ impl ExperimentCtx {
             out_dir: out_dir.into(),
             seed: 7,
             frames: 1000,
+            generated: vec!["gen:11".into()],
         }
+    }
+
+    /// The apps every experiment covers: the two paper case studies plus
+    /// the configured generated workloads.
+    pub fn experiment_apps(&self) -> Vec<String> {
+        let mut names = vec!["pose".to_string(), "motion_sift".to_string()];
+        names.extend(self.generated.iter().cloned());
+        names
     }
 
     /// Load (or generate + cache) an app and its 30×1000 trace set.
@@ -98,6 +111,11 @@ impl CsvWriter {
 /// Format a float compactly for CSV.
 pub fn f(x: f64) -> String {
     format!("{x:.6}")
+}
+
+/// Filesystem-safe tag for an app name (`gen:11` → `gen11`).
+pub fn app_tag(name: &str) -> String {
+    name.replace(':', "")
 }
 
 /// Run every experiment (the `repro figures --all` entry point).

@@ -1,47 +1,86 @@
-//! Fleet runner — tune many generated applications concurrently.
+//! Fleet runner — many co-tenant applications tuned against ONE shared,
+//! contended cluster.
 //!
 //! The paper evaluates one tuner on one application at a time; a
 //! production deployment runs *fleets* of perception pipelines side by
-//! side. This module is that scale/stress path: it splits the simulated
-//! cluster evenly across N procedurally generated apps
-//! ([`workloads`](crate::workloads)), tunes each with its own ε-greedy
-//! controller on its own OS thread, and aggregates the per-app
-//! [`PolicyStats`] (fidelity vs. the clairvoyant oracle, constraint
-//! violations, convergence frames) into a single JSON report.
+//! side. PR 1's fleet gave every app a static even slice of the cluster;
+//! this version replaces the slices with a fleet-level scheduler
+//! ([`scheduler`](crate::scheduler)): all apps draw from a single
+//! [`SharedCluster`] core pool, and every reallocation epoch the
+//! scheduler re-divides the cores by marginal utility — each app's
+//! learned latency model answers "what fidelity could you hold at k
+//! cores?" ([`BudgetedController::utility_at`]) and the next core chunk
+//! goes to whoever buys the most fidelity with it, above a fairness
+//! floor. [`FleetMode::Static`] pins every app at the even share through
+//! the same machinery, which makes the two modes byte-comparable: same
+//! apps, same ladder traces, same controllers — only the allocation
+//! policy differs.
 //!
 //! Results are deterministic for a given `(seed, apps, frames)` triple
-//! regardless of thread count: every app's pipeline, traces and
-//! controller derive their randomness from `seed + index` alone, and the
-//! report is assembled by index.
+//! regardless of worker-thread count: every app's pipeline, ladder traces
+//! and controller derive their randomness from `seed + index` alone;
+//! apps are pinned to workers (`index % threads`) so controller state
+//! never migrates; and each epoch's allocation is a pure function of the
+//! per-app utility curves gathered at the previous epoch's end.
 //!
-//! The controller targets `bound × bound_headroom` while violations are
-//! scored against the spec bound itself — standard SLO headroom so the
-//! learned operating point does not sit exactly on the constraint where
-//! measurement noise pushes half the frames over. On top of that, the
-//! fleet enables the controller's per-action empirical cost blend
-//! ([`EpsGreedyController::with_empirical_blend`]): across hundreds of
-//! generated apps, some action space always contains a high-fidelity
-//! config the polynomial model persistently under-predicts, and blending
-//! in each action's own observed latency keeps such configs from being
-//! exploited into chronic violations.
+//! Heterogeneous fleets (`heterogeneous: true`) alternate
+//! [`AppProfile::Light`] / [`AppProfile::Heavy`] generated apps, and
+//! `load_shift_frame` scripts a synchronized mid-run cost jump across the
+//! heavy apps — the scenario in which dynamic reallocation demonstrably
+//! beats the static even slice (see `rust/tests/scheduler_fleet.rs`).
+//!
+//! [`BudgetedController::utility_at`]:
+//!     crate::tuner::BudgetedController::utility_at
 
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::channel;
 
 use anyhow::{Context, Result};
 
 use crate::metrics::PolicyStats;
 use crate::runtime::native::NativeBackend;
-use crate::simulator::Cluster;
-use crate::trace::TraceSet;
+use crate::scheduler::{self, AllocationFrame, SchedulerConfig};
+use crate::simulator::{Cluster, SharedCluster};
+use crate::trace::LadderTraceSet;
 use crate::tuner::policy::oracle_best;
-use crate::tuner::{EpsGreedyController, TunerConfig};
+use crate::tuner::{BudgetedController, RunOutcome, StepOutcome, TunerConfig};
 use crate::util::json::Json;
-use crate::workloads::{self, WorkloadConfig};
+use crate::workloads::{AppProfile, WorkloadConfig};
 
 /// Post-warmup bound-met fraction every app is expected to clear.
 pub const FLEET_SLO_FRAC: f64 = 0.80;
+
+/// Cost multiplier of the scripted fleet-wide load shift (applied to the
+/// heavy apps' content scripts at `load_shift_frame`).
+pub const LOAD_SHIFT_MULT: f64 = 1.9;
+
+/// Allocation policy of the fleet run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FleetMode {
+    /// Every app pinned at the even share of the shared cluster — the
+    /// baseline the dynamic scheduler is measured against.
+    #[default]
+    Static,
+    /// Marginal-utility water-filling reallocation every epoch.
+    Dynamic,
+}
+
+impl FleetMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            FleetMode::Static => "static",
+            FleetMode::Dynamic => "dynamic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "static" => Ok(FleetMode::Static),
+            "dynamic" => Ok(FleetMode::Dynamic),
+            other => anyhow::bail!("unknown fleet mode '{other}' (static|dynamic)"),
+        }
+    }
+}
 
 /// Fleet run configuration.
 #[derive(Debug, Clone)]
@@ -61,15 +100,23 @@ pub struct FleetConfig {
     /// still scored against the spec bound).
     pub bound_headroom: f64,
     /// Shrinkage count of the controller's per-action empirical cost
-    /// blend (see [`EpsGreedyController::with_empirical_blend`]); 0 runs
-    /// the paper's pure-model exploit.
+    /// blend; 0 runs the paper's pure-model exploit.
     pub empirical_blend_k: f64,
     /// Worker OS threads; 0 → one per available core, capped at `apps`.
     pub threads: usize,
-    /// The shared cluster divided across the fleet.
+    /// The shared, contended cluster the whole fleet draws from.
     pub cluster: Cluster,
     /// Generation envelope for the workloads.
     pub workload: WorkloadConfig,
+    /// Allocation policy (static even shares vs dynamic water-filling).
+    pub mode: FleetMode,
+    /// Alternate Light/Heavy app profiles instead of Balanced ones.
+    pub heterogeneous: bool,
+    /// Scripted fleet-wide load shift: heavy apps' costs jump by
+    /// [`LOAD_SHIFT_MULT`] at this frame (requires `heterogeneous`).
+    pub load_shift_frame: Option<usize>,
+    /// Scheduler policy (epoch length, fairness floor, ladder shape).
+    pub scheduler: SchedulerConfig,
 }
 
 impl Default for FleetConfig {
@@ -86,22 +133,48 @@ impl Default for FleetConfig {
             threads: 0,
             cluster: Cluster::default(),
             workload: WorkloadConfig::default(),
+            mode: FleetMode::Static,
+            heterogeneous: false,
+            load_shift_frame: None,
+            scheduler: SchedulerConfig::default(),
         }
     }
 }
 
-/// Outcome of tuning one generated app.
+impl FleetConfig {
+    /// Profile of fleet member `index` under this config.
+    pub fn profile_of(&self, index: usize) -> AppProfile {
+        AppProfile::for_fleet_member(self.heterogeneous, index, self.workload.profile)
+    }
+
+    /// Per-app generation envelope (profile + scripted load shift).
+    fn workload_of(&self, index: usize) -> WorkloadConfig {
+        let mut w = self.workload.clone();
+        w.profile = self.profile_of(index);
+        if let Some(frame) = self.load_shift_frame {
+            if w.profile == AppProfile::Heavy {
+                w.load_shift = Some((frame, LOAD_SHIFT_MULT));
+            }
+        }
+        w
+    }
+}
+
+/// Outcome of tuning one fleet member.
 #[derive(Debug, Clone)]
 pub struct AppReport {
     pub index: usize,
     pub name: String,
     pub seed: u64,
+    pub profile: &'static str,
     pub stages: usize,
     pub knobs: usize,
     pub branches: usize,
     /// The calibrated latency bound L (ms) violations are scored against.
     pub bound_ms: f64,
     pub avg_fidelity: f64,
+    /// Clairvoyant optimum at the even share — the same yardstick in both
+    /// modes, so static and dynamic runs are directly comparable.
     pub oracle_fidelity: f64,
     /// avg_fidelity / oracle_fidelity (the paper's 90%-of-optimum axis).
     pub fidelity_vs_oracle: f64,
@@ -110,12 +183,14 @@ pub struct AppReport {
     pub violation_rate: f64,
     /// Fraction of post-warmup frames under the bound (the fleet SLO).
     pub post_warmup_bound_met_frac: f64,
-    /// Candidate actions whose trace meets the bound on ≥95% of frames —
-    /// how much robustly feasible room the controller had to work with.
+    /// Candidate actions whose even-share trace meets the bound on ≥95%
+    /// of frames — the robustly feasible room at the static baseline.
     pub robust_feasible_actions: usize,
     /// First frame whose trailing-50 mean fidelity reached 90% of oracle.
     pub convergence_frame: Option<usize>,
     pub explore_frames: usize,
+    /// Frame-weighted mean core quota this app held.
+    pub avg_cores: f64,
     /// Raw accumulator (kept for fleet-wide merging).
     pub stats: PolicyStats,
 }
@@ -130,6 +205,7 @@ impl AppReport {
             .put("index", self.index)
             .put("name", self.name.as_str())
             .put("seed", self.seed)
+            .put("profile", self.profile)
             .put("stages", self.stages)
             .put("knobs", self.knobs)
             .put("branches", self.branches)
@@ -144,6 +220,7 @@ impl AppReport {
             .put("robust_feasible_actions", self.robust_feasible_actions)
             .put("convergence_frame", conv)
             .put("explore_frames", self.explore_frames)
+            .put("avg_cores", self.avg_cores)
     }
 }
 
@@ -153,10 +230,18 @@ pub struct FleetReport {
     pub apps: Vec<AppReport>,
     pub frames: usize,
     pub seed: u64,
+    pub mode: FleetMode,
     pub epsilon: f64,
     pub warmup_frames: usize,
     pub bound_headroom: f64,
+    /// Even share of the shared cluster (the static baseline quota).
     pub cores_per_app: usize,
+    pub total_cores: usize,
+    pub fairness_floor: usize,
+    /// The shared core ladder (ascending budgets).
+    pub levels: Vec<usize>,
+    /// One entry per reallocation epoch.
+    pub allocations: Vec<AllocationFrame>,
     pub avg_fidelity_vs_oracle: f64,
     pub min_bound_met_frac: f64,
     pub apps_meeting_slo: usize,
@@ -170,14 +255,22 @@ impl FleetReport {
 
     pub fn to_json(&self) -> Json {
         let details: Vec<Json> = self.apps.iter().map(|a| a.to_json()).collect();
+        let allocs: Vec<Json> = self.allocations.iter().map(|a| a.to_json()).collect();
         Json::obj()
             .put("apps", self.apps.len())
             .put("frames", self.frames)
             .put("seed", self.seed)
+            .put("mode", self.mode.name())
             .put("epsilon", self.epsilon)
             .put("warmup_frames", self.warmup_frames)
             .put("bound_headroom", self.bound_headroom)
             .put("cores_per_app", self.cores_per_app)
+            .put("total_cores", self.total_cores)
+            .put("fairness_floor", self.fairness_floor)
+            .put(
+                "levels",
+                Json::Arr(self.levels.iter().map(|&l| Json::from(l)).collect()),
+            )
             .put(
                 "aggregate",
                 Json::obj()
@@ -190,6 +283,7 @@ impl FleetReport {
                     .put("max_violation_ms", self.merged.max_violation_ms())
                     .put("violation_rate", self.merged.violation_rate()),
             )
+            .put("allocations", Json::Arr(allocs))
             .put("apps_detail", Json::Arr(details))
     }
 
@@ -207,10 +301,11 @@ impl FleetReport {
 }
 
 /// Each app's even slice of the shared cluster: exactly
-/// `total_cores / apps` cores (expressed as one virtual server, so the
-/// fleet never oversubscribes the shared budget), floored at one physical
-/// server's worth — fleets larger than the server count deliberately
-/// co-tenant at that floor.
+/// `total_cores / apps` cores (expressed as one virtual server), floored
+/// at one physical server's worth. Historical PR-1 helper — the
+/// scheduler fleet computes its even share as a plain `total / apps`
+/// (no per-server floor; every tenant needs a real quota) and calibrates
+/// bounds on that; this remains for external callers and its tests.
 pub fn cluster_slice(total: &Cluster, apps: usize) -> Cluster {
     let per_app_cores = (total.total_cores() / apps.max(1)).max(total.cores_per_server);
     Cluster {
@@ -220,76 +315,21 @@ pub fn cluster_slice(total: &Cluster, apps: usize) -> Cluster {
     }
 }
 
-/// Generate, trace and tune fleet member `index`. Pure function of
-/// `(cfg, index)` — this is what makes multi-threaded runs reproducible.
-pub fn run_app(cfg: &FleetConfig, index: usize) -> AppReport {
-    let slice = cluster_slice(&cfg.cluster, cfg.apps);
-    let app_seed = cfg.seed.wrapping_add(index as u64);
-    let app = workloads::generate_on(app_seed, &cfg.workload, &slice);
-    let bound = app.spec.latency_bounds_ms[0];
-
-    let trace_frames = cfg.frames.max(100);
-    let traces = TraceSet::generate_on(
-        &app,
-        &slice,
-        cfg.configs_per_app,
-        trace_frames,
-        app_seed ^ 0x7A3E_5EED,
-    );
-
-    let eps = cfg
-        .epsilon
-        .unwrap_or_else(|| TunerConfig::epsilon_for_horizon(cfg.frames.max(1)));
-    let tuner_cfg = TunerConfig {
-        epsilon: eps,
-        bound_ms: bound * cfg.bound_headroom,
-        warmup_frames: cfg.warmup_frames,
-    };
-    let backend = NativeBackend::structured(&app.spec);
-    let mut ctl = EpsGreedyController::new(
-        &app.spec,
-        &traces,
-        Box::new(backend),
-        tuner_cfg,
-        app_seed ^ 0x00C0_FFEE,
-    )
-    .with_empirical_blend(cfg.empirical_blend_k);
-    let out = ctl.run(cfg.frames);
-    let oracle = oracle_best(&traces, cfg.frames, bound);
-
-    // violations scored against the spec bound, not the headroom target
-    let mut stats = PolicyStats::new();
-    for s in &out.steps {
-        stats.observe(s.reward, s.latency_ms, bound);
-    }
-    let oracle_fid = oracle.avg_reward.max(1e-9);
-    AppReport {
-        index,
-        name: app.spec.name.clone(),
-        seed: app_seed,
-        stages: app.spec.stages.len(),
-        knobs: app.spec.num_vars(),
-        branches: app.spec.branches().len(),
-        bound_ms: bound,
-        avg_fidelity: stats.avg_reward(),
-        oracle_fidelity: oracle.avg_reward,
-        fidelity_vs_oracle: stats.avg_reward() / oracle_fid,
-        avg_violation_ms: stats.avg_violation_ms(),
-        max_violation_ms: stats.max_violation_ms(),
-        violation_rate: stats.violation_rate(),
-        post_warmup_bound_met_frac: out.bound_met_frac_after(cfg.warmup_frames, bound),
-        robust_feasible_actions: traces
-            .traces
-            .iter()
-            .filter(|t| t.frac_under(bound) >= 0.95)
-            .count(),
-        convergence_frame: out.convergence_frame(50, 0.9 * oracle.avg_reward),
-        explore_frames: out.explore_frames,
-        stats,
-    }
+/// Epoch command sent to a pinned worker.
+enum Cmd {
+    /// Run frames `lo..hi` with the given per-app rung assignment.
+    Epoch { lo: usize, hi: usize, rungs: Vec<usize> },
+    Finish,
 }
 
-/// Run the whole fleet across OS threads and aggregate.
+/// One app's end-of-epoch message back to the scheduler.
+struct EpochResult {
+    app: usize,
+    /// Utility curve over the rung ladder (empty in static mode).
+    curve: Vec<f64>,
+}
+
+/// Run the whole fleet: N tuner threads against the shared scheduler.
 pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     assert!(cfg.apps > 0, "fleet needs at least one app");
     assert!(cfg.frames > 0, "fleet needs at least one frame");
@@ -299,34 +339,266 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
         cfg.warmup_frames,
         cfg.frames
     );
+    let total = cfg.cluster.total_cores();
+    assert!(
+        cfg.apps <= total,
+        "fleet of {} apps cannot share {total} cores (one core per app minimum)",
+        cfg.apps
+    );
+    let even = (total / cfg.apps).max(1);
+    let floor = cfg.scheduler.floor_cores(total, cfg.apps);
+    let levels = scheduler::core_levels(
+        total,
+        cfg.apps,
+        floor,
+        cfg.scheduler.ladder_rungs,
+        cfg.scheduler.max_boost,
+    );
+    let even_rung = levels
+        .iter()
+        .position(|&l| l == even)
+        .expect("core_levels always contains the even share");
+    let epoch_frames = cfg.scheduler.epoch_frames.max(1);
+    let epochs = (cfg.frames + epoch_frames - 1) / epoch_frames;
     let threads = if cfg.threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     } else {
         cfg.threads
     }
     .clamp(1, cfg.apps);
+    let eps = cfg
+        .epsilon
+        .unwrap_or_else(|| TunerConfig::epsilon_for_horizon(cfg.frames.max(1)));
 
-    let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<AppReport>>> =
-        Mutex::new((0..cfg.apps).map(|_| None).collect());
+    let (res_tx, res_rx) = channel::<EpochResult>();
+    let (rep_tx, rep_rx) = channel::<AppReport>();
+    let mut allocations: Vec<AllocationFrame> = Vec::with_capacity(epochs);
+
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::SeqCst);
-                if i >= cfg.apps {
-                    break;
+        let mut cmd_txs = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            cmd_txs.push(cmd_tx);
+            let res_tx = res_tx.clone();
+            let rep_tx = rep_tx.clone();
+            let levels = &levels;
+            scope.spawn(move || {
+                // ---- per-worker construction: apps pinned by index ------
+                let my: Vec<usize> = (w..cfg.apps).step_by(threads).collect();
+                // static mode only ever replays the floor rung (rewards)
+                // and the even rung (steps + oracle) — skip simulating
+                // the rest of the ladder; each rung is generated from its
+                // own per-config seed, so trimming unused rungs leaves
+                // the generated traces (and the report) byte-identical
+                let gen_levels: Vec<usize> = match cfg.mode {
+                    FleetMode::Dynamic => levels.clone(),
+                    FleetMode::Static => {
+                        let mut v = vec![levels[0]];
+                        if even > levels[0] {
+                            v.push(even);
+                        }
+                        v
+                    }
+                };
+                let local_even_rung = gen_levels
+                    .iter()
+                    .position(|&l| l == even)
+                    .expect("even share is always a generated rung");
+                let mut apps_v = Vec::with_capacity(my.len());
+                let mut ladders = Vec::with_capacity(my.len());
+                for &i in &my {
+                    let app_seed = cfg.seed.wrapping_add(i as u64);
+                    let wcfg = cfg.workload_of(i);
+                    // bounds calibrated at the even share: the static
+                    // baseline must be achievable for every tenant
+                    let slice = Cluster {
+                        servers: 1,
+                        cores_per_server: even,
+                        comm_ms_per_frame: cfg.cluster.comm_ms_per_frame,
+                    };
+                    let app = crate::workloads::generate_on(app_seed, &wcfg, &slice);
+                    let ladder = LadderTraceSet::generate_on(
+                        &app,
+                        &cfg.cluster,
+                        &gen_levels,
+                        cfg.configs_per_app,
+                        cfg.frames.max(100),
+                        app_seed ^ 0x7A3E_5EED,
+                    );
+                    apps_v.push(app);
+                    ladders.push(ladder);
                 }
-                let report = run_app(cfg, i);
-                slots.lock().unwrap()[i] = Some(report);
+                let mut ctls: Vec<BudgetedController<'_>> = my
+                    .iter()
+                    .enumerate()
+                    .map(|(slot, &i)| {
+                        let app_seed = cfg.seed.wrapping_add(i as u64);
+                        let bound = apps_v[slot].spec.latency_bounds_ms[0];
+                        let tuner_cfg = TunerConfig {
+                            epsilon: eps,
+                            bound_ms: bound * cfg.bound_headroom,
+                            warmup_frames: cfg.warmup_frames,
+                        };
+                        let backend = NativeBackend::structured(&apps_v[slot].spec);
+                        let mut ctl = BudgetedController::new(
+                            &apps_v[slot],
+                            &ladders[slot],
+                            Box::new(backend),
+                            tuner_cfg,
+                            app_seed ^ 0x00C0_FFEE,
+                        )
+                        .with_empirical_blend(cfg.empirical_blend_k);
+                        ctl.set_level(local_even_rung);
+                        ctl
+                    })
+                    .collect();
+                let mut steps: Vec<Vec<StepOutcome>> =
+                    my.iter().map(|_| Vec::with_capacity(cfg.frames)).collect();
+                let mut core_frames: Vec<usize> = vec![0; my.len()];
+
+                // ---- epoch loop ----------------------------------------
+                while let Ok(cmd) = cmd_rx.recv() {
+                    match cmd {
+                        Cmd::Epoch { lo, hi, rungs } => {
+                            for (slot, &i) in my.iter().enumerate() {
+                                // rungs index the full ladder; static
+                                // workers hold a trimmed one and always
+                                // sit on the even share
+                                let rung = match cfg.mode {
+                                    FleetMode::Dynamic => rungs[i],
+                                    FleetMode::Static => local_even_rung,
+                                };
+                                ctls[slot].set_level(rung);
+                                core_frames[slot] += ctls[slot].cores() * (hi - lo);
+                                for f in lo..hi {
+                                    let s = ctls[slot].step(f);
+                                    steps[slot].push(s);
+                                }
+                                let curve = match cfg.mode {
+                                    FleetMode::Dynamic => ctls[slot].utility_curve(),
+                                    FleetMode::Static => Vec::new(),
+                                };
+                                if res_tx.send(EpochResult { app: i, curve }).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        Cmd::Finish => break,
+                    }
+                }
+
+                // ---- final per-app reports -----------------------------
+                for (slot, &i) in my.iter().enumerate() {
+                    let app = &apps_v[slot];
+                    let bound = app.spec.latency_bounds_ms[0];
+                    let app_steps = std::mem::take(&mut steps[slot]);
+                    let explore_frames =
+                        app_steps.iter().filter(|s| s.explored).count();
+                    let mut stats = PolicyStats::new();
+                    for s in &app_steps {
+                        stats.observe(s.reward, s.latency_ms, bound);
+                    }
+                    let even_ts = ladders[slot].set(local_even_rung);
+                    let oracle = oracle_best(even_ts, cfg.frames, bound);
+                    let oracle_fid = oracle.avg_reward.max(1e-9);
+                    let outcome = RunOutcome {
+                        avg_reward: stats.avg_reward(),
+                        avg_violation_ms: stats.avg_violation_ms(),
+                        max_violation_ms: stats.max_violation_ms(),
+                        violation_rate: stats.violation_rate(),
+                        explore_frames,
+                        steps: app_steps,
+                    };
+                    let report = AppReport {
+                        index: i,
+                        name: app.spec.name.clone(),
+                        seed: cfg.seed.wrapping_add(i as u64),
+                        profile: cfg.profile_of(i).name(),
+                        stages: app.spec.stages.len(),
+                        knobs: app.spec.num_vars(),
+                        branches: app.spec.branches().len(),
+                        bound_ms: bound,
+                        avg_fidelity: outcome.avg_reward,
+                        oracle_fidelity: oracle.avg_reward,
+                        fidelity_vs_oracle: outcome.avg_reward / oracle_fid,
+                        avg_violation_ms: outcome.avg_violation_ms,
+                        max_violation_ms: outcome.max_violation_ms,
+                        violation_rate: outcome.violation_rate,
+                        post_warmup_bound_met_frac: outcome
+                            .bound_met_frac_after(cfg.warmup_frames, bound),
+                        robust_feasible_actions: even_ts
+                            .traces
+                            .iter()
+                            .filter(|t| t.frac_under(bound) >= 0.95)
+                            .count(),
+                        convergence_frame: outcome
+                            .convergence_frame(50, 0.9 * oracle.avg_reward),
+                        explore_frames,
+                        avg_cores: core_frames[slot] as f64 / cfg.frames as f64,
+                        stats,
+                    };
+                    if rep_tx.send(report).is_err() {
+                        return;
+                    }
+                }
             });
         }
+        drop(res_tx);
+        drop(rep_tx);
+
+        // ---- scheduler main loop ---------------------------------------
+        let mut shared = SharedCluster::even(cfg.cluster.clone(), cfg.apps);
+        let mut curves: Vec<Vec<f64>> = vec![Vec::new(); cfg.apps];
+        for e in 0..epochs {
+            let dynamic_ready = cfg.mode == FleetMode::Dynamic
+                && e >= cfg.scheduler.warmup_epochs
+                && curves.iter().all(|c| c.len() == levels.len());
+            let rungs: Vec<usize> = if dynamic_ready {
+                scheduler::allocate(&curves, &levels, total)
+            } else {
+                vec![even_rung; cfg.apps]
+            };
+            let cores: Vec<usize> = rungs.iter().map(|&r| levels[r]).collect();
+            // the shared cluster enforces the budget + floor invariants;
+            // the report quotes the quotas it actually installed
+            shared.set_quotas(&cores);
+            let predicted_utility: Vec<f64> = rungs
+                .iter()
+                .enumerate()
+                .map(|(a, &r)| curves[a].get(r).copied().unwrap_or(0.0))
+                .collect();
+            allocations.push(AllocationFrame {
+                epoch: e,
+                start_frame: e * epoch_frames,
+                levels: rungs.clone(),
+                cores: shared.quotas().to_vec(),
+                predicted_utility,
+            });
+            let lo = e * epoch_frames;
+            let hi = (lo + epoch_frames).min(cfg.frames);
+            for tx in &cmd_txs {
+                tx.send(Cmd::Epoch { lo, hi, rungs: rungs.clone() })
+                    .expect("worker alive");
+            }
+            for _ in 0..cfg.apps {
+                // bounded wait: a panicking worker drops only its own
+                // sender (its siblings keep theirs), so a plain recv()
+                // would hang forever masking the original panic — time
+                // out far above any epoch length and fail loudly instead
+                let r = res_rx
+                    .recv_timeout(std::time::Duration::from_secs(300))
+                    .expect("a fleet worker died mid-epoch (see its panic above)");
+                curves[r.app] = r.curve;
+            }
+        }
+        for tx in &cmd_txs {
+            tx.send(Cmd::Finish).expect("worker alive");
+        }
     });
-    let apps: Vec<AppReport> = slots
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("every fleet slot is filled before the scope ends"))
-        .collect();
+
+    let mut apps: Vec<AppReport> = rep_rx.iter().collect();
+    assert_eq!(apps.len(), cfg.apps, "every fleet member must report");
+    apps.sort_by_key(|r| r.index);
 
     let n = apps.len() as f64;
     let avg_ratio = apps.iter().map(|a| a.fidelity_vs_oracle).sum::<f64>() / n;
@@ -345,12 +617,15 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     FleetReport {
         frames: cfg.frames,
         seed: cfg.seed,
-        epsilon: cfg
-            .epsilon
-            .unwrap_or_else(|| TunerConfig::epsilon_for_horizon(cfg.frames)),
+        mode: cfg.mode,
+        epsilon: eps,
         warmup_frames: cfg.warmup_frames,
         bound_headroom: cfg.bound_headroom,
-        cores_per_app: cluster_slice(&cfg.cluster, cfg.apps).total_cores(),
+        cores_per_app: even,
+        total_cores: total,
+        fairness_floor: floor,
+        levels,
+        allocations,
         avg_fidelity_vs_oracle: avg_ratio,
         min_bound_met_frac: min_met,
         apps_meeting_slo: meeting,
@@ -379,7 +654,7 @@ mod tests {
         let total = Cluster::default(); // 15 x 8 = 120 cores
         assert_eq!(cluster_slice(&total, 8).total_cores(), 15);
         assert_eq!(cluster_slice(&total, 1).total_cores(), 120);
-        // the fleet never oversubscribes the shared budget ...
+        // the slice never oversubscribes the shared budget ...
         for apps in 1..=15 {
             assert!(cluster_slice(&total, apps).total_cores() * apps <= 120, "{apps}");
         }
@@ -403,13 +678,22 @@ mod tests {
         for (i, a) in report.apps.iter().enumerate() {
             assert_eq!(a.index, i);
             assert_eq!(a.seed, 42 + i as u64);
+            assert_eq!(a.profile, "balanced");
             assert!(a.bound_ms > 0.0);
             assert!((0.0..=1.0).contains(&a.post_warmup_bound_met_frac));
             assert!((0.0..=1.0).contains(&a.violation_rate));
             assert!(a.avg_fidelity > 0.0, "app {i} learned nothing");
+            // static mode: every app held the even share throughout
+            assert_eq!(a.avg_cores, report.cores_per_app as f64, "app {i}");
         }
         assert!(report.avg_fidelity_vs_oracle > 0.0);
         assert!(report.min_bound_met_frac <= 1.0);
+        // one allocation record per epoch, all at the even share
+        assert_eq!(report.allocations.len(), 3); // 120 frames / 50-frame epochs
+        for alloc in &report.allocations {
+            assert_eq!(alloc.cores, vec![report.cores_per_app; 3]);
+            assert!(alloc.total_cores() <= report.total_cores);
+        }
     }
 
     #[test]
@@ -417,11 +701,14 @@ mod tests {
         let report = run_fleet(&small_cfg());
         let j = report.to_json();
         assert_eq!(j.req("apps").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("mode").unwrap().as_str().unwrap(), "static");
         let agg = j.req("aggregate").unwrap();
         assert!(agg.req("min_post_warmup_bound_met_frac").unwrap().as_f64().is_ok());
         let details = j.req("apps_detail").unwrap().as_arr().unwrap();
         assert_eq!(details.len(), 3);
         assert_eq!(details[1].req("index").unwrap().as_usize().unwrap(), 1);
+        let allocs = j.req("allocations").unwrap().as_arr().unwrap();
+        assert_eq!(allocs.len(), report.allocations.len());
         // round-trips through the in-tree parser
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.req("seed").unwrap().as_u64().unwrap(), 42);
@@ -436,5 +723,22 @@ mod tests {
         let a = run_fleet(&a_cfg);
         let b = run_fleet(&b_cfg);
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn heterogeneous_fleet_alternates_profiles() {
+        let cfg = FleetConfig {
+            apps: 4,
+            frames: 60,
+            seed: 9,
+            configs_per_app: 6,
+            threads: 2,
+            heterogeneous: true,
+            load_shift_frame: Some(30),
+            ..Default::default()
+        };
+        let report = run_fleet(&cfg);
+        let profiles: Vec<&str> = report.apps.iter().map(|a| a.profile).collect();
+        assert_eq!(profiles, vec!["light", "heavy", "light", "heavy"]);
     }
 }

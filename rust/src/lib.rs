@@ -50,6 +50,7 @@ pub mod fleet;
 pub mod learner;
 pub mod metrics;
 pub mod runtime;
+pub mod scheduler;
 pub mod simulator;
 pub mod trace;
 pub mod tuner;

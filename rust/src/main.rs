@@ -96,12 +96,21 @@ commands:
   tune --app APP [--epsilon E] [--bound MS] [--frames N]
        [--backend xla|native] [--trace-dir DIR]
   figures (--all | --fig N | --claims) [--out DIR] [--frames N]
+        [--gen SEEDS]
   engine --app APP [--frames N] [--bound MS] [--period N]
   fleet [--apps N] [--frames N] [--seed N] [--configs N] [--epsilon E]
         [--warmup N] [--headroom F] [--blend K] [--threads N] [--out FILE]
+        [--mode static|dynamic] [--hetero] [--shift FRAME] [--epoch N]
+        [--floor CORES]
+  schedule [--apps N] [--frames N] [--seed N] [--epoch N] [--floor CORES]
+        [--candidates N] [--realtime SCALE] [--uniform]
 
 APP is pose, motion-sift, or gen:SEED (a procedurally generated
-pipeline; see the workloads module).";
+pipeline; see the workloads module). `fleet` tunes N generated apps on
+ONE shared cluster (static even shares, or --mode dynamic for
+marginal-utility core reallocation every --epoch frames); `schedule`
+streams N generated apps live through the threaded engine under the
+same scheduler.";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -110,7 +119,7 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let cmd = argv[0].clone();
-    let args = Args::parse(&argv[1..], &["graph", "all", "claims"])?;
+    let args = Args::parse(&argv[1..], &["graph", "all", "claims", "hetero", "uniform"])?;
 
     let run_cfg = RunConfig::load_or_default(args.get("config").map(std::path::Path::new))?;
     let spec_dir = find_spec_dir(args.get("specs").map(std::path::Path::new))?;
@@ -122,6 +131,7 @@ fn main() -> Result<()> {
         "figures" => cmd_figures(&args),
         "engine" => cmd_engine(&args, &spec_dir),
         "fleet" => cmd_fleet(&args),
+        "schedule" => cmd_schedule(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
@@ -156,27 +166,57 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if let Some(n) = args.get_parse::<usize>("threads")? {
         cfg.threads = n;
     }
+    if let Some(m) = args.get("mode") {
+        cfg.mode = iptune::fleet::FleetMode::parse(m)?;
+    }
+    if args.has("hetero") {
+        cfg.heterogeneous = true;
+    }
+    if let Some(f) = args.get_parse::<usize>("shift")? {
+        cfg.load_shift_frame = Some(f);
+    }
+    if let Some(e) = args.get_parse::<usize>("epoch")? {
+        cfg.scheduler.epoch_frames = e;
+    }
+    if let Some(f) = args.get_parse::<usize>("floor")? {
+        cfg.scheduler.fairness_floor = f;
+    }
+    if cfg.apps == 0 || cfg.apps > cfg.cluster.total_cores() {
+        bail!(
+            "--apps {} out of range: the shared {}-core cluster supports 1..={} co-tenants",
+            cfg.apps,
+            cfg.cluster.total_cores(),
+            cfg.cluster.total_cores()
+        );
+    }
+    if cfg.load_shift_frame.is_some() && !cfg.heterogeneous {
+        bail!("--shift only affects heavy apps; pass --hetero so the fleet has some");
+    }
     let out = PathBuf::from(args.get("out").unwrap_or("fleet_report.json"));
 
     eprintln!(
-        "fleet: tuning {} generated apps x {} frames (seed {}, {} cores/app) ...",
+        "fleet[{}]: tuning {} generated apps x {} frames (seed {}, {} shared cores, even share {}) ...",
+        cfg.mode.name(),
         cfg.apps,
         cfg.frames,
         cfg.seed,
-        iptune::fleet::cluster_slice(&cfg.cluster, cfg.apps).total_cores()
+        cfg.cluster.total_cores(),
+        cfg.cluster.total_cores() / cfg.apps
     );
     let report = iptune::fleet::run_fleet(&cfg);
     println!(
-        "{:<8} {:>7} {:>6} {:>8} {:>10} {:>10} {:>10} {:>12} {:>11}",
-        "app", "stages", "knobs", "bound", "fidelity", "oracle", "%oracle", "bound-met%", "conv-frame"
+        "{:<8} {:<9} {:>7} {:>6} {:>8} {:>7} {:>10} {:>10} {:>10} {:>12} {:>11}",
+        "app", "profile", "stages", "knobs", "bound", "cores", "fidelity", "oracle", "%oracle", "bound-met%", "conv-frame"
     );
     for a in &report.apps {
         println!(
-            "{:<8} {:>7} {:>6} {:>8.1} {:>10.3} {:>10.3} {:>9.1}% {:>11.1}% {:>11}",
+            "{:<8} {:<9} {:>7} {:>6} {:>8.1} {:>7.1} {:>10.3} {:>10.3} {:>9.1}% {:>11.1}% {:>11}",
             a.name,
+            a.profile,
             a.stages,
             a.knobs,
             a.bound_ms,
+            a.avg_cores,
             a.avg_fidelity,
             a.oracle_fidelity,
             100.0 * a.fidelity_vs_oracle,
@@ -185,12 +225,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "fleet: avg {:.1}% of oracle | min bound-met {:.1}% | {}/{} apps meet the {:.0}% SLO",
+        "fleet[{}]: avg {:.1}% of even-share oracle | min bound-met {:.1}% | {}/{} apps meet the {:.0}% SLO | {} reallocation epochs",
+        report.mode.name(),
         100.0 * report.avg_fidelity_vs_oracle,
         100.0 * report.min_bound_met_frac,
         report.apps_meeting_slo,
         report.apps.len(),
         100.0 * iptune::fleet::FLEET_SLO_FRAC,
+        report.allocations.len(),
     );
     report.save(&out)?;
     println!("report -> {}", out.display());
@@ -203,6 +245,79 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             out.display()
         );
     }
+    Ok(())
+}
+
+/// Live multi-app streaming under the fleet scheduler: N generated apps
+/// run concurrently through the threaded engine; their latency models are
+/// learned online from the live records, and the shared cores are
+/// re-divided by marginal utility every epoch.
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let mut cfg = iptune::scheduler::live::LiveConfig::default();
+    if let Some(n) = args.get_parse::<usize>("apps")? {
+        cfg.apps = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("frames")? {
+        cfg.frames = n;
+    }
+    if let Some(n) = args.get_parse::<u64>("seed")? {
+        cfg.seed = n;
+    }
+    if let Some(e) = args.get_parse::<usize>("epoch")? {
+        cfg.scheduler.epoch_frames = e;
+    }
+    if let Some(f) = args.get_parse::<usize>("floor")? {
+        cfg.scheduler.fairness_floor = f;
+    }
+    if let Some(n) = args.get_parse::<usize>("candidates")? {
+        cfg.candidates = n;
+    }
+    if let Some(s) = args.get_parse::<f64>("realtime")? {
+        cfg.realtime_scale = s;
+    }
+    if args.has("uniform") {
+        cfg.heterogeneous = false;
+    }
+    eprintln!(
+        "schedule: streaming {} generated apps x {} frames live (seed {}, epoch {} frames, {} shared cores) ...",
+        cfg.apps,
+        cfg.frames,
+        cfg.seed,
+        cfg.scheduler.epoch_frames,
+        cfg.cluster.total_cores(),
+    );
+    let report = iptune::scheduler::live::run_live(&cfg)?;
+    println!(
+        "{:<8} {:<9} {:>8} {:>8} {:>12} {:>10} {:>12} {:>11}",
+        "app", "profile", "frames", "bound", "avg-latency", "fidelity", "bound-met%", "final-cores"
+    );
+    for a in &report.apps {
+        println!(
+            "{:<8} {:<9} {:>8} {:>8.1} {:>10.1}ms {:>10.3} {:>11.1}% {:>11}",
+            a.name,
+            a.profile,
+            a.frames,
+            a.bound_ms,
+            a.avg_latency_ms,
+            a.avg_fidelity,
+            100.0 * a.bound_met_frac,
+            a.final_cores,
+        );
+    }
+    for alloc in &report.allocations {
+        println!(
+            "epoch {:>3} @ frame {:>5}: cores {:?} (sum {} / {})",
+            alloc.epoch,
+            alloc.start_frame,
+            alloc.cores,
+            alloc.total_cores(),
+            report.total_cores,
+        );
+    }
+    println!(
+        "schedule: ladder {:?}, fairness floor {} cores",
+        report.levels, report.fairness_floor
+    );
     Ok(())
 }
 
@@ -321,6 +436,21 @@ fn cmd_figures(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get("out").unwrap_or("results"));
     let mut ctx = experiments::default_ctx(Some(&out))?;
     ctx.frames = args.get_parse::<usize>("frames")?.unwrap_or(1000);
+    if let Some(gen) = args.get("gen") {
+        // comma-separated seeds (or gen:SEED names) for the
+        // scenario-diversity variants; empty disables them
+        ctx.generated = gen
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                if s.starts_with("gen") {
+                    s.to_string()
+                } else {
+                    format!("gen:{s}")
+                }
+            })
+            .collect();
+    }
     let mut ran = false;
     if args.has("all") {
         experiments::run_all(&ctx)?;

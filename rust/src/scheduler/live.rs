@@ -1,0 +1,325 @@
+//! Live multi-app streaming under the fleet scheduler — the `schedule`
+//! CLI subcommand.
+//!
+//! Where the simulated fleet ([`fleet`](crate::fleet)) replays ladder
+//! traces, this path runs every co-tenant app through the *threaded
+//! streaming engine* ([`engine`](crate::engine)) concurrently: each app's
+//! stages execute as real OS threads with bounded connectors, a
+//! per-app forwarder thread multiplexes the finished frames into one
+//! channel, and the scheduler thread learns each app's latency model
+//! online from the live records. Every reallocation epoch it rebuilds
+//! the utility curves, water-fills the shared core pool, and *applies*
+//! each app's new quota by retuning the running pipeline: the chosen
+//! configuration's parallelism knobs are clamped to what the quota would
+//! grant ([`effective_candidates`]) and installed via the stream's
+//! detached [`KnobHandle`] — the engine never pauses.
+//!
+//! Unlike the trace-based fleet, live runs are **not** bit-deterministic:
+//! frames already inside the bounded connectors when a retune lands run
+//! under the old knobs, and how many there are depends on OS scheduling.
+//! The structural invariants (quota sums, fairness floors, frame counts)
+//! hold regardless and are what the tests assert.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::apps::App;
+use crate::engine::{spawn_stream, EngineConfig, FrameRecord, KnobHandle};
+use crate::runtime::native::NativeBackend;
+use crate::runtime::Backend;
+use crate::scheduler::{self, AllocationFrame, SchedulerConfig};
+use crate::simulator::{Cluster, SharedCluster};
+use crate::tuner::budgeted::effective_candidates;
+use crate::util::Rng;
+use crate::workloads::{AppProfile, WorkloadConfig};
+
+/// Live run configuration.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    pub apps: usize,
+    /// Frames each app streams.
+    pub frames: usize,
+    pub seed: u64,
+    /// Random candidate configurations per app (plus the defaults).
+    pub candidates: usize,
+    /// Alternate Light/Heavy profiles instead of Balanced ones.
+    pub heterogeneous: bool,
+    /// Wall-clock seconds per simulated millisecond (0 = as fast as the
+    /// channels allow; small values keep execution genuinely concurrent).
+    pub realtime_scale: f64,
+    /// The controller solves against `bound × headroom`.
+    pub bound_headroom: f64,
+    pub cluster: Cluster,
+    pub scheduler: SchedulerConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            apps: 4,
+            frames: 300,
+            seed: 7,
+            candidates: 48,
+            heterogeneous: true,
+            realtime_scale: 0.0,
+            bound_headroom: 0.90,
+            cluster: Cluster::default(),
+            scheduler: SchedulerConfig::default(),
+            workload: WorkloadConfig::default(),
+        }
+    }
+}
+
+/// Per-app outcome of a live run.
+#[derive(Debug, Clone)]
+pub struct LiveAppSummary {
+    pub index: usize,
+    pub name: String,
+    pub profile: &'static str,
+    pub bound_ms: f64,
+    pub frames: usize,
+    pub avg_latency_ms: f64,
+    pub avg_fidelity: f64,
+    pub bound_met_frac: f64,
+    /// Core quota at the final epoch.
+    pub final_cores: usize,
+}
+
+/// Outcome of a live scheduled run.
+#[derive(Debug, Clone)]
+pub struct LiveReport {
+    pub apps: Vec<LiveAppSummary>,
+    pub allocations: Vec<AllocationFrame>,
+    pub levels: Vec<usize>,
+    pub total_cores: usize,
+    pub fairness_floor: usize,
+}
+
+/// Stream `cfg.apps` generated pipelines through the threaded engine
+/// concurrently, learning each latency model online and reallocating the
+/// shared cores every `scheduler.epoch_frames` frames.
+pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
+    assert!(cfg.apps > 0 && cfg.frames > 0);
+    let total = cfg.cluster.total_cores();
+    assert!(cfg.apps <= total, "one core per app minimum");
+    let even = (total / cfg.apps).max(1);
+    let floor = cfg.scheduler.floor_cores(total, cfg.apps);
+    let levels = scheduler::core_levels(
+        total,
+        cfg.apps,
+        floor,
+        cfg.scheduler.ladder_rungs,
+        cfg.scheduler.max_boost,
+    );
+    let even_rung = levels
+        .iter()
+        .position(|&l| l == even)
+        .expect("core_levels always contains the even share");
+    let epoch_frames = cfg.scheduler.epoch_frames.max(1);
+
+    // ---- spawn every app through the engine + one forwarder each -------
+    let (rec_tx, rec_rx) = channel::<(usize, FrameRecord)>();
+    let mut apps: Vec<Arc<App>> = Vec::with_capacity(cfg.apps);
+    let mut knob_handles: Vec<KnobHandle> = Vec::with_capacity(cfg.apps);
+    let mut profiles: Vec<AppProfile> = Vec::with_capacity(cfg.apps);
+    for i in 0..cfg.apps {
+        let profile = AppProfile::for_fleet_member(cfg.heterogeneous, i, cfg.workload.profile);
+        let mut wcfg = cfg.workload.clone();
+        wcfg.profile = profile;
+        let slice = Cluster {
+            servers: 1,
+            cores_per_server: even,
+            comm_ms_per_frame: cfg.cluster.comm_ms_per_frame,
+        };
+        let app = Arc::new(crate::workloads::generate_on(
+            cfg.seed.wrapping_add(i as u64),
+            &wcfg,
+            &slice,
+        ));
+        let handle = spawn_stream(
+            Arc::clone(&app),
+            app.spec.defaults(),
+            EngineConfig {
+                frames: cfg.frames,
+                realtime_scale: cfg.realtime_scale,
+                queue_capacity: 8,
+                seed: cfg.seed.wrapping_add(0x11CE ^ i as u64),
+            },
+        );
+        knob_handles.push(handle.knob_handle());
+        let tx = rec_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("forward-{}", app.spec.name))
+            .spawn(move || {
+                while let Ok(rec) = handle.records.recv() {
+                    if tx.send((i, rec)).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn forwarder thread");
+        apps.push(app);
+        profiles.push(profile);
+    }
+    drop(rec_tx);
+
+    // ---- per-app scheduler state: model, candidate grid, rewards -------
+    let mut backends: Vec<NativeBackend> =
+        apps.iter().map(|a| NativeBackend::structured(&a.spec)).collect();
+    // effective (budget-clamped) candidates per app per rung
+    let mut cand_at: Vec<Vec<Vec<Vec<f64>>>> = Vec::with_capacity(cfg.apps);
+    let mut rewards: Vec<Vec<f64>> = Vec::with_capacity(cfg.apps);
+    for (i, app) in apps.iter().enumerate() {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(0xCAFE).wrapping_add(i as u64));
+        let mut grid: Vec<Vec<f64>> = (0..cfg.candidates)
+            .map(|_| {
+                let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
+                app.spec.denormalize(&u)
+            })
+            .collect();
+        grid.push(app.spec.defaults());
+        let content = app.model.content(0);
+        rewards.push(grid.iter().map(|ks| app.model.fidelity(ks, &content)).collect());
+        cand_at.push(effective_candidates(app, &grid, &levels));
+    }
+
+    let bounds: Vec<f64> = apps.iter().map(|a| a.spec.latency_bounds_ms[0]).collect();
+    let mut shared = SharedCluster::even(cfg.cluster.clone(), cfg.apps);
+    let mut rungs = vec![even_rung; cfg.apps];
+    let mut allocations: Vec<AllocationFrame> = vec![AllocationFrame {
+        epoch: 0,
+        start_frame: 0,
+        levels: rungs.clone(),
+        cores: rungs.iter().map(|&r| levels[r]).collect(),
+        predicted_utility: vec![0.0; cfg.apps],
+    }];
+
+    // ---- consume live records, learn, reallocate at epoch boundaries ---
+    let mut frames_seen = vec![0usize; cfg.apps];
+    let mut lat_sum = vec![0.0f64; cfg.apps];
+    let mut fid_sum = vec![0.0f64; cfg.apps];
+    let mut met = vec![0usize; cfg.apps];
+    let mut boundary = epoch_frames;
+    while let Ok((i, rec)) = rec_rx.recv() {
+        let u = apps[i].spec.normalize(&rec.knobs);
+        let (y, off) = backends[i].group_map().targets(&rec.stage_ms, rec.end_to_end_ms);
+        backends[i].update(&u, &y);
+        backends[i].observe_offset(off);
+        frames_seen[i] += 1;
+        lat_sum[i] += rec.end_to_end_ms;
+        fid_sum[i] += rec.fidelity;
+        if rec.end_to_end_ms <= bounds[i] {
+            met[i] += 1;
+        }
+
+        // an epoch completes when every app has streamed past the boundary
+        let all_past = frames_seen.iter().all(|&n| n >= boundary.min(cfg.frames));
+        if all_past && boundary < cfg.frames {
+            // one batched prediction per (app, rung): the curve point and
+            // the best action it came from are recorded together so the
+            // retune below never re-predicts the grid
+            let mut curves: Vec<Vec<f64>> = Vec::with_capacity(cfg.apps);
+            let mut best_at: Vec<Vec<usize>> = Vec::with_capacity(cfg.apps);
+            for a in 0..cfg.apps {
+                let target = bounds[a] * cfg.bound_headroom;
+                let mut curve = Vec::with_capacity(levels.len());
+                let mut bests = Vec::with_capacity(levels.len());
+                for l in 0..levels.len() {
+                    let costs = backends[a].predict(&cand_at[a][l]);
+                    let best =
+                        crate::runtime::constrained_argmax(&costs, &rewards[a], target);
+                    curve.push(if costs[best] <= target { rewards[a][best] } else { 0.0 });
+                    bests.push(best);
+                }
+                curves.push(curve);
+                best_at.push(bests);
+            }
+            rungs = scheduler::allocate(&curves, &levels, total);
+            let cores: Vec<usize> = rungs.iter().map(|&r| levels[r]).collect();
+            shared.set_quotas(&cores);
+            // retune every running pipeline to the best predicted-feasible
+            // config at its new quota, parallelism clamped to the grant
+            for a in 0..cfg.apps {
+                let pick = best_at[a][rungs[a]];
+                let ks = apps[a].spec.denormalize(&cand_at[a][rungs[a]][pick]);
+                knob_handles[a].set(ks);
+            }
+            allocations.push(AllocationFrame {
+                epoch: allocations.len(),
+                start_frame: boundary,
+                levels: rungs.clone(),
+                // read back from the shared cluster: the bookkeeper that
+                // enforced the budget is the one the report quotes
+                cores: shared.quotas().to_vec(),
+                predicted_utility: rungs
+                    .iter()
+                    .enumerate()
+                    .map(|(a, &r)| curves[a][r])
+                    .collect(),
+            });
+            boundary += epoch_frames;
+        }
+    }
+
+    let summaries: Vec<LiveAppSummary> = (0..cfg.apps)
+        .map(|i| {
+            let n = frames_seen[i].max(1) as f64;
+            LiveAppSummary {
+                index: i,
+                name: apps[i].spec.name.clone(),
+                profile: profiles[i].name(),
+                bound_ms: bounds[i],
+                frames: frames_seen[i],
+                avg_latency_ms: lat_sum[i] / n,
+                avg_fidelity: fid_sum[i] / n,
+                bound_met_frac: met[i] as f64 / n,
+                final_cores: levels[rungs[i]],
+            }
+        })
+        .collect();
+    Ok(LiveReport {
+        apps: summaries,
+        allocations,
+        levels,
+        total_cores: total,
+        fairness_floor: floor,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_fleet_streams_and_reallocates() {
+        let cfg = LiveConfig {
+            apps: 3,
+            frames: 90,
+            seed: 5,
+            candidates: 12,
+            heterogeneous: true,
+            realtime_scale: 0.0,
+            scheduler: SchedulerConfig { epoch_frames: 30, ..Default::default() },
+            ..Default::default()
+        };
+        let report = run_live(&cfg).unwrap();
+        assert_eq!(report.apps.len(), 3);
+        for a in &report.apps {
+            assert_eq!(a.frames, 90, "app {} lost frames", a.index);
+            assert!(a.avg_latency_ms > 0.0);
+            assert!((0.0..=1.0).contains(&a.avg_fidelity));
+            assert!(a.final_cores >= report.fairness_floor);
+        }
+        assert!(!report.allocations.is_empty());
+        for alloc in &report.allocations {
+            assert!(alloc.total_cores() <= report.total_cores);
+            assert!(alloc.cores.iter().all(|&c| c >= report.fairness_floor));
+        }
+        // profiles alternate
+        assert_eq!(report.apps[0].profile, "light");
+        assert_eq!(report.apps[1].profile, "heavy");
+    }
+}

@@ -1,0 +1,301 @@
+//! Fleet-level resource scheduler: one shared, contended cluster and
+//! dynamic cross-app core reallocation.
+//!
+//! The paper tunes a single perception application against a dedicated
+//! cluster; a production fleet co-tenants many pipelines on the same
+//! cores. This module owns that global decision: every *reallocation
+//! epoch* it asks each app's tuner "what fidelity could you hold at k
+//! cores?" ([`BudgetedController::utility_at`] — answered from the
+//! learned latency model under the monotone resource prior, not by
+//! re-exploring) and then runs a **marginal-utility water-filling** pass:
+//! starting from a fairness floor, the next core chunk always goes to the
+//! app that buys the most fidelity with it, subject to every app's
+//! latency bound. Related systems learn the same joint decision end to
+//! end (Chanakya, arXiv 2106.05665) or reallocate cores across concurrent
+//! perception pipelines by marginal utility (arXiv 2207.13280); here the
+//! utility curves fall out of the paper's own latency models, so the
+//! scheduler needs no training of its own.
+//!
+//! Determinism: [`allocate`] is a pure function of the utility curves,
+//! and curves are pure functions of per-app tuner state, so fleet runs
+//! are reproducible regardless of worker-thread count (asserted by
+//! `rust/tests/scheduler_fleet.rs`).
+//!
+//! [`BudgetedController::utility_at`]:
+//!     crate::tuner::BudgetedController::utility_at
+
+pub mod live;
+
+use crate::util::json::Json;
+
+/// Scheduler policy knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Frames between reallocations.
+    pub epoch_frames: usize,
+    /// Epochs pinned at the even share before the first reallocation
+    /// (the latency models start empty; scheduling on noise helps no one).
+    pub warmup_epochs: usize,
+    /// Minimum cores every app keeps; 0 → half the even share.
+    pub fairness_floor: usize,
+    /// Ladder rungs generated between the floor and the cap.
+    pub ladder_rungs: usize,
+    /// Cap on any single app's allocation, as a multiple of the even
+    /// share (bounded by what the floor leaves available).
+    pub max_boost: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            epoch_frames: 50,
+            warmup_epochs: 1,
+            fairness_floor: 0,
+            ladder_rungs: 6,
+            max_boost: 3.0,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// The effective fairness floor for a fleet of `apps` on `total`
+    /// cores: the configured floor, defaulted to half the even share and
+    /// never above it.
+    pub fn floor_cores(&self, total: usize, apps: usize) -> usize {
+        let even = (total / apps.max(1)).max(1);
+        let floor = if self.fairness_floor > 0 {
+            self.fairness_floor
+        } else {
+            (even / 2).max(1)
+        };
+        floor.min(even).max(1)
+    }
+}
+
+/// The shared core ladder for a fleet of `apps` on `total` cores: rungs
+/// from the fairness floor up to the boost cap, geometrically spaced,
+/// always containing the even share exactly (so the static baseline sits
+/// on a rung).
+pub fn core_levels(total: usize, apps: usize, floor: usize, rungs: usize, boost: f64) -> Vec<usize> {
+    let even = (total / apps.max(1)).max(1);
+    let floor = floor.clamp(1, even);
+    let cap = ((even as f64 * boost).ceil() as usize)
+        .min(total.saturating_sub((apps.saturating_sub(1)) * floor))
+        .max(even);
+    let mut levels = std::collections::BTreeSet::new();
+    levels.insert(floor);
+    levels.insert(even);
+    levels.insert(cap);
+    if rungs > 1 && cap > floor {
+        let ratio = cap as f64 / floor as f64;
+        for i in 0..rungs {
+            let lvl = (floor as f64 * ratio.powf(i as f64 / (rungs - 1) as f64)).round()
+                as usize;
+            levels.insert(lvl.clamp(floor, cap));
+        }
+    }
+    levels.into_iter().collect()
+}
+
+/// Marginal-utility water-filling over a shared rung ladder.
+///
+/// `curves[a][l]` is app `a`'s predicted feasible fidelity at rung `l`
+/// (from its learned latency model). Every app starts at the floor rung;
+/// the best affordable jump — the one with the highest fidelity gain per
+/// core — is applied repeatedly until no strictly positive gain fits the
+/// budget. Ties break deterministically toward the lower app index and
+/// the lower target rung. A final top-up pass raises the lowest-allocated
+/// apps back toward the even share while cores sit idle, so uninformative
+/// curves degrade to the static baseline instead of starving the fleet.
+///
+/// Returns one rung index per app. Invariants (tested): allocated cores
+/// never exceed `total`, and every app keeps at least the floor rung.
+pub fn allocate(curves: &[Vec<f64>], levels: &[usize], total: usize) -> Vec<usize> {
+    let napps = curves.len();
+    assert!(napps > 0, "allocate needs at least one app");
+    assert!(!levels.is_empty(), "allocate needs a rung ladder");
+    for c in curves {
+        assert_eq!(c.len(), levels.len(), "curve shape mismatch");
+    }
+    let mut lvl = vec![0usize; napps];
+    let mut used = napps * levels[0];
+    assert!(used <= total, "floor rung oversubscribes the cluster");
+
+    loop {
+        let mut best: Option<(f64, usize, usize)> = None; // (gain/core, app, rung)
+        for a in 0..napps {
+            for j in (lvl[a] + 1)..levels.len() {
+                if used - levels[lvl[a]] + levels[j] > total {
+                    continue;
+                }
+                let du = curves[a][j] - curves[a][lvl[a]];
+                if du <= 1e-12 {
+                    continue;
+                }
+                let g = du / (levels[j] - levels[lvl[a]]) as f64;
+                if best.map_or(true, |(bg, _, _)| g > bg) {
+                    best = Some((g, a, j));
+                }
+            }
+        }
+        match best {
+            None => break,
+            Some((_, a, j)) => {
+                used = used - levels[lvl[a]] + levels[j];
+                lvl[a] = j;
+            }
+        }
+    }
+
+    // top-up: while cores sit idle, raise the lowest-allocated app back
+    // toward the even share (uninformative curves degrade to ~static)
+    let even = total / napps;
+    loop {
+        let mut cand: Option<(usize, usize, usize)> = None; // (cores, app, rung)
+        for a in 0..napps {
+            let j = lvl[a] + 1;
+            if j >= levels.len() || levels[j] > even {
+                continue;
+            }
+            if used - levels[lvl[a]] + levels[j] > total {
+                continue;
+            }
+            if cand.map_or(true, |(c, _, _)| levels[lvl[a]] < c) {
+                cand = Some((levels[lvl[a]], a, j));
+            }
+        }
+        match cand {
+            None => break,
+            Some((_, a, j)) => {
+                used = used - levels[lvl[a]] + levels[j];
+                lvl[a] = j;
+            }
+        }
+    }
+    lvl
+}
+
+/// One epoch's allocation decision, recorded in the fleet report.
+#[derive(Debug, Clone)]
+pub struct AllocationFrame {
+    pub epoch: usize,
+    /// First frame the allocation governs.
+    pub start_frame: usize,
+    /// Ladder rung index per app.
+    pub levels: Vec<usize>,
+    /// Core quota per app (the rung budgets).
+    pub cores: Vec<usize>,
+    /// Utility the scheduler predicted for each app at its rung (NaN-free;
+    /// warmup epochs record zeros).
+    pub predicted_utility: Vec<f64>,
+}
+
+impl AllocationFrame {
+    pub fn total_cores(&self) -> usize {
+        self.cores.iter().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .put("epoch", self.epoch)
+            .put("start_frame", self.start_frame)
+            .put(
+                "levels",
+                Json::Arr(self.levels.iter().map(|&l| Json::from(l)).collect()),
+            )
+            .put(
+                "cores",
+                Json::Arr(self.cores.iter().map(|&c| Json::from(c)).collect()),
+            )
+            .put("predicted_utility", Json::from_f64_slice(&self.predicted_utility))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_contains_floor_even_and_cap() {
+        let levels = core_levels(120, 8, 7, 6, 3.0);
+        assert_eq!(levels.first(), Some(&7));
+        assert!(levels.contains(&15), "{levels:?}");
+        assert_eq!(levels.last(), Some(&45));
+        assert!(levels.windows(2).all(|w| w[0] < w[1]), "{levels:?}");
+        // cap is bounded by what the floor leaves for everyone else
+        let tight = core_levels(32, 4, 8, 5, 4.0);
+        assert_eq!(tight, vec![8]); // floor == even == cap
+    }
+
+    #[test]
+    fn floor_cores_defaults_to_half_even_share() {
+        let cfg = SchedulerConfig::default();
+        assert_eq!(cfg.floor_cores(120, 8), 7);
+        assert_eq!(cfg.floor_cores(120, 4), 15);
+        let explicit = SchedulerConfig { fairness_floor: 4, ..Default::default() };
+        assert_eq!(explicit.floor_cores(120, 8), 4);
+        // never above the even share
+        assert_eq!(explicit.floor_cores(8, 4), 2);
+    }
+
+    #[test]
+    fn allocate_respects_budget_and_floor() {
+        let levels = vec![7, 10, 15, 21, 31, 45];
+        // two greedy apps, two flat ones
+        let steep = vec![0.0, 0.2, 0.4, 0.6, 0.8, 0.9];
+        let flat = vec![0.5, 0.5, 0.5, 0.5, 0.5, 0.5];
+        let curves = vec![steep.clone(), flat.clone(), steep, flat];
+        let lvl = allocate(&curves, &levels, 60);
+        let cores: Vec<usize> = lvl.iter().map(|&l| levels[l]).collect();
+        assert!(cores.iter().sum::<usize>() <= 60, "{cores:?}");
+        assert!(cores.iter().all(|&c| c >= 7), "{cores:?}");
+        // the steep apps got the spare cores
+        assert!(cores[0] > cores[1], "{cores:?}");
+        assert!(cores[2] > cores[3], "{cores:?}");
+    }
+
+    #[test]
+    fn allocate_flat_curves_degrade_to_even_share() {
+        let levels = vec![7, 10, 15, 21, 31, 45];
+        let curves = vec![vec![0.7; 6]; 8];
+        let lvl = allocate(&curves, &levels, 120);
+        let cores: Vec<usize> = lvl.iter().map(|&l| levels[l]).collect();
+        // top-up parks everyone on the even share
+        assert_eq!(cores, vec![15; 8], "{cores:?}");
+    }
+
+    #[test]
+    fn allocate_handles_nonconcave_curves() {
+        // utility jumps only at the top rung: the greedy pass must see the
+        // multi-rung jump, not stall at the flat middle
+        let levels = vec![4, 8, 16, 32];
+        let late = vec![0.1, 0.1, 0.1, 0.9];
+        let flat = vec![0.6, 0.6, 0.6, 0.6];
+        let lvl = allocate(&[late.clone(), flat.clone(), flat], &levels, 44);
+        assert_eq!(levels[lvl[0]], 32, "{lvl:?}");
+    }
+
+    #[test]
+    fn allocate_tie_breaks_toward_lower_index() {
+        let levels = vec![4, 8];
+        let want = vec![0.1, 0.9];
+        // only one app can be raised
+        let lvl = allocate(&[want.clone(), want.clone(), want], &levels, 16);
+        assert_eq!(lvl, vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn allocation_frame_json_roundtrips() {
+        let f = AllocationFrame {
+            epoch: 3,
+            start_frame: 150,
+            levels: vec![0, 2, 1],
+            cores: vec![7, 15, 10],
+            predicted_utility: vec![0.5, 0.25, 0.75],
+        };
+        assert_eq!(f.total_cores(), 32);
+        let j = Json::parse(&f.to_json().to_string()).unwrap();
+        assert_eq!(j.req("epoch").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("cores").unwrap().as_f64_vec().unwrap(), vec![7.0, 15.0, 10.0]);
+    }
+}

@@ -50,6 +50,78 @@ impl Cluster {
     }
 }
 
+/// Grant worker requests under an explicit core budget: requests are
+/// granted as-is when they fit; otherwise every request is scaled back
+/// proportionally (floored at one worker). Shared by [`ClusterSim`], the
+/// ladder tracer and the scheduler's effective-knob clamping so the three
+/// can never disagree about what a budget does to a configuration.
+///
+/// Known approximation: the one-worker-per-stage floor means a budget
+/// below the stage count still grants `num_stages` workers — a pipeline
+/// "parked" on a quota smaller than its stage count effectively
+/// time-shares residual cores the accounting doesn't see. This is the
+/// pipeline-parallel minimum (every stage must run somewhere); modeling
+/// true sub-stage-count time-multiplexing (a latency multiplier when
+/// stages outnumber cores) is a ROADMAP follow-on.
+pub fn grant_under(requested: &[usize], budget: usize) -> Vec<usize> {
+    let total: usize = requested.iter().sum();
+    if total <= budget {
+        return requested.to_vec();
+    }
+    let scale = budget as f64 / total as f64;
+    requested
+        .iter()
+        .map(|&r| ((r as f64 * scale).floor() as usize).max(1))
+        .collect()
+}
+
+/// One shared, contended cluster divided into per-app core quotas — the
+/// fleet scheduler's view of the testbed. Unlike the PR-1 era per-app
+/// slices (independent `Cluster` values that could drift out of sync with
+/// the physical budget), a `SharedCluster` owns the single core pool and
+/// validates every quota assignment against it.
+#[derive(Debug, Clone)]
+pub struct SharedCluster {
+    pub cluster: Cluster,
+    quotas: Vec<usize>,
+}
+
+impl SharedCluster {
+    /// Split `cluster` into `apps` even quotas (the static baseline).
+    pub fn even(cluster: Cluster, apps: usize) -> Self {
+        assert!(apps > 0, "shared cluster needs at least one tenant");
+        let q = (cluster.total_cores() / apps).max(1);
+        SharedCluster { quotas: vec![q; apps], cluster }
+    }
+
+    pub fn apps(&self) -> usize {
+        self.quotas.len()
+    }
+
+    pub fn quota(&self, app: usize) -> usize {
+        self.quotas[app]
+    }
+
+    pub fn quotas(&self) -> &[usize] {
+        &self.quotas
+    }
+
+    /// Install a new per-app quota vector (one reallocation epoch).
+    /// Panics if the vector oversubscribes the shared budget or starves
+    /// an app to zero — scheduler bugs must not be silently absorbed.
+    pub fn set_quotas(&mut self, quotas: &[usize]) {
+        assert_eq!(quotas.len(), self.quotas.len(), "quota vector shape");
+        let sum: usize = quotas.iter().sum();
+        assert!(
+            sum <= self.cluster.total_cores(),
+            "quotas {sum} oversubscribe the {}-core cluster",
+            self.cluster.total_cores()
+        );
+        assert!(quotas.iter().all(|&q| q >= 1), "zero-core quota");
+        self.quotas.copy_from_slice(quotas);
+    }
+}
+
 /// Result of simulating one frame.
 #[derive(Debug, Clone)]
 pub struct FrameResult {
@@ -70,11 +142,21 @@ pub struct ClusterSim {
     rng: crate::util::Rng,
     /// Per-frame fidelity measurement noise sigma.
     pub fidelity_sigma: f64,
+    /// Optional per-app core quota on a shared cluster: grants are made
+    /// against `min(core_budget, total_cores)` instead of the whole pool.
+    /// `None` (the default) reproduces the dedicated-cluster behavior.
+    core_budget: Option<usize>,
 }
 
 impl ClusterSim {
     pub fn new(cluster: Cluster, noise: NoiseModel, seed: u64) -> Self {
-        ClusterSim { cluster, noise, rng: crate::util::Rng::new(seed), fidelity_sigma: 0.02 }
+        ClusterSim {
+            cluster,
+            noise,
+            rng: crate::util::Rng::new(seed),
+            fidelity_sigma: 0.02,
+            core_budget: None,
+        }
     }
 
     /// Deterministic simulator (no latency or fidelity noise).
@@ -84,21 +166,34 @@ impl ClusterSim {
         sim
     }
 
-    /// Grant worker allocations under the core budget. Requests are
-    /// granted in stage order; when the total would exceed the budget,
-    /// later requests are scaled back proportionally (modeling core
+    /// Contended mode: grant against this app's quota of the shared
+    /// cluster rather than the full pool (the scheduler re-points this
+    /// each reallocation epoch).
+    pub fn with_core_budget(mut self, cores: usize) -> Self {
+        self.set_core_budget(Some(cores));
+        self
+    }
+
+    pub fn set_core_budget(&mut self, cores: Option<usize>) {
+        if let Some(c) = cores {
+            assert!(c >= 1, "core budget must grant at least one core");
+        }
+        self.core_budget = cores;
+    }
+
+    /// The budget grants are made against: the app's quota on a shared
+    /// cluster, or the whole pool on a dedicated one.
+    pub fn effective_budget(&self) -> usize {
+        let total = self.cluster.total_cores();
+        self.core_budget.map_or(total, |b| b.min(total))
+    }
+
+    /// Grant worker allocations under the effective core budget. Requests
+    /// are granted as-is when they fit; when the total would exceed the
+    /// budget, requests are scaled back proportionally (modeling core
     /// contention when an over-parallelized config lands on the cluster).
     pub fn grant_workers(&self, requested: &[usize]) -> Vec<usize> {
-        let budget = self.cluster.total_cores();
-        let total: usize = requested.iter().sum();
-        if total <= budget {
-            return requested.to_vec();
-        }
-        let scale = budget as f64 / total as f64;
-        requested
-            .iter()
-            .map(|&r| ((r as f64 * scale).floor() as usize).max(1))
-            .collect()
+        grant_under(requested, self.effective_budget())
     }
 
     /// Simulate one frame of `app` under raw knob vector `ks`.
@@ -190,6 +285,59 @@ mod tests {
         let total: usize = granted.iter().sum();
         assert!(total <= 8 + 2, "proportional floor may round up via max(1): {granted:?}");
         assert!(granted.iter().all(|&g| g >= 1));
+    }
+
+    #[test]
+    fn core_budget_caps_grants_on_shared_cluster() {
+        // a 120-core cluster with a 10-core quota behaves like a 10-core one
+        let quota = ClusterSim::deterministic(Cluster::default()).with_core_budget(10);
+        let dedicated = ClusterSim::deterministic(Cluster {
+            servers: 1,
+            cores_per_server: 10,
+            ..Default::default()
+        });
+        for req in [vec![4, 4, 4], vec![1, 1, 1], vec![32, 32]] {
+            assert_eq!(quota.grant_workers(&req), dedicated.grant_workers(&req));
+        }
+        // and the quota never exceeds the physical pool
+        let over = ClusterSim::deterministic(Cluster {
+            servers: 1,
+            cores_per_server: 8,
+            ..Default::default()
+        })
+        .with_core_budget(1000);
+        assert_eq!(over.effective_budget(), 8);
+    }
+
+    #[test]
+    fn quota_changes_latency_of_parallel_configs() {
+        let app = pose();
+        let ks = [1.0, 1e9, 32.0, 10.0, 10.0]; // heavily parallel request
+        let full = ClusterSim::deterministic(Cluster::default())
+            .run_frame(&app, &ks, 0)
+            .end_to_end_ms;
+        let squeezed = ClusterSim::deterministic(Cluster::default())
+            .with_core_budget(10)
+            .run_frame(&app, &ks, 0)
+            .end_to_end_ms;
+        assert!(squeezed > full, "10-core quota must slow it: {squeezed} vs {full}");
+    }
+
+    #[test]
+    fn shared_cluster_quota_invariants() {
+        let mut sc = SharedCluster::even(Cluster::default(), 8);
+        assert_eq!(sc.apps(), 8);
+        assert_eq!(sc.quotas().iter().sum::<usize>(), 120);
+        assert!(sc.quotas().iter().all(|&q| q == 15));
+        sc.set_quotas(&[7, 7, 7, 7, 7, 31, 45, 7]);
+        assert_eq!(sc.quota(6), 45);
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscribe")]
+    fn oversubscribed_quotas_rejected() {
+        let mut sc = SharedCluster::even(Cluster::default(), 4);
+        sc.set_quotas(&[40, 40, 40, 40]);
     }
 
     #[test]

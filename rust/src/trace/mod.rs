@@ -253,6 +253,125 @@ impl TraceSet {
     }
 }
 
+/// Traces of one action set at a *ladder* of core budgets on a shared
+/// cluster — the scheduler's "alternative futures in two dimensions":
+/// which action is played, and how many cores the app holds when it runs.
+///
+/// All levels share the same sampled configurations *and* the same
+/// per-config noise streams (the simulator draws the same jitter sequence
+/// regardless of the budget), so the core quota is the only thing that
+/// differs between `sets[l]` and `sets[l + 1]`. In particular every
+/// action's fidelity sequence is identical across levels — parallelism
+/// trades latency, never fidelity (paper Sec. 2.2) — which the fleet
+/// relies on to score rewards independently of the current allocation.
+#[derive(Debug, Clone)]
+pub struct LadderTraceSet {
+    /// Core budgets, strictly ascending.
+    pub levels: Vec<usize>,
+    /// `sets[l]` holds the traces at budget `levels[l]`.
+    pub sets: Vec<TraceSet>,
+}
+
+impl LadderTraceSet {
+    /// Trace `n_configs` random configurations for `n_frames` frames at
+    /// every budget in `levels`. The config-sampling protocol and the
+    /// per-config simulator seeding match [`TraceSet::generate_on`]
+    /// exactly, so a one-level ladder at the full budget reproduces the
+    /// plain trace set byte-for-byte.
+    pub fn generate_on(
+        app: &App,
+        cluster: &Cluster,
+        levels: &[usize],
+        n_configs: usize,
+        n_frames: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(!levels.is_empty(), "ladder needs at least one level");
+        assert!(
+            levels.windows(2).all(|w| w[0] < w[1]),
+            "ladder levels must be strictly ascending: {levels:?}"
+        );
+        let mut rng = Rng::new(seed);
+        let configs: Vec<Vec<f64>> = (0..n_configs)
+            .map(|_| {
+                let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
+                app.spec.denormalize(&u)
+            })
+            .collect();
+        let stage_names: Vec<String> =
+            app.spec.stages.iter().map(|s| s.name.clone()).collect();
+        let sets = levels
+            .iter()
+            .map(|&budget| {
+                let traces = configs
+                    .iter()
+                    .enumerate()
+                    .map(|(ci, config)| {
+                        let mut sim = ClusterSim::new(
+                            cluster.clone(),
+                            NoiseModel::default(),
+                            seed.wrapping_mul(1_000_003).wrapping_add(ci as u64),
+                        )
+                        .with_core_budget(budget);
+                        let frames = (0..n_frames)
+                            .map(|f| {
+                                let r = sim.run_frame(app, config, f);
+                                TraceFrame {
+                                    stage_ms: r.stage_ms,
+                                    end_to_end_ms: r.end_to_end_ms,
+                                    fidelity: r.fidelity,
+                                }
+                            })
+                            .collect();
+                        Trace { config: config.clone(), frames }
+                    })
+                    .collect();
+                TraceSet {
+                    app: app.spec.name.clone(),
+                    seed,
+                    traces,
+                    stage_names: stage_names.clone(),
+                }
+            })
+            .collect();
+        LadderTraceSet { levels: levels.to_vec(), sets }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn num_configs(&self) -> usize {
+        self.sets[0].num_configs()
+    }
+
+    pub fn num_frames(&self) -> usize {
+        self.sets[0].num_frames()
+    }
+
+    /// The trace set at ladder index `level`.
+    pub fn set(&self, level: usize) -> &TraceSet {
+        &self.sets[level]
+    }
+
+    /// Raw knob vectors of the shared action set.
+    pub fn configs(&self) -> Vec<Vec<f64>> {
+        self.sets[0].configs()
+    }
+
+    /// Index of the largest level whose budget is `<= cores` (0 when even
+    /// the lowest rung exceeds `cores` — the fairness floor).
+    pub fn level_for(&self, cores: usize) -> usize {
+        let mut best = 0;
+        for (i, &l) in self.levels.iter().enumerate() {
+            if l <= cores {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -344,6 +463,70 @@ mod tests {
         let a = TraceSet::load_or_generate(&small_app, dir.path(), 1).unwrap();
         let b = TraceSet::load_or_generate(&small_app, dir.path(), 999).unwrap();
         assert_eq!(a.seed, b.seed, "second call must hit the cache");
+    }
+
+    #[test]
+    fn ladder_full_budget_level_matches_plain_traces() {
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
+        let cluster = Cluster::default();
+        let full = cluster.total_cores();
+        let ladder =
+            LadderTraceSet::generate_on(&app, &cluster, &[8, full], 5, 30, 77);
+        let plain = TraceSet::generate_on(&app, &cluster, 5, 30, 77);
+        assert_eq!(
+            ladder.set(1).to_json().to_string(),
+            plain.to_json().to_string(),
+            "full-budget ladder level must reproduce the plain trace set"
+        );
+    }
+
+    #[test]
+    fn ladder_levels_share_configs_and_fidelity() {
+        let app = crate::workloads::generate(5, &crate::workloads::WorkloadConfig::default());
+        let ladder = LadderTraceSet::generate_on(
+            &app,
+            &Cluster::default(),
+            &[6, 15, 45],
+            6,
+            40,
+            3,
+        );
+        assert_eq!(ladder.num_levels(), 3);
+        for l in 1..3 {
+            for c in 0..ladder.num_configs() {
+                assert_eq!(
+                    ladder.set(l).traces[c].config,
+                    ladder.set(0).traces[c].config,
+                    "configs must be shared across levels"
+                );
+                for f in 0..ladder.num_frames() {
+                    // the budget changes latency, never fidelity: same
+                    // noise stream, and parallelism is fidelity-neutral
+                    assert_eq!(
+                        ladder.set(l).frame(c, f).fidelity,
+                        ladder.set(0).frame(c, f).fidelity,
+                        "level {l} config {c} frame {f}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ladder_level_for_picks_largest_fitting() {
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
+        let ladder = LadderTraceSet::generate_on(
+            &app,
+            &Cluster::default(),
+            &[7, 15, 31],
+            2,
+            5,
+            1,
+        );
+        assert_eq!(ladder.level_for(6), 0); // below the floor: floor rung
+        assert_eq!(ladder.level_for(7), 0);
+        assert_eq!(ladder.level_for(16), 1);
+        assert_eq!(ladder.level_for(500), 2);
     }
 
     #[test]

@@ -1,0 +1,448 @@
+//! Budget-aware ε-greedy controller — the per-app tuner the fleet
+//! scheduler drives.
+//!
+//! Differences from the fixed-cluster [`EpsGreedyController`]:
+//!
+//! * The action space is a [`LadderTraceSet`]: the same configurations
+//!   traced at a ladder of core budgets on the shared cluster. The
+//!   scheduler moves the app between rungs ([`set_level`]) at
+//!   reallocation epochs; frames are replayed from the active rung.
+//! * Candidates fed to the learned latency model are *effective* knob
+//!   vectors: each action's parallelism knobs are clamped to what the
+//!   current budget would actually grant
+//!   ([`grant_under`](crate::simulator::grant_under)), so the model's
+//!   input always describes the execution that produced the observation.
+//!   Because the input encodes granted workers rather than requested
+//!   ones, the weights learned at one budget transfer to every other —
+//!   which is what lets the scheduler ask "what would this app's latency
+//!   be at k cores?" ([`utility_at`]) without re-exploring.
+//! * The per-action empirical cost blend is tracked per `(level, action)`
+//!   pair: an action's observed latency at 7 cores says little about the
+//!   same action at 45.
+//!
+//! [`set_level`]: BudgetedController::set_level
+//! [`utility_at`]: BudgetedController::utility_at
+
+use crate::apps::App;
+use crate::runtime::{constrained_argmax, Backend};
+use crate::simulator::grant_under;
+use crate::trace::LadderTraceSet;
+use crate::tuner::{StepOutcome, TunerConfig};
+use crate::util::Rng;
+
+/// Normalized effective knob vectors of every action at every ladder
+/// level: parallel knobs are replaced by the workers the level's budget
+/// would grant. Exposed for the live scheduler path, which clamps the
+/// knobs it installs on running engine streams the same way.
+pub fn effective_candidates(
+    app: &App,
+    configs: &[Vec<f64>],
+    levels: &[usize],
+) -> Vec<Vec<Vec<f64>>> {
+    let n_stages = app.graph.len();
+    levels
+        .iter()
+        .map(|&budget| {
+            configs
+                .iter()
+                .map(|ks| {
+                    let requested: Vec<usize> = (0..n_stages)
+                        .map(|s| app.model.requested_workers(s, ks))
+                        .collect();
+                    let granted = grant_under(&requested, budget);
+                    let mut eff = ks.clone();
+                    for s in 0..n_stages {
+                        if let Some(k) = app.model.par_knob(s) {
+                            eff[k] = granted[s] as f64;
+                        }
+                    }
+                    app.spec.normalize(&eff)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// ε-greedy controller over a ladder trace set (see module docs).
+pub struct BudgetedController<'a> {
+    ladder: &'a LadderTraceSet,
+    backend: Box<dyn Backend>,
+    cfg: TunerConfig,
+    rng: Rng,
+    level: usize,
+    /// `candidates_at[level][action]`: normalized effective knobs.
+    candidates_at: Vec<Vec<Vec<f64>>>,
+    /// Known per-action expected fidelity — identical across levels
+    /// (parallelism is fidelity-neutral), taken from the floor rung.
+    rewards: Vec<f64>,
+    blend_k: f64,
+    ema_alpha: f64,
+    /// Per-`(level, action)` observation state, indexed
+    /// `level * num_actions + action`.
+    obs_count: Vec<u64>,
+    obs_ema_ms: Vec<f64>,
+}
+
+impl<'a> BudgetedController<'a> {
+    pub fn new(
+        app: &App,
+        ladder: &'a LadderTraceSet,
+        backend: Box<dyn Backend>,
+        cfg: TunerConfig,
+        seed: u64,
+    ) -> Self {
+        assert!(ladder.num_configs() > 0, "empty action space");
+        assert!((0.0..=1.0).contains(&cfg.epsilon));
+        let candidates_at = effective_candidates(app, &ladder.configs(), &ladder.levels);
+        let rewards: Vec<f64> =
+            ladder.set(0).traces.iter().map(|t| t.avg_fidelity()).collect();
+        let slots = ladder.num_levels() * ladder.num_configs();
+        BudgetedController {
+            ladder,
+            backend,
+            cfg,
+            rng: Rng::new(seed),
+            level: 0,
+            candidates_at,
+            rewards,
+            blend_k: 0.0,
+            ema_alpha: 0.2,
+            obs_count: vec![0; slots],
+            obs_ema_ms: vec![0.0; slots],
+        }
+    }
+
+    /// Enable the per-`(level, action)` empirical cost blend (same
+    /// semantics as [`EpsGreedyController::with_empirical_blend`]).
+    ///
+    /// [`EpsGreedyController::with_empirical_blend`]:
+    ///     crate::tuner::EpsGreedyController::with_empirical_blend
+    pub fn with_empirical_blend(mut self, k: f64) -> Self {
+        assert!(k >= 0.0);
+        self.blend_k = k;
+        self
+    }
+
+    /// Move the app to ladder rung `level` (scheduler epochs call this).
+    pub fn set_level(&mut self, level: usize) {
+        assert!(level < self.ladder.num_levels(), "level {level} off the ladder");
+        self.level = level;
+    }
+
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    /// Core budget of the active rung.
+    pub fn cores(&self) -> usize {
+        self.ladder.levels[self.level]
+    }
+
+    pub fn action_rewards(&self) -> &[f64] {
+        &self.rewards
+    }
+
+    /// Blended cost estimates for every candidate at ladder rung `level`
+    /// (no cross-rung transfer; see [`estimates_at`](Self::estimates_at)).
+    fn blended_costs_at(&mut self, level: usize) -> Vec<f64> {
+        let costs = self.backend.predict(&self.candidates_at[level]);
+        let n = self.ladder.num_configs();
+        costs
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                if self.blend_k <= 0.0 {
+                    return c;
+                }
+                let o = level * n + i;
+                let cnt = self.obs_count[o] as f64;
+                (self.blend_k * c + cnt * self.obs_ema_ms[o]) / (self.blend_k + cnt)
+            })
+            .collect()
+    }
+
+    /// Cost estimates at rung `level` under the *monotone resource
+    /// prior*: granted workers only grow with the budget, so an action
+    /// observed at a lower rung is expected to be at most as slow at
+    /// `level`. Two guards keep the prior honest:
+    ///
+    /// * only **observed** lower-rung estimates transfer — model-only
+    ///   predictions don't (the model is already queryable at `level`
+    ///   directly, and a spuriously-low extrapolation at an unexplored
+    ///   rung must not masquerade as evidence);
+    /// * the prior only fills `(rung, action)` pairs not yet observed at
+    ///   `level` itself — own evidence always trumps, so a stale
+    ///   fast-at-few-cores reading can't permanently hide an action that
+    ///   turned out slow at many cores (per-worker dispatch overhead
+    ///   makes over-granting genuinely costly — the Amdahl U-shape).
+    fn estimates_at(&mut self, level: usize) -> Vec<f64> {
+        let mut est = self.blended_costs_at(level);
+        let n = self.ladder.num_configs();
+        for l in 0..level {
+            // a rung with no observations at all can transfer nothing —
+            // skip its full-grid prediction (the common case: rungs the
+            // scheduler never assigned; keeps the exploit path at one
+            // batched predict per visited rung instead of one per rung)
+            if self.obs_count[l * n..(l + 1) * n].iter().all(|&c| c == 0) {
+                continue;
+            }
+            let b = self.blended_costs_at(l);
+            for a in 0..n {
+                if self.obs_count[level * n + a] == 0
+                    && self.obs_count[l * n + a] > 0
+                    && b[a] < est[a]
+                {
+                    est[a] = b[a];
+                }
+            }
+        }
+        est
+    }
+
+    /// The scheduler's query: the fidelity this app's learned model
+    /// predicts it could hold at ladder rung `level` while meeting the
+    /// latency bound — 0 when nothing is predicted feasible (a strong
+    /// "needs more cores" signal, since becoming feasible at a higher
+    /// rung is then worth the full best-action fidelity).
+    pub fn utility_at(&mut self, level: usize) -> f64 {
+        let est = self.estimates_at(level);
+        self.utility_of(&est)
+    }
+
+    fn utility_of(&self, est: &[f64]) -> f64 {
+        let a = constrained_argmax(est, &self.rewards, self.cfg.bound_ms);
+        if est[a] <= self.cfg.bound_ms {
+            self.rewards[a]
+        } else {
+            0.0
+        }
+    }
+
+    /// [`utility_at`](Self::utility_at) for every rung — the app's
+    /// marginal-utility curve the water-filling allocator consumes.
+    /// Computed in one ascending sweep: the observation-anchored minimum
+    /// is carried upward so each rung costs one batched prediction.
+    pub fn utility_curve(&mut self) -> Vec<f64> {
+        let n = self.ladder.num_configs();
+        let mut out = Vec::with_capacity(self.ladder.num_levels());
+        let mut obs_min = vec![f64::INFINITY; n];
+        for l in 0..self.ladder.num_levels() {
+            let b = self.blended_costs_at(l);
+            let est: Vec<f64> = b
+                .iter()
+                .enumerate()
+                .map(|(a, &x)| {
+                    if self.obs_count[l * n + a] > 0 {
+                        x
+                    } else {
+                        x.min(obs_min[a])
+                    }
+                })
+                .collect();
+            out.push(self.utility_of(&est));
+            for a in 0..n {
+                if self.obs_count[l * n + a] > 0 && b[a] < obs_min[a] {
+                    obs_min[a] = b[a];
+                }
+            }
+        }
+        out
+    }
+
+    /// Run one frame at the active rung: choose an action, observe that
+    /// rung's trace outcome, learn.
+    pub fn step(&mut self, frame: usize) -> StepOutcome {
+        let level = self.level;
+        let n = self.ladder.num_configs();
+        let explore =
+            frame < self.cfg.warmup_frames || self.rng.f64() < self.cfg.epsilon;
+        let (action, predicted_ms) = if explore {
+            let a = self.rng.below(n);
+            let p = self
+                .backend
+                .predict(std::slice::from_ref(&self.candidates_at[level][a]))[0];
+            (a, p)
+        } else if self.blend_k > 0.0 {
+            // exploit under the monotone resource prior: estimates from
+            // observed lower rungs carry over (see estimates_at)
+            let est = self.estimates_at(level);
+            let a = constrained_argmax(&est, &self.rewards, self.cfg.bound_ms);
+            (a, est[a])
+        } else {
+            // paper-exact pure-model exploit (no blend, no prior)
+            let (a, costs) = self.backend.solve_with_costs(
+                &self.candidates_at[level],
+                &self.rewards,
+                self.cfg.bound_ms,
+            );
+            (a, costs[a])
+        };
+
+        let rec = self.ladder.set(level).frame(action, frame % self.ladder.num_frames());
+        let u = self.candidates_at[level][action].clone();
+        let (y, offset_obs) = self
+            .backend
+            .group_map()
+            .targets(&rec.stage_ms, rec.end_to_end_ms);
+        self.backend.update(&u, &y);
+        self.backend.observe_offset(offset_obs);
+
+        let o = level * n + action;
+        if self.obs_count[o] == 0 {
+            self.obs_ema_ms[o] = rec.end_to_end_ms;
+        } else {
+            self.obs_ema_ms[o] +=
+                self.ema_alpha * (rec.end_to_end_ms - self.obs_ema_ms[o]);
+        }
+        self.obs_count[o] += 1;
+
+        StepOutcome {
+            frame,
+            action,
+            explored: explore,
+            predicted_ms,
+            latency_ms: rec.end_to_end_ms,
+            reward: rec.fidelity,
+            violation_ms: (rec.end_to_end_ms - self.cfg.bound_ms).max(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeBackend;
+    use crate::simulator::Cluster;
+    use crate::workloads::{self, WorkloadConfig};
+
+    fn setup(seed: u64) -> (crate::apps::App, LadderTraceSet) {
+        let app = workloads::generate(seed, &WorkloadConfig::default());
+        let ladder = LadderTraceSet::generate_on(
+            &app,
+            &Cluster::default(),
+            &[7, 15, 45],
+            8,
+            80,
+            seed ^ 0x7A3E_5EED,
+        );
+        (app, ladder)
+    }
+
+    #[test]
+    fn effective_candidates_clamp_only_parallel_knobs() {
+        let (app, ladder) = setup(9);
+        let cands = effective_candidates(&app, &ladder.configs(), &ladder.levels);
+        let par_knobs: Vec<usize> =
+            (0..app.graph.len()).filter_map(|s| app.model.par_knob(s)).collect();
+        for l in 0..ladder.num_levels() {
+            for (a, ks) in ladder.configs().iter().enumerate() {
+                let u0 = app.spec.normalize(ks);
+                for k in 0..app.spec.num_vars() {
+                    if par_knobs.contains(&k) {
+                        // clamped grants can only shrink the request
+                        assert!(
+                            cands[l][a][k] <= u0[k] + 1e-12,
+                            "level {l} action {a} knob {k}"
+                        );
+                    } else {
+                        assert_eq!(cands[l][a][k], u0[k], "non-par knob moved");
+                    }
+                }
+            }
+        }
+        // at a generous top budget nothing is squeezed
+        let top = ladder.num_levels() - 1;
+        if ladder.levels[top] >= 120 {
+            for (a, ks) in ladder.configs().iter().enumerate() {
+                assert_eq!(cands[top][a], app.spec.normalize(ks), "action {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn step_replays_active_level() {
+        let (app, ladder) = setup(3);
+        let bound = app.spec.latency_bounds_ms[0];
+        let cfg = TunerConfig { epsilon: 0.3, bound_ms: bound, warmup_frames: 4 };
+        let backend = NativeBackend::structured(&app.spec);
+        let mut ctl = BudgetedController::new(&app, &ladder, Box::new(backend), cfg, 5)
+            .with_empirical_blend(8.0);
+        ctl.set_level(1);
+        for f in 0..30 {
+            let s = ctl.step(f);
+            let rec = ladder.set(1).frame(s.action, f % ladder.num_frames());
+            assert_eq!(s.latency_ms, rec.end_to_end_ms);
+            assert_eq!(s.reward, rec.fidelity);
+        }
+        assert_eq!(ctl.level(), 1);
+        assert_eq!(ctl.cores(), 15);
+    }
+
+    #[test]
+    fn utility_curve_has_one_entry_per_level() {
+        let (app, ladder) = setup(11);
+        let bound = app.spec.latency_bounds_ms[0];
+        let cfg = TunerConfig { epsilon: 0.2, bound_ms: bound * 0.9, warmup_frames: 10 };
+        let backend = NativeBackend::structured(&app.spec);
+        let mut ctl = BudgetedController::new(&app, &ladder, Box::new(backend), cfg, 7)
+            .with_empirical_blend(8.0);
+        for f in 0..60 {
+            ctl.step(f);
+        }
+        let curve = ctl.utility_curve();
+        assert_eq!(curve.len(), 3);
+        for (l, u) in curve.iter().enumerate() {
+            assert!((0.0..=1.0).contains(u), "level {l}: utility {u}");
+        }
+    }
+
+    #[test]
+    fn utility_query_does_not_change_trajectory() {
+        // the scheduler may interrogate the model at any rung without
+        // perturbing what the controller subsequently does
+        let (app, ladder) = setup(21);
+        let bound = app.spec.latency_bounds_ms[0];
+        let run = |query: bool| {
+            let cfg =
+                TunerConfig { epsilon: 0.2, bound_ms: bound * 0.9, warmup_frames: 5 };
+            let backend = NativeBackend::structured(&app.spec);
+            let mut ctl =
+                BudgetedController::new(&app, &ladder, Box::new(backend), cfg, 13)
+                    .with_empirical_blend(8.0);
+            let mut actions = Vec::new();
+            for f in 0..80 {
+                if query && f % 10 == 0 {
+                    let _ = ctl.utility_curve();
+                }
+                actions.push(ctl.step(f).action);
+            }
+            actions
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (app, ladder) = setup(2);
+        let bound = app.spec.latency_bounds_ms[0];
+        let run = |seed: u64| {
+            let cfg =
+                TunerConfig { epsilon: 0.25, bound_ms: bound * 0.9, warmup_frames: 5 };
+            let backend = NativeBackend::structured(&app.spec);
+            let mut ctl =
+                BudgetedController::new(&app, &ladder, Box::new(backend), cfg, seed)
+                    .with_empirical_blend(8.0);
+            (0..60)
+                .map(|f| {
+                    if f == 30 {
+                        ctl.set_level(2);
+                    }
+                    let s = ctl.step(f);
+                    (s.action, s.latency_ms)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(4), run(4));
+        assert_ne!(run(4), run(5), "controller seed must matter");
+    }
+}

@@ -8,7 +8,10 @@
 //! (≈ 0.03 for T = 1000 — "90% of the optimal fidelity by exploring the
 //! parameter space only 3% of the time").
 
+pub mod budgeted;
 pub mod policy;
+
+pub use budgeted::BudgetedController;
 
 use crate::apps::spec::AppSpec;
 use crate::metrics::PolicyStats;

@@ -37,6 +37,94 @@ use crate::dataflow::Graph;
 use crate::simulator::{Cluster, ClusterSim};
 use crate::util::Rng;
 
+/// Resource-appetite profile of a generated app — the lever behind
+/// heterogeneous fleets. `Balanced` is byte-identical to the PR-1
+/// generator (all multipliers are exactly 1 and no extra rng draws are
+/// made); `Light` and `Heavy` skew the same draw stream:
+///
+/// * `Light` — cheap, **core-insensitive** pipelines: parallelism knobs
+///   are never assigned, so latency does not depend on the core quota at
+///   all. The scheduler can safely park these at the fairness floor.
+/// * `Heavy` — core-hungry pipelines: at least two parallelism knobs are
+///   guaranteed, the parallelizable (per-pixel) cost term is inflated,
+///   and the Amdahl serial fraction / per-worker overhead are shrunk so
+///   the work actually scales. Squeezed at an even cluster share, these
+///   apps' best configurations go infeasible — exactly what dynamic
+///   reallocation exists to fix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AppProfile {
+    #[default]
+    Balanced,
+    Light,
+    Heavy,
+}
+
+impl AppProfile {
+    fn allows_parallel(self) -> bool {
+        !matches!(self, AppProfile::Light)
+    }
+
+    fn min_par_knobs(self) -> usize {
+        match self {
+            AppProfile::Heavy => 2,
+            _ => 0,
+        }
+    }
+
+    fn px_mult(self) -> f64 {
+        match self {
+            AppProfile::Heavy => 2.5,
+            _ => 1.0,
+        }
+    }
+
+    fn serial_mult(self) -> f64 {
+        match self {
+            AppProfile::Heavy => 0.35,
+            _ => 1.0,
+        }
+    }
+
+    fn overhead_mult(self) -> f64 {
+        match self {
+            AppProfile::Heavy => 0.4,
+            _ => 1.0,
+        }
+    }
+
+    fn cost_mult(self) -> f64 {
+        match self {
+            AppProfile::Light => 0.5,
+            AppProfile::Heavy => 1.6,
+            AppProfile::Balanced => 1.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AppProfile::Balanced => "balanced",
+            AppProfile::Light => "light",
+            AppProfile::Heavy => "heavy",
+        }
+    }
+
+    /// Profile of fleet member `index`: alternating Light/Heavy when the
+    /// fleet is heterogeneous, else `base`. The single source of truth
+    /// shared by the simulated fleet and the live `schedule` path so the
+    /// two can never drift apart on what a scenario means.
+    pub fn for_fleet_member(heterogeneous: bool, index: usize, base: AppProfile) -> AppProfile {
+        if heterogeneous {
+            if index % 2 == 0 {
+                AppProfile::Light
+            } else {
+                AppProfile::Heavy
+            }
+        } else {
+            base
+        }
+    }
+}
+
 /// Generation envelope: topology and knob-count ranges, trace protocol,
 /// and bound-calibration policy.
 #[derive(Debug, Clone)]
@@ -62,6 +150,13 @@ pub struct WorkloadConfig {
     /// Trace protocol baked into the generated spec.
     pub trace_configs: usize,
     pub trace_frames: usize,
+    /// Resource-appetite profile (heterogeneous fleets mix these).
+    pub profile: AppProfile,
+    /// Scripted load shift: overrides the content script's scene change
+    /// with `(frame, multiplier)` — the fleet uses this to synchronize a
+    /// mid-run cost jump across its heavy apps so reallocation has
+    /// something to chase. Applied after all draws (rng-neutral).
+    pub load_shift: Option<(usize, f64)>,
 }
 
 impl Default for WorkloadConfig {
@@ -78,6 +173,8 @@ impl Default for WorkloadConfig {
             bound_margin: 1.10,
             trace_configs: 24,
             trace_frames: 500,
+            profile: AppProfile::Balanced,
+            load_shift: None,
         }
     }
 }
@@ -211,7 +308,8 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
                 KnobKind::Threshold => seg_thresh[s].is_none(),
                 KnobKind::Quality => seg_quality[s].is_none(),
                 KnobKind::Parallel => {
-                    seg_heavy[s].iter().any(|&st| stage_par[st].is_none())
+                    cfg.profile.allows_parallel()
+                        && seg_heavy[s].iter().any(|&st| stage_par[st].is_none())
                 }
                 KnobKind::Scale => false,
             })
@@ -263,6 +361,31 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
             KnobKind::Scale => unreachable!(),
         }
     }
+    // heavy profile: guarantee core-hungry pipelines by force-assigning
+    // parallel knobs to heavy stages until the minimum is met (rng-free,
+    // deterministic stage order, so earlier draws are untouched)
+    let mut par_count = roles.iter().filter(|r| r.kind == KnobKind::Parallel).count();
+    if par_count < cfg.profile.min_par_knobs() {
+        'outer: for s in 0..n_segments {
+            for &st in &seg_heavy[s] {
+                if par_count >= cfg.profile.min_par_knobs() {
+                    break 'outer;
+                }
+                if stage_par[st].is_none() {
+                    let k = roles.len();
+                    stage_par[st] = Some(k);
+                    roles.push(KnobRole {
+                        kind: KnobKind::Parallel,
+                        segment: s,
+                        stage: Some(st),
+                        fidelity_coef: 0.0,
+                        need_frac: 0.0,
+                    });
+                    par_count += 1;
+                }
+            }
+        }
+    }
     let num_knobs = roles.len();
 
     // ---- per-stage polynomial cost coefficients -------------------------
@@ -271,7 +394,7 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
         let (base, px, feat, feat2) = if is_heavy[i] {
             (
                 rng.range_f64(0.5, 2.0),
-                rng.range_f64(15.0, 80.0),
+                rng.range_f64(15.0, 80.0) * cfg.profile.px_mult(),
                 rng.range_f64(1.0, 6.0),
                 rng.range_f64(0.0, 1.2),
             )
@@ -279,10 +402,10 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
             (rng.range_f64(0.3, 1.2), 0.0, 0.0, 0.0)
         };
         // drawn unconditionally so the rng stream does not depend on the
-        // knob assignment above
+        // knob assignment above (profile multipliers are rng-neutral)
         let quality_mult = rng.range_f64(1.5, 2.2);
-        let serial_frac = rng.range_f64(0.05, 0.15);
-        let per_worker_ov = rng.range_f64(0.04, 0.18);
+        let serial_frac = rng.range_f64(0.05, 0.15) * cfg.profile.serial_mult();
+        let per_worker_ov = rng.range_f64(0.04, 0.18) * cfg.profile.overhead_mult();
         stage_costs.push(StageCost {
             segment: seg_of[i],
             base,
@@ -298,7 +421,7 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
     }
 
     // ---- content script + global scales ---------------------------------
-    let script = ContentScript {
+    let mut script = ContentScript {
         base_features: rng.range_f64(350.0, 750.0),
         amp1: rng.range_f64(20.0, 60.0),
         per1: rng.range_f64(9.0, 45.0),
@@ -307,8 +430,12 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
         change_frame: 300 + rng.below(400),
         change_mult: rng.range_f64(1.2, 1.8),
     };
-    let cost_scale = rng.range_f64(0.8, 1.6);
+    let cost_scale = rng.range_f64(0.8, 1.6) * cfg.profile.cost_mult();
     let base_fidelity = rng.range_f64(0.90, 0.98);
+    if let Some((frame, mult)) = cfg.load_shift {
+        script.change_frame = frame;
+        script.change_mult = mult;
+    }
 
     // ---- spec tables ----------------------------------------------------
     let params: Vec<ParamSpec> = roles
@@ -630,6 +757,63 @@ mod tests {
                 "seed {seed}"
             );
         }
+    }
+
+    #[test]
+    fn light_profile_is_core_insensitive() {
+        let cfg = WorkloadConfig { profile: AppProfile::Light, ..Default::default() };
+        for seed in [1u64, 8, 33, 77] {
+            let app = generate(seed, &cfg);
+            assert!(
+                app.spec.params.iter().all(|p| !p.name.starts_with("par_")),
+                "seed {seed}: light app grew a parallel knob"
+            );
+            // therefore every stage requests exactly one worker and the
+            // core budget cannot change its latency
+            let ks = app.spec.defaults();
+            for s in 0..app.graph.len() {
+                assert_eq!(app.model.requested_workers(s, &ks), 1, "seed {seed}");
+                assert_eq!(app.model.par_knob(s), None, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_profile_guarantees_parallel_knobs() {
+        let cfg = WorkloadConfig { profile: AppProfile::Heavy, ..Default::default() };
+        for seed in [1u64, 8, 33, 77] {
+            let app = generate(seed, &cfg);
+            let par = app
+                .spec
+                .params
+                .iter()
+                .filter(|p| p.name.starts_with("par_"))
+                .count();
+            assert!(par >= 2, "seed {seed}: only {par} parallel knobs");
+            app.spec.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn load_shift_overrides_content_script() {
+        let cfg = WorkloadConfig {
+            load_shift: Some((123, 1.9)),
+            ..Default::default()
+        };
+        let app = generate(5, &cfg);
+        let before = app.model.content(122);
+        let after = app.model.content(123);
+        assert_eq!(before.scene_id, 0);
+        assert_eq!(after.scene_id, 1);
+        assert!(after.features > before.features * 1.5, "shift not applied");
+        // rng-neutral: everything else matches the unshifted app
+        let plain = generate(5, &WorkloadConfig::default());
+        assert_eq!(plain.spec.latency_bounds_ms.len(), app.spec.latency_bounds_ms.len());
+        assert_eq!(
+            plain.spec.params.len(),
+            app.spec.params.len(),
+            "load shift must not disturb the draw stream"
+        );
     }
 
     #[test]

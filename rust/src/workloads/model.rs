@@ -147,6 +147,10 @@ impl CostModel for GeneratedModel {
         }
     }
 
+    fn par_knob(&self, stage: usize) -> Option<usize> {
+        self.stages[stage].par_knob
+    }
+
     fn stage_latency(&self, stage: usize, ks: &[f64], content: &Content, workers: usize) -> f64 {
         let sc = &self.stages[stage];
         let seg = &self.segments[sc.segment];
