@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench scheduler`
 
 use iptune::runtime::native::NativeBackend;
-use iptune::scheduler::{allocate, core_levels};
+use iptune::scheduler::{allocate, allocate_v2, core_levels};
 use iptune::simulator::Cluster;
 use iptune::trace::{LadderTraceSet, TraceSet};
 use iptune::tuner::{BudgetedController, EpsGreedyController, TunerConfig};
@@ -16,7 +16,7 @@ use iptune::util::Rng;
 use iptune::workloads::{self, AppProfile, WorkloadConfig};
 
 fn main() {
-    let mut b = Bencher::default();
+    let mut b = Bencher::from_env();
 
     // ---- water-filling allocator over synthetic utility curves ---------
     let levels = core_levels(120, 8, 7, 6, 3.0);
@@ -30,6 +30,21 @@ fn main() {
         .collect();
     b.bench("allocate/8apps_6rungs", || {
         black_box(allocate(black_box(&curves8), &levels, 120));
+    });
+
+    // v2: priority-weighted + incumbent hysteresis (the stateful path
+    // every dynamic fleet epoch actually takes)
+    let weights: Vec<f64> = (0..8).map(|i| 1.0 + (i % 3) as f64).collect();
+    let prev = allocate(&curves8, &levels, 120);
+    b.bench("allocate_v2/8apps_6rungs_hysteresis", || {
+        black_box(allocate_v2(
+            black_box(&curves8),
+            &levels,
+            120,
+            &weights,
+            Some(&prev),
+            0.1,
+        ));
     });
 
     let big_levels = core_levels(4096, 64, 32, 8, 3.0);
@@ -99,4 +114,5 @@ fn main() {
     });
 
     println!("\n{} benchmarks complete", b.results.len());
+    b.write_json_env("scheduler");
 }

@@ -18,7 +18,7 @@ use iptune::util::Rng;
 
 fn main() {
     let spec_dir = find_spec_dir(None).unwrap();
-    let mut b = Bencher::default();
+    let mut b = Bencher::from_env();
 
     for name in ["pose", "motion_sift"] {
         let app = app_by_name(name, &spec_dir).unwrap();
@@ -69,4 +69,6 @@ fn main() {
             100.0 / (r.per_iter_ns() / 1e9)
         );
     }
+
+    b.write_json_env("simulator");
 }

@@ -27,7 +27,7 @@ fn main() {
     let y = vec![60.0, 90.0];
     let u = vec![0.4, 0.6, 0.5, 0.3, 0.7];
 
-    let mut b = Bencher::default();
+    let mut b = Bencher::from_env();
 
     // --- native backend -------------------------------------------------
     let mut native = NativeBackend::structured(&app.spec);
@@ -84,4 +84,6 @@ fn main() {
             100.0 * step_ms / budget_ms
         );
     }
+
+    b.write_json_env("tuner_hot_path");
 }

@@ -29,6 +29,18 @@
 //! heavy apps — the scenario in which dynamic reallocation demonstrably
 //! beats the static even slice (see `rust/tests/scheduler_fleet.rs`).
 //!
+//! Scheduler v2 ([`SchedulerConfig`]) layers three production behaviors
+//! on top: priority weights (tenant tiers) tilt the water-filling pass,
+//! the hysteresis term pins each app to its incumbent quota unless the
+//! predicted gain clears the migration penalty (churn is tracked per
+//! epoch in [`AllocationFrame::churn_cores`] and aggregated in
+//! [`FleetReport::core_churn`]), and admission control parks the
+//! lowest-priority apps — zero cores, frames dropped and counted —
+//! whenever `floor × apps` exceeds the pool, switching the whole run to
+//! exact fairness-floor accounting (sub-stage-count quotas charge a
+//! time-multiplexing latency multiplier in the traces, the calibration
+//! probes, and the controller's predictions alike).
+//!
 //! [`BudgetedController::utility_at`]:
 //!     crate::tuner::BudgetedController::utility_at
 
@@ -39,7 +51,7 @@ use anyhow::{Context, Result};
 
 use crate::metrics::PolicyStats;
 use crate::runtime::native::NativeBackend;
-use crate::scheduler::{self, AllocationFrame, SchedulerConfig};
+use crate::scheduler::{self, admit, AllocationFrame, SchedulerConfig};
 use crate::simulator::{Cluster, SharedCluster};
 use crate::trace::LadderTraceSet;
 use crate::tuner::policy::oracle_best;
@@ -147,6 +159,15 @@ impl FleetConfig {
         AppProfile::for_fleet_member(self.heterogeneous, index, self.workload.profile)
     }
 
+    /// Exact fairness-floor accounting is in effect when the workload
+    /// opted in OR admission control is on — the single rule shared by
+    /// bound calibration ([`workload_of`](Self::workload_of)) and the
+    /// trace/controller replay in [`run_fleet`], which must always price
+    /// budgets identically or the bounds lie.
+    pub fn exact_accounting(&self) -> bool {
+        self.workload.exact_accounting || self.scheduler.admission
+    }
+
     /// Per-app generation envelope (profile + scripted load shift).
     fn workload_of(&self, index: usize) -> WorkloadConfig {
         let mut w = self.workload.clone();
@@ -156,6 +177,7 @@ impl FleetConfig {
                 w.load_shift = Some((frame, LOAD_SHIFT_MULT));
             }
         }
+        w.exact_accounting = self.exact_accounting();
         w
     }
 }
@@ -191,6 +213,10 @@ pub struct AppReport {
     pub explore_frames: usize,
     /// Frame-weighted mean core quota this app held.
     pub avg_cores: f64,
+    /// Parked by admission control: zero cores for the whole run.
+    pub parked: bool,
+    /// Frames dropped instead of run (all of them for a parked app).
+    pub dropped_frames: usize,
     /// Raw accumulator (kept for fleet-wide merging).
     pub stats: PolicyStats,
 }
@@ -221,6 +247,8 @@ impl AppReport {
             .put("convergence_frame", conv)
             .put("explore_frames", self.explore_frames)
             .put("avg_cores", self.avg_cores)
+            .put("parked", self.parked)
+            .put("dropped_frames", self.dropped_frames)
     }
 }
 
@@ -245,12 +273,22 @@ pub struct FleetReport {
     pub avg_fidelity_vs_oracle: f64,
     pub min_bound_met_frac: f64,
     pub apps_meeting_slo: usize,
+    /// Apps parked for the whole run by admission control.
+    pub parked_apps: usize,
+    /// Σ over epochs of |cores − previous epoch's cores| — the
+    /// reallocation churn the v2 hysteresis exists to cut.
+    pub core_churn: usize,
+    /// Σ over epochs of the number of apps whose quota moved.
+    pub realloc_moves: usize,
     pub merged: PolicyStats,
 }
 
 impl FleetReport {
+    /// Every *admitted* app clears the SLO. Parked tenants are an
+    /// explicit, separately-reported admission decision, not a silent
+    /// SLO miss (without admission parking this is simply "all apps").
     pub fn all_apps_meet_slo(&self) -> bool {
-        self.apps_meeting_slo == self.apps.len()
+        self.apps_meeting_slo == self.apps.len() - self.parked_apps
     }
 
     pub fn to_json(&self) -> Json {
@@ -279,6 +317,9 @@ impl FleetReport {
                     .put("slo_frac", FLEET_SLO_FRAC)
                     .put("apps_meeting_slo", self.apps_meeting_slo)
                     .put("all_apps_meet_slo", self.all_apps_meet_slo())
+                    .put("parked_apps", self.parked_apps)
+                    .put("core_churn", self.core_churn)
+                    .put("realloc_moves", self.realloc_moves)
                     .put("avg_violation_ms", self.merged.avg_violation_ms())
                     .put("max_violation_ms", self.merged.max_violation_ms())
                     .put("violation_rate", self.merged.violation_rate()),
@@ -341,15 +382,29 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     );
     let total = cfg.cluster.total_cores();
     assert!(
-        cfg.apps <= total,
-        "fleet of {} apps cannot share {total} cores (one core per app minimum)",
+        cfg.scheduler.admission || cfg.apps <= total,
+        "fleet of {} apps cannot share {total} cores (one core per app minimum; \
+         enable admission control to park the overflow)",
         cfg.apps
     );
-    let even = (total / cfg.apps).max(1);
-    let floor = cfg.scheduler.floor_cores(total, cfg.apps);
+    let weights = cfg.scheduler.weights(cfg.apps);
+    // admission: when the requested floor times the fleet size exceeds
+    // the pool, the lowest-priority apps are parked for the whole run
+    // (zero cores, frames dropped) instead of silently over-granting
+    let floor_req = cfg.scheduler.requested_floor(total, cfg.apps);
+    let admitted: Vec<bool> = if cfg.scheduler.admission {
+        admit(total, floor_req, &weights)
+    } else {
+        vec![true; cfg.apps]
+    };
+    let parked: Vec<bool> = admitted.iter().map(|&a| !a).collect();
+    let active: Vec<usize> = (0..cfg.apps).filter(|&i| admitted[i]).collect();
+    let exact = cfg.exact_accounting();
+    let even = (total / active.len()).max(1);
+    let floor = floor_req.min(even).max(1);
     let levels = scheduler::core_levels(
         total,
-        cfg.apps,
+        active.len(),
         floor,
         cfg.scheduler.ladder_rungs,
         cfg.scheduler.max_boost,
@@ -382,6 +437,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
             let res_tx = res_tx.clone();
             let rep_tx = rep_tx.clone();
             let levels = &levels;
+            let admitted = &admitted;
             scope.spawn(move || {
                 // ---- per-worker construction: apps pinned by index ------
                 let my: Vec<usize> = (w..cfg.apps).step_by(threads).collect();
@@ -405,7 +461,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                     .position(|&l| l == even)
                     .expect("even share is always a generated rung");
                 let mut apps_v = Vec::with_capacity(my.len());
-                let mut ladders = Vec::with_capacity(my.len());
+                let mut ladders: Vec<Option<LadderTraceSet>> = Vec::with_capacity(my.len());
                 for &i in &my {
                     let app_seed = cfg.seed.wrapping_add(i as u64);
                     let wcfg = cfg.workload_of(i);
@@ -417,21 +473,27 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                         comm_ms_per_frame: cfg.cluster.comm_ms_per_frame,
                     };
                     let app = crate::workloads::generate_on(app_seed, &wcfg, &slice);
-                    let ladder = LadderTraceSet::generate_on(
-                        &app,
-                        &cfg.cluster,
-                        &gen_levels,
-                        cfg.configs_per_app,
-                        cfg.frames.max(100),
-                        app_seed ^ 0x7A3E_5EED,
-                    );
+                    // parked apps never replay a frame: skip the (costly)
+                    // ladder tracing, keep the app for its report row
+                    let ladder = admitted[i].then(|| {
+                        LadderTraceSet::generate_with(
+                            &app,
+                            &cfg.cluster,
+                            &gen_levels,
+                            cfg.configs_per_app,
+                            cfg.frames.max(100),
+                            app_seed ^ 0x7A3E_5EED,
+                            exact,
+                        )
+                    });
                     apps_v.push(app);
                     ladders.push(ladder);
                 }
-                let mut ctls: Vec<BudgetedController<'_>> = my
+                let mut ctls: Vec<Option<BudgetedController<'_>>> = my
                     .iter()
                     .enumerate()
                     .map(|(slot, &i)| {
+                        let ladder = ladders[slot].as_ref()?;
                         let app_seed = cfg.seed.wrapping_add(i as u64);
                         let bound = apps_v[slot].spec.latency_bounds_ms[0];
                         let tuner_cfg = TunerConfig {
@@ -442,14 +504,15 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                         let backend = NativeBackend::structured(&apps_v[slot].spec);
                         let mut ctl = BudgetedController::new(
                             &apps_v[slot],
-                            &ladders[slot],
+                            ladder,
                             Box::new(backend),
                             tuner_cfg,
                             app_seed ^ 0x00C0_FFEE,
                         )
-                        .with_empirical_blend(cfg.empirical_blend_k);
+                        .with_empirical_blend(cfg.empirical_blend_k)
+                        .with_time_multiplex(exact);
                         ctl.set_level(local_even_rung);
-                        ctl
+                        Some(ctl)
                     })
                     .collect();
                 let mut steps: Vec<Vec<StepOutcome>> =
@@ -461,6 +524,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                     match cmd {
                         Cmd::Epoch { lo, hi, rungs } => {
                             for (slot, &i) in my.iter().enumerate() {
+                                // parked apps drop the epoch's frames on
+                                // the floor — nothing runs, nothing is
+                                // learned, nothing is reported back
+                                let ctl = match ctls[slot].as_mut() {
+                                    Some(c) => c,
+                                    None => continue,
+                                };
                                 // rungs index the full ladder; static
                                 // workers hold a trimmed one and always
                                 // sit on the even share
@@ -468,14 +538,14 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                                     FleetMode::Dynamic => rungs[i],
                                     FleetMode::Static => local_even_rung,
                                 };
-                                ctls[slot].set_level(rung);
-                                core_frames[slot] += ctls[slot].cores() * (hi - lo);
+                                ctl.set_level(rung);
+                                core_frames[slot] += ctl.cores() * (hi - lo);
                                 for f in lo..hi {
-                                    let s = ctls[slot].step(f);
+                                    let s = ctl.step(f);
                                     steps[slot].push(s);
                                 }
                                 let curve = match cfg.mode {
-                                    FleetMode::Dynamic => ctls[slot].utility_curve(),
+                                    FleetMode::Dynamic => ctl.utility_curve(),
                                     FleetMode::Static => Vec::new(),
                                 };
                                 if res_tx.send(EpochResult { app: i, curve }).is_err() {
@@ -491,25 +561,10 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 for (slot, &i) in my.iter().enumerate() {
                     let app = &apps_v[slot];
                     let bound = app.spec.latency_bounds_ms[0];
-                    let app_steps = std::mem::take(&mut steps[slot]);
-                    let explore_frames =
-                        app_steps.iter().filter(|s| s.explored).count();
-                    let mut stats = PolicyStats::new();
-                    for s in &app_steps {
-                        stats.observe(s.reward, s.latency_ms, bound);
-                    }
-                    let even_ts = ladders[slot].set(local_even_rung);
-                    let oracle = oracle_best(even_ts, cfg.frames, bound);
-                    let oracle_fid = oracle.avg_reward.max(1e-9);
-                    let outcome = RunOutcome {
-                        avg_reward: stats.avg_reward(),
-                        avg_violation_ms: stats.avg_violation_ms(),
-                        max_violation_ms: stats.max_violation_ms(),
-                        violation_rate: stats.violation_rate(),
-                        explore_frames,
-                        steps: app_steps,
-                    };
-                    let report = AppReport {
+                    // identity row + parked-tenant metrics (every frame
+                    // dropped, nothing learned); the admitted branch
+                    // overrides the metric fields below
+                    let base = AppReport {
                         index: i,
                         name: app.spec.name.clone(),
                         seed: cfg.seed.wrapping_add(i as u64),
@@ -518,24 +573,66 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                         knobs: app.spec.num_vars(),
                         branches: app.spec.branches().len(),
                         bound_ms: bound,
-                        avg_fidelity: outcome.avg_reward,
-                        oracle_fidelity: oracle.avg_reward,
-                        fidelity_vs_oracle: outcome.avg_reward / oracle_fid,
-                        avg_violation_ms: outcome.avg_violation_ms,
-                        max_violation_ms: outcome.max_violation_ms,
-                        violation_rate: outcome.violation_rate,
-                        post_warmup_bound_met_frac: outcome
-                            .bound_met_frac_after(cfg.warmup_frames, bound),
-                        robust_feasible_actions: even_ts
-                            .traces
-                            .iter()
-                            .filter(|t| t.frac_under(bound) >= 0.95)
-                            .count(),
-                        convergence_frame: outcome
-                            .convergence_frame(50, 0.9 * oracle.avg_reward),
-                        explore_frames,
-                        avg_cores: core_frames[slot] as f64 / cfg.frames as f64,
-                        stats,
+                        avg_fidelity: 0.0,
+                        oracle_fidelity: 0.0,
+                        fidelity_vs_oracle: 0.0,
+                        avg_violation_ms: 0.0,
+                        max_violation_ms: 0.0,
+                        violation_rate: 0.0,
+                        post_warmup_bound_met_frac: 0.0,
+                        robust_feasible_actions: 0,
+                        convergence_frame: None,
+                        explore_frames: 0,
+                        avg_cores: 0.0,
+                        parked: true,
+                        dropped_frames: cfg.frames,
+                        stats: PolicyStats::new(),
+                    };
+                    let report = match &ladders[slot] {
+                        None => base,
+                        Some(ladder) => {
+                            let app_steps = std::mem::take(&mut steps[slot]);
+                            let explore_frames =
+                                app_steps.iter().filter(|s| s.explored).count();
+                            let mut stats = PolicyStats::new();
+                            for s in &app_steps {
+                                stats.observe(s.reward, s.latency_ms, bound);
+                            }
+                            let even_ts = ladder.set(local_even_rung);
+                            let oracle = oracle_best(even_ts, cfg.frames, bound);
+                            let oracle_fid = oracle.avg_reward.max(1e-9);
+                            let outcome = RunOutcome {
+                                avg_reward: stats.avg_reward(),
+                                avg_violation_ms: stats.avg_violation_ms(),
+                                max_violation_ms: stats.max_violation_ms(),
+                                violation_rate: stats.violation_rate(),
+                                explore_frames,
+                                steps: app_steps,
+                            };
+                            AppReport {
+                                avg_fidelity: outcome.avg_reward,
+                                oracle_fidelity: oracle.avg_reward,
+                                fidelity_vs_oracle: outcome.avg_reward / oracle_fid,
+                                avg_violation_ms: outcome.avg_violation_ms,
+                                max_violation_ms: outcome.max_violation_ms,
+                                violation_rate: outcome.violation_rate,
+                                post_warmup_bound_met_frac: outcome
+                                    .bound_met_frac_after(cfg.warmup_frames, bound),
+                                robust_feasible_actions: even_ts
+                                    .traces
+                                    .iter()
+                                    .filter(|t| t.frac_under(bound) >= 0.95)
+                                    .count(),
+                                convergence_frame: outcome
+                                    .convergence_frame(50, 0.9 * oracle.avg_reward),
+                                explore_frames,
+                                avg_cores: core_frames[slot] as f64 / cfg.frames as f64,
+                                parked: false,
+                                dropped_frames: 0,
+                                stats,
+                                ..base
+                            }
+                        }
                     };
                     if rep_tx.send(report).is_err() {
                         return;
@@ -547,32 +644,74 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
         drop(rep_tx);
 
         // ---- scheduler main loop ---------------------------------------
-        let mut shared = SharedCluster::even(cfg.cluster.clone(), cfg.apps);
+        let mut shared = SharedCluster::parked_even(cfg.cluster.clone(), &admitted);
         let mut curves: Vec<Vec<f64>> = vec![Vec::new(); cfg.apps];
+        // incumbent rungs for the hysteresis term (active apps only)
+        let mut prev_rungs: Vec<usize> = vec![even_rung; cfg.apps];
         for e in 0..epochs {
             let dynamic_ready = cfg.mode == FleetMode::Dynamic
                 && e >= cfg.scheduler.warmup_epochs
-                && curves.iter().all(|c| c.len() == levels.len());
+                && active.iter().all(|&i| curves[i].len() == levels.len());
             let rungs: Vec<usize> = if dynamic_ready {
-                scheduler::allocate(&curves, &levels, total)
+                // solve over the admitted subset; parked apps hold no
+                // rung (their quota is forced to zero below)
+                let sub_curves: Vec<Vec<f64>> =
+                    active.iter().map(|&i| curves[i].clone()).collect();
+                let sub_w: Vec<f64> = active.iter().map(|&i| weights[i]).collect();
+                let sub_prev: Vec<usize> =
+                    active.iter().map(|&i| prev_rungs[i]).collect();
+                let sub = scheduler::allocate_v2(
+                    &sub_curves,
+                    &levels,
+                    total,
+                    &sub_w,
+                    Some(&sub_prev),
+                    cfg.scheduler.hysteresis,
+                );
+                let mut full = vec![0usize; cfg.apps];
+                for (k, &i) in active.iter().enumerate() {
+                    full[i] = sub[k];
+                }
+                full
             } else {
-                vec![even_rung; cfg.apps]
+                let mut full = vec![0usize; cfg.apps];
+                for &i in &active {
+                    full[i] = even_rung;
+                }
+                full
             };
-            let cores: Vec<usize> = rungs.iter().map(|&r| levels[r]).collect();
+            for &i in &active {
+                prev_rungs[i] = rungs[i];
+            }
+            let cores: Vec<usize> = (0..cfg.apps)
+                .map(|a| if admitted[a] { levels[rungs[a]] } else { 0 })
+                .collect();
             // the shared cluster enforces the budget + floor invariants;
             // the report quotes the quotas it actually installed
-            shared.set_quotas(&cores);
+            shared.set_quotas_parked(&cores, &parked);
             let predicted_utility: Vec<f64> = rungs
                 .iter()
                 .enumerate()
-                .map(|(a, &r)| curves[a].get(r).copied().unwrap_or(0.0))
+                .map(|(a, &r)| {
+                    if admitted[a] {
+                        curves[a].get(r).copied().unwrap_or(0.0)
+                    } else {
+                        0.0
+                    }
+                })
                 .collect();
+            let churn_cores = allocations
+                .last()
+                .map(|prev| AllocationFrame::churn_vs(shared.quotas(), prev))
+                .unwrap_or(0);
             allocations.push(AllocationFrame {
                 epoch: e,
                 start_frame: e * epoch_frames,
                 levels: rungs.clone(),
                 cores: shared.quotas().to_vec(),
                 predicted_utility,
+                parked: parked.clone(),
+                churn_cores,
             });
             let lo = e * epoch_frames;
             let hi = (lo + epoch_frames).min(cfg.frames);
@@ -580,7 +719,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 tx.send(Cmd::Epoch { lo, hi, rungs: rungs.clone() })
                     .expect("worker alive");
             }
-            for _ in 0..cfg.apps {
+            for _ in 0..active.len() {
                 // bounded wait: a panicking worker drops only its own
                 // sender (its siblings keep theirs), so a plain recv()
                 // would hang forever masking the original panic — time
@@ -601,9 +740,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     apps.sort_by_key(|r| r.index);
 
     let n = apps.len() as f64;
+    // parked apps count as zero fidelity — parking is not free, the
+    // aggregate owns it — but the SLO floor is over admitted apps only
+    // (a parked tenant is an explicit admission decision, not a miss)
     let avg_ratio = apps.iter().map(|a| a.fidelity_vs_oracle).sum::<f64>() / n;
     let min_met = apps
         .iter()
+        .filter(|a| !a.parked)
         .map(|a| a.post_warmup_bound_met_frac)
         .fold(f64::INFINITY, f64::min);
     let meeting = apps
@@ -614,6 +757,11 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     for a in &apps {
         merged.merge(&a.stats);
     }
+    let core_churn = allocations.iter().map(|a| a.churn_cores).sum();
+    let realloc_moves = allocations
+        .windows(2)
+        .map(|w| w[1].moved_apps(&w[0]))
+        .sum();
     FleetReport {
         frames: cfg.frames,
         seed: cfg.seed,
@@ -629,6 +777,9 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
         avg_fidelity_vs_oracle: avg_ratio,
         min_bound_met_frac: min_met,
         apps_meeting_slo: meeting,
+        parked_apps: apps.iter().filter(|a| a.parked).count(),
+        core_churn,
+        realloc_moves,
         merged,
         apps,
     }

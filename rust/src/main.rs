@@ -101,16 +101,23 @@ commands:
   fleet [--apps N] [--frames N] [--seed N] [--configs N] [--epsilon E]
         [--warmup N] [--headroom F] [--blend K] [--threads N] [--out FILE]
         [--mode static|dynamic] [--hetero] [--shift FRAME] [--epoch N]
-        [--floor CORES]
+        [--floor CORES] [--priority W1,W2,..] [--hysteresis H]
+        [--admission] [--thrash MULT]
   schedule [--apps N] [--frames N] [--seed N] [--epoch N] [--floor CORES]
         [--candidates N] [--realtime SCALE] [--uniform]
+        [--priority W1,W2,..] [--hysteresis H]
 
 APP is pose, motion-sift, or gen:SEED (a procedurally generated
 pipeline; see the workloads module). `fleet` tunes N generated apps on
 ONE shared cluster (static even shares, or --mode dynamic for
 marginal-utility core reallocation every --epoch frames); `schedule`
 streams N generated apps live through the threaded engine under the
-same scheduler.";
+same scheduler. Scheduler v2 knobs: --priority weights tenant tiers
+(missing entries default to 1), --hysteresis sets the migration penalty
+a reallocation must out-earn, --admission parks the lowest-priority
+apps when --floor x apps exceeds the pool (instead of over-granting)
+and switches to exact fairness-floor accounting, --thrash MULT cranks
+the generated scenarios' content wobble to stress allocation churn.";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -119,7 +126,10 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let cmd = argv[0].clone();
-    let args = Args::parse(&argv[1..], &["graph", "all", "claims", "hetero", "uniform"])?;
+    let args = Args::parse(
+        &argv[1..],
+        &["graph", "all", "claims", "hetero", "uniform", "admission"],
+    )?;
 
     let run_cfg = RunConfig::load_or_default(args.get("config").map(std::path::Path::new))?;
     let spec_dir = find_spec_dir(args.get("specs").map(std::path::Path::new))?;
@@ -134,6 +144,34 @@ fn main() -> Result<()> {
         "schedule" => cmd_schedule(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
+}
+
+/// Parse a `--priority` weight list: comma-separated positive floats,
+/// one per app index; apps past the end of the list default to 1.0.
+/// A single trailing comma is tolerated; interior empty entries are
+/// rejected — with admission control the weights decide who gets
+/// parked, so a typo'd `3,,2` must not silently shift every later
+/// weight onto the wrong tenant.
+fn parse_priorities(s: &str) -> Result<Vec<f64>> {
+    let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+    let parts = if parts.last() == Some(&"") {
+        &parts[..parts.len() - 1] // trailing comma
+    } else {
+        &parts[..]
+    };
+    let ws = parts
+        .iter()
+        .map(|p| {
+            anyhow::ensure!(!p.is_empty(), "--priority '{s}': empty entry");
+            p.parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("--priority '{p}': {e}"))
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    anyhow::ensure!(
+        ws.iter().all(|w| w.is_finite() && *w > 0.0),
+        "--priority weights must be finite and > 0: {ws:?}"
+    );
+    Ok(ws)
 }
 
 /// Tune N generated apps concurrently and write the aggregate JSON report.
@@ -181,7 +219,22 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if let Some(f) = args.get_parse::<usize>("floor")? {
         cfg.scheduler.fairness_floor = f;
     }
-    if cfg.apps == 0 || cfg.apps > cfg.cluster.total_cores() {
+    if let Some(p) = args.get("priority") {
+        cfg.scheduler.priorities = parse_priorities(p)?;
+    }
+    if let Some(h) = args.get_parse::<f64>("hysteresis")? {
+        anyhow::ensure!(h >= 0.0, "--hysteresis must be >= 0");
+        cfg.scheduler.hysteresis = h;
+    }
+    if args.has("admission") {
+        // implies exact fairness-floor accounting (see FleetConfig::workload_of)
+        cfg.scheduler.admission = true;
+    }
+    if let Some(t) = args.get_parse::<f64>("thrash")? {
+        anyhow::ensure!(t >= 1.0, "--thrash must be >= 1");
+        cfg.workload.thrash = Some(t);
+    }
+    if cfg.apps == 0 || (!cfg.scheduler.admission && cfg.apps > cfg.cluster.total_cores()) {
         bail!(
             "--apps {} out of range: the shared {}-core cluster supports 1..={} co-tenants",
             cfg.apps,
@@ -206,7 +259,17 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let report = iptune::fleet::run_fleet(&cfg);
     println!(
         "{:<8} {:<9} {:>7} {:>6} {:>8} {:>7} {:>10} {:>10} {:>10} {:>12} {:>11}",
-        "app", "profile", "stages", "knobs", "bound", "cores", "fidelity", "oracle", "%oracle", "bound-met%", "conv-frame"
+        "app",
+        "profile",
+        "stages",
+        "knobs",
+        "bound",
+        "cores",
+        "fidelity",
+        "oracle",
+        "%oracle",
+        "bound-met%",
+        "conv-frame"
     );
     for a in &report.apps {
         println!(
@@ -225,7 +288,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "fleet[{}]: avg {:.1}% of even-share oracle | min bound-met {:.1}% | {}/{} apps meet the {:.0}% SLO | {} reallocation epochs",
+        "fleet[{}]: avg {:.1}% of even-share oracle | min bound-met {:.1}% | {}/{} apps meet the {:.0}% SLO | {} reallocation epochs | churn {} cores over {} moves{}",
         report.mode.name(),
         100.0 * report.avg_fidelity_vs_oracle,
         100.0 * report.min_bound_met_frac,
@@ -233,6 +296,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         report.apps.len(),
         100.0 * iptune::fleet::FLEET_SLO_FRAC,
         report.allocations.len(),
+        report.core_churn,
+        report.realloc_moves,
+        if report.parked_apps > 0 {
+            format!(" | {} app(s) parked by admission control", report.parked_apps)
+        } else {
+            String::new()
+        },
     );
     report.save(&out)?;
     println!("report -> {}", out.display());
@@ -277,6 +347,13 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     }
     if args.has("uniform") {
         cfg.heterogeneous = false;
+    }
+    if let Some(p) = args.get("priority") {
+        cfg.scheduler.priorities = parse_priorities(p)?;
+    }
+    if let Some(h) = args.get_parse::<f64>("hysteresis")? {
+        anyhow::ensure!(h >= 0.0, "--hysteresis must be >= 0");
+        cfg.scheduler.hysteresis = h;
     }
     eprintln!(
         "schedule: streaming {} generated apps x {} frames live (seed {}, epoch {} frames, {} shared cores) ...",

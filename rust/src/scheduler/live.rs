@@ -19,6 +19,14 @@
 //! under the old knobs, and how many there are depends on OS scheduling.
 //! The structural invariants (quota sums, fairness floors, frame counts)
 //! hold regardless and are what the tests assert.
+//!
+//! The v2 scheduler features carry over: per-app priority weights scale
+//! the utility curves and the hysteresis term pins each stream to its
+//! incumbent quota unless the predicted gain clears the migration
+//! penalty — retuning a *running* pipeline is exactly where switching
+//! cost is real (in-flight frames execute under stale knobs). Admission
+//! parking is a fleet-only feature: a live stream cannot drop frames
+//! retroactively, so an infeasible floor is rejected up front instead.
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -105,7 +113,16 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     assert!(cfg.apps > 0 && cfg.frames > 0);
     let total = cfg.cluster.total_cores();
     assert!(cfg.apps <= total, "one core per app minimum");
+    let weights = cfg.scheduler.weights(cfg.apps);
     let even = (total / cfg.apps).max(1);
+    // an over-subscribed floor is rejected, not silently clamped:
+    // admission parking is fleet-only (a live stream cannot drop frames)
+    anyhow::ensure!(
+        cfg.scheduler.requested_floor(total, cfg.apps) * cfg.apps <= total,
+        "fairness floor x apps exceeds the {total}-core pool; admission \
+         parking is fleet-only (a live stream cannot drop frames) — lower \
+         --floor"
+    );
     let floor = cfg.scheduler.floor_cores(total, cfg.apps);
     let levels = scheduler::core_levels(
         total,
@@ -195,6 +212,8 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
         levels: rungs.clone(),
         cores: rungs.iter().map(|&r| levels[r]).collect(),
         predicted_utility: vec![0.0; cfg.apps],
+        parked: vec![false; cfg.apps],
+        churn_cores: 0,
     }];
 
     // ---- consume live records, learn, reallocate at epoch boundaries ---
@@ -237,7 +256,14 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                 curves.push(curve);
                 best_at.push(bests);
             }
-            rungs = scheduler::allocate(&curves, &levels, total);
+            rungs = scheduler::allocate_v2(
+                &curves,
+                &levels,
+                total,
+                &weights,
+                Some(&rungs),
+                cfg.scheduler.hysteresis,
+            );
             let cores: Vec<usize> = rungs.iter().map(|&r| levels[r]).collect();
             shared.set_quotas(&cores);
             // retune every running pipeline to the best predicted-feasible
@@ -247,6 +273,10 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                 let ks = apps[a].spec.denormalize(&cand_at[a][rungs[a]][pick]);
                 knob_handles[a].set(ks);
             }
+            let churn_cores = allocations
+                .last()
+                .map(|prev| AllocationFrame::churn_vs(shared.quotas(), prev))
+                .unwrap_or(0);
             allocations.push(AllocationFrame {
                 epoch: allocations.len(),
                 start_frame: boundary,
@@ -259,6 +289,8 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                     .enumerate()
                     .map(|(a, &r)| curves[a][r])
                     .collect(),
+                parked: vec![false; cfg.apps],
+                churn_cores,
             });
             boundary += epoch_frames;
         }
@@ -321,5 +353,46 @@ mod tests {
         // profiles alternate
         assert_eq!(report.apps[0].profile, "light");
         assert_eq!(report.apps[1].profile, "heavy");
+    }
+
+    #[test]
+    fn live_v2_priorities_and_hysteresis_keep_invariants() {
+        let cfg = LiveConfig {
+            apps: 3,
+            frames: 60,
+            seed: 11,
+            candidates: 10,
+            heterogeneous: true,
+            realtime_scale: 0.0,
+            scheduler: SchedulerConfig {
+                epoch_frames: 20,
+                hysteresis: 0.05,
+                priorities: vec![3.0, 1.0],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let report = run_live(&cfg).unwrap();
+        assert_eq!(report.apps.len(), 3);
+        for a in &report.apps {
+            assert_eq!(a.frames, 60, "app {} lost frames", a.index);
+        }
+        for alloc in &report.allocations {
+            assert!(alloc.total_cores() <= report.total_cores);
+            assert!(alloc.cores.iter().all(|&c| c >= report.fairness_floor));
+            assert!(alloc.parked.iter().all(|&p| !p), "live never parks");
+        }
+    }
+
+    #[test]
+    fn live_rejects_infeasible_floor() {
+        // a floor the pool cannot honor errors out instead of being
+        // silently clamped (parking is fleet-only)
+        let cfg = LiveConfig {
+            scheduler: SchedulerConfig { fairness_floor: 40, ..Default::default() },
+            ..Default::default()
+        };
+        let err = run_live(&cfg).unwrap_err().to_string();
+        assert!(err.contains("fleet-only"), "{err}");
     }
 }

@@ -16,6 +16,24 @@
 //! utility curves fall out of the paper's own latency models, so the
 //! scheduler needs no training of its own.
 //!
+//! **v2** makes the allocator stateful and production-shaped, following
+//! the switching-cost and admission lessons of those same systems:
+//!
+//! * **Hysteresis** ([`allocate_v2`], [`SchedulerConfig::hysteresis`]) —
+//!   each app's incumbent rung carries a utility bonus equal to the
+//!   migration penalty, so a grant only moves when the predicted
+//!   marginal-utility gain exceeds it. Noisy learned curves stop
+//!   thrashing allocations; real load shifts still reallocate.
+//! * **Priority weights** ([`SchedulerConfig::priorities`]) — tenant
+//!   tiers scale each app's curve in the water-filling pass, so a paying
+//!   tenant's fidelity point buys proportionally more cores.
+//! * **Admission control** ([`admit`], [`SchedulerConfig::admission`]) —
+//!   when `floor × apps` exceeds the pool, the lowest-priority apps are
+//!   parked (zero cores, frames dropped and counted) instead of silently
+//!   over-granting, and sub-stage-count quotas charge the
+//!   time-multiplexing latency multiplier so fairness-floor accounting
+//!   is exact.
+//!
 //! Determinism: [`allocate`] is a pure function of the utility curves,
 //! and curves are pure functions of per-app tuner state, so fleet runs
 //! are reproducible regardless of worker-thread count (asserted by
@@ -43,6 +61,25 @@ pub struct SchedulerConfig {
     /// Cap on any single app's allocation, as a multiple of the even
     /// share (bounded by what the floor leaves available).
     pub max_boost: f64,
+    /// Switching-cost term (utility units): an app's grant only moves
+    /// off its incumbent rung when the priority-weighted marginal-utility
+    /// gain exceeds this migration penalty. 0 (the default) reproduces
+    /// the PR 2 stateless greedy water-filler exactly; positive values
+    /// kill allocation thrash under noisy learned curves.
+    pub hysteresis: f64,
+    /// Per-app priority weights (paying-tenant tiers) scaling each app's
+    /// utility curve in the water-filling pass. Empty → every tenant at
+    /// weight 1.0; shorter vectors are padded with 1.0. Must be finite
+    /// and > 0.
+    pub priorities: Vec<f64>,
+    /// Admission control: when `floor × apps` exceeds the shared pool,
+    /// park the lowest-priority apps (zero cores, frames dropped and
+    /// counted) instead of silently over-granting, and charge
+    /// sub-stage-count time-multiplexing as a latency multiplier
+    /// ([`time_multiplex_factor`]) so fairness-floor accounting is exact.
+    ///
+    /// [`time_multiplex_factor`]: crate::simulator::time_multiplex_factor
+    pub admission: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -53,6 +90,9 @@ impl Default for SchedulerConfig {
             fairness_floor: 0,
             ladder_rungs: 6,
             max_boost: 3.0,
+            hysteresis: 0.0,
+            priorities: Vec::new(),
+            admission: false,
         }
     }
 }
@@ -70,13 +110,70 @@ impl SchedulerConfig {
         };
         floor.min(even).max(1)
     }
+
+    /// The fairness floor *requested* (no even-share clamp): what
+    /// admission control accounts against. Without admission the floor
+    /// is silently clamped to the even share (the historical behavior);
+    /// with it, a floor the pool cannot honor parks tenants instead.
+    pub fn requested_floor(&self, total: usize, apps: usize) -> usize {
+        if self.fairness_floor > 0 {
+            self.fairness_floor.min(total.max(1))
+        } else {
+            self.floor_cores(total, apps)
+        }
+    }
+
+    /// Priority weight of app `index` (missing entries default to 1.0).
+    pub fn priority_of(&self, index: usize) -> f64 {
+        self.priorities.get(index).copied().unwrap_or(1.0)
+    }
+
+    /// The full per-app weight vector for a fleet of `apps`, validated.
+    pub fn weights(&self, apps: usize) -> Vec<f64> {
+        let w: Vec<f64> = (0..apps).map(|i| self.priority_of(i)).collect();
+        assert!(
+            w.iter().all(|p| p.is_finite() && *p > 0.0),
+            "priority weights must be finite and > 0: {w:?}"
+        );
+        w
+    }
+}
+
+/// Admission decision: which apps run when `floor × apps` exceeds the
+/// pool. Keeps the `total / floor` highest-priority apps and parks the
+/// rest (ties park the higher index first, so the decision is
+/// deterministic). Returns one `admitted` flag per app; every app is
+/// admitted when the floor fits.
+pub fn admit(total: usize, floor: usize, weights: &[f64]) -> Vec<bool> {
+    let apps = weights.len();
+    let floor = floor.max(1);
+    if floor * apps <= total {
+        return vec![true; apps];
+    }
+    let capacity = (total / floor).clamp(1, apps);
+    // sort by (priority desc, index asc); keep the first `capacity`
+    let mut order: Vec<usize> = (0..apps).collect();
+    order.sort_by(|&a, &b| {
+        weights[b].partial_cmp(&weights[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut admitted = vec![false; apps];
+    for &i in order.iter().take(capacity) {
+        admitted[i] = true;
+    }
+    admitted
 }
 
 /// The shared core ladder for a fleet of `apps` on `total` cores: rungs
 /// from the fairness floor up to the boost cap, geometrically spaced,
 /// always containing the even share exactly (so the static baseline sits
 /// on a rung).
-pub fn core_levels(total: usize, apps: usize, floor: usize, rungs: usize, boost: f64) -> Vec<usize> {
+pub fn core_levels(
+    total: usize,
+    apps: usize,
+    floor: usize,
+    rungs: usize,
+    boost: f64,
+) -> Vec<usize> {
     let even = (total / apps.max(1)).max(1);
     let floor = floor.clamp(1, even);
     let cap = ((even as f64 * boost).ceil() as usize)
@@ -111,12 +208,54 @@ pub fn core_levels(total: usize, apps: usize, floor: usize, rungs: usize, boost:
 /// Returns one rung index per app. Invariants (tested): allocated cores
 /// never exceed `total`, and every app keeps at least the floor rung.
 pub fn allocate(curves: &[Vec<f64>], levels: &[usize], total: usize) -> Vec<usize> {
+    let uniform = vec![1.0; curves.len()];
+    allocate_v2(curves, levels, total, &uniform, None, 0.0)
+}
+
+/// The v2 stateful water-filler: [`allocate`] plus per-app priority
+/// weights and a hysteresis/switching-cost term.
+///
+/// Each app's curve is scaled by its `weights` entry before gains are
+/// compared, so a paying tenant's fidelity point buys proportionally
+/// more cores. `prev` is the rung vector the previous epoch installed;
+/// with `hysteresis > 0` each app's *incumbent* rung gets a utility
+/// bonus of `hysteresis`, which makes the greedy fill (a) route through
+/// the incumbent on the way up and (b) refuse to move past (or stop
+/// short of) it unless the weighted marginal-utility gain over the
+/// incumbent exceeds the migration penalty. With uniform weights and
+/// `hysteresis == 0` this reduces to the PR 2 stateless greedy
+/// water-filler bit-for-bit (`1.0 * u + 0.0` is exact in IEEE 754).
+pub fn allocate_v2(
+    curves: &[Vec<f64>],
+    levels: &[usize],
+    total: usize,
+    weights: &[f64],
+    prev: Option<&[usize]>,
+    hysteresis: f64,
+) -> Vec<usize> {
     let napps = curves.len();
     assert!(napps > 0, "allocate needs at least one app");
     assert!(!levels.is_empty(), "allocate needs a rung ladder");
+    assert_eq!(weights.len(), napps, "weight vector shape");
+    assert!(hysteresis >= 0.0, "hysteresis must be non-negative");
     for c in curves {
         assert_eq!(c.len(), levels.len(), "curve shape mismatch");
     }
+    if let Some(p) = prev {
+        assert_eq!(p.len(), napps, "prev rung vector shape");
+    }
+    // weighted utility with the incumbent-rung hysteresis bonus
+    let adj = |a: usize, l: usize| -> f64 {
+        let mut u = weights[a] * curves[a][l];
+        if hysteresis > 0.0 {
+            if let Some(p) = prev {
+                if p[a] == l {
+                    u += hysteresis;
+                }
+            }
+        }
+        u
+    };
     let mut lvl = vec![0usize; napps];
     let mut used = napps * levels[0];
     assert!(used <= total, "floor rung oversubscribes the cluster");
@@ -128,7 +267,7 @@ pub fn allocate(curves: &[Vec<f64>], levels: &[usize], total: usize) -> Vec<usiz
                 if used - levels[lvl[a]] + levels[j] > total {
                     continue;
                 }
-                let du = curves[a][j] - curves[a][lvl[a]];
+                let du = adj(a, j) - adj(a, lvl[a]);
                 if du <= 1e-12 {
                     continue;
                 }
@@ -183,16 +322,39 @@ pub struct AllocationFrame {
     pub start_frame: usize,
     /// Ladder rung index per app.
     pub levels: Vec<usize>,
-    /// Core quota per app (the rung budgets).
+    /// Core quota per app (the rung budgets; 0 for parked apps).
     pub cores: Vec<usize>,
     /// Utility the scheduler predicted for each app at its rung (NaN-free;
     /// warmup epochs record zeros).
     pub predicted_utility: Vec<f64>,
+    /// Apps parked by admission control this epoch (zero cores, frames
+    /// dropped). Empty-of-true outside admission mode.
+    pub parked: Vec<bool>,
+    /// Cores moved relative to the previous epoch: Σ |cores − prev|.
+    /// 0 at epoch 0.
+    pub churn_cores: usize,
 }
 
 impl AllocationFrame {
     pub fn total_cores(&self) -> usize {
         self.cores.iter().sum()
+    }
+
+    /// Apps whose quota changed relative to the previous epoch's.
+    pub fn moved_apps(&self, prev: &AllocationFrame) -> usize {
+        self.cores
+            .iter()
+            .zip(&prev.cores)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+
+    /// Cores moved relative to `prev`: Σ |cores − prev.cores| — the
+    /// value recorded in [`churn_cores`](Self::churn_cores). One
+    /// definition shared by the fleet and live paths so the per-epoch
+    /// frames and the aggregated totals can never drift apart.
+    pub fn churn_vs(cores: &[usize], prev: &AllocationFrame) -> usize {
+        cores.iter().zip(&prev.cores).map(|(&a, &b)| a.abs_diff(b)).sum()
     }
 
     pub fn to_json(&self) -> Json {
@@ -208,6 +370,11 @@ impl AllocationFrame {
                 Json::Arr(self.cores.iter().map(|&c| Json::from(c)).collect()),
             )
             .put("predicted_utility", Json::from_f64_slice(&self.predicted_utility))
+            .put(
+                "parked",
+                Json::Arr(self.parked.iter().map(|&p| Json::from(p)).collect()),
+            )
+            .put("churn_cores", self.churn_cores)
     }
 }
 
@@ -292,10 +459,113 @@ mod tests {
             levels: vec![0, 2, 1],
             cores: vec![7, 15, 10],
             predicted_utility: vec![0.5, 0.25, 0.75],
+            parked: vec![false, false, true],
+            churn_cores: 13,
         };
         assert_eq!(f.total_cores(), 32);
         let j = Json::parse(&f.to_json().to_string()).unwrap();
         assert_eq!(j.req("epoch").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.req("cores").unwrap().as_f64_vec().unwrap(), vec![7.0, 15.0, 10.0]);
+        assert_eq!(j.req("churn_cores").unwrap().as_usize().unwrap(), 13);
+        assert!(j.req("parked").unwrap().as_arr().unwrap()[2].as_bool().unwrap());
+        let prev = AllocationFrame { cores: vec![7, 10, 15], ..f.clone() };
+        assert_eq!(f.moved_apps(&prev), 2);
+    }
+
+    #[test]
+    fn allocate_v2_defaults_reproduce_v1() {
+        // uniform weights, no incumbents, zero hysteresis == PR 2 greedy
+        let levels = vec![7, 10, 15, 21, 31, 45];
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..20 {
+            let curves: Vec<Vec<f64>> = (0..6)
+                .map(|_| {
+                    let mut u: Vec<f64> = (0..levels.len()).map(|_| rng.f64()).collect();
+                    u.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    u
+                })
+                .collect();
+            let v1 = allocate(&curves, &levels, 90);
+            let v2 = allocate_v2(&curves, &levels, 90, &[1.0; 6], None, 0.0);
+            assert_eq!(v1, v2);
+            // a zero-hysteresis incumbent changes nothing either
+            let v2p = allocate_v2(&curves, &levels, 90, &[1.0; 6], Some(&v1), 0.0);
+            assert_eq!(v1, v2p);
+        }
+    }
+
+    #[test]
+    fn hysteresis_pins_sub_penalty_wobble_but_follows_real_shifts() {
+        let levels = vec![4, 8, 16];
+        // two apps contending for one boost slot; app 0 clearly ahead
+        let a = vec![0.10, 0.50, 0.70];
+        let b = vec![0.10, 0.46, 0.64];
+        let prev = allocate_v2(&[a.clone(), b.clone()], &levels, 24, &[1.0; 2], None, 0.0);
+        assert_eq!(prev, vec![2, 1]); // app 0 holds the 16-core rung
+        // noise swaps the two curves — v1 migrates, v2 (h=0.1) holds
+        let a2 = b.clone();
+        let b2 = a;
+        let v1 = allocate_v2(&[a2.clone(), b2.clone()], &levels, 24, &[1.0; 2], None, 0.0);
+        assert_eq!(v1, vec![1, 2], "greedy chases the wobble");
+        let v2 = allocate_v2(&[a2.clone(), b2.clone()], &levels, 24, &[1.0; 2], Some(&prev), 0.1);
+        assert_eq!(v2, prev, "hysteresis keeps the incumbent");
+        // a real shift (gain above the penalty) still migrates
+        let b3 = vec![0.10, 0.50, 0.95];
+        let v2s =
+            allocate_v2(&[a2.clone(), b3.clone()], &levels, 24, &[1.0; 2], Some(&prev), 0.1);
+        assert_eq!(v2s, vec![1, 2], "gains above the penalty must move");
+    }
+
+    #[test]
+    fn priority_weights_tilt_contested_cores() {
+        let levels = vec![4, 8];
+        let want = vec![0.1, 0.9];
+        // same curves, but app 2 pays for a 3x tier: it wins the one slot
+        // that uniform weights hand to app 0
+        let curves = vec![want.clone(), want.clone(), want.clone()];
+        let uniform = allocate_v2(&curves, &levels, 16, &[1.0; 3], None, 0.0);
+        assert_eq!(uniform, vec![1, 0, 0]);
+        let tiered = allocate_v2(&curves, &levels, 16, &[1.0, 1.0, 3.0], None, 0.0);
+        assert_eq!(tiered, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn admit_parks_lowest_priority_when_floor_oversubscribes() {
+        // floor fits: everyone runs
+        assert_eq!(admit(120, 15, &[1.0; 8]), vec![true; 8]);
+        // 4 apps x 4-core floor on 10 cores: capacity 2; lowest priority
+        // parks first, ties park the higher index
+        let admitted = admit(10, 4, &[1.0, 1.0, 0.5, 2.0]);
+        assert_eq!(admitted, vec![true, false, false, true]);
+        // uniform priorities: highest indexes park
+        assert_eq!(admit(10, 4, &[1.0; 4]), vec![true, true, false, false]);
+        // floor larger than the pool: exactly one app survives
+        assert_eq!(admit(8, 64, &[1.0, 2.0]), vec![false, true]);
+    }
+
+    #[test]
+    fn weights_and_floor_helpers() {
+        let cfg = SchedulerConfig {
+            priorities: vec![2.0, 0.5],
+            fairness_floor: 20,
+            admission: true,
+            ..Default::default()
+        };
+        assert_eq!(cfg.weights(4), vec![2.0, 0.5, 1.0, 1.0]);
+        assert_eq!(cfg.priority_of(0), 2.0);
+        assert_eq!(cfg.priority_of(9), 1.0);
+        // requested floor is NOT clamped to the even share (admission
+        // accounts against what was asked for), but floor_cores still is
+        assert_eq!(cfg.requested_floor(120, 8), 20);
+        assert_eq!(cfg.floor_cores(120, 8), 15);
+        let default = SchedulerConfig::default();
+        assert_eq!(default.requested_floor(120, 8), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "priority weights must be finite")]
+    fn non_positive_priorities_rejected() {
+        let cfg = SchedulerConfig { priorities: vec![1.0, 0.0], ..Default::default() };
+        cfg.weights(2);
     }
 }

@@ -58,11 +58,14 @@ impl Cluster {
 ///
 /// Known approximation: the one-worker-per-stage floor means a budget
 /// below the stage count still grants `num_stages` workers — a pipeline
-/// "parked" on a quota smaller than its stage count effectively
-/// time-shares residual cores the accounting doesn't see. This is the
-/// pipeline-parallel minimum (every stage must run somewhere); modeling
-/// true sub-stage-count time-multiplexing (a latency multiplier when
-/// stages outnumber cores) is a ROADMAP follow-on.
+/// on a quota smaller than its stage count effectively time-shares
+/// residual cores. By default that sharing is invisible to the
+/// accounting (the historical behavior every pre-v2 trace depends on);
+/// exact-accounting mode ([`ClusterSim::set_time_multiplex`], enabled by
+/// the scheduler's admission control) charges it back as the
+/// [`time_multiplex_factor`] latency multiplier, so a 7-core quota on a
+/// 12-stage pipeline runs 12 workers at 12/7 the latency instead of
+/// silently over-granting.
 pub fn grant_under(requested: &[usize], budget: usize) -> Vec<usize> {
     let total: usize = requested.iter().sum();
     if total <= budget {
@@ -73,6 +76,20 @@ pub fn grant_under(requested: &[usize], budget: usize) -> Vec<usize> {
         .iter()
         .map(|&r| ((r as f64 * scale).floor() as usize).max(1))
         .collect()
+}
+
+/// Latency multiplier charged when the one-worker-per-stage floor forces
+/// more workers than the budget holds cores: `granted_total / budget`
+/// once the grant exceeds the budget, 1 otherwise. The fleet's exact
+/// fairness-floor accounting (admission control) multiplies every stage
+/// latency by this, modeling the time-multiplexing a too-small quota
+/// actually buys.
+pub fn time_multiplex_factor(granted_total: usize, budget: usize) -> f64 {
+    if granted_total > budget && budget > 0 {
+        granted_total as f64 / budget as f64
+    } else {
+        1.0
+    }
 }
 
 /// One shared, contended cluster divided into per-app core quotas — the
@@ -90,8 +107,27 @@ impl SharedCluster {
     /// Split `cluster` into `apps` even quotas (the static baseline).
     pub fn even(cluster: Cluster, apps: usize) -> Self {
         assert!(apps > 0, "shared cluster needs at least one tenant");
+        assert!(
+            apps <= cluster.total_cores(),
+            "even split needs at least one core per tenant \
+             (admission fleets use parked_even)"
+        );
         let q = (cluster.total_cores() / apps).max(1);
         SharedCluster { quotas: vec![q; apps], cluster }
+    }
+
+    /// [`even`](Self::even) over the *admitted* subset of an
+    /// admission-controlled fleet: admitted tenants split the pool
+    /// evenly, parked tenants hold zero cores — so even the initial
+    /// (pre-epoch-0) state satisfies the budget invariant this type
+    /// exists to enforce.
+    pub fn parked_even(cluster: Cluster, admitted: &[bool]) -> Self {
+        let n = admitted.iter().filter(|&&a| a).count();
+        assert!(n > 0, "shared cluster needs at least one admitted tenant");
+        assert!(n <= cluster.total_cores(), "one core per admitted tenant minimum");
+        let q = (cluster.total_cores() / n).max(1);
+        let quotas = admitted.iter().map(|&a| if a { q } else { 0 }).collect();
+        SharedCluster { quotas, cluster }
     }
 
     pub fn apps(&self) -> usize {
@@ -120,6 +156,29 @@ impl SharedCluster {
         assert!(quotas.iter().all(|&q| q >= 1), "zero-core quota");
         self.quotas.copy_from_slice(quotas);
     }
+
+    /// [`set_quotas`](Self::set_quotas) for admission-controlled fleets:
+    /// apps marked `parked` hold exactly zero cores (their frames are
+    /// dropped, not run), every admitted app still keeps a real quota,
+    /// and the shared budget stays inviolate.
+    pub fn set_quotas_parked(&mut self, quotas: &[usize], parked: &[bool]) {
+        assert_eq!(quotas.len(), self.quotas.len(), "quota vector shape");
+        assert_eq!(parked.len(), self.quotas.len(), "parked vector shape");
+        let sum: usize = quotas.iter().sum();
+        assert!(
+            sum <= self.cluster.total_cores(),
+            "quotas {sum} oversubscribe the {}-core cluster",
+            self.cluster.total_cores()
+        );
+        for (q, &p) in quotas.iter().zip(parked) {
+            if p {
+                assert_eq!(*q, 0, "parked app must hold zero cores");
+            } else {
+                assert!(*q >= 1, "zero-core quota for an admitted app");
+            }
+        }
+        self.quotas.copy_from_slice(quotas);
+    }
 }
 
 /// Result of simulating one frame.
@@ -146,6 +205,12 @@ pub struct ClusterSim {
     /// against `min(core_budget, total_cores)` instead of the whole pool.
     /// `None` (the default) reproduces the dedicated-cluster behavior.
     core_budget: Option<usize>,
+    /// Exact accounting: charge [`time_multiplex_factor`] on every stage
+    /// when the one-worker-per-stage floor over-grants a small budget.
+    /// Off by default — the historical traces (and the paper's dedicated
+    /// cluster) never hit the regime, and the scheduler only turns it on
+    /// together with admission control.
+    time_multiplex: bool,
 }
 
 impl ClusterSim {
@@ -156,6 +221,7 @@ impl ClusterSim {
             rng: crate::util::Rng::new(seed),
             fidelity_sigma: 0.02,
             core_budget: None,
+            time_multiplex: false,
         }
     }
 
@@ -181,6 +247,16 @@ impl ClusterSim {
         self.core_budget = cores;
     }
 
+    /// Exact accounting mode: see [`time_multiplex_factor`].
+    pub fn with_time_multiplex(mut self, on: bool) -> Self {
+        self.set_time_multiplex(on);
+        self
+    }
+
+    pub fn set_time_multiplex(&mut self, on: bool) {
+        self.time_multiplex = on;
+    }
+
     /// The budget grants are made against: the app's quota on a shared
     /// cluster, or the whole pool on a dedicated one.
     pub fn effective_budget(&self) -> usize {
@@ -202,9 +278,14 @@ impl ClusterSim {
         let requested: Vec<usize> =
             (0..app.graph.len()).map(|s| app.model.requested_workers(s, ks)).collect();
         let granted = self.grant_workers(&requested);
+        let tm = if self.time_multiplex {
+            time_multiplex_factor(granted.iter().sum(), self.effective_budget())
+        } else {
+            1.0
+        };
         let stage_ms: Vec<f64> = (0..app.graph.len())
             .map(|s| {
-                let base = app.model.stage_latency(s, ks, &content, granted[s]);
+                let base = app.model.stage_latency(s, ks, &content, granted[s]) * tm;
                 self.noise.apply(base, &mut self.rng)
             })
             .collect();
@@ -222,7 +303,7 @@ impl ClusterSim {
         } else {
             critical_path(&app.graph, &stage_ms)
         };
-        let mut fidelity = app.model.fidelity(&ks.to_vec(), &content);
+        let mut fidelity = app.model.fidelity(ks, &content);
         if self.fidelity_sigma > 0.0 {
             fidelity += self.fidelity_sigma * self.rng.normal();
         }
@@ -280,7 +361,11 @@ mod tests {
 
     #[test]
     fn worker_grant_respects_budget() {
-        let sim = ClusterSim::deterministic(Cluster { servers: 2, cores_per_server: 4, ..Default::default() });
+        let sim = ClusterSim::deterministic(Cluster {
+            servers: 2,
+            cores_per_server: 4,
+            ..Default::default()
+        });
         let granted = sim.grant_workers(&[6, 6, 6]);
         let total: usize = granted.iter().sum();
         assert!(total <= 8 + 2, "proportional floor may round up via max(1): {granted:?}");
@@ -341,6 +426,81 @@ mod tests {
     }
 
     #[test]
+    fn parked_quotas_hold_zero_cores() {
+        let mut sc = SharedCluster::even(Cluster::default(), 4);
+        sc.set_quotas_parked(&[60, 0, 45, 0], &[false, true, false, true]);
+        assert_eq!(sc.quotas(), &[60, 0, 45, 0]);
+    }
+
+    #[test]
+    fn parked_even_splits_among_admitted_only() {
+        // 3 admitted of 5 tenants on 120 cores: 40 each, parked at zero
+        let sc = SharedCluster::parked_even(
+            Cluster::default(),
+            &[true, false, true, false, true],
+        );
+        assert_eq!(sc.quotas(), &[40, 0, 40, 0, 40]);
+        assert!(sc.quotas().iter().sum::<usize>() <= 120);
+        // more tenants than cores is fine as long as the admitted fit
+        let tiny = Cluster { servers: 1, cores_per_server: 2, comm_ms_per_frame: 0.0 };
+        let sc = SharedCluster::parked_even(tiny, &[false, true, false]);
+        assert_eq!(sc.quotas(), &[0, 2, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "parked app must hold zero cores")]
+    fn parked_app_with_cores_rejected() {
+        let mut sc = SharedCluster::even(Cluster::default(), 2);
+        sc.set_quotas_parked(&[60, 10], &[false, true]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-core quota for an admitted app")]
+    fn admitted_app_without_cores_rejected() {
+        let mut sc = SharedCluster::even(Cluster::default(), 2);
+        sc.set_quotas_parked(&[60, 0], &[false, false]);
+    }
+
+    #[test]
+    fn time_multiplex_factor_charges_over_grant() {
+        assert_eq!(time_multiplex_factor(12, 7), 12.0 / 7.0);
+        assert_eq!(time_multiplex_factor(7, 7), 1.0);
+        assert_eq!(time_multiplex_factor(3, 7), 1.0);
+        assert_eq!(time_multiplex_factor(5, 0), 1.0);
+    }
+
+    #[test]
+    fn sub_stage_count_quota_charges_latency_multiplier() {
+        // the ROADMAP regression: a 7-core quota on a >7-stage pipeline
+        // used to run one worker per stage at full speed; with exact
+        // accounting the silent over-grant becomes a latency multiplier
+        let app = pose(); // 7 stages
+        let ks = app.spec.defaults(); // every stage requests 1 worker
+        let base = ClusterSim::deterministic(Cluster::default())
+            .with_core_budget(4)
+            .run_frame(&app, &ks, 0)
+            .end_to_end_ms;
+        let exact = ClusterSim::deterministic(Cluster::default())
+            .with_core_budget(4)
+            .with_time_multiplex(true)
+            .run_frame(&app, &ks, 0)
+            .end_to_end_ms;
+        // 7 granted workers on 4 cores -> every stage 7/4 slower
+        assert!((exact - base * 7.0 / 4.0).abs() < 1e-9, "{base} -> {exact}");
+        // at or above the stage count, exact accounting changes nothing
+        let at_floor = ClusterSim::deterministic(Cluster::default())
+            .with_core_budget(7)
+            .with_time_multiplex(true)
+            .run_frame(&app, &ks, 0)
+            .end_to_end_ms;
+        let plain = ClusterSim::deterministic(Cluster::default())
+            .with_core_budget(7)
+            .run_frame(&app, &ks, 0)
+            .end_to_end_ms;
+        assert_eq!(at_floor, plain);
+    }
+
+    #[test]
     fn grant_identity_under_budget() {
         let sim = ClusterSim::deterministic(Cluster::default());
         assert_eq!(sim.grant_workers(&[1, 1, 16, 10, 10, 1, 1]), vec![1, 1, 16, 10, 10, 1, 1]);
@@ -350,7 +510,11 @@ mod tests {
     fn over_parallelized_config_gets_squeezed() {
         let app = pose();
         // request 96 + 10 + 10 workers on an 8-core toy cluster
-        let mut sim = ClusterSim::deterministic(Cluster { servers: 1, cores_per_server: 8, ..Default::default() });
+        let mut sim = ClusterSim::deterministic(Cluster {
+            servers: 1,
+            cores_per_server: 8,
+            ..Default::default()
+        });
         let ks = [1.0, 1e9, 96.0, 10.0, 10.0];
         let f = sim.run_frame(&app, &ks, 0);
         let big = ClusterSim::deterministic(Cluster::default())

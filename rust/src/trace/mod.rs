@@ -286,6 +286,24 @@ impl LadderTraceSet {
         n_frames: usize,
         seed: u64,
     ) -> Self {
+        Self::generate_with(app, cluster, levels, n_configs, n_frames, seed, false)
+    }
+
+    /// [`generate_on`](Self::generate_on) with exact fairness-floor
+    /// accounting: when `time_multiplex` is set, rungs below an action's
+    /// granted worker total charge the time-multiplexing latency
+    /// multiplier ([`crate::simulator::time_multiplex_factor`]) — the
+    /// admission-controlled fleet traces its ladders this way so a
+    /// 7-core rung on a 12-stage pipeline is priced honestly.
+    pub fn generate_with(
+        app: &App,
+        cluster: &Cluster,
+        levels: &[usize],
+        n_configs: usize,
+        n_frames: usize,
+        seed: u64,
+        time_multiplex: bool,
+    ) -> Self {
         assert!(!levels.is_empty(), "ladder needs at least one level");
         assert!(
             levels.windows(2).all(|w| w[0] < w[1]),
@@ -312,7 +330,8 @@ impl LadderTraceSet {
                             NoiseModel::default(),
                             seed.wrapping_mul(1_000_003).wrapping_add(ci as u64),
                         )
-                        .with_core_budget(budget);
+                        .with_core_budget(budget)
+                        .with_time_multiplex(time_multiplex);
                         let frames = (0..n_frames)
                             .map(|f| {
                                 let r = sim.run_frame(app, config, f);
@@ -510,6 +529,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn exact_accounting_ladder_prices_tiny_rungs_honestly() {
+        let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap(); // 7 stages
+        let cluster = Cluster::default();
+        let plain = LadderTraceSet::generate_on(&app, &cluster, &[4, 120], 4, 20, 9);
+        let exact = LadderTraceSet::generate_with(&app, &cluster, &[4, 120], 4, 20, 9, true);
+        // the 4-core rung is strictly slower under exact accounting ...
+        for c in 0..4 {
+            for f in 0..20 {
+                assert!(
+                    exact.set(0).frame(c, f).end_to_end_ms
+                        > plain.set(0).frame(c, f).end_to_end_ms,
+                    "config {c} frame {f}"
+                );
+                // ... and fidelity is untouched (latency-only charge)
+                assert_eq!(
+                    exact.set(0).frame(c, f).fidelity,
+                    plain.set(0).frame(c, f).fidelity
+                );
+            }
+        }
+        // budgets the grants never exceed (pose requests at most 120
+        // workers) are byte-identical — no silent repricing
+        assert_eq!(
+            exact.set(1).to_json().to_string(),
+            plain.set(1).to_json().to_string()
+        );
     }
 
     #[test]

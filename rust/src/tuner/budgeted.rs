@@ -25,7 +25,7 @@
 
 use crate::apps::App;
 use crate::runtime::{constrained_argmax, Backend};
-use crate::simulator::grant_under;
+use crate::simulator::{grant_under, time_multiplex_factor};
 use crate::trace::LadderTraceSet;
 use crate::tuner::{StepOutcome, TunerConfig};
 use crate::util::Rng;
@@ -63,6 +63,33 @@ pub fn effective_candidates(
         .collect()
 }
 
+/// Per-`(level, action)` time-multiplexing latency factors
+/// ([`time_multiplex_factor`]): what exact fairness-floor accounting
+/// charges when a rung's budget holds fewer cores than the grant's
+/// worker total. All 1.0 at budgets at or above the app's stage count.
+pub fn time_multiplex_factors(
+    app: &App,
+    configs: &[Vec<f64>],
+    levels: &[usize],
+) -> Vec<Vec<f64>> {
+    let n_stages = app.graph.len();
+    levels
+        .iter()
+        .map(|&budget| {
+            configs
+                .iter()
+                .map(|ks| {
+                    let requested: Vec<usize> = (0..n_stages)
+                        .map(|s| app.model.requested_workers(s, ks))
+                        .collect();
+                    let granted = grant_under(&requested, budget);
+                    time_multiplex_factor(granted.iter().sum(), budget)
+                })
+                .collect()
+        })
+        .collect()
+}
+
 /// ε-greedy controller over a ladder trace set (see module docs).
 pub struct BudgetedController<'a> {
     ladder: &'a LadderTraceSet,
@@ -81,6 +108,13 @@ pub struct BudgetedController<'a> {
     /// `level * num_actions + action`.
     obs_count: Vec<u64>,
     obs_ema_ms: Vec<f64>,
+    /// Exact accounting: multiply model predictions by the
+    /// per-`(level, action)` time-multiplexing factor so the model and
+    /// the simulator agree about sub-stage-count budgets. Off by
+    /// default (historical behavior).
+    time_multiplex: bool,
+    /// `tm_at[level][action]` — see [`time_multiplex_factors`].
+    tm_at: Vec<Vec<f64>>,
 }
 
 impl<'a> BudgetedController<'a> {
@@ -94,6 +128,7 @@ impl<'a> BudgetedController<'a> {
         assert!(ladder.num_configs() > 0, "empty action space");
         assert!((0.0..=1.0).contains(&cfg.epsilon));
         let candidates_at = effective_candidates(app, &ladder.configs(), &ladder.levels);
+        let tm_at = time_multiplex_factors(app, &ladder.configs(), &ladder.levels);
         let rewards: Vec<f64> =
             ladder.set(0).traces.iter().map(|t| t.avg_fidelity()).collect();
         let slots = ladder.num_levels() * ladder.num_configs();
@@ -109,6 +144,8 @@ impl<'a> BudgetedController<'a> {
             ema_alpha: 0.2,
             obs_count: vec![0; slots],
             obs_ema_ms: vec![0.0; slots],
+            time_multiplex: false,
+            tm_at,
         }
     }
 
@@ -120,6 +157,18 @@ impl<'a> BudgetedController<'a> {
     pub fn with_empirical_blend(mut self, k: f64) -> Self {
         assert!(k >= 0.0);
         self.blend_k = k;
+        self
+    }
+
+    /// Exact accounting: scale every model prediction by the rung's
+    /// time-multiplexing factor, matching a simulator (and ladder traces)
+    /// running with [`ClusterSim::set_time_multiplex`] on. The fleet
+    /// enables this together with admission control.
+    ///
+    /// [`ClusterSim::set_time_multiplex`]:
+    ///     crate::simulator::ClusterSim::set_time_multiplex
+    pub fn with_time_multiplex(mut self, on: bool) -> Self {
+        self.time_multiplex = on;
         self
     }
 
@@ -150,7 +199,10 @@ impl<'a> BudgetedController<'a> {
         costs
             .iter()
             .enumerate()
-            .map(|(i, &c)| {
+            .map(|(i, &raw)| {
+                // exact accounting first: the observations being blended
+                // in already carry the time-multiplexing charge
+                let c = if self.time_multiplex { raw * self.tm_at[level][i] } else { raw };
                 if self.blend_k <= 0.0 {
                     return c;
                 }
@@ -258,11 +310,14 @@ impl<'a> BudgetedController<'a> {
             frame < self.cfg.warmup_frames || self.rng.f64() < self.cfg.epsilon;
         let (action, predicted_ms) = if explore {
             let a = self.rng.below(n);
-            let p = self
+            let mut p = self
                 .backend
                 .predict(std::slice::from_ref(&self.candidates_at[level][a]))[0];
+            if self.time_multiplex {
+                p *= self.tm_at[level][a];
+            }
             (a, p)
-        } else if self.blend_k > 0.0 {
+        } else if self.blend_k > 0.0 || self.time_multiplex {
             // exploit under the monotone resource prior: estimates from
             // observed lower rungs carry over (see estimates_at)
             let est = self.estimates_at(level);
@@ -419,6 +474,56 @@ mod tests {
             actions
         };
         assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn time_multiplex_factors_match_exact_ladder() {
+        // the controller's predicted charge and the exact-accounting
+        // simulator must agree about sub-stage-count budgets
+        let (app, ladder) = setup(7);
+        let tm = time_multiplex_factors(&app, &ladder.configs(), &ladder.levels);
+        assert_eq!(tm.len(), ladder.num_levels());
+        let n_stages = app.graph.len();
+        for (l, row) in tm.iter().enumerate() {
+            assert_eq!(row.len(), ladder.num_configs());
+            for &f in row {
+                assert!(f >= 1.0, "level {l}: factor {f}");
+                if ladder.levels[l] >= 32 * n_stages {
+                    assert_eq!(f, 1.0, "generous budgets never multiplex");
+                }
+            }
+        }
+        // a 3-core budget on a >=4-stage pipeline must charge something
+        let tiny = time_multiplex_factors(&app, &ladder.configs(), &[3]);
+        if n_stages > 3 {
+            assert!(tiny[0].iter().all(|&f| f >= n_stages as f64 / 3.0));
+        }
+    }
+
+    #[test]
+    fn exact_accounting_scales_controller_predictions() {
+        let (app, ladder) = setup(13);
+        let bound = app.spec.latency_bounds_ms[0];
+        let cfg = TunerConfig { epsilon: 0.0, bound_ms: bound, warmup_frames: 0 };
+        let mk = |tm: bool| {
+            BudgetedController::new(
+                &app,
+                &ladder,
+                Box::new(NativeBackend::structured(&app.spec)),
+                cfg.clone(),
+                3,
+            )
+            .with_time_multiplex(tm)
+        };
+        let mut plain = mk(false);
+        let mut exact = mk(true);
+        // no observations yet: blended costs are pure model x factor
+        let a = plain.estimates_at(0);
+        let b = exact.estimates_at(0);
+        let tm = time_multiplex_factors(&app, &ladder.configs(), &ladder.levels);
+        for i in 0..a.len() {
+            assert!((b[i] - a[i] * tm[0][i]).abs() < 1e-9, "action {i}");
+        }
     }
 
     #[test]

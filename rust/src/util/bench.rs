@@ -56,6 +56,59 @@ impl Bencher {
         }
     }
 
+    /// Bencher honoring the CI environment: `IPTUNE_BENCH_QUICK=1`
+    /// switches to the quick profile (the `bench-smoke` job runs every
+    /// target this way so wall-clock stays in seconds).
+    pub fn from_env() -> Self {
+        match std::env::var("IPTUNE_BENCH_QUICK") {
+            Ok(v) if !matches!(v.to_ascii_lowercase().as_str(), "" | "0" | "false" | "no") => {
+                Self::quick()
+            }
+            _ => Self::default(),
+        }
+    }
+
+    /// Serialize the recorded results for the bench trajectory
+    /// (`BENCH_<sha>.json` is assembled from these per-target files).
+    pub fn to_json(&self, target: &str) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .put("name", r.name.as_str())
+                    .put("median_ns", r.median.as_nanos() as u64)
+                    .put("mean_ns", r.mean.as_nanos() as u64)
+                    .put("min_ns", r.min.as_nanos() as u64)
+                    .put("iters", r.iters)
+            })
+            .collect();
+        Json::obj()
+            .put("target", target)
+            .put("budget_ms", self.budget.as_millis() as u64)
+            .put("results", Json::Arr(results))
+    }
+
+    /// Write `$IPTUNE_BENCH_JSON_DIR/<target>.json` when that env var is
+    /// set (no-op otherwise, so plain `cargo bench` stays file-free).
+    /// Every bench target calls this last; the CI `bench-smoke` job
+    /// merges the per-target files into the uploaded `BENCH_<sha>.json`.
+    pub fn write_json_env(&self, target: &str) {
+        let dir = match std::env::var("IPTUNE_BENCH_JSON_DIR") {
+            Ok(d) if !d.is_empty() => d,
+            _ => return,
+        };
+        let path = std::path::Path::new(&dir).join(format!("{target}.json"));
+        if let Err(e) = std::fs::create_dir_all(&dir)
+            .and_then(|_| std::fs::write(&path, self.to_json(target).to_string()))
+        {
+            eprintln!("bench: could not write {}: {e}", path.display());
+        } else {
+            println!("bench json -> {}", path.display());
+        }
+    }
+
     /// Time `f`, print a criterion-style line, and record the result.
     pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
         // warmup + calibration
@@ -143,6 +196,25 @@ mod tests {
         let r = b.result("noop-ish").unwrap();
         assert!(r.median.as_nanos() < 1_000_000);
         assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let mut b = Bencher {
+            budget: Duration::from_millis(20),
+            warmup: Duration::from_millis(2),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench("x/one", || {
+            acc = black_box(acc.wrapping_add(3));
+        });
+        let j = crate::util::json::Json::parse(&b.to_json("x").to_string()).unwrap();
+        assert_eq!(j.req("target").unwrap().as_str().unwrap(), "x");
+        let rs = j.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].req("name").unwrap().as_str().unwrap(), "x/one");
+        assert!(rs[0].req("median_ns").unwrap().as_u64().unwrap() > 0);
     }
 
     #[test]

@@ -157,6 +157,18 @@ pub struct WorkloadConfig {
     /// mid-run cost jump across its heavy apps so reallocation has
     /// something to chase. Applied after all draws (rng-neutral).
     pub load_shift: Option<(usize, f64)>,
+    /// Adversarial thrash scenario: multiply the content script's wobble
+    /// amplitudes by this and shrink its periods by the same factor, so
+    /// per-epoch cost samples wobble hard and the learned utility curves
+    /// get noisy — the scenario family the scheduler's hysteresis term
+    /// is measured against. `None` leaves the drawn script untouched.
+    /// Applied after all draws (rng-neutral).
+    pub thrash: Option<f64>,
+    /// Exact fairness-floor accounting: calibrate latency bounds with the
+    /// time-multiplexing multiplier charged on sub-stage-count budgets
+    /// ([`crate::simulator::time_multiplex_factor`]), matching what an
+    /// admission-controlled fleet replays. Rng-neutral.
+    pub exact_accounting: bool,
 }
 
 impl Default for WorkloadConfig {
@@ -175,6 +187,8 @@ impl Default for WorkloadConfig {
             trace_frames: 500,
             profile: AppProfile::Balanced,
             load_shift: None,
+            thrash: None,
+            exact_accounting: false,
         }
     }
 }
@@ -436,6 +450,13 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
         script.change_frame = frame;
         script.change_mult = mult;
     }
+    if let Some(t) = cfg.thrash {
+        assert!(t >= 1.0, "thrash multiplier must be >= 1");
+        script.amp1 *= t;
+        script.amp2 *= t;
+        script.per1 = (script.per1 / t).max(2.0);
+        script.per2 = (script.per2 / t).max(2.0);
+    }
 
     // ---- spec tables ----------------------------------------------------
     let params: Vec<ParamSpec> = roles
@@ -600,7 +621,8 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
     let mut app = App { spec, graph, model: Box::new(model) };
 
     // ---- bound calibration ----------------------------------------------
-    let costs = probe_costs(&app, cluster, cfg.probe_configs, seed);
+    let costs =
+        probe_costs_with(&app, cluster, cfg.probe_configs, seed, cfg.exact_accounting);
     let bound = calibrated_bound(&costs, cfg.feasible_quantile, cfg.bound_margin);
     app.spec.latency_bounds_ms = vec![bound, bound * 1.5, bound * 2.0];
     app
@@ -610,13 +632,28 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
 /// change) end-to-end cost of `n` random configurations on `cluster` —
 /// the calibration sample the generated bounds are derived from.
 pub fn probe_costs(app: &App, cluster: &Cluster, n: usize, seed: u64) -> Vec<f64> {
+    probe_costs_with(app, cluster, n, seed, false)
+}
+
+/// [`probe_costs`] with optional exact fairness-floor accounting: the
+/// probe simulator charges the sub-stage-count time-multiplexing
+/// multiplier, so bounds calibrated for a tiny quota are honest about
+/// what that quota can actually run.
+pub fn probe_costs_with(
+    app: &App,
+    cluster: &Cluster,
+    n: usize,
+    seed: u64,
+    exact_accounting: bool,
+) -> Vec<f64> {
     const PROBE_FRAMES: [usize; 9] = [0, 61, 137, 253, 389, 491, 645, 811, 953];
     let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
     (0..n)
         .map(|_| {
             let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
             let ks = app.spec.denormalize(&u);
-            let mut sim = ClusterSim::deterministic(cluster.clone());
+            let mut sim = ClusterSim::deterministic(cluster.clone())
+                .with_time_multiplex(exact_accounting);
             PROBE_FRAMES
                 .iter()
                 .map(|&f| sim.run_frame(app, &ks, f).end_to_end_ms)
@@ -814,6 +851,63 @@ mod tests {
             app.spec.params.len(),
             "load shift must not disturb the draw stream"
         );
+    }
+
+    #[test]
+    fn thrash_scenario_is_rng_neutral_and_turbulent() {
+        let plain = generate(5, &WorkloadConfig::default());
+        let cfg = WorkloadConfig { thrash: Some(6.0), ..Default::default() };
+        let thrashed = generate(5, &cfg);
+        // rng-neutral: same topology and knob table as the plain draw
+        assert_eq!(plain.spec.stages.len(), thrashed.spec.stages.len());
+        assert_eq!(plain.spec.params.len(), thrashed.spec.params.len());
+        for (a, b) in plain.spec.params.iter().zip(&thrashed.spec.params) {
+            assert_eq!(a.name, b.name, "thrash must not disturb the draw stream");
+        }
+        // turbulent: the content wobble swings much harder and faster
+        let swing = |app: &crate::apps::App| {
+            let fs: Vec<f64> = (0..50).map(|f| app.model.content(f).features).collect();
+            fs.iter().copied().fold(0.0f64, f64::max)
+                - fs.iter().copied().fold(f64::INFINITY, f64::min)
+        };
+        assert!(
+            swing(&thrashed) > 3.0 * swing(&plain),
+            "thrash swing {} vs plain {}",
+            swing(&thrashed),
+            swing(&plain)
+        );
+    }
+
+    #[test]
+    fn exact_accounting_calibrates_honest_bounds_on_tiny_clusters() {
+        // a 3-core cluster always runs >= 5 stages, so every probe pays
+        // the time-multiplexing charge and the bound must grow with it
+        let tiny = Cluster { servers: 1, cores_per_server: 3, comm_ms_per_frame: 0.0 };
+        let plain_cfg = WorkloadConfig::default();
+        let exact_cfg = WorkloadConfig { exact_accounting: true, ..Default::default() };
+        for seed in [2u64, 9, 21] {
+            let plain = generate_on(seed, &plain_cfg, &tiny);
+            let exact = generate_on(seed, &exact_cfg, &tiny);
+            assert!(
+                exact.spec.latency_bounds_ms[0] > plain.spec.latency_bounds_ms[0],
+                "seed {seed}: {} !> {}",
+                exact.spec.latency_bounds_ms[0],
+                plain.spec.latency_bounds_ms[0]
+            );
+            // rng-neutral: identical topology either way
+            assert_eq!(plain.spec.stages.len(), exact.spec.stages.len());
+        }
+        // on the paper's 120-core cluster the charge only applies to
+        // configurations whose grants exceed the pool — bounds never shrink
+        let big = Cluster::default();
+        for seed in [2u64, 9, 21] {
+            let plain = generate_on(seed, &plain_cfg, &big);
+            let exact = generate_on(seed, &exact_cfg, &big);
+            assert!(
+                exact.spec.latency_bounds_ms[0] >= plain.spec.latency_bounds_ms[0],
+                "seed {seed}"
+            );
+        }
     }
 
     #[test]

@@ -196,7 +196,11 @@ fn prop_generated_worker_requests_respect_grant_budget() {
     let cfg = WorkloadConfig::default();
     check("gen-workers", 40, |rng, case| {
         let app = workloads::generate(case as u64 + 900, &cfg);
-        let sim = ClusterSim::deterministic(Cluster { servers: 2, cores_per_server: 4, comm_ms_per_frame: 0.0 });
+        let sim = ClusterSim::deterministic(Cluster {
+            servers: 2,
+            cores_per_server: 4,
+            comm_ms_per_frame: 0.0,
+        });
         let u = unit_vec(rng, app.spec.num_vars());
         let ks = app.spec.denormalize(&u);
         let requested: Vec<usize> = (0..app.graph.len())

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Bench-trajectory gate for the CI `bench-smoke` job.
+
+Merges the per-target JSON files the benches emit (util/bench.rs
+`write_json_env`, driven by IPTUNE_BENCH_JSON_DIR) into one
+`BENCH_<sha>.json` trajectory artifact, then gates the scheduler
+epoch-cost benches against the checked-in baseline: the job FAILS when a
+gated bench's median exceeds 2x its baseline budget. Non-gated benches
+(tuner hot path, simulator frame cost) ride along in the artifact and
+print warnings only — they seed the trajectory without flaking the gate
+on noisy shared runners.
+
+Usage:
+    bench_gate.py <json_dir> <baseline.json> <out.json> [--sha SHA]
+
+stdlib only — runs on any CI python3.
+"""
+import json
+import pathlib
+import sys
+
+REGRESSION_FACTOR = 2.0
+
+
+def main(argv):
+    if len(argv) < 4:
+        print(__doc__)
+        return 2
+    json_dir, baseline_path, out_path = argv[1], argv[2], argv[3]
+    sha = argv[5] if len(argv) > 5 and argv[4] == "--sha" else "local"
+
+    baseline = json.loads(pathlib.Path(baseline_path).read_text())
+    gated = baseline.get("gated", {})
+    tracked = baseline.get("tracked", {})
+
+    targets = {}
+    for p in sorted(pathlib.Path(json_dir).glob("*.json")):
+        doc = json.loads(p.read_text())
+        targets[doc["target"]] = doc
+    if not targets:
+        print(f"bench_gate: no bench json files under {json_dir}")
+        return 1
+
+    results = {}
+    for doc in targets.values():
+        for r in doc["results"]:
+            results[r["name"]] = r
+
+    failures, warnings, missing = [], [], []
+    for name, budget_ns in sorted(gated.items()):
+        r = results.get(name)
+        if r is None:
+            missing.append(name)
+            continue
+        ratio = r["median_ns"] / budget_ns
+        status = "FAIL" if ratio > REGRESSION_FACTOR else "ok"
+        print(f"[gated]   {name:<44} median {r['median_ns']:>12} ns"
+              f"  budget {budget_ns:>12} ns  x{ratio:.2f}  {status}")
+        if ratio > REGRESSION_FACTOR:
+            failures.append((name, r["median_ns"], budget_ns))
+    for name, budget_ns in sorted(tracked.items()):
+        r = results.get(name)
+        if r is None:
+            print(f"[tracked] {name:<44} absent (target skipped?)")
+            continue
+        ratio = r["median_ns"] / budget_ns
+        print(f"[tracked] {name:<44} median {r['median_ns']:>12} ns"
+              f"  budget {budget_ns:>12} ns  x{ratio:.2f}"
+              f"{'  WARN' if ratio > REGRESSION_FACTOR else ''}")
+        if ratio > REGRESSION_FACTOR:
+            warnings.append(name)
+
+    out = {
+        "sha": sha,
+        "regression_factor": REGRESSION_FACTOR,
+        "targets": targets,
+        "gate": {
+            "failures": [
+                {"name": n, "median_ns": m, "budget_ns": b} for n, m, b in failures
+            ],
+            "warnings": warnings,
+            "missing_gated": missing,
+        },
+    }
+    pathlib.Path(out_path).write_text(json.dumps(out, indent=2, sort_keys=True))
+    print(f"bench trajectory -> {out_path}")
+
+    if missing:
+        print(f"bench_gate: gated benches missing from results: {missing}")
+        return 1
+    if failures:
+        print(f"bench_gate: {len(failures)} gated bench(es) regressed >2x")
+        return 1
+    print("bench_gate: all gated benches within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
