@@ -113,6 +113,28 @@ fn main() {
         black_box(LadderTraceSet::generate_on(&app, &cluster, &levels, 8, 100, 5));
     });
 
+    // ---- ladder-trace peak memory (rung sharing) ------------------------
+    // A light (core-insensitive) app's grant is identical at every rung:
+    // the ladder must share one frame buffer per config instead of
+    // replicating levels-fold. The assertion gates the fix; the metrics
+    // put the byte counts on the bench trajectory (BENCH_<sha>.json).
+    let light_cfg = WorkloadConfig { profile: AppProfile::Light, ..Default::default() };
+    let light = workloads::generate_on(42, &light_cfg, &cluster);
+    let light_ladder = LadderTraceSet::generate_on(&light, &cluster, &levels, 16, 200, 7);
+    let (unique, logical) =
+        (light_ladder.unique_trace_bytes(), light_ladder.logical_trace_bytes());
+    assert!(
+        unique * 4 <= logical,
+        "light-app ladder peak trace bytes must be >= 4x below the \
+         unshared footprint: {unique} vs {logical}"
+    );
+    b.metric("ladder_trace/light_peak_bytes", unique as f64);
+    b.metric("ladder_trace/light_logical_bytes", logical as f64);
+    b.metric("ladder_trace/light_sharing_ratio", light_ladder.sharing_ratio());
+    let heavy_ladder = LadderTraceSet::generate_on(&app, &cluster, &levels, 8, 100, 5);
+    b.metric("ladder_trace/heavy_peak_bytes", heavy_ladder.unique_trace_bytes() as f64);
+    b.metric("ladder_trace/heavy_sharing_ratio", heavy_ladder.sharing_ratio());
+
     println!("\n{} benchmarks complete", b.results.len());
     b.write_json_env("scheduler");
 }

@@ -13,7 +13,7 @@
 //! frame entering the pipe.
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread;
 
 use crate::apps::App;
@@ -32,11 +32,21 @@ pub struct EngineConfig {
     /// `frame_interval_ms` when `realtime_scale > 0`.
     pub frames: usize,
     pub seed: u64,
+    /// Spawn with the source gate already closed: no frame enters the
+    /// pipeline until [`PauseHandle::resume`] — how the live scheduler
+    /// parks a tenant from frame zero without dropping anything.
+    pub start_paused: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { realtime_scale: 0.0, queue_capacity: 8, frames: 100, seed: 0 }
+        EngineConfig {
+            realtime_scale: 0.0,
+            queue_capacity: 8,
+            frames: 100,
+            seed: 0,
+            start_paused: false,
+        }
     }
 }
 
@@ -73,6 +83,7 @@ enum Evt {
 pub struct StreamHandle {
     pub records: Receiver<FrameRecord>,
     knobs: Arc<RwLock<Arc<Vec<f64>>>>,
+    pause: Arc<(Mutex<bool>, Condvar)>,
 }
 
 impl StreamHandle {
@@ -93,6 +104,40 @@ impl StreamHandle {
     /// thread keeps the knob handles and retunes every epoch.
     pub fn knob_handle(&self) -> KnobHandle {
         KnobHandle(Arc::clone(&self.knobs))
+    }
+
+    /// A cloneable source-gate handle: pausing closes the gate *before*
+    /// the next frame enters the pipeline (frames already inside the
+    /// bounded connectors drain normally — a live stream never drops or
+    /// retro-drops frames), resuming reopens it. The live scheduler parks
+    /// a tenant by pausing its source instead of zeroing its quota.
+    pub fn pause_handle(&self) -> PauseHandle {
+        PauseHandle(Arc::clone(&self.pause))
+    }
+}
+
+/// Cloneable, thread-safe source gate detached from a [`StreamHandle`]
+/// (see [`StreamHandle::pause_handle`]).
+#[derive(Clone)]
+pub struct PauseHandle(Arc<(Mutex<bool>, Condvar)>);
+
+impl PauseHandle {
+    /// Close the gate: the source blocks before emitting its next frame.
+    pub fn pause(&self) {
+        let (m, _) = &*self.0;
+        *m.lock().unwrap() = true;
+    }
+
+    /// Reopen the gate and wake the source.
+    pub fn resume(&self) {
+        let (m, cv) = &*self.0;
+        *m.lock().unwrap() = false;
+        cv.notify_all();
+    }
+
+    pub fn paused(&self) -> bool {
+        let (m, _) = &*self.0;
+        *m.lock().unwrap()
     }
 }
 
@@ -123,6 +168,7 @@ fn sleep_scaled(ms: f64, scale: f64) {
 pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -> StreamHandle {
     let n_stages = app.graph.len();
     let knobs = Arc::new(RwLock::new(Arc::new(initial_knobs)));
+    let pause = Arc::new((Mutex::new(cfg.start_paused), Condvar::new()));
     let (rec_tx, rec_rx) = channel::<FrameRecord>();
     let (evt_tx, evt_rx) = channel::<Evt>();
 
@@ -152,6 +198,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
         let evt_tx = evt_tx.clone();
         let knobs_cell = Arc::clone(&knobs);
         let cfg2 = cfg.clone();
+        let pause_gate = Arc::clone(&pause);
         let is_source = sources.contains(&stage);
         let is_sink = stage == sink_id;
         thread::Builder::new()
@@ -163,6 +210,15 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                 for frame in 0..cfg2.frames {
                     // join all input connectors (critical-path max)
                     let token = if is_source {
+                        // parked tenants hold here: no frame enters the
+                        // pipe until the scheduler reopens the gate
+                        {
+                            let (m, cv) = &*pause_gate;
+                            let mut paused = m.lock().unwrap();
+                            while *paused {
+                                paused = cv.wait(paused).unwrap();
+                            }
+                        }
                         sleep_scaled(interval_ms, cfg2.realtime_scale); // camera pace
                         let ks = knobs_cell.read().unwrap().clone();
                         Token { id: frame, vt: 0.0, knobs: ks }
@@ -272,7 +328,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
         })
         .expect("spawn assembler");
 
-    StreamHandle { records: rec_rx, knobs }
+    StreamHandle { records: rec_rx, knobs, pause }
 }
 
 /// Run a stream to completion, collecting all records (convenience for
@@ -383,6 +439,30 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 40);
+    }
+
+    #[test]
+    fn pause_gates_the_source_and_resume_loses_nothing() {
+        let a = app("pose");
+        let handle = spawn_stream(
+            Arc::clone(&a),
+            a.spec.defaults(),
+            EngineConfig { frames: 30, start_paused: true, ..Default::default() },
+        );
+        let pause = handle.pause_handle();
+        assert!(pause.paused());
+        // the closed gate lets no frame enter the pipeline at all
+        assert!(
+            handle.records.recv_timeout(std::time::Duration::from_millis(100)).is_err(),
+            "a frame leaked through a closed source gate"
+        );
+        pause.resume();
+        assert!(!pause.paused());
+        let mut n = 0;
+        while handle.records.recv().is_ok() {
+            n += 1;
+        }
+        assert_eq!(n, 30, "deferred frames must all arrive after resume");
     }
 
     #[test]

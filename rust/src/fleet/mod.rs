@@ -41,6 +41,21 @@
 //! time-multiplexing latency multiplier in the traces, the calibration
 //! probes, and the controller's predictions alike).
 //!
+//! Scheduler v3 ([`SchedulerConfig::admission_epoch`]) makes admission
+//! *epoch-granular*: every epoch the fleet re-decides who runs from the
+//! tenants' learned demands ([`scheduler::demand_cores`]), re-admits parked
+//! tenants when the pool frees up (e.g. after a scripted load drop),
+//! rotates parking among equal-priority tenants under a starvation bound,
+//! and applies scripted mid-run tier shifts
+//! ([`SchedulerConfig::tier_shift`]). Parking is no longer a run-level
+//! fast path: every tenant keeps its ladder traces and controller across
+//! parked epochs, so a re-admitted tenant resumes with a *warm* model.
+//! Reports account per-epoch — [`AppReport::parked_epochs`],
+//! [`AppReport::admitted_frames`], [`AppReport::scored_frames`] — and the
+//! SLO is scored over the frames a tenant actually ran
+//! ([`FleetReport::all_apps_meet_slo`]), so a tenant parked for 2 of 100
+//! epochs is judged on the 98 it ran instead of being silently excluded.
+//!
 //! [`BudgetedController::utility_at`]:
 //!     crate::tuner::BudgetedController::utility_at
 
@@ -51,7 +66,10 @@ use anyhow::{Context, Result};
 
 use crate::metrics::PolicyStats;
 use crate::runtime::native::NativeBackend;
-use crate::scheduler::{self, admit, AllocationFrame, SchedulerConfig};
+use crate::scheduler::{
+    self, admit, demand_cores, reserve_top_up, AllocationFrame, EpochAdmission,
+    SchedulerConfig,
+};
 use crate::simulator::{Cluster, SharedCluster};
 use crate::trace::LadderTraceSet;
 use crate::tuner::policy::oracle_best;
@@ -65,6 +83,11 @@ pub const FLEET_SLO_FRAC: f64 = 0.80;
 /// Cost multiplier of the scripted fleet-wide load shift (applied to the
 /// heavy apps' content scripts at `load_shift_frame`).
 pub const LOAD_SHIFT_MULT: f64 = 1.9;
+
+/// Cost multiplier of the scripted load *drop* scenario family: heavy
+/// apps' costs roughly halve at the shift frame — the regime in which
+/// epoch-granular admission re-admits tenants parked under load pressure.
+pub const LOAD_DROP_MULT: f64 = crate::workloads::LOAD_DROP_MULT;
 
 /// Allocation policy of the fleet run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -124,9 +147,13 @@ pub struct FleetConfig {
     pub mode: FleetMode,
     /// Alternate Light/Heavy app profiles instead of Balanced ones.
     pub heterogeneous: bool,
-    /// Scripted fleet-wide load shift: heavy apps' costs jump by
-    /// [`LOAD_SHIFT_MULT`] at this frame (requires `heterogeneous`).
+    /// Scripted fleet-wide load shift: heavy apps' costs change by
+    /// `load_shift_mult` at this frame (requires `heterogeneous`).
     pub load_shift_frame: Option<usize>,
+    /// Multiplier of the scripted shift: [`LOAD_SHIFT_MULT`] (the default)
+    /// is the classic load *jump*; [`LOAD_DROP_MULT`] scripts the load
+    /// *drop* the epoch-admission acceptance scenario uses.
+    pub load_shift_mult: f64,
     /// Scheduler policy (epoch length, fairness floor, ladder shape).
     pub scheduler: SchedulerConfig,
 }
@@ -148,6 +175,7 @@ impl Default for FleetConfig {
             mode: FleetMode::Static,
             heterogeneous: false,
             load_shift_frame: None,
+            load_shift_mult: LOAD_SHIFT_MULT,
             scheduler: SchedulerConfig::default(),
         }
     }
@@ -165,7 +193,7 @@ impl FleetConfig {
     /// trace/controller replay in [`run_fleet`], which must always price
     /// budgets identically or the bounds lie.
     pub fn exact_accounting(&self) -> bool {
-        self.workload.exact_accounting || self.scheduler.admission
+        self.workload.exact_accounting || self.scheduler.admission_any()
     }
 
     /// Per-app generation envelope (profile + scripted load shift).
@@ -174,7 +202,7 @@ impl FleetConfig {
         w.profile = self.profile_of(index);
         if let Some(frame) = self.load_shift_frame {
             if w.profile == AppProfile::Heavy {
-                w.load_shift = Some((frame, LOAD_SHIFT_MULT));
+                w.load_shift = Some((frame, self.load_shift_mult));
             }
         }
         w.exact_accounting = self.exact_accounting();
@@ -213,8 +241,18 @@ pub struct AppReport {
     pub explore_frames: usize,
     /// Frame-weighted mean core quota this app held.
     pub avg_cores: f64,
-    /// Parked by admission control: zero cores for the whole run.
-    pub parked: bool,
+    /// Reallocation epochs this app spent parked by admission control
+    /// (zero cores, frames dropped). Equal to the epoch count for a
+    /// whole-run-parked tenant; epoch-granular admission produces partial
+    /// counts as parking rotates.
+    pub parked_epochs: usize,
+    /// Frames this app actually ran (its controller stepped).
+    pub admitted_frames: usize,
+    /// Post-warmup frames this app ran — the denominator of
+    /// [`post_warmup_bound_met_frac`](Self::post_warmup_bound_met_frac);
+    /// 0 means the app never produced a scorable frame and is excluded
+    /// from the fleet SLO accounting rather than silently passed/failed.
+    pub scored_frames: usize,
     /// Frames dropped instead of run (all of them for a parked app).
     pub dropped_frames: usize,
     /// Raw accumulator (kept for fleet-wide merging).
@@ -247,7 +285,9 @@ impl AppReport {
             .put("convergence_frame", conv)
             .put("explore_frames", self.explore_frames)
             .put("avg_cores", self.avg_cores)
-            .put("parked", self.parked)
+            .put("parked_epochs", self.parked_epochs)
+            .put("admitted_frames", self.admitted_frames)
+            .put("scored_frames", self.scored_frames)
             .put("dropped_frames", self.dropped_frames)
     }
 }
@@ -273,8 +313,19 @@ pub struct FleetReport {
     pub avg_fidelity_vs_oracle: f64,
     pub min_bound_met_frac: f64,
     pub apps_meeting_slo: usize,
-    /// Apps parked for the whole run by admission control.
+    /// Apps that produced at least one scorable (post-warmup, admitted)
+    /// frame — the denominator of the fleet SLO.
+    pub scored_apps: usize,
+    /// Apps parked for the whole run by admission control (they never ran
+    /// a frame). Epoch-granular partial parking shows up in
+    /// [`parked_app_epochs`](Self::parked_app_epochs) instead.
     pub parked_apps: usize,
+    /// Σ over apps of the epochs each spent parked.
+    pub parked_app_epochs: usize,
+    /// Park/unpark transitions the shared cluster installed — 0 under
+    /// whole-run admission, positive when epoch-granular admission
+    /// rotates parking or re-admits tenants mid-run.
+    pub park_transitions: usize,
     /// Σ over epochs of |cores − previous epoch's cores| — the
     /// reallocation churn the v2 hysteresis exists to cut.
     pub core_churn: usize,
@@ -284,11 +335,14 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
-    /// Every *admitted* app clears the SLO. Parked tenants are an
-    /// explicit, separately-reported admission decision, not a silent
-    /// SLO miss (without admission parking this is simply "all apps").
+    /// Every app with scorable frames clears the SLO, judged over the
+    /// post-warmup frames it actually ran. Whole-run-parked tenants (an
+    /// explicit, separately-reported admission decision) have no scorable
+    /// frames and are excluded; a tenant parked for 2 of 100 epochs is
+    /// judged on the 98 it ran instead of being silently excluded the way
+    /// the old `len - parked_apps` arithmetic did.
     pub fn all_apps_meet_slo(&self) -> bool {
-        self.apps_meeting_slo == self.apps.len() - self.parked_apps
+        self.apps_meeting_slo == self.scored_apps
     }
 
     pub fn to_json(&self) -> Json {
@@ -316,8 +370,11 @@ impl FleetReport {
                     .put("min_post_warmup_bound_met_frac", self.min_bound_met_frac)
                     .put("slo_frac", FLEET_SLO_FRAC)
                     .put("apps_meeting_slo", self.apps_meeting_slo)
+                    .put("scored_apps", self.scored_apps)
                     .put("all_apps_meet_slo", self.all_apps_meet_slo())
                     .put("parked_apps", self.parked_apps)
+                    .put("parked_app_epochs", self.parked_app_epochs)
+                    .put("park_transitions", self.park_transitions)
                     .put("core_churn", self.core_churn)
                     .put("realloc_moves", self.realloc_moves)
                     .put("avg_violation_ms", self.merged.avg_violation_ms())
@@ -358,8 +415,10 @@ pub fn cluster_slice(total: &Cluster, apps: usize) -> Cluster {
 
 /// Epoch command sent to a pinned worker.
 enum Cmd {
-    /// Run frames `lo..hi` with the given per-app rung assignment.
-    Epoch { lo: usize, hi: usize, rungs: Vec<usize> },
+    /// Run frames `lo..hi` with the given per-app rung assignment;
+    /// `admitted[i] == false` drops the epoch's frames for app `i`
+    /// (the warm controller survives for later re-admission).
+    Epoch { lo: usize, hi: usize, rungs: Vec<usize>, admitted: Vec<bool> },
     Finish,
 }
 
@@ -382,30 +441,51 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     );
     let total = cfg.cluster.total_cores();
     assert!(
-        cfg.scheduler.admission || cfg.apps <= total,
+        cfg.scheduler.admission_any() || cfg.apps <= total,
         "fleet of {} apps cannot share {total} cores (one core per app minimum; \
          enable admission control to park the overflow)",
         cfg.apps
     );
-    let weights = cfg.scheduler.weights(cfg.apps);
-    // admission: when the requested floor times the fleet size exceeds
-    // the pool, the lowest-priority apps are parked for the whole run
-    // (zero cores, frames dropped) instead of silently over-granting
+    let epoch_mode = cfg.scheduler.admission_epoch;
+    assert!(
+        !epoch_mode || cfg.mode == FleetMode::Dynamic,
+        "epoch-granular admission consumes utility curves; run --mode dynamic"
+    );
+    let weights0 = cfg.scheduler.weights_at(cfg.apps, 0);
+    // admission: under the run-level (v1) flavor, when the requested floor
+    // times the fleet size exceeds the pool the lowest-priority apps are
+    // parked for the whole run (zero cores, frames dropped) instead of
+    // silently over-granting; the epoch-granular flavor makes the same
+    // first call through EpochAdmission (floor reservations reproduce the
+    // v1 capacity) and then re-decides every epoch from learned demands
     let floor_req = cfg.scheduler.requested_floor(total, cfg.apps);
-    let admitted: Vec<bool> = if cfg.scheduler.admission {
-        admit(total, floor_req, &weights)
+    let mut adm_state =
+        EpochAdmission::new(cfg.apps, cfg.scheduler.starvation_bound_or_default());
+    let admitted0: Vec<bool> = if epoch_mode {
+        adm_state.decide(
+            total,
+            &weights0,
+            &vec![floor_req.clamp(1, total.max(1)); cfg.apps],
+        )
+    } else if cfg.scheduler.admission {
+        admit(total, floor_req, &weights0)
     } else {
         vec![true; cfg.apps]
     };
-    let parked: Vec<bool> = admitted.iter().map(|&a| !a).collect();
-    let active: Vec<usize> = (0..cfg.apps).filter(|&i| admitted[i]).collect();
+    let active0: Vec<usize> = (0..cfg.apps).filter(|&i| admitted0[i]).collect();
     let exact = cfg.exact_accounting();
-    let even = (total / active.len()).max(1);
-    let floor = floor_req.min(even).max(1);
+    // bounds are calibrated at the even share of the *initial* co-resident
+    // capacity in both flavors, so whole-run and epoch-granular runs of
+    // the same scenario stay apples-to-apples
+    let even = (total / active0.len()).max(1);
+    // epoch admission packs tenants below the requested floor (demand
+    // reservations replace the floor guarantee), so its ladder grows
+    // sub-floor rungs down to one core
+    let ladder_floor = if epoch_mode { 1 } else { floor_req.min(even).max(1) };
     let levels = scheduler::core_levels(
         total,
-        active.len(),
-        floor,
+        active0.len(),
+        ladder_floor,
         cfg.scheduler.ladder_rungs,
         cfg.scheduler.max_boost,
     );
@@ -428,6 +508,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     let (res_tx, res_rx) = channel::<EpochResult>();
     let (rep_tx, rep_rx) = channel::<AppReport>();
     let mut allocations: Vec<AllocationFrame> = Vec::with_capacity(epochs);
+    let mut shared = SharedCluster::parked_even(cfg.cluster.clone(), &admitted0);
 
     std::thread::scope(|scope| {
         let mut cmd_txs = Vec::with_capacity(threads);
@@ -437,7 +518,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
             let res_tx = res_tx.clone();
             let rep_tx = rep_tx.clone();
             let levels = &levels;
-            let admitted = &admitted;
+            let admitted0 = &admitted0;
             scope.spawn(move || {
                 // ---- per-worker construction: apps pinned by index ------
                 let my: Vec<usize> = (w..cfg.apps).step_by(threads).collect();
@@ -473,9 +554,12 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                         comm_ms_per_frame: cfg.cluster.comm_ms_per_frame,
                     };
                     let app = crate::workloads::generate_on(app_seed, &wcfg, &slice);
-                    // parked apps never replay a frame: skip the (costly)
-                    // ladder tracing, keep the app for its report row
-                    let ladder = admitted[i].then(|| {
+                    // whole-run-parked apps never replay a frame: skip the
+                    // (costly) ladder tracing, keep the app for its report
+                    // row. Epoch-granular admission has no such fast path:
+                    // every tenant may run, and a re-admitted tenant must
+                    // resume with its warm model and traces.
+                    let ladder = (admitted0[i] || epoch_mode).then(|| {
                         LadderTraceSet::generate_with(
                             &app,
                             &cfg.cluster,
@@ -518,19 +602,25 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 let mut steps: Vec<Vec<StepOutcome>> =
                     my.iter().map(|_| Vec::with_capacity(cfg.frames)).collect();
                 let mut core_frames: Vec<usize> = vec![0; my.len()];
+                let mut parked_epochs: Vec<usize> = vec![0; my.len()];
+                let mut dropped: Vec<usize> = vec![0; my.len()];
 
                 // ---- epoch loop ----------------------------------------
                 while let Ok(cmd) = cmd_rx.recv() {
                     match cmd {
-                        Cmd::Epoch { lo, hi, rungs } => {
+                        Cmd::Epoch { lo, hi, rungs, admitted } => {
                             for (slot, &i) in my.iter().enumerate() {
                                 // parked apps drop the epoch's frames on
-                                // the floor — nothing runs, nothing is
-                                // learned, nothing is reported back
-                                let ctl = match ctls[slot].as_mut() {
-                                    Some(c) => c,
-                                    None => continue,
-                                };
+                                // the floor: nothing runs, nothing is
+                                // learned, nothing is reported back —
+                                // but (epoch mode) the warm controller
+                                // and ladder survive for re-admission
+                                if !admitted[i] || ctls[slot].is_none() {
+                                    parked_epochs[slot] += 1;
+                                    dropped[slot] += hi - lo;
+                                    continue;
+                                }
+                                let ctl = ctls[slot].as_mut().expect("admitted app");
                                 // rungs index the full ladder; static
                                 // workers hold a trimmed one and always
                                 // sit on the even share
@@ -584,14 +674,22 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                         convergence_frame: None,
                         explore_frames: 0,
                         avg_cores: 0.0,
-                        parked: true,
-                        dropped_frames: cfg.frames,
+                        parked_epochs: parked_epochs[slot],
+                        admitted_frames: 0,
+                        scored_frames: 0,
+                        dropped_frames: dropped[slot],
                         stats: PolicyStats::new(),
                     };
                     let report = match &ladders[slot] {
                         None => base,
+                        Some(_) if steps[slot].is_empty() => base,
                         Some(ladder) => {
                             let app_steps = std::mem::take(&mut steps[slot]);
+                            let admitted_frames = app_steps.len();
+                            let scored = app_steps
+                                .iter()
+                                .filter(|s| s.frame >= cfg.warmup_frames)
+                                .count();
                             let explore_frames =
                                 app_steps.iter().filter(|s| s.explored).count();
                             let mut stats = PolicyStats::new();
@@ -609,15 +707,28 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                                 explore_frames,
                                 steps: app_steps,
                             };
+                            // dropped frames earn zero fidelity: parking
+                            // is charged to the tenant's average, never
+                            // hidden (full runs keep the historical value)
+                            let avg_fid = if admitted_frames == cfg.frames {
+                                outcome.avg_reward
+                            } else {
+                                outcome.steps.iter().map(|s| s.reward).sum::<f64>()
+                                    / cfg.frames as f64
+                            };
+                            let met = if scored == 0 {
+                                0.0
+                            } else {
+                                outcome.bound_met_frac_after(cfg.warmup_frames, bound)
+                            };
                             AppReport {
-                                avg_fidelity: outcome.avg_reward,
+                                avg_fidelity: avg_fid,
                                 oracle_fidelity: oracle.avg_reward,
-                                fidelity_vs_oracle: outcome.avg_reward / oracle_fid,
+                                fidelity_vs_oracle: avg_fid / oracle_fid,
                                 avg_violation_ms: outcome.avg_violation_ms,
                                 max_violation_ms: outcome.max_violation_ms,
                                 violation_rate: outcome.violation_rate,
-                                post_warmup_bound_met_frac: outcome
-                                    .bound_met_frac_after(cfg.warmup_frames, bound),
+                                post_warmup_bound_met_frac: met,
                                 robust_feasible_actions: even_ts
                                     .traces
                                     .iter()
@@ -627,8 +738,8 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                                     .convergence_frame(50, 0.9 * oracle.avg_reward),
                                 explore_frames,
                                 avg_cores: core_frames[slot] as f64 / cfg.frames as f64,
-                                parked: false,
-                                dropped_frames: 0,
+                                admitted_frames,
+                                scored_frames: scored,
                                 stats,
                                 ..base
                             }
@@ -644,20 +755,67 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
         drop(rep_tx);
 
         // ---- scheduler main loop ---------------------------------------
-        let mut shared = SharedCluster::parked_even(cfg.cluster.clone(), &admitted);
         let mut curves: Vec<Vec<f64>> = vec![Vec::new(); cfg.apps];
         // incumbent rungs for the hysteresis term (active apps only)
         let mut prev_rungs: Vec<usize> = vec![even_rung; cfg.apps];
+        let mut admitted = admitted0.clone();
         for e in 0..epochs {
+            let frame0 = e * epoch_frames;
+            let w = cfg.scheduler.weights_at(cfg.apps, frame0);
+            // per-epoch demand reservations: the cores each tenant's
+            // learned curve tops out at, capped at the even share so one
+            // hungry tenant cannot reserve three seats (the water-filler
+            // still boosts past the cap from what is actually free);
+            // curve-less tenants (warmup / never admitted) reserve the
+            // requested floor
+            let reservations: Vec<usize> = if epoch_mode {
+                (0..cfg.apps)
+                    .map(|i| {
+                        if curves[i].len() == levels.len() {
+                            demand_cores(&curves[i], &levels, even).clamp(1, even)
+                        } else {
+                            floor_req.clamp(1, even)
+                        }
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            if epoch_mode
+                && e > 0
+                && e <= cfg.scheduler.warmup_epochs
+                && !adm_state.overdue_pending()
+            {
+                // hold the initial decision through warmup (curves are
+                // still forming) but tick the rotation clock — unless a
+                // starvation bound tighter than the warmup span is due,
+                // in which case rotation must not wait
+                admitted = adm_state.hold();
+            } else if epoch_mode && e > 0 {
+                admitted = adm_state.decide(total, &w, &reservations);
+            }
+            let active: Vec<usize> = (0..cfg.apps).filter(|&i| admitted[i]).collect();
+            let parked: Vec<bool> = admitted.iter().map(|&a| !a).collect();
             let dynamic_ready = cfg.mode == FleetMode::Dynamic
                 && e >= cfg.scheduler.warmup_epochs
-                && active.iter().all(|&i| curves[i].len() == levels.len());
+                && (epoch_mode
+                    || active.iter().all(|&i| curves[i].len() == levels.len()));
             let rungs: Vec<usize> = if dynamic_ready {
                 // solve over the admitted subset; parked apps hold no
-                // rung (their quota is forced to zero below)
-                let sub_curves: Vec<Vec<f64>> =
-                    active.iter().map(|&i| curves[i].clone()).collect();
-                let sub_w: Vec<f64> = active.iter().map(|&i| weights[i]).collect();
+                // rung (their quota is forced to zero below). A freshly
+                // re-admitted tenant with no curve yet enters flat-zero
+                // (the reservation top-up below is what seats it).
+                let sub_curves: Vec<Vec<f64>> = active
+                    .iter()
+                    .map(|&i| {
+                        if curves[i].len() == levels.len() {
+                            curves[i].clone()
+                        } else {
+                            vec![0.0; levels.len()]
+                        }
+                    })
+                    .collect();
+                let sub_w: Vec<f64> = active.iter().map(|&i| w[i]).collect();
                 let sub_prev: Vec<usize> =
                     active.iter().map(|&i| prev_rungs[i]).collect();
                 let sub = scheduler::allocate_v2(
@@ -672,11 +830,35 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 for (k, &i) in active.iter().enumerate() {
                     full[i] = sub[k];
                 }
+                if epoch_mode {
+                    // raise admitted tenants from idle cores toward their
+                    // reservations (priority order): a starved model must
+                    // not be left at the sub-floor scraps the packed
+                    // ladder would otherwise hand it
+                    reserve_top_up(
+                        &mut full,
+                        &levels,
+                        total,
+                        &admitted,
+                        &reservations,
+                        even,
+                        &w,
+                    );
+                }
                 full
             } else {
+                // warmup (and static mode): pin the even share; epoch
+                // admission may be co-residing more tenants than the
+                // initial capacity, so its pin is the budget-safe share
+                let fb = if epoch_mode {
+                    let share = (total / active.len().max(1)).max(1);
+                    levels.iter().rposition(|&l| l <= share).unwrap_or(0)
+                } else {
+                    even_rung
+                };
                 let mut full = vec![0usize; cfg.apps];
                 for &i in &active {
-                    full[i] = even_rung;
+                    full[i] = fb;
                 }
                 full
             };
@@ -716,8 +898,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
             let lo = e * epoch_frames;
             let hi = (lo + epoch_frames).min(cfg.frames);
             for tx in &cmd_txs {
-                tx.send(Cmd::Epoch { lo, hi, rungs: rungs.clone() })
-                    .expect("worker alive");
+                tx.send(Cmd::Epoch {
+                    lo,
+                    hi,
+                    rungs: rungs.clone(),
+                    admitted: admitted.clone(),
+                })
+                .expect("worker alive");
             }
             for _ in 0..active.len() {
                 // bounded wait: a panicking worker drops only its own
@@ -740,18 +927,19 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     apps.sort_by_key(|r| r.index);
 
     let n = apps.len() as f64;
-    // parked apps count as zero fidelity — parking is not free, the
-    // aggregate owns it — but the SLO floor is over admitted apps only
+    // parked frames count as zero fidelity — parking is not free, the
+    // aggregate owns it — but the SLO floor is over scorable frames only
     // (a parked tenant is an explicit admission decision, not a miss)
     let avg_ratio = apps.iter().map(|a| a.fidelity_vs_oracle).sum::<f64>() / n;
     let min_met = apps
         .iter()
-        .filter(|a| !a.parked)
+        .filter(|a| a.scored_frames > 0)
         .map(|a| a.post_warmup_bound_met_frac)
         .fold(f64::INFINITY, f64::min);
+    let scored_apps = apps.iter().filter(|a| a.scored_frames > 0).count();
     let meeting = apps
         .iter()
-        .filter(|a| a.post_warmup_bound_met_frac >= FLEET_SLO_FRAC)
+        .filter(|a| a.scored_frames > 0 && a.post_warmup_bound_met_frac >= FLEET_SLO_FRAC)
         .count();
     let mut merged = PolicyStats::new();
     for a in &apps {
@@ -771,13 +959,16 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
         bound_headroom: cfg.bound_headroom,
         cores_per_app: even,
         total_cores: total,
-        fairness_floor: floor,
+        fairness_floor: ladder_floor,
         levels,
         allocations,
         avg_fidelity_vs_oracle: avg_ratio,
         min_bound_met_frac: min_met,
         apps_meeting_slo: meeting,
-        parked_apps: apps.iter().filter(|a| a.parked).count(),
+        scored_apps,
+        parked_apps: apps.iter().filter(|a| a.admitted_frames == 0).count(),
+        parked_app_epochs: apps.iter().map(|a| a.parked_epochs).sum(),
+        park_transitions: shared.park_transitions(),
         core_churn,
         realloc_moves,
         merged,

@@ -78,7 +78,7 @@ pub fn samples_from_traces(
     let mut out = Vec::new();
     for t in &traces.traces {
         let u = spec.normalize(&t.config);
-        for f in &t.frames {
+        for f in t.frames.iter() {
             out.push(Sample {
                 u: u.clone(),
                 stage_ms: f.stage_ms.clone(),

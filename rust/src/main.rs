@@ -100,12 +100,14 @@ commands:
   engine --app APP [--frames N] [--bound MS] [--period N]
   fleet [--apps N] [--frames N] [--seed N] [--configs N] [--epsilon E]
         [--warmup N] [--headroom F] [--blend K] [--threads N] [--out FILE]
-        [--mode static|dynamic] [--hetero] [--shift FRAME] [--epoch N]
-        [--floor CORES] [--priority W1,W2,..] [--hysteresis H]
-        [--admission] [--thrash MULT]
+        [--mode static|dynamic] [--hetero] [--shift FRAME] [--shift-mult M]
+        [--epoch N] [--floor CORES] [--priority W1,W2,..] [--hysteresis H]
+        [--admission] [--admission-epoch] [--starvation-bound K]
+        [--tier-shift FRAME:W1,W2,..|FRAME:auto] [--thrash MULT]
   schedule [--apps N] [--frames N] [--seed N] [--epoch N] [--floor CORES]
         [--candidates N] [--realtime SCALE] [--uniform]
-        [--priority W1,W2,..] [--hysteresis H]
+        [--priority W1,W2,..] [--hysteresis H] [--admission-epoch]
+        [--starvation-bound K] [--tier-shift FRAME:W1,W2,..|FRAME:auto]
 
 APP is pose, motion-sift, or gen:SEED (a procedurally generated
 pipeline; see the workloads module). `fleet` tunes N generated apps on
@@ -117,7 +119,15 @@ same scheduler. Scheduler v2 knobs: --priority weights tenant tiers
 a reallocation must out-earn, --admission parks the lowest-priority
 apps when --floor x apps exceeds the pool (instead of over-granting)
 and switches to exact fairness-floor accounting, --thrash MULT cranks
-the generated scenarios' content wobble to stress allocation churn.";
+the generated scenarios' content wobble to stress allocation churn.
+Scheduler v3 makes admission epoch-granular: --admission-epoch re-decides
+parking every epoch from the tenants' learned core demands (re-admitting
+parked tenants when the pool frees up, e.g. after --shift-mult 0.55 load
+drops), rotating parking among equal-priority tenants so nobody waits
+more than --starvation-bound K consecutive epochs; --tier-shift scripts a
+mid-run priority change (FRAME:auto draws the generated upgrade/downgrade
+scenario). On `schedule`, --admission-epoch parks live tenants by pausing
+their sources (frames are deferred, never dropped).";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -128,7 +138,7 @@ fn main() -> Result<()> {
     let cmd = argv[0].clone();
     let args = Args::parse(
         &argv[1..],
-        &["graph", "all", "claims", "hetero", "uniform", "admission"],
+        &["graph", "all", "claims", "hetero", "uniform", "admission", "admission-epoch"],
     )?;
 
     let run_cfg = RunConfig::load_or_default(args.get("config").map(std::path::Path::new))?;
@@ -172,6 +182,24 @@ fn parse_priorities(s: &str) -> Result<Vec<f64>> {
         "--priority weights must be finite and > 0: {ws:?}"
     );
     Ok(ws)
+}
+
+/// Parse a `--tier-shift FRAME:W1,W2,..` scripted mid-run tier change;
+/// `FRAME:auto` draws the generated upgrade/downgrade scenario family
+/// from the run seed.
+fn parse_tier_shift(s: &str, seed: u64, apps: usize) -> Result<(usize, Vec<f64>)> {
+    let (frame, ws) = s
+        .split_once(':')
+        .with_context(|| format!("--tier-shift '{s}': expected FRAME:W1,W2,.. or FRAME:auto"))?;
+    let frame: usize =
+        frame.parse().map_err(|e| anyhow::anyhow!("--tier-shift frame '{frame}': {e}"))?;
+    let weights = if ws == "auto" {
+        anyhow::ensure!(apps >= 2, "--tier-shift auto needs at least two tenants");
+        iptune::workloads::tier_shift_weights(seed, apps)
+    } else {
+        parse_priorities(ws)?
+    };
+    Ok((frame, weights))
 }
 
 /// Tune N generated apps concurrently and write the aggregate JSON report.
@@ -230,11 +258,30 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         // implies exact fairness-floor accounting (see FleetConfig::workload_of)
         cfg.scheduler.admission = true;
     }
+    if args.has("admission-epoch") {
+        // epoch-granular admission also implies exact accounting and
+        // needs the dynamic allocator (the decision consumes curves)
+        cfg.scheduler.admission_epoch = true;
+        cfg.mode = iptune::fleet::FleetMode::Dynamic;
+    }
+    if let Some(k) = args.get_parse::<usize>("starvation-bound")? {
+        anyhow::ensure!(k >= 1, "--starvation-bound must be >= 1");
+        cfg.scheduler.starvation_bound = k;
+    }
+    if let Some(m) = args.get_parse::<f64>("shift-mult")? {
+        anyhow::ensure!(m > 0.0 && m.is_finite(), "--shift-mult must be > 0");
+        cfg.load_shift_mult = m;
+    }
+    if let Some(ts) = args.get("tier-shift") {
+        cfg.scheduler.tier_shift = Some(parse_tier_shift(ts, cfg.seed, cfg.apps)?);
+    }
     if let Some(t) = args.get_parse::<f64>("thrash")? {
         anyhow::ensure!(t >= 1.0, "--thrash must be >= 1");
         cfg.workload.thrash = Some(t);
     }
-    if cfg.apps == 0 || (!cfg.scheduler.admission && cfg.apps > cfg.cluster.total_cores()) {
+    if cfg.apps == 0
+        || (!cfg.scheduler.admission_any() && cfg.apps > cfg.cluster.total_cores())
+    {
         bail!(
             "--apps {} out of range: the shared {}-core cluster supports 1..={} co-tenants",
             cfg.apps,
@@ -298,8 +345,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         report.allocations.len(),
         report.core_churn,
         report.realloc_moves,
-        if report.parked_apps > 0 {
-            format!(" | {} app(s) parked by admission control", report.parked_apps)
+        if report.parked_app_epochs > 0 {
+            format!(
+                " | parking: {} whole-run, {} app-epochs, {} park/unpark transitions",
+                report.parked_apps, report.parked_app_epochs, report.park_transitions
+            )
         } else {
             String::new()
         },
@@ -355,6 +405,16 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         anyhow::ensure!(h >= 0.0, "--hysteresis must be >= 0");
         cfg.scheduler.hysteresis = h;
     }
+    if args.has("admission-epoch") {
+        cfg.scheduler.admission_epoch = true;
+    }
+    if let Some(k) = args.get_parse::<usize>("starvation-bound")? {
+        anyhow::ensure!(k >= 1, "--starvation-bound must be >= 1");
+        cfg.scheduler.starvation_bound = k;
+    }
+    if let Some(ts) = args.get("tier-shift") {
+        cfg.scheduler.tier_shift = Some(parse_tier_shift(ts, cfg.seed, cfg.apps)?);
+    }
     eprintln!(
         "schedule: streaming {} generated apps x {} frames live (seed {}, epoch {} frames, {} shared cores) ...",
         cfg.apps,
@@ -365,12 +425,20 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     );
     let report = iptune::scheduler::live::run_live(&cfg)?;
     println!(
-        "{:<8} {:<9} {:>8} {:>8} {:>12} {:>10} {:>12} {:>11}",
-        "app", "profile", "frames", "bound", "avg-latency", "fidelity", "bound-met%", "final-cores"
+        "{:<8} {:<9} {:>8} {:>8} {:>12} {:>10} {:>12} {:>11} {:>8}",
+        "app",
+        "profile",
+        "frames",
+        "bound",
+        "avg-latency",
+        "fidelity",
+        "bound-met%",
+        "final-cores",
+        "parked"
     );
     for a in &report.apps {
         println!(
-            "{:<8} {:<9} {:>8} {:>8.1} {:>10.1}ms {:>10.3} {:>11.1}% {:>11}",
+            "{:<8} {:<9} {:>8} {:>8.1} {:>10.1}ms {:>10.3} {:>11.1}% {:>11} {:>8}",
             a.name,
             a.profile,
             a.frames,
@@ -379,6 +447,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
             a.avg_fidelity,
             100.0 * a.bound_met_frac,
             a.final_cores,
+            a.parked_epochs,
         );
     }
     for alloc in &report.allocations {
@@ -577,7 +646,7 @@ fn run_engine_demo(
     let handle = spawn_stream(
         Arc::clone(&app),
         app.spec.defaults(),
-        EngineConfig { frames, realtime_scale: 1e-5, queue_capacity: 8, seed: 3 },
+        EngineConfig { frames, realtime_scale: 1e-5, seed: 3, ..Default::default() },
     );
 
     let mut backend = NativeBackend::structured(&app.spec);

@@ -24,9 +24,27 @@
 //! the utility curves and the hysteresis term pins each stream to its
 //! incumbent quota unless the predicted gain clears the migration
 //! penalty — retuning a *running* pipeline is exactly where switching
-//! cost is real (in-flight frames execute under stale knobs). Admission
-//! parking is a fleet-only feature: a live stream cannot drop frames
-//! retroactively, so an infeasible floor is rejected up front instead.
+//! cost is real (in-flight frames execute under stale knobs).
+//!
+//! **Parking a live tenant pauses its source.** A live stream cannot drop
+//! frames retroactively the way the trace-replaying fleet does, so
+//! run-level (v1) admission stays rejected up front; epoch-granular
+//! admission ([`SchedulerConfig::admission_epoch`]) instead closes the
+//! parked tenant's source gate ([`PauseHandle`]) — no new frame enters the
+//! pipeline, frames already inside the bounded connectors drain normally,
+//! and re-admission reopens the gate with the tenant's learned model
+//! intact. Parked tenants finish their remaining frames after the
+//! scheduled window (the final drain), so no frame is ever lost. Tier
+//! shifts ([`SchedulerConfig::tier_shift`]) land at epoch boundaries like
+//! the fleet's.
+//!
+//! Known limitation: epoch boundaries are frame-count barriers over the
+//! admitted set, so after a mid-run re-admission the next boundary waits
+//! for the returning tenant to stream through its parked backlog — under
+//! real-time pacing that defers further scheduling decisions for roughly
+//! as long as the tenant was parked (with `realtime_scale == 0`, the
+//! default demo mode, catch-up is immediate). Per-tenant epoch clocks are
+//! the recorded follow-on (see ROADMAP).
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -34,10 +52,12 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::apps::App;
-use crate::engine::{spawn_stream, EngineConfig, FrameRecord, KnobHandle};
+use crate::engine::{spawn_stream, EngineConfig, FrameRecord, KnobHandle, PauseHandle};
 use crate::runtime::native::NativeBackend;
 use crate::runtime::Backend;
-use crate::scheduler::{self, AllocationFrame, SchedulerConfig};
+use crate::scheduler::{
+    self, demand_cores, reserve_top_up, AllocationFrame, EpochAdmission, SchedulerConfig,
+};
 use crate::simulator::{Cluster, SharedCluster};
 use crate::tuner::budgeted::effective_candidates;
 use crate::util::Rng;
@@ -94,6 +114,8 @@ pub struct LiveAppSummary {
     pub bound_met_frac: f64,
     /// Core quota at the final epoch.
     pub final_cores: usize,
+    /// Scheduled epochs this tenant spent parked (source paused).
+    pub parked_epochs: usize,
 }
 
 /// Outcome of a live scheduled run.
@@ -108,25 +130,45 @@ pub struct LiveReport {
 
 /// Stream `cfg.apps` generated pipelines through the threaded engine
 /// concurrently, learning each latency model online and reallocating the
-/// shared cores every `scheduler.epoch_frames` frames.
+/// shared cores every `scheduler.epoch_frames` frames. With
+/// `scheduler.admission_epoch`, an over-subscribed floor parks tenants by
+/// pausing their sources; parking is re-decided every epoch from learned
+/// demands with starvation-bounded rotation, and parked tenants drain
+/// their remaining frames after the scheduled window.
 pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     assert!(cfg.apps > 0 && cfg.frames > 0);
     let total = cfg.cluster.total_cores();
     assert!(cfg.apps <= total, "one core per app minimum");
-    let weights = cfg.scheduler.weights(cfg.apps);
-    let even = (total / cfg.apps).max(1);
-    // an over-subscribed floor is rejected, not silently clamped:
-    // admission parking is fleet-only (a live stream cannot drop frames)
+    let epoch_mode = cfg.scheduler.admission_epoch;
+    let weights0 = cfg.scheduler.weights_at(cfg.apps, 0);
+    let floor_req = cfg.scheduler.requested_floor(total, cfg.apps);
+    // run-level parking cannot work on live streams (frames cannot be
+    // dropped retroactively): an over-subscribed floor is rejected unless
+    // epoch-granular admission is on, which parks by pausing sources
     anyhow::ensure!(
-        cfg.scheduler.requested_floor(total, cfg.apps) * cfg.apps <= total,
-        "fairness floor x apps exceeds the {total}-core pool; admission \
-         parking is fleet-only (a live stream cannot drop frames) — lower \
-         --floor"
+        epoch_mode || floor_req * cfg.apps <= total,
+        "fairness floor x apps exceeds the {total}-core pool; whole-run \
+         admission parking is fleet-only (a live stream cannot drop frames) \
+         — lower --floor, or pass --admission-epoch to park live tenants by \
+         pausing their sources"
     );
-    let floor = cfg.scheduler.floor_cores(total, cfg.apps);
+    let mut adm_state =
+        EpochAdmission::new(cfg.apps, cfg.scheduler.starvation_bound_or_default());
+    let mut admitted: Vec<bool> = if epoch_mode {
+        adm_state.decide(
+            total,
+            &weights0,
+            &vec![floor_req.clamp(1, total.max(1)); cfg.apps],
+        )
+    } else {
+        vec![true; cfg.apps]
+    };
+    let capacity0 = admitted.iter().filter(|&&a| a).count();
+    let even = (total / capacity0).max(1);
+    let floor = if epoch_mode { 1 } else { cfg.scheduler.floor_cores(total, cfg.apps) };
     let levels = scheduler::core_levels(
         total,
-        cfg.apps,
+        capacity0,
         floor,
         cfg.scheduler.ladder_rungs,
         cfg.scheduler.max_boost,
@@ -141,6 +183,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     let (rec_tx, rec_rx) = channel::<(usize, FrameRecord)>();
     let mut apps: Vec<Arc<App>> = Vec::with_capacity(cfg.apps);
     let mut knob_handles: Vec<KnobHandle> = Vec::with_capacity(cfg.apps);
+    let mut pause_handles: Vec<PauseHandle> = Vec::with_capacity(cfg.apps);
     let mut profiles: Vec<AppProfile> = Vec::with_capacity(cfg.apps);
     for i in 0..cfg.apps {
         let profile = AppProfile::for_fleet_member(cfg.heterogeneous, i, cfg.workload.profile);
@@ -164,9 +207,13 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                 realtime_scale: cfg.realtime_scale,
                 queue_capacity: 8,
                 seed: cfg.seed.wrapping_add(0x11CE ^ i as u64),
+                // parked tenants spawn with the source gate closed: not a
+                // single frame enters the pipe until re-admission
+                start_paused: !admitted[i],
             },
         );
         knob_handles.push(handle.knob_handle());
+        pause_handles.push(handle.pause_handle());
         let tx = rec_tx.clone();
         std::thread::Builder::new()
             .name(format!("forward-{}", app.spec.name))
@@ -204,15 +251,21 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     }
 
     let bounds: Vec<f64> = apps.iter().map(|a| a.spec.latency_bounds_ms[0]).collect();
-    let mut shared = SharedCluster::even(cfg.cluster.clone(), cfg.apps);
+    let mut shared = SharedCluster::parked_even(cfg.cluster.clone(), &admitted);
     let mut rungs = vec![even_rung; cfg.apps];
+    let mut parked_epochs = vec![0usize; cfg.apps];
+    for (i, &a) in admitted.iter().enumerate() {
+        if !a {
+            parked_epochs[i] += 1;
+        }
+    }
     let mut allocations: Vec<AllocationFrame> = vec![AllocationFrame {
         epoch: 0,
         start_frame: 0,
         levels: rungs.clone(),
-        cores: rungs.iter().map(|&r| levels[r]).collect(),
+        cores: shared.quotas().to_vec(),
         predicted_utility: vec![0.0; cfg.apps],
-        parked: vec![false; cfg.apps],
+        parked: admitted.iter().map(|&a| !a).collect(),
         churn_cores: 0,
     }];
 
@@ -222,6 +275,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     let mut fid_sum = vec![0.0f64; cfg.apps];
     let mut met = vec![0usize; cfg.apps];
     let mut boundary = epoch_frames;
+    let mut draining = false;
     while let Ok((i, rec)) = rec_rx.recv() {
         let u = apps[i].spec.normalize(&rec.knobs);
         let (y, off) = backends[i].group_map().targets(&rec.stage_ms, rec.end_to_end_ms);
@@ -234,8 +288,11 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
             met[i] += 1;
         }
 
-        // an epoch completes when every app has streamed past the boundary
-        let all_past = frames_seen.iter().all(|&n| n >= boundary.min(cfg.frames));
+        // an epoch completes when every *admitted* app has streamed past
+        // the boundary (parked sources are gated and cannot advance)
+        let all_past = (0..cfg.apps)
+            .filter(|&a| admitted[a])
+            .all(|a| frames_seen[a] >= boundary.min(cfg.frames));
         if all_past && boundary < cfg.frames {
             // one batched prediction per (app, rung): the curve point and
             // the best action it came from are recorded together so the
@@ -256,19 +313,74 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                 curves.push(curve);
                 best_at.push(bests);
             }
-            rungs = scheduler::allocate_v2(
-                &curves,
+            let epoch_idx = allocations.len();
+            let w = cfg.scheduler.weights_at(cfg.apps, boundary);
+            let reservations: Vec<usize> = (0..cfg.apps)
+                .map(|a| {
+                    if frames_seen[a] > 0 {
+                        demand_cores(&curves[a], &levels, even).clamp(1, even)
+                    } else {
+                        floor_req.clamp(1, even)
+                    }
+                })
+                .collect();
+            let review_due = epoch_idx > cfg.scheduler.warmup_epochs
+                || adm_state.overdue_pending();
+            if epoch_mode && !draining && review_due {
+                let next = adm_state.decide(total, &w, &reservations);
+                for a in 0..cfg.apps {
+                    if next[a] && !admitted[a] {
+                        // re-admitted: reopen the source gate (the warm
+                        // model learned so far is still in `backends`)
+                        pause_handles[a].resume();
+                    } else if !next[a] && admitted[a] {
+                        pause_handles[a].pause();
+                    }
+                }
+                admitted = next;
+            } else if epoch_mode && !draining {
+                admitted = adm_state.hold();
+            }
+            for (a, &adm) in admitted.iter().enumerate() {
+                if !adm {
+                    parked_epochs[a] += 1;
+                }
+            }
+            let active: Vec<usize> = (0..cfg.apps).filter(|&a| admitted[a]).collect();
+            let sub_curves: Vec<Vec<f64>> =
+                active.iter().map(|&a| curves[a].clone()).collect();
+            let sub_w: Vec<f64> = active.iter().map(|&a| w[a]).collect();
+            let sub_prev: Vec<usize> = active.iter().map(|&a| rungs[a]).collect();
+            let sub = scheduler::allocate_v2(
+                &sub_curves,
                 &levels,
                 total,
-                &weights,
-                Some(&rungs),
+                &sub_w,
+                Some(&sub_prev),
                 cfg.scheduler.hysteresis,
             );
-            let cores: Vec<usize> = rungs.iter().map(|&r| levels[r]).collect();
-            shared.set_quotas(&cores);
+            for (k, &a) in active.iter().enumerate() {
+                rungs[a] = sub[k];
+            }
+            if epoch_mode {
+                reserve_top_up(
+                    &mut rungs,
+                    &levels,
+                    total,
+                    &admitted,
+                    &reservations,
+                    even,
+                    &w,
+                );
+            }
+            let cores: Vec<usize> = (0..cfg.apps)
+                .map(|a| if admitted[a] { levels[rungs[a]] } else { 0 })
+                .collect();
+            let parked: Vec<bool> = admitted.iter().map(|&a| !a).collect();
+            shared.set_quotas_parked(&cores, &parked);
             // retune every running pipeline to the best predicted-feasible
             // config at its new quota, parallelism clamped to the grant
-            for a in 0..cfg.apps {
+            for &a in &active {
                 let pick = best_at[a][rungs[a]];
                 let ks = apps[a].spec.denormalize(&cand_at[a][rungs[a]][pick]);
                 knob_handles[a].set(ks);
@@ -278,24 +390,42 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                 .map(|prev| AllocationFrame::churn_vs(shared.quotas(), prev))
                 .unwrap_or(0);
             allocations.push(AllocationFrame {
-                epoch: allocations.len(),
+                epoch: epoch_idx,
                 start_frame: boundary,
                 levels: rungs.clone(),
                 // read back from the shared cluster: the bookkeeper that
                 // enforced the budget is the one the report quotes
                 cores: shared.quotas().to_vec(),
-                predicted_utility: rungs
-                    .iter()
-                    .enumerate()
-                    .map(|(a, &r)| curves[a][r])
+                predicted_utility: (0..cfg.apps)
+                    .map(|a| if admitted[a] { curves[a][rungs[a]] } else { 0.0 })
                     .collect(),
-                parked: vec![false; cfg.apps],
+                parked,
                 churn_cores,
             });
             boundary += epoch_frames;
         }
+
+        // final drain: once every admitted tenant has delivered all its
+        // frames, reopen the parked tenants' gates so they finish too (a
+        // live stream never loses frames to parking — they are deferred)
+        if !draining
+            && admitted.iter().any(|&a| !a)
+            && (0..cfg.apps).filter(|&a| admitted[a]).all(|a| frames_seen[a] >= cfg.frames)
+        {
+            draining = true;
+            for a in 0..cfg.apps {
+                if !admitted[a] {
+                    pause_handles[a].resume();
+                    admitted[a] = true;
+                }
+            }
+        }
     }
 
+    // the closing quota is what the last epoch actually installed (a
+    // tenant parked at the final decide closes at zero cores, not at its
+    // stale pre-park rung)
+    let final_cores = allocations.last().expect("epoch 0 recorded").cores.clone();
     let summaries: Vec<LiveAppSummary> = (0..cfg.apps)
         .map(|i| {
             let n = frames_seen[i].max(1) as f64;
@@ -308,7 +438,8 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                 avg_latency_ms: lat_sum[i] / n,
                 avg_fidelity: fid_sum[i] / n,
                 bound_met_frac: met[i] as f64 / n,
-                final_cores: levels[rungs[i]],
+                final_cores: final_cores[i],
+                parked_epochs: parked_epochs[i],
             }
         })
         .collect();
@@ -385,14 +516,92 @@ mod tests {
     }
 
     #[test]
-    fn live_rejects_infeasible_floor() {
+    fn live_rejects_infeasible_floor_without_epoch_admission() {
         // a floor the pool cannot honor errors out instead of being
-        // silently clamped (parking is fleet-only)
+        // silently clamped (whole-run parking is fleet-only; the error
+        // names the epoch-admission escape hatch)
         let cfg = LiveConfig {
             scheduler: SchedulerConfig { fairness_floor: 40, ..Default::default() },
             ..Default::default()
         };
         let err = run_live(&cfg).unwrap_err().to_string();
         assert!(err.contains("fleet-only"), "{err}");
+        assert!(err.contains("--admission-epoch"), "{err}");
+    }
+
+    #[test]
+    fn live_epoch_admission_parks_by_pausing_and_loses_no_frames() {
+        // 3 tenants demanding a 5-core floor on a 12-core pool: one is
+        // parked (source paused) per epoch; every tenant still delivers
+        // all its frames (parked tenants drain after the window)
+        let cfg = LiveConfig {
+            apps: 3,
+            frames: 120,
+            seed: 9,
+            candidates: 10,
+            heterogeneous: true,
+            realtime_scale: 0.0,
+            cluster: Cluster { servers: 1, cores_per_server: 12, comm_ms_per_frame: 0.0 },
+            scheduler: SchedulerConfig {
+                epoch_frames: 30,
+                fairness_floor: 5,
+                admission_epoch: true,
+                starvation_bound: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let report = run_live(&cfg).unwrap();
+        assert_eq!(report.apps.len(), 3);
+        for a in &report.apps {
+            assert_eq!(a.frames, 120, "app {} lost frames to parking", a.index);
+            assert!(a.avg_latency_ms > 0.0);
+        }
+        // the initial decision parks exactly one tenant (floor 5 x 3 > 12)
+        let first = &report.allocations[0];
+        assert_eq!(first.parked.iter().filter(|&&p| p).count(), 1, "{first:?}");
+        assert!(
+            report.apps.iter().any(|a| a.parked_epochs > 0),
+            "nobody was ever parked"
+        );
+        // budget safety at every epoch; parked tenants hold zero cores
+        for alloc in &report.allocations {
+            assert!(alloc.total_cores() <= report.total_cores);
+            for (c, &p) in alloc.cores.iter().zip(&alloc.parked) {
+                if p {
+                    assert_eq!(*c, 0);
+                } else {
+                    assert!(*c >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn live_tier_shift_changes_weights_mid_run() {
+        // structural: a scripted tier shift mid-run keeps every invariant
+        // (frame counts, budget) while the scheduler consumes the new
+        // weights at epoch boundaries
+        let cfg = LiveConfig {
+            apps: 3,
+            frames: 90,
+            seed: 4,
+            candidates: 10,
+            realtime_scale: 0.0,
+            scheduler: SchedulerConfig {
+                epoch_frames: 30,
+                tier_shift: Some((45, vec![1.0, 1.0, 4.0])),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let report = run_live(&cfg).unwrap();
+        for a in &report.apps {
+            assert_eq!(a.frames, 90, "app {} lost frames", a.index);
+            assert_eq!(a.parked_epochs, 0, "no admission: nobody parks");
+        }
+        for alloc in &report.allocations {
+            assert!(alloc.total_cores() <= report.total_cores);
+        }
     }
 }

@@ -34,6 +34,19 @@
 //!   time-multiplexing latency multiplier so fairness-floor accounting
 //!   is exact.
 //!
+//! **v3** makes admission *epoch-granular* ([`EpochAdmission`],
+//! [`SchedulerConfig::admission_epoch`]): parking stops being a run-level
+//! precomputation and becomes allocator state. Every reallocation epoch
+//! the admission controller re-decides who runs from the tenants' *demands*
+//! (the cores at which each learned utility curve tops out,
+//! [`demand_cores`]) — so a tenant parked under load pressure is re-admitted
+//! as soon as the pool frees up — and rotates parking among equal-priority
+//! tenants so no tenant is parked more than `starvation_bound` consecutive
+//! epochs (Sense-React-style bounded re-admission, arXiv 2207.13280).
+//! Scripted mid-run tier changes ([`SchedulerConfig::tier_shift`]) feed the
+//! same machinery: an upgraded tenant preempts a seat at the next epoch
+//! instead of waiting for the next run.
+//!
 //! Determinism: [`allocate`] is a pure function of the utility curves,
 //! and curves are pure functions of per-app tuner state, so fleet runs
 //! are reproducible regardless of worker-thread count (asserted by
@@ -80,6 +93,25 @@ pub struct SchedulerConfig {
     ///
     /// [`time_multiplex_factor`]: crate::simulator::time_multiplex_factor
     pub admission: bool,
+    /// Epoch-granular admission ([`EpochAdmission`]): the park/run decision
+    /// is re-made every reallocation epoch from the tenants' learned demands
+    /// instead of once per run from static priorities. Implies exact
+    /// fairness-floor accounting (like [`admission`](Self::admission)) and
+    /// requires the dynamic fleet mode (the decision consumes utility
+    /// curves). Re-admitted tenants resume with a *warm* model: their
+    /// controllers and learned curves survive parking.
+    pub admission_epoch: bool,
+    /// Starvation bound `k` for epoch-granular admission: with equal
+    /// priorities, parking rotates so no tenant is parked more than `k`
+    /// consecutive epochs (0 → [`DEFAULT_STARVATION_BOUND`]). The bound is
+    /// honored whenever capacity permits — overdue tenants outrank every
+    /// equal-priority incumbent; a strictly higher tier still wins.
+    pub starvation_bound: usize,
+    /// Scripted mid-run tier change: from the first epoch whose start frame
+    /// reaches `.0`, the priority vector becomes `.1` (tier
+    /// upgrades/downgrades land at the next epoch boundary, flowing into
+    /// both the water-filling pass and the admission decision).
+    pub tier_shift: Option<(usize, Vec<f64>)>,
 }
 
 impl Default for SchedulerConfig {
@@ -93,9 +125,18 @@ impl Default for SchedulerConfig {
             hysteresis: 0.0,
             priorities: Vec::new(),
             admission: false,
+            admission_epoch: false,
+            starvation_bound: 0,
+            tier_shift: None,
         }
     }
 }
+
+/// Default starvation bound (consecutive parked epochs) for epoch-granular
+/// admission — four epochs keeps rotation churn of the same order as the
+/// hysteresis cooldown horizon while still time-bounding every tenant's
+/// wait.
+pub const DEFAULT_STARVATION_BOUND: usize = 4;
 
 impl SchedulerConfig {
     /// The effective fairness floor for a fleet of `apps` on `total`
@@ -130,13 +171,44 @@ impl SchedulerConfig {
 
     /// The full per-app weight vector for a fleet of `apps`, validated.
     pub fn weights(&self, apps: usize) -> Vec<f64> {
-        let w: Vec<f64> = (0..apps).map(|i| self.priority_of(i)).collect();
-        assert!(
-            w.iter().all(|p| p.is_finite() && *p > 0.0),
-            "priority weights must be finite and > 0: {w:?}"
-        );
-        w
+        pad_weights(&self.priorities, apps)
     }
+
+    /// The weight vector in force at `frame`: the base priorities, or the
+    /// scripted [`tier_shift`](Self::tier_shift) vector once its frame has
+    /// been reached. Reduces to [`weights`](Self::weights) without a shift.
+    pub fn weights_at(&self, apps: usize, frame: usize) -> Vec<f64> {
+        match &self.tier_shift {
+            Some((f, ws)) if frame >= *f => pad_weights(ws, apps),
+            _ => self.weights(apps),
+        }
+    }
+
+    /// Either admission flavor is on (both switch the run to exact
+    /// fairness-floor accounting).
+    pub fn admission_any(&self) -> bool {
+        self.admission || self.admission_epoch
+    }
+
+    /// The configured starvation bound, defaulted.
+    pub fn starvation_bound_or_default(&self) -> usize {
+        if self.starvation_bound == 0 {
+            DEFAULT_STARVATION_BOUND
+        } else {
+            self.starvation_bound
+        }
+    }
+}
+
+/// Pad a priority list to `apps` entries (missing → 1.0) and validate.
+fn pad_weights(priorities: &[f64], apps: usize) -> Vec<f64> {
+    let w: Vec<f64> =
+        (0..apps).map(|i| priorities.get(i).copied().unwrap_or(1.0)).collect();
+    assert!(
+        w.iter().all(|p| p.is_finite() && *p > 0.0),
+        "priority weights must be finite and > 0: {w:?}"
+    );
+    w
 }
 
 /// Admission decision: which apps run when `floor × apps` exceeds the
@@ -161,6 +233,241 @@ pub fn admit(total: usize, floor: usize, weights: &[f64]) -> Vec<bool> {
         admitted[i] = true;
     }
     admitted
+}
+
+/// A tenant's *demand*: the smallest ladder budget (cores) at which its
+/// learned utility curve reaches its maximum — the point past which more
+/// cores buy no predicted fidelity. A flat-zero curve (nothing predicted
+/// feasible anywhere) returns `fallback` instead of the floor rung: a
+/// starved model must be read as "needs the calibration share", not as
+/// contentment, or parking becomes a death spiral (no cores → infeasible
+/// observations → no demand → no cores).
+pub fn demand_cores(curve: &[f64], levels: &[usize], fallback: usize) -> usize {
+    assert_eq!(curve.len(), levels.len(), "curve/ladder shape");
+    let mx = curve.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if !(mx > 0.0) {
+        return fallback;
+    }
+    for (l, &u) in curve.iter().enumerate() {
+        if u >= mx - 1e-12 {
+            return levels[l];
+        }
+    }
+    levels[levels.len() - 1]
+}
+
+/// Epoch-granular admission state: who ran last epoch, how long each parked
+/// tenant has waited, and how long each incumbent has held its seat.
+///
+/// Every epoch [`decide`](Self::decide) re-ranks the tenants —
+///
+/// 1. priority weight (descending): a strictly higher tier always outranks;
+/// 2. within a tier, *overdue* parked tenants first (parked for
+///    `bound` − 1 epochs already: parking them again would break the
+///    starvation bound), longest-parked first;
+/// 3. then incumbents, shortest-tenured first (so rotation displaces the
+///    tenant that has held a seat longest);
+/// 4. then the remaining parked tenants, longest-parked first (so freed
+///    pool capacity re-admits the tenant that has waited longest);
+///
+/// — and admits greedily in rank order while the tenants' core
+/// *reservations* (their demands, floored at one core) fit the pool.
+/// Freshly parked cohorts get staggered virtual streaks so their overdue
+/// deadlines spread over the bound window instead of piling up on one
+/// epoch: with equal priorities and adequate capacity no tenant is ever
+/// parked more than `bound` consecutive epochs (property-tested across
+/// seeds in `rust/tests/scheduler_fleet.rs`).
+#[derive(Debug, Clone)]
+pub struct EpochAdmission {
+    bound: usize,
+    admitted: Vec<bool>,
+    parked_streak: Vec<usize>,
+    admitted_streak: Vec<usize>,
+    decided: bool,
+}
+
+impl EpochAdmission {
+    pub fn new(apps: usize, bound: usize) -> Self {
+        assert!(apps > 0, "admission needs at least one tenant");
+        EpochAdmission {
+            bound: bound.max(1),
+            admitted: vec![true; apps],
+            parked_streak: vec![0; apps],
+            admitted_streak: vec![0; apps],
+            decided: false,
+        }
+    }
+
+    /// The starvation bound in force.
+    pub fn bound(&self) -> usize {
+        self.bound
+    }
+
+    /// Last decision (all-admitted before the first [`decide`](Self::decide)).
+    pub fn admitted(&self) -> &[bool] {
+        &self.admitted
+    }
+
+    /// Tenants ranked for admission (see the type docs for the order).
+    fn rank(&self, weights: &[f64]) -> Vec<usize> {
+        let n = weights.len();
+        let overdue: Vec<bool> = (0..n)
+            .map(|i| {
+                self.decided
+                    && !self.admitted[i]
+                    && self.parked_streak[i] + 1 >= self.bound
+            })
+            .collect();
+        let class = |i: usize| -> u8 {
+            if overdue[i] {
+                0
+            } else if self.admitted[i] {
+                1
+            } else {
+                2
+            }
+        };
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            weights[b]
+                .partial_cmp(&weights[a])
+                .unwrap()
+                .then(class(a).cmp(&class(b)))
+                .then_with(|| {
+                    if class(a) == 1 {
+                        self.admitted_streak[a].cmp(&self.admitted_streak[b])
+                    } else {
+                        self.parked_streak[b].cmp(&self.parked_streak[a])
+                    }
+                })
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    /// One epoch's admission decision. `reservations[i]` is tenant `i`'s
+    /// core demand (clamped to at least one core and at most the pool);
+    /// tenants are admitted greedily in rank order while the reservations
+    /// fit `total`. The top-ranked tenant is always admitted.
+    pub fn decide(
+        &mut self,
+        total: usize,
+        weights: &[f64],
+        reservations: &[usize],
+    ) -> Vec<bool> {
+        let n = self.admitted.len();
+        assert_eq!(weights.len(), n, "weight vector shape");
+        assert_eq!(reservations.len(), n, "reservation vector shape");
+        let order = self.rank(weights);
+        let mut next = vec![false; n];
+        let mut used = 0usize;
+        for &i in &order {
+            let r = reservations[i].clamp(1, total.max(1));
+            if used + r <= total {
+                next[i] = true;
+                used += r;
+            }
+        }
+        if !next.iter().any(|&a| a) {
+            next[order[0]] = true;
+        }
+        // stagger freshly parked cohorts: the j-th freshly parked tenant
+        // (rank order) starts with virtual streak (m-1-j)/gpe, spreading
+        // the cohort's overdue deadlines over the bound window so at most
+        // ceil(m/bound) re-admissions fall due per epoch
+        let fresh: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| !next[i] && (self.admitted[i] || !self.decided))
+            .collect();
+        let m = fresh.len();
+        let gpe = ((m + self.bound - 1) / self.bound).max(1);
+        let mut is_fresh = vec![false; n];
+        for (j, &i) in fresh.iter().enumerate() {
+            self.parked_streak[i] = (m - 1 - j) / gpe;
+            self.admitted_streak[i] = 0;
+            is_fresh[i] = true;
+        }
+        for i in 0..n {
+            if next[i] {
+                self.parked_streak[i] = 0;
+                self.admitted_streak[i] += 1;
+            } else if !is_fresh[i] {
+                self.parked_streak[i] += 1;
+                self.admitted_streak[i] = 0;
+            }
+        }
+        self.admitted = next.clone();
+        self.decided = true;
+        next
+    }
+
+    /// Re-apply the previous decision for one epoch without re-deciding
+    /// (warmup epochs hold the initial decision), ticking the streaks so
+    /// held epochs still count against the starvation bound.
+    pub fn hold(&mut self) -> Vec<bool> {
+        for i in 0..self.admitted.len() {
+            if self.admitted[i] {
+                self.admitted_streak[i] += 1;
+            } else {
+                self.parked_streak[i] += 1;
+            }
+        }
+        self.admitted.clone()
+    }
+
+    /// A parked tenant would exceed the starvation bound if parked for one
+    /// more epoch. Warmup holds consult this so a tight bound (smaller
+    /// than the warmup span) forces an early decision instead of silently
+    /// overshooting the guarantee.
+    pub fn overdue_pending(&self) -> bool {
+        self.decided
+            && (0..self.admitted.len()).any(|i| {
+                !self.admitted[i] && self.parked_streak[i] + 1 >= self.bound
+            })
+    }
+}
+
+/// Raise admitted tenants from *idle* cores toward their reservation
+/// (capped at the even share), in priority order (weight descending, ties
+/// to the lower index). The water-filler leaves a tenant whose model
+/// predicts nothing feasible at the floor rung; without this top-up a
+/// freshly (re-)admitted tenant would be left at scraps, learn nothing
+/// feasible, and stay starved — the guarantee admitted tenants used to
+/// get from the fairness floor, restored under the sub-floor ladder that
+/// epoch admission packs against. Only idle cores are spent: no tenant's
+/// water-filled grant is ever reduced.
+pub fn reserve_top_up(
+    rungs: &mut [usize],
+    levels: &[usize],
+    total: usize,
+    admitted: &[bool],
+    reservations: &[usize],
+    even: usize,
+    weights: &[f64],
+) {
+    let mut order: Vec<usize> = (0..rungs.len()).collect();
+    order.sort_by(|&a, &b| {
+        weights[b].partial_cmp(&weights[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut used: usize = (0..rungs.len())
+        .filter(|&i| admitted[i])
+        .map(|i| levels[rungs[i]])
+        .sum();
+    for &i in &order {
+        if !admitted[i] {
+            continue;
+        }
+        let want = reservations[i].min(even);
+        while rungs[i] + 1 < levels.len()
+            && levels[rungs[i]] < want
+            && levels[rungs[i] + 1] <= want
+            && used - levels[rungs[i]] + levels[rungs[i] + 1] <= total
+        {
+            used = used - levels[rungs[i]] + levels[rungs[i] + 1];
+            rungs[i] += 1;
+        }
+    }
 }
 
 /// The shared core ladder for a fleet of `apps` on `total` cores: rungs
@@ -567,5 +874,148 @@ mod tests {
     fn non_positive_priorities_rejected() {
         let cfg = SchedulerConfig { priorities: vec![1.0, 0.0], ..Default::default() };
         cfg.weights(2);
+    }
+
+    #[test]
+    fn tier_shift_swaps_weights_at_frame() {
+        let cfg = SchedulerConfig {
+            priorities: vec![2.0],
+            tier_shift: Some((100, vec![1.0, 1.0, 5.0])),
+            ..Default::default()
+        };
+        assert_eq!(cfg.weights_at(4, 0), vec![2.0, 1.0, 1.0, 1.0]);
+        assert_eq!(cfg.weights_at(4, 99), vec![2.0, 1.0, 1.0, 1.0]);
+        assert_eq!(cfg.weights_at(4, 100), vec![1.0, 1.0, 5.0, 1.0]);
+        assert_eq!(cfg.weights_at(4, 500), vec![1.0, 1.0, 5.0, 1.0]);
+        // no shift: weights_at is weights
+        let plain = SchedulerConfig::default();
+        assert_eq!(plain.weights_at(3, 1000), vec![1.0; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "priority weights must be finite")]
+    fn tier_shift_weights_validated_too() {
+        let cfg = SchedulerConfig {
+            tier_shift: Some((0, vec![-1.0])),
+            ..Default::default()
+        };
+        cfg.weights_at(2, 10);
+    }
+
+    #[test]
+    fn demand_is_smallest_rung_at_curve_max() {
+        let levels = vec![1, 5, 12, 20, 60];
+        assert_eq!(demand_cores(&[0.0, 0.2, 0.8, 0.8, 0.8], &levels, 20), 12);
+        assert_eq!(demand_cores(&[0.9, 0.9, 0.9, 0.9, 0.9], &levels, 20), 1);
+        assert_eq!(demand_cores(&[0.0, 0.0, 0.0, 0.0, 0.9], &levels, 20), 60);
+        // flat-zero curve: the starved-model fallback, not the floor rung
+        assert_eq!(demand_cores(&[0.0; 5], &levels, 20), 20);
+    }
+
+    #[test]
+    fn epoch_admission_reproduces_v1_capacity_on_floor_reservations() {
+        // 4 tenants x 4-core floor on 10 cores: greedy fit admits exactly
+        // total/floor = 2, same ranking as the run-level admit()
+        let mut adm = EpochAdmission::new(4, 3);
+        let got = adm.decide(10, &[1.0, 1.0, 0.5, 2.0], &[4; 4]);
+        assert_eq!(got, admit(10, 4, &[1.0, 1.0, 0.5, 2.0]));
+        let mut uniform = EpochAdmission::new(4, 3);
+        assert_eq!(uniform.decide(10, &[1.0; 4], &[4; 4]), admit(10, 4, &[1.0; 4]));
+    }
+
+    #[test]
+    fn epoch_admission_readmits_when_demands_shrink() {
+        // load pressure parks tenant 3; when demands drop the pool frees
+        // up and the parked tenant is re-admitted before its deadline
+        let mut adm = EpochAdmission::new(4, 8);
+        let heavy = vec![2, 5, 2, 5];
+        assert_eq!(adm.decide(10, &[1.0; 4], &heavy), vec![true, true, true, false]);
+        let light = vec![2, 3, 2, 3];
+        assert_eq!(adm.decide(10, &[1.0; 4], &light), vec![true; 4]);
+    }
+
+    #[test]
+    fn epoch_admission_rotation_meets_starvation_bound() {
+        // equal priorities, fixed floor reservations, random feasible
+        // (apps, capacity, bound) tuples: no tenant is ever parked more
+        // than `bound` consecutive epochs, and every tenant runs
+        let mut rng = crate::util::Rng::new(0xA11);
+        for _case in 0..40 {
+            let n = 2 + rng.below(5);
+            let floor = 2 + rng.below(4);
+            let cap = 1 + rng.below(n);
+            let total = floor * cap + rng.below(floor);
+            let parked = n - cap;
+            if parked == 0 {
+                continue;
+            }
+            let kmin = (parked + cap - 1) / cap;
+            let k = kmin + rng.below(4);
+            let mut adm = EpochAdmission::new(n, k);
+            let mut streak = vec![0usize; n];
+            let mut ran = vec![false; n];
+            for _e in 0..120 {
+                let a = adm.decide(total, &vec![1.0; n], &vec![floor; n]);
+                for i in 0..n {
+                    if a[i] {
+                        streak[i] = 0;
+                        ran[i] = true;
+                    } else {
+                        streak[i] += 1;
+                        assert!(
+                            streak[i] <= k,
+                            "tenant {i} parked {} > bound {k} (n {n} cap {cap})",
+                            streak[i]
+                        );
+                    }
+                }
+            }
+            assert!(ran.iter().all(|&r| r), "a tenant never ran: {ran:?}");
+        }
+    }
+
+    #[test]
+    fn epoch_admission_hold_ticks_streaks() {
+        let mut adm = EpochAdmission::new(3, 2);
+        assert_eq!(adm.decide(4, &[1.0; 3], &[2; 3]), vec![true, true, false]);
+        assert!(!adm.overdue_pending());
+        // a held (warmup) epoch counts against the bound: tenant 2 has now
+        // waited 2 of its 2 epochs and must be admitted at the next decide
+        assert_eq!(adm.hold(), vec![true, true, false]);
+        assert!(adm.overdue_pending(), "the bound is due: a further hold would break it");
+        let next = adm.decide(4, &[1.0; 3], &[2; 3]);
+        assert!(next[2], "overdue tenant not re-admitted: {next:?}");
+        assert!(!adm.overdue_pending());
+    }
+
+    #[test]
+    fn tier_upgrade_preempts_a_seat_next_decide() {
+        let mut adm = EpochAdmission::new(4, 8);
+        assert_eq!(
+            adm.decide(10, &[1.0; 4], &[4; 4]),
+            vec![true, true, false, false]
+        );
+        let next = adm.decide(10, &[1.0, 1.0, 5.0, 1.0], &[4; 4]);
+        assert!(next[2], "upgraded tenant must be admitted: {next:?}");
+        assert_eq!(next.iter().filter(|&&a| a).count(), 2);
+    }
+
+    #[test]
+    fn reserve_top_up_spends_idle_cores_only() {
+        let levels = vec![1, 2, 5, 12, 20, 60];
+        // three admitted tenants at the floor, one parked; 120-core pool
+        let admitted = vec![true, true, true, false];
+        let mut rungs = vec![0, 4, 0, 0]; // used = 1 + 20 + 1 = 22
+        reserve_top_up(&mut rungs, &levels, 120, &admitted, &[20, 20, 12, 60], 20, &[1.0; 4]);
+        assert_eq!(levels[rungs[0]], 20, "{rungs:?}");
+        assert_eq!(levels[rungs[1]], 20, "incumbent grant untouched");
+        assert_eq!(levels[rungs[2]], 12, "capped at its own reservation");
+        assert_eq!(rungs[3], 0, "parked tenants get nothing");
+        // a tight pool raises only as far as idle cores allow
+        let mut tight = vec![0, 0];
+        reserve_top_up(&mut tight, &levels, 7, &[true, true], &[20, 20], 20, &[1.0; 2]);
+        assert_eq!(levels[tight[0]], 5, "{tight:?}");
+        assert_eq!(levels[tight[1]], 2, "{tight:?}");
+        assert!(levels[tight[0]] + levels[tight[1]] <= 7);
     }
 }

@@ -101,6 +101,12 @@ pub fn time_multiplex_factor(granted_total: usize, budget: usize) -> f64 {
 pub struct SharedCluster {
     pub cluster: Cluster,
     quotas: Vec<usize>,
+    /// Park/unpark transitions installed over this cluster's lifetime: the
+    /// number of quota assignments that moved an app between zero and
+    /// non-zero cores. Whole-run parking (v1 admission) never transitions;
+    /// epoch-granular admission does, and the fleet report surfaces the
+    /// count so rotation churn is visible.
+    park_transitions: usize,
 }
 
 impl SharedCluster {
@@ -113,7 +119,7 @@ impl SharedCluster {
              (admission fleets use parked_even)"
         );
         let q = (cluster.total_cores() / apps).max(1);
-        SharedCluster { quotas: vec![q; apps], cluster }
+        SharedCluster { quotas: vec![q; apps], cluster, park_transitions: 0 }
     }
 
     /// [`even`](Self::even) over the *admitted* subset of an
@@ -127,7 +133,7 @@ impl SharedCluster {
         assert!(n <= cluster.total_cores(), "one core per admitted tenant minimum");
         let q = (cluster.total_cores() / n).max(1);
         let quotas = admitted.iter().map(|&a| if a { q } else { 0 }).collect();
-        SharedCluster { quotas, cluster }
+        SharedCluster { quotas, cluster, park_transitions: 0 }
     }
 
     pub fn apps(&self) -> usize {
@@ -142,6 +148,20 @@ impl SharedCluster {
         &self.quotas
     }
 
+    /// Park/unpark transitions installed so far (see the field docs).
+    pub fn park_transitions(&self) -> usize {
+        self.park_transitions
+    }
+
+    fn count_transitions(&mut self, quotas: &[usize]) {
+        self.park_transitions += self
+            .quotas
+            .iter()
+            .zip(quotas)
+            .filter(|(&old, &new)| (old == 0) != (new == 0))
+            .count();
+    }
+
     /// Install a new per-app quota vector (one reallocation epoch).
     /// Panics if the vector oversubscribes the shared budget or starves
     /// an app to zero — scheduler bugs must not be silently absorbed.
@@ -154,6 +174,7 @@ impl SharedCluster {
             self.cluster.total_cores()
         );
         assert!(quotas.iter().all(|&q| q >= 1), "zero-core quota");
+        self.count_transitions(quotas);
         self.quotas.copy_from_slice(quotas);
     }
 
@@ -177,6 +198,7 @@ impl SharedCluster {
                 assert!(*q >= 1, "zero-core quota for an admitted app");
             }
         }
+        self.count_transitions(quotas);
         self.quotas.copy_from_slice(quotas);
     }
 }
@@ -445,6 +467,22 @@ mod tests {
         let tiny = Cluster { servers: 1, cores_per_server: 2, comm_ms_per_frame: 0.0 };
         let sc = SharedCluster::parked_even(tiny, &[false, true, false]);
         assert_eq!(sc.quotas(), &[0, 2, 0]);
+    }
+
+    #[test]
+    fn park_transitions_counted_across_quota_installs() {
+        let mut sc =
+            SharedCluster::parked_even(Cluster::default(), &[true, true, false]);
+        assert_eq!(sc.park_transitions(), 0);
+        // unpark app 2, park app 1: two transitions
+        sc.set_quotas_parked(&[60, 0, 60], &[false, true, false]);
+        assert_eq!(sc.park_transitions(), 2);
+        // same shape again: no transition
+        sc.set_quotas_parked(&[40, 0, 40], &[false, true, false]);
+        assert_eq!(sc.park_transitions(), 2);
+        // unpark app 1 (set_quotas counts too)
+        sc.set_quotas(&[40, 40, 40]);
+        assert_eq!(sc.park_transitions(), 3);
     }
 
     #[test]

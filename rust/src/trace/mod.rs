@@ -13,10 +13,12 @@
 //! result so experiments are replayable.
 
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::apps::App;
-use crate::simulator::{Cluster, ClusterSim, NoiseModel};
+use crate::simulator::{grant_under, time_multiplex_factor, Cluster, ClusterSim, NoiseModel};
 use crate::util::json::Json;
 use crate::util::Rng;
 
@@ -32,11 +34,17 @@ pub struct TraceFrame {
 }
 
 /// A 1000-frame run of one static configuration.
+///
+/// Frames live behind an [`Arc`] so ladder traces can share one frame
+/// buffer across every rung whose worker grant (and time-multiplex charge)
+/// is identical — the quota only changes execution through the grant, so
+/// equal grants produce byte-identical frames (see
+/// [`LadderTraceSet::generate_with`]).
 #[derive(Debug, Clone)]
 pub struct Trace {
     /// Raw knob vector.
     pub config: Vec<f64>,
-    pub frames: Vec<TraceFrame>,
+    pub frames: Arc<Vec<TraceFrame>>,
 }
 
 impl Trace {
@@ -106,7 +114,7 @@ impl TraceSet {
                     }
                 })
                 .collect();
-            traces.push(Trace { config, frames });
+            traces.push(Trace { config, frames: Arc::new(frames) });
         }
         TraceSet {
             app: app.spec.name.clone(),
@@ -159,7 +167,7 @@ impl TraceSet {
                     Vec::with_capacity(t.frames.len() * self.stage_names.len());
                 let mut e2e = Vec::with_capacity(t.frames.len());
                 let mut fid = Vec::with_capacity(t.frames.len());
-                for f in &t.frames {
+                for f in t.frames.iter() {
                     stage_flat.extend_from_slice(&f.stage_ms);
                     e2e.push(f.end_to_end_ms);
                     fid.push(f.fidelity);
@@ -205,7 +213,7 @@ impl TraceSet {
                         fidelity,
                     })
                     .collect();
-                Ok(Trace { config, frames })
+                Ok(Trace { config, frames: Arc::new(frames) })
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(TraceSet {
@@ -295,6 +303,20 @@ impl LadderTraceSet {
     /// multiplier ([`crate::simulator::time_multiplex_factor`]) — the
     /// admission-controlled fleet traces its ladders this way so a
     /// 7-core rung on a 12-stage pipeline is priced honestly.
+    ///
+    /// **Frame sharing:** the budget reaches an action's execution only
+    /// through the worker grant and (in exact mode) the time-multiplex
+    /// charge; the per-config noise stream is seeded identically at every
+    /// rung. So two rungs whose `(granted workers, tm factor)` signature
+    /// matches produce byte-identical frames, and this generator stores
+    /// one shared buffer instead of `levels × frames` copies. For a
+    /// core-insensitive (light-profile) app every rung shares one buffer —
+    /// the dynamic fleet used to replicate those frames `levels`-fold
+    /// (~6x wasted peak memory; see [`unique_trace_bytes`] vs
+    /// [`logical_trace_bytes`]).
+    ///
+    /// [`unique_trace_bytes`]: Self::unique_trace_bytes
+    /// [`logical_trace_bytes`]: Self::logical_trace_bytes
     pub fn generate_with(
         app: &App,
         cluster: &Cluster,
@@ -318,6 +340,10 @@ impl LadderTraceSet {
             .collect();
         let stage_names: Vec<String> =
             app.spec.stages.iter().map(|s| s.name.clone()).collect();
+        let n_stages = app.graph.len();
+        // one cache per config: (granted workers, tm bits) -> shared frames
+        type FrameCache = HashMap<(Vec<usize>, u64), Arc<Vec<TraceFrame>>>;
+        let mut shared: Vec<FrameCache> = vec![HashMap::new(); n_configs];
         let sets = levels
             .iter()
             .map(|&budget| {
@@ -325,23 +351,44 @@ impl LadderTraceSet {
                     .iter()
                     .enumerate()
                     .map(|(ci, config)| {
-                        let mut sim = ClusterSim::new(
-                            cluster.clone(),
-                            NoiseModel::default(),
-                            seed.wrapping_mul(1_000_003).wrapping_add(ci as u64),
-                        )
-                        .with_core_budget(budget)
-                        .with_time_multiplex(time_multiplex);
-                        let frames = (0..n_frames)
-                            .map(|f| {
-                                let r = sim.run_frame(app, config, f);
-                                TraceFrame {
-                                    stage_ms: r.stage_ms,
-                                    end_to_end_ms: r.end_to_end_ms,
-                                    fidelity: r.fidelity,
-                                }
-                            })
+                        // the signature mirrors ClusterSim::run_frame: the
+                        // grant is made against the effective budget, and
+                        // the tm charge (when on) against the same
+                        let eff = budget.min(cluster.total_cores());
+                        let requested: Vec<usize> = (0..n_stages)
+                            .map(|s| app.model.requested_workers(s, config))
                             .collect();
+                        let granted = grant_under(&requested, eff);
+                        let tm = if time_multiplex {
+                            time_multiplex_factor(granted.iter().sum(), eff)
+                        } else {
+                            1.0
+                        };
+                        let key = (granted, tm.to_bits());
+                        let frames = shared[ci]
+                            .entry(key)
+                            .or_insert_with(|| {
+                                let mut sim = ClusterSim::new(
+                                    cluster.clone(),
+                                    NoiseModel::default(),
+                                    seed.wrapping_mul(1_000_003).wrapping_add(ci as u64),
+                                )
+                                .with_core_budget(budget)
+                                .with_time_multiplex(time_multiplex);
+                                Arc::new(
+                                    (0..n_frames)
+                                        .map(|f| {
+                                            let r = sim.run_frame(app, config, f);
+                                            TraceFrame {
+                                                stage_ms: r.stage_ms,
+                                                end_to_end_ms: r.end_to_end_ms,
+                                                fidelity: r.fidelity,
+                                            }
+                                        })
+                                        .collect(),
+                                )
+                            })
+                            .clone();
                         Trace { config: config.clone(), frames }
                     })
                     .collect();
@@ -389,6 +436,42 @@ impl LadderTraceSet {
         }
         best
     }
+
+    /// Approximate heap bytes of one [`TraceFrame`] of this ladder
+    /// (struct + per-stage latency payload).
+    fn frame_bytes(&self) -> usize {
+        let n_stages = self.sets[0].stage_names.len();
+        std::mem::size_of::<TraceFrame>() + n_stages * std::mem::size_of::<f64>()
+    }
+
+    /// Trace bytes a share-less ladder would hold:
+    /// `levels × configs × frames × frame_bytes`.
+    pub fn logical_trace_bytes(&self) -> usize {
+        self.num_levels() * self.num_configs() * self.num_frames() * self.frame_bytes()
+    }
+
+    /// Trace bytes actually held: frames are counted once per *unique*
+    /// shared buffer, not once per rung. This is the peak-memory number
+    /// the bench trajectory records (`ladder_trace` metrics in
+    /// `BENCH_<sha>.json`).
+    pub fn unique_trace_bytes(&self) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        let mut frames = 0usize;
+        for set in &self.sets {
+            for t in &set.traces {
+                if seen.insert(Arc::as_ptr(&t.frames)) {
+                    frames += t.frames.len();
+                }
+            }
+        }
+        frames * self.frame_bytes()
+    }
+
+    /// `logical / unique` — 1.0 when nothing is shared; ~`levels` for a
+    /// core-insensitive app whose grant never varies with the budget.
+    pub fn sharing_ratio(&self) -> f64 {
+        self.logical_trace_bytes() as f64 / self.unique_trace_bytes().max(1) as f64
+    }
 }
 
 #[cfg(test)]
@@ -415,15 +498,17 @@ mod tests {
     fn frac_under_counts_frames() {
         let t = Trace {
             config: vec![1.0],
-            frames: [40.0, 60.0, 50.0, 45.0]
-                .iter()
-                .map(|&e| TraceFrame { stage_ms: vec![e], end_to_end_ms: e, fidelity: 0.5 })
-                .collect(),
+            frames: Arc::new(
+                [40.0, 60.0, 50.0, 45.0]
+                    .iter()
+                    .map(|&e| TraceFrame { stage_ms: vec![e], end_to_end_ms: e, fidelity: 0.5 })
+                    .collect(),
+            ),
         };
         assert!((t.frac_under(50.0) - 0.75).abs() < 1e-12);
         assert_eq!(t.frac_under(10.0), 0.0);
         assert_eq!(t.frac_under(100.0), 1.0);
-        let empty = Trace { config: vec![], frames: vec![] };
+        let empty = Trace { config: vec![], frames: Arc::new(vec![]) };
         assert_eq!(empty.frac_under(1.0), 0.0);
     }
 
@@ -575,6 +660,98 @@ mod tests {
         assert_eq!(ladder.level_for(7), 0);
         assert_eq!(ladder.level_for(16), 1);
         assert_eq!(ladder.level_for(500), 2);
+    }
+
+    #[test]
+    fn ladder_shares_frames_across_equal_grant_rungs() {
+        // a light-profile app never requests more than one worker per
+        // stage: every rung's grant is identical, so the whole ladder
+        // shares one frame buffer per config (the ~6x dynamic-fleet
+        // memory fix) while staying value-identical to plain generation
+        let cfg = crate::workloads::WorkloadConfig {
+            profile: crate::workloads::AppProfile::Light,
+            ..Default::default()
+        };
+        let app = crate::workloads::generate(42, &cfg);
+        let levels = vec![7, 10, 15, 21, 31, 45];
+        let ladder =
+            LadderTraceSet::generate_on(&app, &Cluster::default(), &levels, 5, 30, 9);
+        assert_eq!(
+            ladder.unique_trace_bytes() * levels.len(),
+            ladder.logical_trace_bytes(),
+            "every rung must share the light app's frames"
+        );
+        assert!(ladder.sharing_ratio() >= 4.0, "{}", ladder.sharing_ratio());
+        for l in 1..ladder.num_levels() {
+            for c in 0..ladder.num_configs() {
+                assert!(
+                    Arc::ptr_eq(&ladder.set(l).traces[c].frames, &ladder.set(0).traces[c].frames),
+                    "level {l} config {c} not shared"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ladder_sharing_key_separates_exact_accounting_rungs() {
+        // under exact accounting a light app's tm factor differs at every
+        // sub-stage-count budget, so tiny rungs must NOT share with the
+        // full-budget rung — but rungs at or above the stage count (tm 1,
+        // same grant) still do
+        let cfg = crate::workloads::WorkloadConfig {
+            profile: crate::workloads::AppProfile::Light,
+            ..Default::default()
+        };
+        let app = crate::workloads::generate(42, &cfg);
+        let n_stages = app.graph.len();
+        let levels = vec![2, 3, n_stages + 1, n_stages + 9];
+        let exact = LadderTraceSet::generate_with(
+            &app,
+            &Cluster::default(),
+            &levels,
+            4,
+            20,
+            9,
+            true,
+        );
+        for c in 0..exact.num_configs() {
+            assert!(
+                !Arc::ptr_eq(&exact.set(0).traces[c].frames, &exact.set(1).traces[c].frames),
+                "distinct tm factors must not share (config {c})"
+            );
+            assert!(
+                Arc::ptr_eq(&exact.set(2).traces[c].frames, &exact.set(3).traces[c].frames),
+                "tm-free rungs with equal grants must share (config {c})"
+            );
+            assert!(
+                exact.set(0).frame(c, 3).end_to_end_ms > exact.set(2).frame(c, 3).end_to_end_ms,
+                "tiny rung must stay priced honestly (config {c})"
+            );
+        }
+        assert!(exact.sharing_ratio() > 1.0);
+    }
+
+    #[test]
+    fn heavy_app_rungs_stay_distinct() {
+        // a heavy app's grants differ per budget below its request total:
+        // sharing must not conflate rungs that execute differently
+        let cfg = crate::workloads::WorkloadConfig {
+            profile: crate::workloads::AppProfile::Heavy,
+            ..Default::default()
+        };
+        let app = crate::workloads::generate(43, &cfg);
+        let ladder = LadderTraceSet::generate_on(
+            &app,
+            &Cluster::default(),
+            &[7, 15, 45],
+            4,
+            20,
+            11,
+        );
+        // the ladder keeps per-rung latencies monotone-ish: squeezed rungs
+        // are never faster than the top rung on requested-parallel configs
+        assert!(ladder.unique_trace_bytes() <= ladder.logical_trace_bytes());
+        assert_eq!(ladder.num_levels(), 3);
     }
 
     #[test]

@@ -335,10 +335,22 @@ impl<'a> BudgetedController<'a> {
 
         let rec = self.ladder.set(level).frame(action, frame % self.ladder.num_frames());
         let u = self.candidates_at[level][action].clone();
-        let (y, offset_obs) = self
-            .backend
-            .group_map()
-            .targets(&rec.stage_ms, rec.end_to_end_ms);
+        // Rung-conditioned observation charge: the feature map cannot see
+        // the time-multiplex multiplier (the effective knobs encode granted
+        // workers, and a sub-stage-count budget grants the same workers at
+        // every such rung), so exact-accounting observations are
+        // de-multiplexed before the model update. The model then learns
+        // budget-invariant latencies and the prediction side re-charges the
+        // analytic factor (`blended_costs_at`), which lets it generalize
+        // sub-stage-count quotas instead of relying on the per-(rung,
+        // action) empirical blend to correct a tm-confounded fit.
+        let tm = self.tm_at[level][action];
+        let (y, offset_obs) = if self.time_multiplex && tm > 1.0 {
+            let adj: Vec<f64> = rec.stage_ms.iter().map(|&v| v / tm).collect();
+            self.backend.group_map().targets(&adj, rec.end_to_end_ms / tm)
+        } else {
+            self.backend.group_map().targets(&rec.stage_ms, rec.end_to_end_ms)
+        };
         self.backend.update(&u, &y);
         self.backend.observe_offset(offset_obs);
 
@@ -523,6 +535,72 @@ mod tests {
         let tm = time_multiplex_factors(&app, &ladder.configs(), &ladder.levels);
         for i in 0..a.len() {
             assert!((b[i] - a[i] * tm[0][i]).abs() < 1e-9, "action {i}");
+        }
+    }
+
+    #[test]
+    fn demultiplexed_observations_generalize_across_rungs() {
+        // A light (core-insensitive) app under exact accounting: effective
+        // candidates are identical at every rung, so the only cross-rung
+        // difference the model could express is the tm charge. Train ONLY
+        // at a sub-stage-count rung (tm = stages/4 > 1); the model must
+        // still predict the un-multiplexed top-rung latency — which the
+        // pre-fix controller (trained on charged targets) over-predicts by
+        // the full tm factor (~2.5x here; mirror-validated at ≤11% error
+        // for the fix vs ≥120% without it).
+        let wcfg = crate::workloads::WorkloadConfig {
+            profile: crate::workloads::AppProfile::Light,
+            ..Default::default()
+        };
+        let app = workloads::generate(42, &wcfg);
+        let levels = vec![4, 15, 120];
+        let ladder = LadderTraceSet::generate_with(
+            &app,
+            &Cluster::default(),
+            &levels,
+            6,
+            80,
+            11,
+            true,
+        );
+        let bound = app.spec.latency_bounds_ms[0];
+        // warmup > frames: every step explores, blend off: predictions are
+        // pure model x analytic tm
+        let cfg = TunerConfig { epsilon: 0.0, bound_ms: bound * 0.9, warmup_frames: 200 };
+        let mut ctl = BudgetedController::new(
+            &app,
+            &ladder,
+            Box::new(NativeBackend::structured(&app.spec)),
+            cfg,
+            5,
+        )
+        .with_time_multiplex(true);
+        ctl.set_level(0);
+        for f in 0..80 {
+            ctl.step(f);
+        }
+        let tiny = ctl.blended_costs_at(0);
+        let top = ctl.blended_costs_at(2);
+        let tm0 = time_multiplex_factors(&app, &ladder.configs(), &levels);
+        for a in 0..6 {
+            assert!(tm0[0][a] > 1.5, "scenario must actually multiplex");
+            // prediction side re-charges the analytic factor exactly
+            assert!(
+                (tiny[a] / top[a] - tm0[0][a]).abs() < 1e-9,
+                "action {a}: {} / {} vs tm {}",
+                tiny[a],
+                top[a],
+                tm0[0][a]
+            );
+            // and the top-rung prediction tracks the un-multiplexed truth
+            let truth = ladder.set(2).traces[a].avg_cost_ms();
+            let rel = (top[a] - truth).abs() / truth;
+            assert!(
+                rel < 0.5,
+                "action {a}: top-rung prediction {} vs truth {truth} \
+                 (rel {rel:.2}; a tm-confounded model sits at ~1.2-1.7)",
+                top[a]
+            );
         }
     }
 

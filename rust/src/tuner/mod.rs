@@ -383,13 +383,15 @@ mod tests {
         let spec = &app.spec;
         let mk_frames = |stage_ms: Vec<f64>, fid: f64| -> Vec<crate::trace::TraceFrame> {
             let e2e: f64 = stage_ms.iter().sum();
-            (0..60)
-                .map(|_| crate::trace::TraceFrame {
-                    stage_ms: stage_ms.clone(),
-                    end_to_end_ms: e2e,
-                    fidelity: fid,
-                })
-                .collect()
+            std::sync::Arc::new(
+                (0..60)
+                    .map(|_| crate::trace::TraceFrame {
+                        stage_ms: stage_ms.clone(),
+                        end_to_end_ms: e2e,
+                        fidelity: fid,
+                    })
+                    .collect(),
+            )
         };
         let slow = crate::trace::Trace {
             config: spec.defaults(),

@@ -73,7 +73,7 @@ pub fn best_fixed_action(traces: &TraceSet, bound_ms: f64) -> (usize, PolicyOutc
 /// Outcome of always playing action `c`.
 pub fn fixed_action(traces: &TraceSet, c: usize, bound_ms: f64) -> PolicyOutcome {
     let mut stats = PolicyStats::new();
-    for rec in &traces.traces[c].frames {
+    for rec in traces.traces[c].frames.iter() {
         stats.observe(rec.fidelity, rec.end_to_end_ms, bound_ms);
     }
     PolicyOutcome {

@@ -35,6 +35,11 @@ pub struct Bencher {
     pub budget: Duration,
     pub warmup: Duration,
     pub results: Vec<BenchResult>,
+    /// Scalar side-metrics (bytes, ratios, counts) recorded alongside the
+    /// timings — `scripts/bench_gate.py` lifts them into the
+    /// `BENCH_<sha>.json` trajectory so non-timing regressions (e.g. the
+    /// ladder-trace peak memory) are visible across commits.
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl Default for Bencher {
@@ -43,6 +48,7 @@ impl Default for Bencher {
             budget: Duration::from_millis(900),
             warmup: Duration::from_millis(150),
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 }
@@ -53,6 +59,7 @@ impl Bencher {
             budget: Duration::from_millis(250),
             warmup: Duration::from_millis(50),
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -84,10 +91,15 @@ impl Bencher {
                     .put("iters", r.iters)
             })
             .collect();
+        let mut metrics = Json::obj();
+        for (name, value) in &self.metrics {
+            metrics = metrics.put(name.as_str(), *value);
+        }
         Json::obj()
             .put("target", target)
             .put("budget_ms", self.budget.as_millis() as u64)
             .put("results", Json::Arr(results))
+            .put("metrics", metrics)
     }
 
     /// Write `$IPTUNE_BENCH_JSON_DIR/<target>.json` when that env var is
@@ -163,6 +175,12 @@ impl Bencher {
     pub fn result(&self, name: &str) -> Option<&BenchResult> {
         self.results.iter().find(|r| r.name == name)
     }
+
+    /// Record a scalar side-metric (printed and serialized with the run).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("metric {name:<42} {value}");
+        self.metrics.push((name.to_string(), value));
+    }
 }
 
 pub fn fmt_dur(d: Duration) -> String {
@@ -209,12 +227,15 @@ mod tests {
         b.bench("x/one", || {
             acc = black_box(acc.wrapping_add(3));
         });
+        b.metric("x/bytes", 1234.0);
         let j = crate::util::json::Json::parse(&b.to_json("x").to_string()).unwrap();
         assert_eq!(j.req("target").unwrap().as_str().unwrap(), "x");
         let rs = j.req("results").unwrap().as_arr().unwrap();
         assert_eq!(rs.len(), 1);
         assert_eq!(rs[0].req("name").unwrap().as_str().unwrap(), "x/one");
         assert!(rs[0].req("median_ns").unwrap().as_u64().unwrap() > 0);
+        let m = j.req("metrics").unwrap();
+        assert_eq!(m.req("x/bytes").unwrap().as_f64().unwrap(), 1234.0);
     }
 
     #[test]

@@ -205,6 +205,38 @@ fn segment_label(segment: usize, branches: usize) -> String {
     }
 }
 
+/// Scripted load-*drop* multiplier — the inverse of the fleet's classic
+/// 1.9x load jump: heavy apps' scene content roughly halves at the shift
+/// frame. The scenario family epoch-granular admission is measured on
+/// (tenants parked under load pressure must be re-admitted once the pool
+/// frees up).
+pub const LOAD_DROP_MULT: f64 = 0.55;
+
+/// Scenario helper: the scripted load-drop `(frame, multiplier)` pair for
+/// [`WorkloadConfig::load_shift`].
+pub fn load_drop(frame: usize) -> (usize, f64) {
+    (frame, LOAD_DROP_MULT)
+}
+
+/// Scenario family: a deterministic mid-run tier shift for a fleet of
+/// `apps` — one tenant upgrades to a paying tier (weight 4.0), a different
+/// tenant downgrades (0.5), everyone else stays at 1.0. Derived from
+/// `seed` alone, on an rng stream independent of app generation, so the
+/// same fleet can be replayed with or without the shift.
+pub fn tier_shift_weights(seed: u64, apps: usize) -> Vec<f64> {
+    assert!(apps >= 2, "a tier shift needs at least two tenants");
+    let mut rng = Rng::new(seed ^ 0x7151_5EED);
+    let up = rng.below(apps);
+    let mut down = rng.below(apps - 1);
+    if down >= up {
+        down += 1;
+    }
+    let mut w = vec![1.0; apps];
+    w[up] = 4.0;
+    w[down] = 0.5;
+    w
+}
+
 /// Generate a pipeline, calibrating its latency bounds on the default
 /// (paper) cluster. Same seed → byte-identical app.
 pub fn generate(seed: u64, cfg: &WorkloadConfig) -> App {
@@ -907,6 +939,40 @@ mod tests {
                 exact.spec.latency_bounds_ms[0] >= plain.spec.latency_bounds_ms[0],
                 "seed {seed}"
             );
+        }
+    }
+
+    #[test]
+    fn load_drop_scenario_halves_post_shift_content() {
+        let cfg = WorkloadConfig { load_shift: Some(load_drop(150)), ..Default::default() };
+        let app = generate(9, &cfg);
+        let before = app.model.content(149);
+        let after = app.model.content(150);
+        assert_eq!(before.scene_id, 0);
+        assert_eq!(after.scene_id, 1);
+        assert!(
+            after.features < before.features * 0.75,
+            "load must drop: {} -> {}",
+            before.features,
+            after.features
+        );
+        // rng-neutral like every scripted scenario
+        let plain = generate(9, &WorkloadConfig::default());
+        assert_eq!(plain.spec.params.len(), app.spec.params.len());
+    }
+
+    #[test]
+    fn tier_shift_weights_upgrade_and_downgrade_distinct_tenants() {
+        for seed in 0..20u64 {
+            for apps in 2..6 {
+                let w = tier_shift_weights(seed, apps);
+                assert_eq!(w.len(), apps);
+                assert_eq!(w.iter().filter(|&&x| x == 4.0).count(), 1, "{w:?}");
+                assert_eq!(w.iter().filter(|&&x| x == 0.5).count(), 1, "{w:?}");
+                assert!(w.iter().all(|&x| x == 1.0 || x == 4.0 || x == 0.5));
+            }
+            // deterministic
+            assert_eq!(tier_shift_weights(seed, 4), tier_shift_weights(seed, 4));
         }
     }
 

@@ -26,7 +26,7 @@ fn closed_loop_tuner_brings_stream_under_bound() {
     let handle = spawn_stream(
         Arc::clone(&a),
         a.spec.defaults(),
-        EngineConfig { frames, realtime_scale: 0.0, queue_capacity: 8, seed: 4 },
+        EngineConfig { frames, seed: 4, ..Default::default() },
     );
 
     let mut backend = NativeBackend::structured(&a.spec);

@@ -170,8 +170,8 @@ fn prop_engine_no_frame_lost_any_capacity() {
             iptune::engine::EngineConfig {
                 frames,
                 queue_capacity: cap,
-                realtime_scale: 0.0,
                 seed: case as u64,
+                ..Default::default()
             },
         );
         assert_eq!(recs.len(), frames, "cap {cap}");

@@ -180,7 +180,7 @@ fn prop_generated_traces_have_protocol_shape() {
         assert_eq!(ts.num_frames(), 30);
         assert_eq!(ts.stage_names.len(), app.spec.stages.len());
         for t in &ts.traces {
-            for f in &t.frames {
+            for f in t.frames.iter() {
                 assert!(f.end_to_end_ms > 0.0);
                 assert!((0.0..=1.0).contains(&f.fidelity));
                 // e2e never exceeds the stage sum (series-parallel graphs)

@@ -19,7 +19,9 @@
 
 use std::sync::OnceLock;
 
-use iptune::fleet::{run_fleet, FleetConfig, FleetMode, FleetReport, FLEET_SLO_FRAC};
+use iptune::fleet::{
+    run_fleet, FleetConfig, FleetMode, FleetReport, FLEET_SLO_FRAC, LOAD_DROP_MULT,
+};
 use iptune::simulator::Cluster;
 
 /// The acceptance scenario: 8 co-tenant apps on the paper's 120-core
@@ -274,18 +276,27 @@ fn oversubscribed_fleet_parks_lowest_priority_instead_of_overgranting() {
     assert_eq!(report.parked_apps, 2);
     // app 2 (priority 0.5) parks first; the 1.0-tie parks the higher
     // index (app 1); app 3 (priority 2.0) and app 0 run
-    let parked: Vec<bool> = report.apps.iter().map(|a| a.parked).collect();
+    let parked: Vec<bool> = report.apps.iter().map(|a| a.admitted_frames == 0).collect();
     assert_eq!(parked, vec![false, true, true, false]);
+    let epochs = report.allocations.len();
     for a in &report.apps {
-        if a.parked {
+        if a.admitted_frames == 0 {
             assert_eq!(a.dropped_frames, 120, "parked app {} must drop all frames", a.index);
+            assert_eq!(a.parked_epochs, epochs, "v1 parking is whole-run");
+            assert_eq!(a.scored_frames, 0);
             assert_eq!(a.avg_cores, 0.0);
             assert_eq!(a.avg_fidelity, 0.0);
         } else {
             assert_eq!(a.dropped_frames, 0);
+            assert_eq!(a.parked_epochs, 0);
+            assert_eq!(a.admitted_frames, 120);
             assert!(a.avg_cores >= 4.0, "admitted app {} below floor", a.index);
         }
     }
+    // whole-run parking never transitions park state mid-run, and the SLO
+    // denominator is the apps with scorable frames
+    assert_eq!(report.park_transitions, 0);
+    assert_eq!(report.scored_apps, 2);
     // zero epochs where granted cores exceed the pool, parked apps at
     // exactly zero, admitted apps at or above the requested floor
     assert!(!report.allocations.is_empty());
@@ -341,7 +352,7 @@ fn priorities_decide_who_is_admitted() {
     let mut cfg = oversubscribed_cfg(2);
     cfg.scheduler.priorities = vec![2.0, 1.0, 1.0, 0.5];
     let report = run_fleet(&cfg);
-    let parked: Vec<bool> = report.apps.iter().map(|a| a.parked).collect();
+    let parked: Vec<bool> = report.apps.iter().map(|a| a.admitted_frames == 0).collect();
     assert_eq!(parked, vec![false, false, true, true]);
     for alloc in &report.allocations {
         assert!(alloc.total_cores() <= report.total_cores);
@@ -358,4 +369,190 @@ fn static_and_dynamic_identical_through_warmup() {
     assert_eq!(stat.allocations[0].cores, dynamic.allocations[0].cores);
     assert_eq!(stat.levels, dynamic.levels);
     assert_eq!(stat.cores_per_app, dynamic.cores_per_app);
+}
+
+/// The scheduler-v3 acceptance scenario: the seed-42 heterogeneous 8-app
+/// fleet on the paper's 120-core cluster with a 20-core requested floor
+/// (floor × apps = 160 > 120 → over-subscribed) and a scripted load
+/// *drop* (heavy apps' costs fall to 0.55x at frame 200). Whole-run (v1)
+/// admission parks two tenants for all 600 frames; epoch-granular
+/// admission re-admits parked tenants as demands shrink and rotates
+/// parking under the 3-epoch starvation bound. Thresholds validated via
+/// the full-fleet Python behavioral mirror (seed 42: whole-run aggregate
+/// fidelity-vs-oracle 0.6115 with 6/6 admitted meeting the SLO; epoch
+/// mode 0.6921 with 8/8 scored meeting it, 5 re-admissions, max
+/// consecutive parked epochs 3).
+fn load_drop_cfg(epoch_granular: bool) -> FleetConfig {
+    let mut cfg = FleetConfig {
+        apps: 8,
+        frames: 600,
+        seed: 42,
+        configs_per_app: 8,
+        threads: 0,
+        mode: FleetMode::Dynamic,
+        heterogeneous: true,
+        load_shift_frame: Some(200),
+        load_shift_mult: LOAD_DROP_MULT,
+        ..Default::default()
+    };
+    cfg.scheduler.fairness_floor = 20;
+    if epoch_granular {
+        cfg.scheduler.admission_epoch = true;
+        cfg.scheduler.starvation_bound = 3;
+    } else {
+        cfg.scheduler.admission = true;
+    }
+    cfg
+}
+
+fn whole_run_report() -> &'static FleetReport {
+    static R: OnceLock<FleetReport> = OnceLock::new();
+    R.get_or_init(|| run_fleet(&load_drop_cfg(false)))
+}
+
+fn epoch_report() -> &'static FleetReport {
+    static R: OnceLock<FleetReport> = OnceLock::new();
+    R.get_or_init(|| run_fleet(&load_drop_cfg(true)))
+}
+
+#[test]
+fn epoch_admission_readmits_and_beats_whole_run_parking() {
+    let whole = whole_run_report();
+    let epoch = epoch_report();
+
+    // apples-to-apples: identical tenants and identical even-share
+    // yardsticks for every tenant both flavors actually ran
+    for (w, e) in whole.apps.iter().zip(&epoch.apps) {
+        assert_eq!(w.name, e.name);
+        assert_eq!(w.bound_ms, e.bound_ms, "{}", w.name);
+        if w.admitted_frames > 0 {
+            assert_eq!(w.oracle_fidelity, e.oracle_fidelity, "{}", w.name);
+        }
+    }
+
+    // the v1 baseline parks two tenants for the whole run
+    assert_eq!(whole.parked_apps, 2);
+    assert_eq!(whole.park_transitions, 0);
+    assert!(whole.all_apps_meet_slo(), "baseline must be healthy");
+
+    // epoch-granular admission: nobody is parked whole-run — every tenant
+    // runs (and is scored), because parked tenants are re-admitted
+    assert_eq!(epoch.parked_apps, 0, "a tenant stayed parked all run");
+    assert_eq!(epoch.scored_apps, 8);
+    assert!(
+        epoch.apps.iter().all(|a| a.admitted_frames > 0),
+        "every tenant must run some frames"
+    );
+    // ... with at least one literal re-admission (parked at epoch e,
+    // admitted at e+1) visible in the allocation record
+    let readmissions: usize = epoch
+        .allocations
+        .windows(2)
+        .map(|w| {
+            w[0].parked
+                .iter()
+                .zip(&w[1].parked)
+                .filter(|(&was, &now)| was && !now)
+                .count()
+        })
+        .sum();
+    assert!(readmissions >= 1, "no parked tenant was ever re-admitted");
+    assert!(epoch.park_transitions > 0);
+    assert!(epoch.parked_app_epochs > 0, "admission never parked anyone");
+
+    // headline: higher aggregate fidelity-vs-oracle at equal SLO health
+    assert!(
+        epoch.avg_fidelity_vs_oracle > whole.avg_fidelity_vs_oracle,
+        "epoch-granular {:.4} must beat whole-run parking {:.4}",
+        epoch.avg_fidelity_vs_oracle,
+        whole.avg_fidelity_vs_oracle
+    );
+    assert!(
+        epoch.all_apps_meet_slo(),
+        "every scored tenant must clear the {FLEET_SLO_FRAC} SLO: min bound-met {:.3}",
+        epoch.min_bound_met_frac
+    );
+    assert!(epoch.apps_meeting_slo >= whole.apps_meeting_slo);
+
+    // equal priorities: rotation keeps every tenant's consecutive parked
+    // epochs within the configured starvation bound
+    let mut streak = vec![0usize; 8];
+    for alloc in &epoch.allocations {
+        assert!(alloc.total_cores() <= epoch.total_cores, "epoch {}", alloc.epoch);
+        for i in 0..8 {
+            if alloc.parked[i] {
+                streak[i] += 1;
+                assert!(
+                    streak[i] <= 3,
+                    "app {i} parked {} consecutive epochs (> bound 3)",
+                    streak[i]
+                );
+            } else {
+                streak[i] = 0;
+            }
+        }
+    }
+
+    // per-epoch accounting adds up: dropped frames are parked epochs'
+    // frames, and admitted + dropped covers the whole run
+    for a in &epoch.apps {
+        assert_eq!(a.admitted_frames + a.dropped_frames, 600, "app {}", a.index);
+        assert_eq!(a.dropped_frames, a.parked_epochs * 50, "app {}", a.index);
+    }
+}
+
+#[test]
+fn epoch_admission_reports_identical_across_thread_counts() {
+    // rotation + re-admission is scheduler state, not worker state: the
+    // report must stay a pure function of (seed, apps, frames)
+    let mut one = load_drop_cfg(true);
+    one.frames = 200;
+    one.configs_per_app = 6;
+    one.threads = 1;
+    let mut four = one.clone();
+    four.threads = 4;
+    let a = run_fleet(&one);
+    let b = run_fleet(&four);
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "epoch-granular admission must be thread-count independent"
+    );
+}
+
+#[test]
+fn tier_shift_preempts_a_seat_at_the_shift_epoch() {
+    // 4 tenants x 4-core floor on 10 cores (capacity 2), equal priorities;
+    // at frame 60 app 2 is upgraded to a 6.0 tier. Before the shift it is
+    // parked; from the first epoch at/after the shift it holds a seat.
+    let mut cfg = FleetConfig {
+        apps: 4,
+        frames: 150,
+        seed: 42,
+        configs_per_app: 6,
+        threads: 2,
+        mode: FleetMode::Dynamic,
+        heterogeneous: true,
+        cluster: Cluster { servers: 1, cores_per_server: 10, comm_ms_per_frame: 0.0 },
+        ..Default::default()
+    };
+    cfg.scheduler.epoch_frames = 30;
+    cfg.scheduler.fairness_floor = 4;
+    cfg.scheduler.admission_epoch = true;
+    cfg.scheduler.starvation_bound = 8;
+    cfg.scheduler.tier_shift = Some((60, vec![1.0, 1.0, 6.0, 1.0]));
+    let report = run_fleet(&cfg);
+    assert_eq!(report.apps.len(), 4);
+    for alloc in &report.allocations {
+        assert!(alloc.total_cores() <= report.total_cores, "epoch {}", alloc.epoch);
+        if alloc.start_frame < 60 {
+            assert!(alloc.parked[2], "app 2 admitted before its upgrade: {alloc:?}");
+        } else {
+            assert!(!alloc.parked[2], "upgraded app 2 parked after the shift: {alloc:?}");
+        }
+    }
+    let app2 = &report.apps[2];
+    assert!(app2.admitted_frames > 0 && app2.parked_epochs > 0);
+    // the preemption is a real park/unpark transition on the cluster
+    assert!(report.park_transitions >= 2, "{}", report.park_transitions);
 }

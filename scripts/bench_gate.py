@@ -4,11 +4,14 @@
 Merges the per-target JSON files the benches emit (util/bench.rs
 `write_json_env`, driven by IPTUNE_BENCH_JSON_DIR) into one
 `BENCH_<sha>.json` trajectory artifact, then gates the scheduler
-epoch-cost benches against the checked-in baseline: the job FAILS when a
-gated bench's median exceeds 2x its baseline budget. Non-gated benches
-(tuner hot path, simulator frame cost) ride along in the artifact and
-print warnings only — they seed the trajectory without flaking the gate
-on noisy shared runners.
+epoch-cost and tuner hot-path benches against the checked-in baseline:
+the job FAILS when a gated bench's median exceeds 2x its baseline
+budget. Non-gated benches (simulator frame cost, trace generation) ride
+along in the artifact and print warnings only — they seed the trajectory
+without flaking the gate on noisy shared runners. Bench side-metrics
+(e.g. `ladder_trace/light_peak_bytes`, the ladder-trace peak memory) are
+lifted into the artifact's top-level "metrics" map so non-timing
+regressions stay visible across commits.
 
 Usage:
     bench_gate.py <json_dir> <baseline.json> <out.json> [--sha SHA]
@@ -42,9 +45,14 @@ def main(argv):
         return 1
 
     results = {}
+    metrics = {}
     for doc in targets.values():
         for r in doc["results"]:
             results[r["name"]] = r
+        for name, value in doc.get("metrics", {}).items():
+            metrics[name] = value
+    for name in sorted(metrics):
+        print(f"[metric]  {name:<44} {metrics[name]}")
 
     failures, warnings, missing = [], [], []
     for name, budget_ns in sorted(gated.items()):
@@ -73,6 +81,7 @@ def main(argv):
     out = {
         "sha": sha,
         "regression_factor": REGRESSION_FACTOR,
+        "metrics": metrics,
         "targets": targets,
         "gate": {
             "failures": [
