@@ -6,6 +6,7 @@
 //!
 //! Run: `cargo bench --bench scheduler`
 
+use iptune::learner::GroupMap;
 use iptune::runtime::native::NativeBackend;
 use iptune::scheduler::{allocate, allocate_v2, core_levels};
 use iptune::simulator::Cluster;
@@ -13,7 +14,7 @@ use iptune::trace::{LadderTraceSet, TraceSet};
 use iptune::tuner::{BudgetedController, EpsGreedyController, TunerConfig};
 use iptune::util::bench::{black_box, Bencher};
 use iptune::util::Rng;
-use iptune::workloads::{self, AppProfile, WorkloadConfig};
+use iptune::workloads::{self, AppProfile, DagConfig, WorkloadConfig};
 
 fn main() {
     let mut b = Bencher::from_env();
@@ -134,6 +135,30 @@ fn main() {
     let heavy_ladder = LadderTraceSet::generate_on(&app, &cluster, &levels, 8, 100, 5);
     b.metric("ladder_trace/heavy_peak_bytes", heavy_ladder.unique_trace_bytes() as f64);
     b.metric("ladder_trace/heavy_sharing_ratio", heavy_ladder.sharing_ratio());
+
+    // ---- PR 5: general-DAG generation + critical-path combine -----------
+    // full gen-dag construction (topology draw + knob assignment + drift
+    // walk tables + bound-calibration probes) — the per-tenant cost a DAG
+    // fleet pays at startup
+    let dag_cfg = WorkloadConfig {
+        dag: Some(DagConfig::default()),
+        drift: Some(0.15),
+        ..Default::default()
+    };
+    b.bench("workloads/gen_dag_drift", || {
+        black_box(workloads::generate_on(black_box(11), &dag_cfg, &cluster));
+    });
+
+    // the structured combine over the group DAG — called once per
+    // candidate per predict, i.e. the hottest new code on the tuner path
+    let dag_app = workloads::generate_on(11, &dag_cfg, &cluster);
+    let map = GroupMap::structured(&dag_app.spec);
+    assert!(map.group_graph.is_some());
+    let preds: Vec<f64> = (0..map.num_groups()).map(|g| 5.0 + g as f64).collect();
+    b.metric("workloads/gen_dag_groups", map.num_groups() as f64);
+    b.bench("learner/combine_dag", || {
+        black_box(map.combine(black_box(&preds), 2.5));
+    });
 
     println!("\n{} benchmarks complete", b.results.len());
     b.write_json_env("scheduler");

@@ -47,6 +47,17 @@ pub trait CostModel: Send + Sync {
         None
     }
 
+    /// Slow cost-coefficient drift multiplier for `stage` at `frame` —
+    /// the `--drift` scenario family (a bounded per-stage random walk in
+    /// generated workloads). The simulator and the streaming engine
+    /// multiply every stage latency by this; the default of exactly 1.0
+    /// leaves every historical model and trace byte-identical. Drift is
+    /// cost-only: fidelity never reads it (parallel to paper Sec. 2.2's
+    /// latency/fidelity separation).
+    fn cost_drift(&self, _stage: usize, _frame: usize) -> f64 {
+        1.0
+    }
+
     /// Noiseless fidelity r(x, k) ∈ [0, 1] (paper Eq. 10 / Eq. 11).
     fn fidelity(&self, ks: &[f64], content: &Content) -> f64;
 }

@@ -21,12 +21,30 @@ fn parse_generated(canonical: &str) -> Option<u64> {
     rest.parse::<u64>().ok()
 }
 
+/// Parse a general-DAG workload name: `gen-dag:SEED` (canonicalized to
+/// `gen_dag:SEED`; `gen_dag_SEED` also accepted).
+fn parse_generated_dag(canonical: &str) -> Option<u64> {
+    let rest = canonical
+        .strip_prefix("gen_dag:")
+        .or_else(|| canonical.strip_prefix("gen_dag_"))?;
+    rest.parse::<u64>().ok()
+}
+
 /// Construct an application by name, loading its spec from `spec_dir`:
 /// `pose` / `motion_sift` (hyphens are accepted for CLI friendliness), or
-/// `gen:SEED` for a procedurally generated pipeline (`workloads` module;
-/// no spec file involved — the spec is synthesized from the seed).
+/// `gen:SEED` / `gen-dag:SEED` for a procedurally generated pipeline
+/// (`workloads` module; no spec file involved — the spec is synthesized
+/// from the seed; the `-dag` family emits general DAGs with multi-level
+/// fan-out and skip connections).
 pub fn app_by_name(name: &str, spec_dir: impl AsRef<Path>) -> Result<App> {
     let canonical = name.replace('-', "_");
+    if let Some(seed) = parse_generated_dag(&canonical) {
+        let cfg = crate::workloads::WorkloadConfig {
+            dag: Some(crate::workloads::DagConfig::default()),
+            ..Default::default()
+        };
+        return Ok(crate::workloads::generate(seed, &cfg));
+    }
     if let Some(seed) = parse_generated(&canonical) {
         return Ok(crate::workloads::generate(
             seed,
@@ -92,6 +110,26 @@ mod tests {
         let b = app_by_name("gen:2", &dir).unwrap();
         assert_eq!(a.spec.name, "gen1");
         assert_eq!(b.spec.name, "gen2");
+    }
+
+    #[test]
+    fn generated_dag_names_resolve() {
+        let dir = find_spec_dir(None).unwrap();
+        for name in ["gen-dag:5", "gen_dag:5", "gen_dag_5"] {
+            let app = app_by_name(name, &dir).unwrap();
+            assert_eq!(app.spec.name, "gendag5");
+            assert_eq!(app.graph.len(), app.spec.stages.len());
+            assert!(
+                app.spec.groups.iter().all(|g| g.deps.is_some()),
+                "gen-dag specs must declare the group DAG"
+            );
+        }
+        // a distinct family from the series-parallel generator
+        let sp = app_by_name("gen:5", &dir).unwrap();
+        assert_eq!(sp.spec.name, "gen5");
+        assert!(sp.spec.groups.iter().all(|g| g.deps.is_none()));
+        // malformed seeds still fall through to the spec path and fail
+        assert!(app_by_name("gen-dag:abc", &dir).is_err());
     }
 
     #[test]

@@ -83,6 +83,14 @@ pub struct GroupSpec {
     /// `Some(b)` assigns the group to parallel branch `b` (branch sums
     /// are combined with `max` — paper Eq. 9).
     pub branch: Option<usize>,
+    /// Group-level topology for general-DAG specs: names of the upstream
+    /// groups whose outputs this group consumes. `None` (legacy specs and
+    /// the series-parallel generator) keeps the historical sum/max
+    /// combine rule; `Some` — on *every* group of the spec — switches the
+    /// structured predictor to a weighted critical path over the group
+    /// DAG (entry groups carry `Some(vec![])`). In the JSON schema this
+    /// is the optional `"deps"` array.
+    pub deps: Option<Vec<String>>,
 }
 
 /// A full application spec (the tuple (G, K, L) of paper Sec. 3).
@@ -161,11 +169,16 @@ impl AppSpec {
                     Json::Null => None,
                     b => Some(b.as_usize()?),
                 };
+                let deps = match g.get("deps") {
+                    None | Some(Json::Null) => None,
+                    Some(d) => Some(d.as_str_vec()?),
+                };
                 Ok(GroupSpec {
                     name: g.req("name")?.as_str()?.to_string(),
                     stages: g.req("stages")?.as_str_vec()?,
                     params: g.req("params")?.as_usize_vec()?,
                     branch,
+                    deps,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -279,6 +292,37 @@ impl AppSpec {
             for &pi in &g.params {
                 if pi >= self.params.len() {
                     bail!("spec {}: group {} param index {} out of range", self.name, g.name, pi);
+                }
+            }
+        }
+        // group-level DAG topology: all-or-nothing, deps resolve to groups
+        // declared earlier (topological order, so the graph is acyclic by
+        // construction — same rule as the stage table)
+        let dag_groups = self.groups.iter().filter(|g| g.deps.is_some()).count();
+        if dag_groups > 0 {
+            if dag_groups != self.groups.len() {
+                bail!(
+                    "spec {}: {} of {} groups declare DAG deps — the group \
+                     topology must be all-or-nothing",
+                    self.name,
+                    dag_groups,
+                    self.groups.len()
+                );
+            }
+            let mut seen_groups = std::collections::HashSet::new();
+            for g in &self.groups {
+                for d in g.deps.as_deref().unwrap_or(&[]) {
+                    if !seen_groups.contains(d.as_str()) {
+                        bail!(
+                            "spec {}: group {} dep {} not defined earlier",
+                            self.name,
+                            g.name,
+                            d
+                        );
+                    }
+                }
+                if !seen_groups.insert(g.name.as_str()) {
+                    bail!("spec {}: duplicate group {}", self.name, g.name);
                 }
             }
         }
@@ -420,6 +464,30 @@ mod tests {
         let mut s = AppSpec::load_named("pose", spec_dir()).unwrap();
         s.params[0].min = 100.0; // min > max
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn group_dag_deps_validated() {
+        let mut s = AppSpec::load_named("pose", spec_dir()).unwrap();
+        // JSON specs without "deps" stay legacy
+        assert!(s.groups.iter().all(|g| g.deps.is_none()));
+        // the group topology is all-or-nothing
+        s.groups[0].deps = Some(vec![]);
+        assert!(s.validate().is_err(), "mixed deps must be rejected");
+        for g in &mut s.groups {
+            g.deps = Some(vec![]);
+        }
+        s.validate().unwrap();
+        // a chain over the declared order is fine
+        for i in 1..s.groups.len() {
+            let prev = s.groups[i - 1].name.clone();
+            s.groups[i].deps = Some(vec![prev]);
+        }
+        s.validate().unwrap();
+        // forward references are rejected (topological order required)
+        let last = s.groups.last().unwrap().name.clone();
+        s.groups[0].deps = Some(vec![last]);
+        assert!(s.validate().is_err(), "forward dep must be rejected");
     }
 
     #[test]

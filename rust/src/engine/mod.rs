@@ -246,11 +246,14 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                     };
                     debug_assert_eq!(token.id, frame);
 
-                    // compute: modeled latency (+noise), optionally slept
+                    // compute: modeled latency (+drift +noise), optionally
+                    // slept — the same cost_drift charge the simulator
+                    // applies, so live streams see the drifting-cost
+                    // scenario families too
                     let content = app.model.content(frame);
                     let workers = app.model.requested_workers(stage, &token.knobs);
-                    let base =
-                        app.model.stage_latency(stage, &token.knobs, &content, workers);
+                    let base = app.model.stage_latency(stage, &token.knobs, &content, workers)
+                        * app.model.cost_drift(stage, frame);
                     let lat = noise.apply(base, &mut rng);
                     sleep_scaled(lat, cfg2.realtime_scale);
                     let _ = evt_tx.send(Evt::StageLat { frame, stage, lat });

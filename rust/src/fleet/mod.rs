@@ -67,7 +67,7 @@ use anyhow::{Context, Result};
 use crate::metrics::PolicyStats;
 use crate::runtime::native::NativeBackend;
 use crate::scheduler::{
-    self, admit, demand_cores, reserve_top_up, AllocationFrame, EpochAdmission,
+    self, admit, demand_cores_confident, reserve_top_up, AllocationFrame, EpochAdmission,
     SchedulerConfig,
 };
 use crate::simulator::{Cluster, SharedCluster};
@@ -427,6 +427,9 @@ struct EpochResult {
     app: usize,
     /// Utility curve over the rung ladder (empty in static mode).
     curve: Vec<f64>,
+    /// Per-rung observation counts (the demand-confidence evidence;
+    /// empty in static mode).
+    obs: Vec<u64>,
 }
 
 /// Run the whole fleet: N tuner threads against the shared scheduler.
@@ -634,11 +637,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                                     let s = ctl.step(f);
                                     steps[slot].push(s);
                                 }
-                                let curve = match cfg.mode {
-                                    FleetMode::Dynamic => ctl.utility_curve(),
-                                    FleetMode::Static => Vec::new(),
+                                let (curve, obs) = match cfg.mode {
+                                    FleetMode::Dynamic => {
+                                        (ctl.utility_curve(), ctl.rung_observations())
+                                    }
+                                    FleetMode::Static => (Vec::new(), Vec::new()),
                                 };
-                                if res_tx.send(EpochResult { app: i, curve }).is_err() {
+                                if res_tx.send(EpochResult { app: i, curve, obs }).is_err() {
                                     return;
                                 }
                             }
@@ -756,6 +761,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
 
         // ---- scheduler main loop ---------------------------------------
         let mut curves: Vec<Vec<f64>> = vec![Vec::new(); cfg.apps];
+        let mut rung_obs: Vec<Vec<u64>> = vec![Vec::new(); cfg.apps];
         // incumbent rungs for the hysteresis term (active apps only)
         let mut prev_rungs: Vec<usize> = vec![even_rung; cfg.apps];
         let mut admitted = admitted0.clone();
@@ -772,7 +778,19 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 (0..cfg.apps)
                     .map(|i| {
                         if curves[i].len() == levels.len() {
-                            demand_cores(&curves[i], &levels, even).clamp(1, even)
+                            // demand-confidence: rungs without >= N
+                            // observations cannot carry the demand, so an
+                            // immature model reserves honestly instead of
+                            // optimistically under-reserving (N = 0 is
+                            // the historical behavior, bit-for-bit)
+                            demand_cores_confident(
+                                &curves[i],
+                                &levels,
+                                even,
+                                &rung_obs[i],
+                                cfg.scheduler.demand_confidence,
+                            )
+                            .clamp(1, even)
                         } else {
                             floor_req.clamp(1, even)
                         }
@@ -915,6 +933,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                     .recv_timeout(std::time::Duration::from_secs(300))
                     .expect("a fleet worker died mid-epoch (see its panic above)");
                 curves[r.app] = r.curve;
+                rung_obs[r.app] = r.obs;
             }
         }
         for tx in &cmd_txs {

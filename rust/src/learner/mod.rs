@@ -6,8 +6,12 @@
 //!   the moving average used for non-critical stages.
 //! * [`GroupMap`] / [`StagePredictor`] — the structured and unstructured
 //!   end-to-end latency predictors of Sec. 2.3/3.3: per-group regressors
-//!   combined along the critical path (sum for sequential groups, max
-//!   over parallel branches, Eq. 9) plus a moving-average offset.
+//!   combined along the critical path (Eq. 9) plus a moving-average
+//!   offset. Series-parallel specs keep the paper's sum/max evaluation
+//!   bit-for-bit; specs that declare a group-level DAG
+//!   (`GroupSpec::deps` — the `gen-dag` workload family) combine via a
+//!   weighted critical path over the group graph, which reduces to a sum
+//!   on chains and a max on pure fan-out.
 //! * [`offline`] — batch-trained baselines (the dashed lines of Fig. 6).
 //! * [`deps`] — the correlation-based dependency analysis of Sec. 2.3.
 
@@ -20,6 +24,7 @@ pub use features::FeatureMap;
 pub use ogd::{MovingAverage, OgdRegressor};
 
 use crate::apps::spec::AppSpec;
+use crate::dataflow::{critical_path, Graph};
 
 /// Which predictor architecture (paper Fig. 7 compares the two).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,17 +58,41 @@ pub struct GroupMap {
     /// Stages outside all groups; their summed latency is tracked with a
     /// moving average (the offset term).
     pub offset_stages: Vec<usize>,
+    /// Group-level DAG for general-graph specs ([`GroupSpec::deps`]):
+    /// when present, [`combine`](Self::combine) runs a weighted critical
+    /// path over this graph (one vertex per group, weights = group
+    /// predictions) instead of the legacy series-parallel sum/max rule.
+    /// `None` keeps the historical arithmetic bit-for-bit — every
+    /// JSON-loaded spec and every `gen:SEED` pipeline takes that path.
+    ///
+    /// [`GroupSpec::deps`]: crate::apps::spec::GroupSpec::deps
+    pub group_graph: Option<Graph>,
 }
 
 impl GroupMap {
     /// The structured decomposition declared in the spec (Sec. 2.3 —
-    /// recovered online by [`deps::analyze`], validated in tests).
+    /// recovered online by [`deps::analyze`], validated in tests). Specs
+    /// that declare a group-level DAG ([`GroupSpec::deps`]) get a
+    /// critical-path combine over that graph; everything else keeps the
+    /// legacy series-parallel rule.
+    ///
+    /// [`GroupSpec::deps`]: crate::apps::spec::GroupSpec::deps
     pub fn structured(spec: &AppSpec) -> Self {
         let in_group: std::collections::HashSet<usize> = spec
             .groups
             .iter()
             .flat_map(|g| g.stages.iter().map(|s| spec.stage_index(s).unwrap()))
             .collect();
+        let group_graph = if spec.groups.iter().any(|g| g.deps.is_some()) {
+            let nodes: Vec<(String, Vec<String>)> = spec
+                .groups
+                .iter()
+                .map(|g| (g.name.clone(), g.deps.clone().unwrap_or_default()))
+                .collect();
+            Some(Graph::new(&nodes).expect("group deps are validated at load"))
+        } else {
+            None
+        };
         GroupMap {
             group_stages: spec
                 .groups
@@ -73,6 +102,7 @@ impl GroupMap {
             group_vars: spec.groups.iter().map(|g| g.params.clone()).collect(),
             branch: spec.groups.iter().map(|g| g.branch).collect(),
             offset_stages: (0..spec.stages.len()).filter(|i| !in_group.contains(i)).collect(),
+            group_graph,
         }
     }
 
@@ -84,6 +114,7 @@ impl GroupMap {
             group_vars: vec![(0..spec.num_vars()).collect()],
             branch: vec![None],
             offset_stages: vec![],
+            group_graph: None,
         }
     }
 
@@ -123,10 +154,26 @@ impl GroupMap {
         (y, offset)
     }
 
-    /// Combine per-group predictions + offset into an end-to-end estimate
-    /// (paper Eq. 9 generalized: Σ sequential + max over branch sums).
+    /// Combine per-group predictions + offset into an end-to-end estimate:
+    /// a weighted critical path over the group-level graph (paper Eq. 9
+    /// generalized to arbitrary DAGs).
+    ///
+    /// Specs that declare a group DAG ([`group_graph`]) take the general
+    /// rule — the longest weighted group-path, reusing
+    /// [`critical_path`](crate::dataflow::critical_path) — which reduces
+    /// to a sum on chain graphs and a max on pure fan-out. Legacy
+    /// series-parallel specs keep the historical arithmetic (Σ sequential
+    /// groups + max over branch sums) *bit-for-bit*: the old rule is the
+    /// critical path of the pre → branches → post shape, evaluated in the
+    /// exact floating-point order every recorded trace and mirror
+    /// threshold depends on.
+    ///
+    /// [`group_graph`]: Self::group_graph
     pub fn combine(&self, group_pred: &[f64], offset: f64) -> f64 {
         debug_assert_eq!(group_pred.len(), self.num_groups());
+        if let Some(g) = &self.group_graph {
+            return offset + critical_path(g, group_pred);
+        }
         let mut total = offset;
         let mut branch_sums: std::collections::BTreeMap<usize, f64> =
             std::collections::BTreeMap::new();
@@ -309,6 +356,77 @@ mod tests {
         assert!((total - 90.0).abs() < 1e-12);
         let total2 = m.combine(&[90.0, 80.0], 10.0);
         assert!((total2 - 100.0).abs() < 1e-12);
+    }
+
+    /// A hand-built DAG-mode map over `n` groups with the given edges.
+    fn dag_map(n: usize, edges: &[(usize, usize)]) -> GroupMap {
+        let nodes: Vec<(String, Vec<String>)> = (0..n)
+            .map(|i| {
+                let deps = edges
+                    .iter()
+                    .filter(|&&(_, dst)| dst == i)
+                    .map(|&(src, _)| format!("g{src}"))
+                    .collect();
+                (format!("g{i}"), deps)
+            })
+            .collect();
+        GroupMap {
+            group_stages: (0..n).map(|i| vec![i]).collect(),
+            group_vars: (0..n).map(|i| vec![i]).collect(),
+            branch: vec![None; n],
+            offset_stages: vec![],
+            group_graph: Some(Graph::new(&nodes).unwrap()),
+        }
+    }
+
+    #[test]
+    fn dag_combine_chain_reduces_to_sum_bitwise() {
+        // a 4-group chain must reproduce the legacy sequential sum exactly
+        let dag = dag_map(4, &[(0, 1), (1, 2), (2, 3)]);
+        let legacy = GroupMap {
+            group_stages: (0..4).map(|i| vec![i]).collect(),
+            group_vars: (0..4).map(|i| vec![i]).collect(),
+            branch: vec![None; 4],
+            offset_stages: vec![],
+            group_graph: None,
+        };
+        let preds = [10.3, 20.7, 5.1, 2.9];
+        // bit-identical at zero offset: 0.0 + x is exact and both paths
+        // accumulate the same left-to-right sum
+        assert_eq!(dag.combine(&preds, 0.0), legacy.combine(&preds, 0.0));
+        // a nonzero offset associates differently (offset-first vs
+        // offset-last) — equal to rounding, not bitwise
+        let (d, l) = (dag.combine(&preds, 3.25), legacy.combine(&preds, 3.25));
+        assert!((d - l).abs() < 1e-9, "{d} vs {l}");
+    }
+
+    #[test]
+    fn dag_combine_fanout_reduces_to_max_bitwise() {
+        // two independent single-group branches: legacy takes the branch
+        // max, the DAG rule takes the longest (single-vertex) path
+        let dag = dag_map(2, &[]);
+        let legacy = GroupMap {
+            group_stages: vec![vec![0], vec![1]],
+            group_vars: vec![vec![0], vec![1]],
+            branch: vec![Some(0), Some(1)],
+            offset_stages: vec![],
+            group_graph: None,
+        };
+        for preds in [[50.0, 80.0], [90.0, 80.0], [7.5, 7.5]] {
+            assert_eq!(dag.combine(&preds, 10.0), legacy.combine(&preds, 10.0));
+        }
+    }
+
+    #[test]
+    fn dag_combine_takes_longest_group_path() {
+        // diamond with a skip edge: g0 -> {g1, g2} -> g3, plus g0 -> g3
+        let dag = dag_map(4, &[(0, 1), (0, 2), (1, 3), (2, 3), (0, 3)]);
+        let total = dag.combine(&[1.0, 5.0, 2.0, 1.0], 0.5);
+        assert!((total - 7.5).abs() < 1e-12, "{total}");
+        // with non-negative weights a through-path dominates the skip
+        // edge; the skip matters for connectivity, not for the max
+        let skip = dag.combine(&[10.0, 0.1, 0.2, 1.0], 0.0);
+        assert!((skip - 11.2).abs() < 1e-12, "{skip}");
     }
 
     #[test]

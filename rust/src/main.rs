@@ -103,31 +103,42 @@ commands:
         [--mode static|dynamic] [--hetero] [--shift FRAME] [--shift-mult M]
         [--epoch N] [--floor CORES] [--priority W1,W2,..] [--hysteresis H]
         [--admission] [--admission-epoch] [--starvation-bound K]
-        [--tier-shift FRAME:W1,W2,..|FRAME:auto] [--thrash MULT]
+        [--demand-confidence N] [--tier-shift FRAME:W1,W2,..|FRAME:auto]
+        [--thrash MULT] [--dag] [--drift B]
   schedule [--apps N] [--frames N] [--seed N] [--epoch N] [--floor CORES]
         [--candidates N] [--realtime SCALE] [--uniform]
         [--priority W1,W2,..] [--hysteresis H] [--admission-epoch]
-        [--starvation-bound K] [--tier-shift FRAME:W1,W2,..|FRAME:auto]
+        [--starvation-bound K] [--demand-confidence N]
+        [--tier-shift FRAME:W1,W2,..|FRAME:auto] [--dag] [--drift B]
 
-APP is pose, motion-sift, or gen:SEED (a procedurally generated
-pipeline; see the workloads module). `fleet` tunes N generated apps on
-ONE shared cluster (static even shares, or --mode dynamic for
-marginal-utility core reallocation every --epoch frames); `schedule`
-streams N generated apps live through the threaded engine under the
-same scheduler. Scheduler v2 knobs: --priority weights tenant tiers
-(missing entries default to 1), --hysteresis sets the migration penalty
-a reallocation must out-earn, --admission parks the lowest-priority
-apps when --floor x apps exceeds the pool (instead of over-granting)
-and switches to exact fairness-floor accounting, --thrash MULT cranks
-the generated scenarios' content wobble to stress allocation churn.
-Scheduler v3 makes admission epoch-granular: --admission-epoch re-decides
-parking every epoch from the tenants' learned core demands (re-admitting
-parked tenants when the pool frees up, e.g. after --shift-mult 0.55 load
-drops), rotating parking among equal-priority tenants so nobody waits
-more than --starvation-bound K consecutive epochs; --tier-shift scripts a
-mid-run priority change (FRAME:auto draws the generated upgrade/downgrade
-scenario). On `schedule`, --admission-epoch parks live tenants by pausing
-their sources (frames are deferred, never dropped).";
+APP is pose, motion-sift, gen:SEED, or gen-dag:SEED (procedurally
+generated pipelines; see the workloads module — gen-dag emits general
+DAGs with multi-level fan-out, diamond joins and skip connections, whose
+specs declare the group-level graph the structured critical-path combine
+consumes). `fleet` tunes N generated apps on ONE shared cluster (static
+even shares, or --mode dynamic for marginal-utility core reallocation
+every --epoch frames); `schedule` streams N generated apps live through
+the threaded engine under the same scheduler. --dag switches both to the
+gen-dag family; --drift B layers slow per-stage cost-coefficient drift (a
+bounded random walk within [1-B, 1+B]) on any generated workload,
+composable with --shift/--thrash. Scheduler v2 knobs: --priority weights
+tenant tiers (missing entries default to 1), --hysteresis sets the
+migration penalty a reallocation must out-earn, --admission parks the
+lowest-priority apps when --floor x apps exceeds the pool (instead of
+over-granting) and switches to exact fairness-floor accounting, --thrash
+MULT cranks the generated scenarios' content wobble to stress allocation
+churn. Scheduler v3 makes admission epoch-granular: --admission-epoch
+re-decides parking every epoch from the tenants' learned core demands
+(re-admitting parked tenants when the pool frees up, e.g. after
+--shift-mult 0.55 load drops), rotating parking among equal-priority
+tenants so nobody waits more than --starvation-bound K consecutive
+epochs; --demand-confidence N only lets a ladder rung carry a tenant's
+demand once it holds >= N observations (immature models reserve the
+calibration share instead of optimistically under-reserving);
+--tier-shift scripts a mid-run priority change (FRAME:auto draws the
+generated upgrade/downgrade scenario). On `schedule`, --admission-epoch
+parks live tenants by pausing their sources (frames are deferred, never
+dropped).";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -138,7 +149,16 @@ fn main() -> Result<()> {
     let cmd = argv[0].clone();
     let args = Args::parse(
         &argv[1..],
-        &["graph", "all", "claims", "hetero", "uniform", "admission", "admission-epoch"],
+        &[
+            "graph",
+            "all",
+            "claims",
+            "hetero",
+            "uniform",
+            "admission",
+            "admission-epoch",
+            "dag",
+        ],
     )?;
 
     let run_cfg = RunConfig::load_or_default(args.get("config").map(std::path::Path::new))?;
@@ -279,6 +299,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         anyhow::ensure!(t >= 1.0, "--thrash must be >= 1");
         cfg.workload.thrash = Some(t);
     }
+    if args.has("dag") {
+        cfg.workload.dag = Some(iptune::workloads::DagConfig::default());
+    }
+    if let Some(b) = args.get_parse::<f64>("drift")? {
+        anyhow::ensure!(b > 0.0 && b < 1.0, "--drift bound must be in (0, 1)");
+        cfg.workload.drift = Some(b);
+    }
+    if let Some(n) = args.get_parse::<usize>("demand-confidence")? {
+        cfg.scheduler.demand_confidence = n;
+    }
     if cfg.apps == 0
         || (!cfg.scheduler.admission_any() && cfg.apps > cfg.cluster.total_cores())
     {
@@ -414,6 +444,16 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     }
     if let Some(ts) = args.get("tier-shift") {
         cfg.scheduler.tier_shift = Some(parse_tier_shift(ts, cfg.seed, cfg.apps)?);
+    }
+    if args.has("dag") {
+        cfg.workload.dag = Some(iptune::workloads::DagConfig::default());
+    }
+    if let Some(b) = args.get_parse::<f64>("drift")? {
+        anyhow::ensure!(b > 0.0 && b < 1.0, "--drift bound must be in (0, 1)");
+        cfg.workload.drift = Some(b);
+    }
+    if let Some(n) = args.get_parse::<usize>("demand-confidence")? {
+        cfg.scheduler.demand_confidence = n;
     }
     eprintln!(
         "schedule: streaming {} generated apps x {} frames live (seed {}, epoch {} frames, {} shared cores) ...",

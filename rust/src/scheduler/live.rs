@@ -56,7 +56,8 @@ use crate::engine::{spawn_stream, EngineConfig, FrameRecord, KnobHandle, PauseHa
 use crate::runtime::native::NativeBackend;
 use crate::runtime::Backend;
 use crate::scheduler::{
-    self, demand_cores, reserve_top_up, AllocationFrame, EpochAdmission, SchedulerConfig,
+    self, demand_cores_confident, reserve_top_up, AllocationFrame, EpochAdmission,
+    SchedulerConfig,
 };
 use crate::simulator::{Cluster, SharedCluster};
 use crate::tuner::budgeted::effective_candidates;
@@ -274,6 +275,11 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     let mut lat_sum = vec![0.0f64; cfg.apps];
     let mut fid_sum = vec![0.0f64; cfg.apps];
     let mut met = vec![0usize; cfg.apps];
+    // rung-residency frame counts: the live path's demand-confidence
+    // evidence (the model is learned from live records, so "observations
+    // at a rung" = frames streamed while holding that rung)
+    let mut rung_frames: Vec<Vec<u64>> = vec![vec![0; levels.len()]; cfg.apps];
+    let mut last_seen = vec![0usize; cfg.apps];
     let mut boundary = epoch_frames;
     let mut draining = false;
     while let Ok((i, rec)) = rec_rx.recv() {
@@ -315,10 +321,23 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
             }
             let epoch_idx = allocations.len();
             let w = cfg.scheduler.weights_at(cfg.apps, boundary);
+            // charge the closing epoch's frames to the rung each stream
+            // held (rungs[] is still the closing epoch's assignment here)
+            for a in 0..cfg.apps {
+                rung_frames[a][rungs[a]] += (frames_seen[a] - last_seen[a]) as u64;
+                last_seen[a] = frames_seen[a];
+            }
             let reservations: Vec<usize> = (0..cfg.apps)
                 .map(|a| {
                     if frames_seen[a] > 0 {
-                        demand_cores(&curves[a], &levels, even).clamp(1, even)
+                        demand_cores_confident(
+                            &curves[a],
+                            &levels,
+                            even,
+                            &rung_frames[a],
+                            cfg.scheduler.demand_confidence,
+                        )
+                        .clamp(1, even)
                     } else {
                         floor_req.clamp(1, even)
                     }

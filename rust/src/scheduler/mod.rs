@@ -112,6 +112,16 @@ pub struct SchedulerConfig {
     /// upgrades/downgrades land at the next epoch boundary, flowing into
     /// both the water-filling pass and the admission decision).
     pub tier_shift: Option<(usize, Vec<f64>)>,
+    /// Demand-confidence term for epoch-granular admission: a ladder
+    /// rung's utility only counts toward a tenant's demand
+    /// ([`demand_cores_confident`]) once the tenant has at least this
+    /// many observations at that rung. An immature model whose curve
+    /// optimistically tops out at a tiny untried rung then reserves the
+    /// calibration share instead of under-reserving — the post-warmup
+    /// over-admission that squeezed heavies below SLO on some seeds
+    /// (PR 4 ROADMAP note). 0 (the default) reproduces the historical
+    /// optimistic demand bit-for-bit.
+    pub demand_confidence: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -128,6 +138,7 @@ impl Default for SchedulerConfig {
             admission_epoch: false,
             starvation_bound: 0,
             tier_shift: None,
+            demand_confidence: 0,
         }
     }
 }
@@ -254,6 +265,42 @@ pub fn demand_cores(curve: &[f64], levels: &[usize], fallback: usize) -> usize {
         }
     }
     levels[levels.len() - 1]
+}
+
+/// [`demand_cores`] with a *demand-confidence* term: a rung's utility
+/// only counts toward the demand once the tenant holds at least
+/// `min_obs` observations at that rung (`obs[l]`, from
+/// [`BudgetedController::rung_observations`] in the trace-replaying fleet
+/// or rung-residency frame counts on the live path). Unconfident rungs
+/// are masked to zero, so
+///
+/// * an immature model whose curve optimistically tops out at a tiny
+///   *untried* rung reserves a confident rung (or, with no confident
+///   rung at all, the `fallback` calibration share) instead of
+///   under-reserving — the over-admission fix of the PR 4 ROADMAP note;
+/// * `min_obs == 0` masks nothing and reproduces [`demand_cores`]
+///   bit-for-bit (the historical optimistic behavior every recorded
+///   threshold depends on).
+///
+/// [`BudgetedController::rung_observations`]:
+///     crate::tuner::BudgetedController::rung_observations
+pub fn demand_cores_confident(
+    curve: &[f64],
+    levels: &[usize],
+    fallback: usize,
+    obs: &[u64],
+    min_obs: usize,
+) -> usize {
+    if min_obs == 0 {
+        return demand_cores(curve, levels, fallback);
+    }
+    assert_eq!(curve.len(), obs.len(), "curve/observation shape");
+    let masked: Vec<f64> = curve
+        .iter()
+        .zip(obs)
+        .map(|(&u, &c)| if c >= min_obs as u64 { u } else { 0.0 })
+        .collect();
+    demand_cores(&masked, levels, fallback)
 }
 
 /// Epoch-granular admission state: who ran last epoch, how long each parked
@@ -910,6 +957,34 @@ mod tests {
         assert_eq!(demand_cores(&[0.0, 0.0, 0.0, 0.0, 0.9], &levels, 20), 60);
         // flat-zero curve: the starved-model fallback, not the floor rung
         assert_eq!(demand_cores(&[0.0; 5], &levels, 20), 20);
+    }
+
+    #[test]
+    fn demand_confidence_masks_unobserved_rungs() {
+        let levels = vec![1, 5, 12, 20, 60];
+        let curve = vec![0.9, 0.9, 0.9, 0.9, 0.9];
+        // optimistic: a flat curve demands the smallest rung ...
+        assert_eq!(demand_cores_confident(&curve, &levels, 20, &[0; 5], 0), 1);
+        // ... but with confidence required, an untried tiny rung cannot
+        // carry the demand: the smallest *confident* max rung wins
+        assert_eq!(
+            demand_cores_confident(&curve, &levels, 20, &[0, 0, 3, 9, 0], 3),
+            12
+        );
+        // no confident rung at all -> the calibration-share fallback
+        assert_eq!(demand_cores_confident(&curve, &levels, 20, &[1; 5], 3), 20);
+        // min_obs == 0 is bit-for-bit the legacy optimistic demand
+        let noisy = vec![0.0, 0.2, 0.8, 0.8, 0.8];
+        assert_eq!(
+            demand_cores_confident(&noisy, &levels, 20, &[0; 5], 0),
+            demand_cores(&noisy, &levels, 20)
+        );
+        // confident rungs below the masked max still lose to it
+        assert_eq!(
+            demand_cores_confident(&noisy, &levels, 20, &[9, 9, 0, 9, 9], 3),
+            20,
+            "the 0.8 max must come from a confident rung"
+        );
     }
 
     #[test]

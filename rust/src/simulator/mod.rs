@@ -307,7 +307,12 @@ impl ClusterSim {
         };
         let stage_ms: Vec<f64> = (0..app.graph.len())
             .map(|s| {
-                let base = app.model.stage_latency(s, ks, &content, granted[s]) * tm;
+                // drift is the model's slow per-stage cost walk (1.0 for
+                // every drift-free model — exact in IEEE 754, so
+                // historical traces stay byte-identical)
+                let base = app.model.stage_latency(s, ks, &content, granted[s])
+                    * app.model.cost_drift(s, frame)
+                    * tm;
                 self.noise.apply(base, &mut self.rng)
             })
             .collect();

@@ -309,7 +309,10 @@ impl LadderTraceSet {
     /// charge; the per-config noise stream is seeded identically at every
     /// rung. So two rungs whose `(granted workers, tm factor)` signature
     /// matches produce byte-identical frames, and this generator stores
-    /// one shared buffer instead of `levels × frames` copies. For a
+    /// one shared buffer instead of `levels × frames` copies. Per-stage
+    /// cost *drift* (`CostModel::cost_drift`, the `--drift` family) is a
+    /// pure function of the frame index — rung-invariant — so drifting
+    /// apps share exactly as much as their drift-free twins. For a
     /// core-insensitive (light-profile) app every rung shares one buffer —
     /// the dynamic fleet used to replicate those frames `levels`-fold
     /// (~6x wasted peak memory; see [`unique_trace_bytes`] vs
@@ -729,6 +732,48 @@ mod tests {
             );
         }
         assert!(exact.sharing_ratio() > 1.0);
+    }
+
+    #[test]
+    fn drifting_ladder_shares_frames_like_its_driftfree_twin() {
+        // drift multiplies stage costs as a pure function of the frame
+        // index — identical at every rung — so the rung-sharing memory
+        // win survives, while the frames themselves move with the walk
+        let plain_cfg = crate::workloads::WorkloadConfig {
+            profile: crate::workloads::AppProfile::Light,
+            ..Default::default()
+        };
+        let drift_cfg = crate::workloads::WorkloadConfig {
+            drift: Some(0.25),
+            ..plain_cfg.clone()
+        };
+        let plain = crate::workloads::generate(42, &plain_cfg);
+        let drifting = crate::workloads::generate(42, &drift_cfg);
+        let levels = vec![7, 15, 45];
+        let lp = LadderTraceSet::generate_on(&plain, &Cluster::default(), &levels, 4, 30, 9);
+        let ld =
+            LadderTraceSet::generate_on(&drifting, &Cluster::default(), &levels, 4, 30, 9);
+        assert_eq!(
+            ld.sharing_ratio(),
+            lp.sharing_ratio(),
+            "drift must not break rung sharing"
+        );
+        // same action set (drift is rng-neutral), different frame costs
+        for c in 0..4 {
+            assert_eq!(ld.set(0).traces[c].config, lp.set(0).traces[c].config);
+        }
+        let moved = (0..4).any(|c| {
+            (0..30).any(|f| {
+                ld.set(0).frame(c, f).end_to_end_ms != lp.set(0).frame(c, f).end_to_end_ms
+            })
+        });
+        assert!(moved, "drift never changed a single frame cost");
+        // and fidelity is untouched (drift is cost-only)
+        for c in 0..4 {
+            for f in 0..30 {
+                assert_eq!(ld.set(0).frame(c, f).fidelity, lp.set(0).frame(c, f).fidelity);
+            }
+        }
     }
 
     #[test]

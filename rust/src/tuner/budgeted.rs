@@ -191,6 +191,17 @@ impl<'a> BudgetedController<'a> {
         &self.rewards
     }
 
+    /// Observations this controller holds per ladder rung (summed over
+    /// actions) — the evidence counts behind the scheduler's
+    /// demand-confidence term
+    /// ([`demand_cores_confident`](crate::scheduler::demand_cores_confident)).
+    pub fn rung_observations(&self) -> Vec<u64> {
+        let n = self.ladder.num_configs();
+        (0..self.ladder.num_levels())
+            .map(|l| self.obs_count[l * n..(l + 1) * n].iter().sum())
+            .collect()
+    }
+
     /// Blended cost estimates for every candidate at ladder rung `level`
     /// (no cross-rung transfer; see [`estimates_at`](Self::estimates_at)).
     fn blended_costs_at(&mut self, level: usize) -> Vec<f64> {
@@ -443,6 +454,26 @@ mod tests {
         }
         assert_eq!(ctl.level(), 1);
         assert_eq!(ctl.cores(), 15);
+    }
+
+    #[test]
+    fn rung_observations_count_steps_per_level() {
+        let (app, ladder) = setup(3);
+        let bound = app.spec.latency_bounds_ms[0];
+        let cfg = TunerConfig { epsilon: 0.3, bound_ms: bound, warmup_frames: 4 };
+        let backend = NativeBackend::structured(&app.spec);
+        let mut ctl = BudgetedController::new(&app, &ladder, Box::new(backend), cfg, 5)
+            .with_empirical_blend(8.0);
+        assert_eq!(ctl.rung_observations(), vec![0, 0, 0]);
+        ctl.set_level(1);
+        for f in 0..10 {
+            ctl.step(f);
+        }
+        ctl.set_level(0);
+        for f in 10..15 {
+            ctl.step(f);
+        }
+        assert_eq!(ctl.rung_observations(), vec![5, 10, 0]);
     }
 
     #[test]

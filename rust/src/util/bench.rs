@@ -206,6 +206,7 @@ mod tests {
             budget: Duration::from_millis(30),
             warmup: Duration::from_millis(5),
             results: Vec::new(),
+            metrics: Vec::new(),
         };
         let mut acc = 0u64;
         b.bench("noop-ish", || {
@@ -222,6 +223,7 @@ mod tests {
             budget: Duration::from_millis(20),
             warmup: Duration::from_millis(2),
             results: Vec::new(),
+            metrics: Vec::new(),
         };
         let mut acc = 0u64;
         b.bench("x/one", || {

@@ -15,11 +15,20 @@
 //! generated apps unmodified; the registry resolves `gen:SEED` names to
 //! this generator.
 //!
-//! The series-parallel shape is deliberate: it is the largest graph
-//! family for which the structured predictor's combination rule (sum of
-//! sequential groups + max over branch sums, paper Eq. 9) reproduces the
-//! weighted critical path *exactly*, so generated apps stress the learner
-//! without breaking the decomposition the paper's Sec. 2.3 relies on.
+//! The series-parallel shape was the historical ceiling: it is the
+//! largest graph family for which the *legacy* sum/max combination rule
+//! (paper Eq. 9) reproduces the weighted critical path exactly. Since the
+//! structured predictor learned to combine along an arbitrary group-level
+//! DAG (`GroupSpec::deps` + `GroupMap::group_graph`), the generator also
+//! emits **general DAGs** — `gen-dag:SEED` names and
+//! [`WorkloadConfig::dag`]: layered segment graphs with multi-level
+//! fan-out, diamond joins and skip connections (the 3D-vision pipeline
+//! shapes of HyperMapper, PAPERS.md) — whose segment decomposition is
+//! still exact under the critical-path combine. A second new scenario
+//! axis, [`WorkloadConfig::drift`], layers slow per-stage
+//! cost-coefficient drift (a bounded random walk, [`DriftWalk`]) on any
+//! generated app, composable with the scripted scene-change / thrash /
+//! load-drop families.
 //!
 //! Latency bounds are calibrated per app: a deterministic probe of random
 //! configurations on the target cluster picks the bound so that roughly a
@@ -29,7 +38,9 @@
 
 pub mod model;
 
-pub use model::{ContentScript, GeneratedModel, KnobKind, KnobRole, SegmentKnobs, StageCost};
+pub use model::{
+    ContentScript, DriftWalk, GeneratedModel, KnobKind, KnobRole, SegmentKnobs, StageCost,
+};
 
 use crate::apps::spec::{AppSpec, GroupSpec, ParamSpec, StageSpec};
 use crate::apps::App;
@@ -169,6 +180,73 @@ pub struct WorkloadConfig {
     /// ([`crate::simulator::time_multiplex_factor`]), matching what an
     /// admission-controlled fleet replays. Rng-neutral.
     pub exact_accounting: bool,
+    /// General-DAG topology (the `gen-dag:SEED` scenario family): `Some`
+    /// switches generation from the series-parallel shape to a layered
+    /// DAG of stage segments with multi-level fan-out, skip connections
+    /// and diamond joins, whose spec declares the group-level graph
+    /// (`GroupSpec::deps`) the structured critical-path combine consumes.
+    /// `None` (the default) is the historical generator, byte-identical.
+    pub dag: Option<DagConfig>,
+    /// Slow per-stage cost-coefficient drift (the `--drift` scenario
+    /// family): the walk amplitude B — every stage's cost is multiplied
+    /// by a per-stage bounded random walk confined to `[1 − B, 1 + B]`
+    /// ([`DriftWalk`]; step `B ×` [`DRIFT_STEP_FRAC`] per frame). Drawn
+    /// on an rng stream independent of app generation, so enabling drift
+    /// never disturbs the topology/knob/script draws (rng-neutral), and
+    /// composable with the scripted scene change, thrash and load-drop
+    /// families. Bound calibration probes run *with* drift, so bounds
+    /// stay honest under it.
+    pub drift: Option<f64>,
+}
+
+/// Topology envelope of the `gen-dag` family: a layered DAG of stage
+/// segments. Each level holds 1..=`max_width` segments of
+/// 1..=`max_seg_len` chained stages; every segment past level 0 draws
+/// 1–2 parents from the previous level (diamond joins), and with
+/// probability `skip_prob` one extra parent from a level at least two
+/// below (skip connections). A global source stage feeds level 0 and a
+/// global sink joins every childless tail, so the graph keeps one source
+/// and one sink like every other app.
+#[derive(Debug, Clone)]
+pub struct DagConfig {
+    /// Max segment levels (min 2, so fan-out always exists).
+    pub max_depth: usize,
+    /// Max segments per level (min 1).
+    pub max_width: usize,
+    /// Max stages per segment (min 1).
+    pub max_seg_len: usize,
+    /// Probability of an extra skip-level parent per eligible segment.
+    pub skip_prob: f64,
+}
+
+impl Default for DagConfig {
+    fn default() -> Self {
+        DagConfig { max_depth: 4, max_width: 3, max_seg_len: 2, skip_prob: 0.35 }
+    }
+}
+
+/// Per-frame step of the drift walk, as a fraction of the walk bound:
+/// slow enough that the tuner sees a moving target rather than noise
+/// (σ after F frames ≈ `bound × 0.05 × sqrt(F / 3)` until the band
+/// clamps engage).
+pub const DRIFT_STEP_FRAC: f64 = 0.05;
+
+/// Minimum precomputed drift-walk horizon (frames); the table covers at
+/// least `max(trace_frames, this)` and holds its last value beyond.
+pub const DRIFT_TABLE_FRAMES: usize = 2048;
+
+/// The drift walk for a generated app, on its own seed stream (never
+/// perturbs the generation draws).
+fn drift_walk_for(seed: u64, n_stages: usize, cfg: &WorkloadConfig) -> Option<DriftWalk> {
+    cfg.drift.map(|bound| {
+        DriftWalk::generate(
+            seed ^ 0xD21F_7A11_0B0B_5EED,
+            n_stages,
+            bound,
+            cfg.trace_frames.max(DRIFT_TABLE_FRAMES),
+            bound * DRIFT_STEP_FRAC,
+        )
+    })
 }
 
 impl Default for WorkloadConfig {
@@ -189,6 +267,8 @@ impl Default for WorkloadConfig {
             load_shift: None,
             thrash: None,
             exact_accounting: false,
+            dag: None,
+            drift: None,
         }
     }
 }
@@ -245,8 +325,12 @@ pub fn generate(seed: u64, cfg: &WorkloadConfig) -> App {
 
 /// Generate a pipeline with bounds calibrated for `cluster` — the fleet
 /// runner passes each app's slice of the shared cluster here so bounds
-/// stay achievable under contention.
+/// stay achievable under contention. [`WorkloadConfig::dag`] switches to
+/// the general-DAG family ([`generate_dag_on`]).
 pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
+    if cfg.dag.is_some() {
+        return generate_dag_on(seed, cfg, cluster);
+    }
     assert!(cfg.max_branches >= 1 && cfg.max_prefix >= 1 && cfg.max_branch_len >= 1);
     assert!(cfg.min_knobs >= 1 && cfg.max_knobs >= cfg.min_knobs);
     let mut rng = Rng::new(seed);
@@ -597,6 +681,7 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
             stages: seg_stage_names(0),
             params: seg_params(0),
             branch: None,
+            deps: None,
         });
     }
     for b in 0..branches {
@@ -605,6 +690,7 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
             stages: seg_stage_names(1 + b),
             params: seg_params(1 + b),
             branch: Some(b),
+            deps: None,
         });
     }
     if !seg_params(suffix_seg).is_empty() {
@@ -613,6 +699,7 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
             stages: seg_stage_names(suffix_seg),
             params: seg_params(suffix_seg),
             branch: None,
+            deps: None,
         });
     }
 
@@ -649,10 +736,446 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
         stages: stage_costs,
         cost_scale,
         base_fidelity,
+        drift: drift_walk_for(seed, n_stages, cfg),
     };
     let mut app = App { spec, graph, model: Box::new(model) };
 
     // ---- bound calibration ----------------------------------------------
+    let costs =
+        probe_costs_with(&app, cluster, cfg.probe_configs, seed, cfg.exact_accounting);
+    let bound = calibrated_bound(&costs, cfg.feasible_quantile, cfg.bound_margin);
+    app.spec.latency_bounds_ms = vec![bound, bound * 1.5, bound * 2.0];
+    app
+}
+
+/// Generate a **general-DAG** pipeline (the `gen-dag:SEED` family):
+/// a layered segment graph with multi-level fan-out, diamond joins and
+/// skip connections (see [`DagConfig`]). Each segment is a chain of
+/// heavy stages; a global source feeds level 0 and a global sink joins
+/// every childless tail. The spec declares the segment graph as the
+/// group-level DAG (`GroupSpec::deps`), so the structured predictor's
+/// critical-path combine stays *exact*: every source→sink path is
+/// source → segment chain → sink, hence
+/// `e2e = offset(source + sink) + critical_path(segment graph, segment sums)`.
+///
+/// Shares the knob semantics, cost/fidelity model, content scripts,
+/// profiles, scenario hooks (load shift / thrash / drift) and bound
+/// calibration of the series-parallel generator. Same seed →
+/// byte-identical app.
+pub fn generate_dag_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
+    let dag = cfg.dag.clone().unwrap_or_default();
+    assert!(dag.max_depth >= 2, "gen-dag needs at least two levels");
+    assert!(dag.max_width >= 1 && dag.max_seg_len >= 1);
+    assert!((0.0..=1.0).contains(&dag.skip_prob), "skip_prob is a probability");
+    assert!(cfg.min_knobs >= 1 && cfg.max_knobs >= cfg.min_knobs);
+    let mut rng = Rng::new(seed);
+
+    // ---- segment topology -----------------------------------------------
+    let depth = 2 + rng.below(dag.max_depth - 1);
+    let widths: Vec<usize> = (0..depth).map(|_| 1 + rng.below(dag.max_width)).collect();
+    let mut seg_level: Vec<usize> = Vec::new();
+    let mut level_segs: Vec<Vec<usize>> = vec![Vec::new(); depth];
+    for (l, &w) in widths.iter().enumerate() {
+        for _ in 0..w {
+            level_segs[l].push(seg_level.len());
+            seg_level.push(l);
+        }
+    }
+    let n_segments = seg_level.len();
+    // parents: 1–2 from the previous level (diamond joins when two
+    // siblings share one), plus an occasional skip-level parent
+    let mut seg_parents: Vec<Vec<usize>> = vec![Vec::new(); n_segments];
+    for l in 1..depth {
+        for si in 0..level_segs[l].len() {
+            let s = level_segs[l][si];
+            let prev = &level_segs[l - 1];
+            let k = 1 + rng.below(prev.len().min(2));
+            let mut pool = prev.clone();
+            for _ in 0..k {
+                let i = rng.below(pool.len());
+                seg_parents[s].push(pool.swap_remove(i));
+            }
+            if l >= 2 && rng.bool_with(dag.skip_prob) {
+                let el = rng.below(l - 1); // a level at least two below
+                let cand = &level_segs[el];
+                seg_parents[s].push(cand[rng.below(cand.len())]);
+            }
+            seg_parents[s].sort_unstable();
+            seg_parents[s].dedup();
+        }
+    }
+    let seg_len: Vec<usize> =
+        (0..n_segments).map(|_| 1 + rng.below(dag.max_seg_len)).collect();
+
+    // ---- stage tables (source, segment chains in level order, sink) ----
+    let conn_seg = n_segments; // knob-less segment id for source/sink
+    let mut names: Vec<String> = Vec::new();
+    let mut deps: Vec<Vec<String>> = Vec::new();
+    let mut seg_of: Vec<usize> = Vec::new();
+    let mut is_heavy: Vec<bool> = Vec::new();
+    names.push("source".into());
+    deps.push(vec![]);
+    seg_of.push(conn_seg);
+    is_heavy.push(false);
+    let mut seg_tail: Vec<String> = vec![String::new(); n_segments];
+    for s in 0..n_segments {
+        for j in 0..seg_len[s] {
+            let dep: Vec<String> = if j > 0 {
+                vec![names.last().unwrap().clone()]
+            } else if seg_parents[s].is_empty() {
+                vec!["source".into()]
+            } else {
+                seg_parents[s].iter().map(|&p| seg_tail[p].clone()).collect()
+            };
+            names.push(format!("g{s}_{j}"));
+            deps.push(dep);
+            seg_of.push(s);
+            is_heavy.push(true);
+        }
+        seg_tail[s] = names.last().unwrap().clone();
+    }
+    let mut has_child = vec![false; n_segments];
+    for s in 0..n_segments {
+        for &p in &seg_parents[s] {
+            has_child[p] = true;
+        }
+    }
+    let sink_deps: Vec<String> = (0..n_segments)
+        .filter(|&s| !has_child[s])
+        .map(|s| seg_tail[s].clone())
+        .collect();
+    names.push("sink".into());
+    deps.push(sink_deps);
+    seg_of.push(conn_seg);
+    is_heavy.push(false);
+    let n_stages = names.len();
+
+    let mut seg_heavy: Vec<Vec<usize>> = vec![Vec::new(); n_segments];
+    for i in 0..n_stages {
+        if is_heavy[i] {
+            seg_heavy[seg_of[i]].push(i);
+        }
+    }
+
+    // ---- knob roles (same kinds and draw scheme as the SP generator) ---
+    let n_scale = n_segments.min(2);
+    let min_k = cfg.min_knobs.max(n_scale);
+    let max_k = cfg.max_knobs.max(min_k);
+    let target_knobs = min_k + rng.below(max_k - min_k + 1);
+
+    let mut roles: Vec<KnobRole> = Vec::new();
+    let mut seg_scale: Vec<Option<usize>> = vec![None; n_segments + 1];
+    let mut seg_thresh: Vec<Option<usize>> = vec![None; n_segments + 1];
+    let mut seg_quality: Vec<Option<usize>> = vec![None; n_segments + 1];
+    let mut stage_par: Vec<Option<usize>> = vec![None; n_stages];
+    let mut quality_stage: Vec<Option<usize>> = vec![None; n_stages];
+
+    // scale knobs land on distinct random segments — the
+    // fidelity/latency trade-off anchors the tuner exists for
+    {
+        let mut pool: Vec<usize> = (0..n_segments).collect();
+        for _ in 0..n_scale {
+            let i = rng.below(pool.len());
+            let s = pool.swap_remove(i);
+            let k = roles.len();
+            seg_scale[s] = Some(k);
+            roles.push(KnobRole {
+                kind: KnobKind::Scale,
+                segment: s,
+                stage: None,
+                fidelity_coef: rng.range_f64(0.03, 0.08),
+                need_frac: 0.0,
+            });
+        }
+    }
+    let extra_kinds = [KnobKind::Threshold, KnobKind::Parallel, KnobKind::Quality];
+    let mut attempt = 0usize;
+    while roles.len() < target_knobs && attempt < 24 {
+        let kind = extra_kinds[attempt % extra_kinds.len()];
+        attempt += 1;
+        let eligible: Vec<usize> = (0..n_segments)
+            .filter(|&s| !seg_heavy[s].is_empty())
+            .filter(|&s| match kind {
+                KnobKind::Threshold => seg_thresh[s].is_none(),
+                KnobKind::Quality => seg_quality[s].is_none(),
+                KnobKind::Parallel => {
+                    cfg.profile.allows_parallel()
+                        && seg_heavy[s].iter().any(|&st| stage_par[st].is_none())
+                }
+                KnobKind::Scale => false,
+            })
+            .collect();
+        if eligible.is_empty() {
+            continue;
+        }
+        let s = eligible[rng.below(eligible.len())];
+        let k = roles.len();
+        match kind {
+            KnobKind::Threshold => {
+                seg_thresh[s] = Some(k);
+                roles.push(KnobRole {
+                    kind,
+                    segment: s,
+                    stage: None,
+                    fidelity_coef: rng.range_f64(0.4, 0.8),
+                    need_frac: rng.range_f64(0.25, 0.45),
+                });
+            }
+            KnobKind::Parallel => {
+                let free: Vec<usize> = seg_heavy[s]
+                    .iter()
+                    .copied()
+                    .filter(|&st| stage_par[st].is_none())
+                    .collect();
+                let st = free[rng.below(free.len())];
+                stage_par[st] = Some(k);
+                roles.push(KnobRole {
+                    kind,
+                    segment: s,
+                    stage: Some(st),
+                    fidelity_coef: 0.0,
+                    need_frac: 0.0,
+                });
+            }
+            KnobKind::Quality => {
+                let st = seg_heavy[s][rng.below(seg_heavy[s].len())];
+                seg_quality[s] = Some(k);
+                quality_stage[st] = Some(k);
+                roles.push(KnobRole {
+                    kind,
+                    segment: s,
+                    stage: Some(st),
+                    fidelity_coef: rng.range_f64(0.85, 0.95),
+                    need_frac: 0.0,
+                });
+            }
+            KnobKind::Scale => unreachable!(),
+        }
+    }
+    // heavy profile: guarantee core-hungry pipelines (rng-free)
+    let mut par_count = roles.iter().filter(|r| r.kind == KnobKind::Parallel).count();
+    if par_count < cfg.profile.min_par_knobs() {
+        'outer: for s in 0..n_segments {
+            for &st in &seg_heavy[s] {
+                if par_count >= cfg.profile.min_par_knobs() {
+                    break 'outer;
+                }
+                if stage_par[st].is_none() {
+                    let k = roles.len();
+                    stage_par[st] = Some(k);
+                    roles.push(KnobRole {
+                        kind: KnobKind::Parallel,
+                        segment: s,
+                        stage: Some(st),
+                        fidelity_coef: 0.0,
+                        need_frac: 0.0,
+                    });
+                    par_count += 1;
+                }
+            }
+        }
+    }
+    let num_knobs = roles.len();
+
+    // ---- per-stage costs, content script, global scales -----------------
+    let mut stage_costs: Vec<StageCost> = Vec::with_capacity(n_stages);
+    for i in 0..n_stages {
+        let (base, px, feat, feat2) = if is_heavy[i] {
+            (
+                rng.range_f64(0.5, 2.0),
+                rng.range_f64(15.0, 80.0) * cfg.profile.px_mult(),
+                rng.range_f64(1.0, 6.0),
+                rng.range_f64(0.0, 1.2),
+            )
+        } else {
+            (rng.range_f64(0.3, 1.2), 0.0, 0.0, 0.0)
+        };
+        let quality_mult = rng.range_f64(1.5, 2.2);
+        let serial_frac = rng.range_f64(0.05, 0.15) * cfg.profile.serial_mult();
+        let per_worker_ov = rng.range_f64(0.04, 0.18) * cfg.profile.overhead_mult();
+        stage_costs.push(StageCost {
+            segment: seg_of[i],
+            base,
+            px,
+            feat,
+            feat2,
+            par_knob: stage_par[i],
+            quality_knob: quality_stage[i],
+            quality_mult,
+            serial_frac,
+            per_worker_ov,
+        });
+    }
+    let mut script = ContentScript {
+        base_features: rng.range_f64(350.0, 750.0),
+        amp1: rng.range_f64(20.0, 60.0),
+        per1: rng.range_f64(9.0, 45.0),
+        amp2: rng.range_f64(10.0, 40.0),
+        per2: rng.range_f64(9.0, 45.0),
+        change_frame: 300 + rng.below(400),
+        change_mult: rng.range_f64(1.2, 1.8),
+    };
+    let cost_scale = rng.range_f64(0.8, 1.6) * cfg.profile.cost_mult();
+    let base_fidelity = rng.range_f64(0.90, 0.98);
+    if let Some((frame, mult)) = cfg.load_shift {
+        script.change_frame = frame;
+        script.change_mult = mult;
+    }
+    if let Some(t) = cfg.thrash {
+        assert!(t >= 1.0, "thrash multiplier must be >= 1");
+        script.amp1 *= t;
+        script.amp2 *= t;
+        script.per1 = (script.per1 / t).max(2.0);
+        script.per2 = (script.per2 / t).max(2.0);
+    }
+
+    // ---- spec tables ----------------------------------------------------
+    let params: Vec<ParamSpec> = roles
+        .iter()
+        .enumerate()
+        .map(|(k, role)| {
+            let label = format!("g{}", role.segment);
+            match role.kind {
+                KnobKind::Scale => ParamSpec {
+                    name: format!("scale_{label}"),
+                    symbol: format!("K{}", k + 1),
+                    kind: "continuous".into(),
+                    min: 1.0,
+                    max: 10.0,
+                    default: 1.0,
+                    log: false,
+                    description: format!(
+                        "The degree of image scaling on segment {label} (1 = full resolution)"
+                    ),
+                },
+                KnobKind::Threshold => ParamSpec {
+                    name: format!("threshold_{label}"),
+                    symbol: format!("K{}", k + 1),
+                    kind: "continuous".into(),
+                    min: 1.0,
+                    max: 65536.0,
+                    default: 65536.0,
+                    log: true,
+                    description: format!(
+                        "Cap on the features segment {label} forwards downstream"
+                    ),
+                },
+                KnobKind::Parallel => ParamSpec {
+                    name: format!("par_{}", names[role.stage.unwrap()]),
+                    symbol: format!("K{}", k + 1),
+                    kind: "discrete".into(),
+                    min: 1.0,
+                    max: 32.0,
+                    default: 1.0,
+                    log: true,
+                    description: format!(
+                        "Data-parallel workers for stage {}",
+                        names[role.stage.unwrap()]
+                    ),
+                },
+                KnobKind::Quality => ParamSpec {
+                    name: format!("quality_{}", names[role.stage.unwrap()]),
+                    symbol: format!("K{}", k + 1),
+                    kind: "discrete".into(),
+                    min: 0.0,
+                    max: 1.0,
+                    default: 0.0,
+                    log: false,
+                    description: format!(
+                        "Quality mode of stage {}: 0 = high (default), 1 = fast",
+                        names[role.stage.unwrap()]
+                    ),
+                },
+            }
+        })
+        .collect();
+
+    let stages: Vec<StageSpec> = (0..n_stages)
+        .map(|i| {
+            let s = seg_of[i];
+            let mut ps: Vec<usize> = Vec::new();
+            if is_heavy[i] {
+                if let Some(k) = seg_scale[s] {
+                    ps.push(k);
+                }
+                if let Some(k) = seg_thresh[s] {
+                    ps.push(k);
+                }
+            }
+            if let Some(k) = stage_par[i] {
+                ps.push(k);
+            }
+            if let Some(k) = quality_stage[i] {
+                ps.push(k);
+            }
+            ps.sort_unstable();
+            StageSpec {
+                name: names[i].clone(),
+                deps: deps[i].clone(),
+                critical: is_heavy[i],
+                params: ps,
+            }
+        })
+        .collect();
+
+    // one group per segment — param-less segments still get one (the
+    // group DAG must tile the graph for the combine to stay exact; their
+    // regressor degenerates to a learned constant)
+    let groups: Vec<GroupSpec> = (0..n_segments)
+        .map(|s| GroupSpec {
+            name: format!("seg{s}"),
+            stages: seg_heavy[s].iter().map(|&i| names[i].clone()).collect(),
+            params: roles
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.segment == s)
+                .map(|(k, _)| k)
+                .collect(),
+            branch: None,
+            deps: Some(seg_parents[s].iter().map(|&p| format!("seg{p}")).collect()),
+        })
+        .collect();
+
+    let spec = AppSpec {
+        name: format!("gendag{seed}"),
+        title: format!(
+            "generated DAG perception pipeline #{seed} \
+             ({depth}-level, {n_segments} segments, {n_stages} stages)"
+        ),
+        description: format!(
+            "Procedurally generated general-DAG workload (seed {seed}): \
+             {n_stages}-stage pipeline over {n_segments} segments in {depth} \
+             levels with {num_knobs} tunable knobs, multi-level fan-out and \
+             skip connections."
+        ),
+        latency_bounds_ms: vec![100.0], // placeholder until calibration below
+        frame_interval_ms: 33.3,
+        trace_frames: cfg.trace_frames,
+        trace_configs: cfg.trace_configs,
+        params,
+        stages,
+        groups,
+        degree: 3,
+        candidate_pad: 64,
+        feature_pad: 64,
+    };
+    spec.validate().expect("generated DAG spec must validate");
+
+    let graph = Graph::from_spec(&spec);
+    let model = GeneratedModel {
+        script,
+        roles,
+        segments: (0..=n_segments)
+            .map(|s| SegmentKnobs { scale: seg_scale[s], threshold: seg_thresh[s] })
+            .collect(),
+        stages: stage_costs,
+        cost_scale,
+        base_fidelity,
+        drift: drift_walk_for(seed, n_stages, cfg),
+    };
+    let mut app = App { spec, graph, model: Box::new(model) };
+
+    // ---- bound calibration (same policy as the SP generator) ------------
     let costs =
         probe_costs_with(&app, cluster, cfg.probe_configs, seed, cfg.exact_accounting);
     let bound = calibrated_bound(&costs, cfg.feasible_quantile, cfg.bound_margin);
@@ -789,6 +1312,233 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn series_parallel_combine_is_bit_identical_to_legacy_rule() {
+        // the pre-DAG sum/max rule, inlined verbatim: on series-parallel
+        // specs (no group graph) the new combine must reproduce it
+        // BIT-FOR-BIT — every recorded trace and mirror threshold
+        // depends on that arithmetic
+        fn legacy(map: &GroupMap, group_pred: &[f64], offset: f64) -> f64 {
+            let mut total = offset;
+            let mut branch_sums: std::collections::BTreeMap<usize, f64> =
+                std::collections::BTreeMap::new();
+            for (g, &p) in group_pred.iter().enumerate() {
+                match map.branch[g] {
+                    None => total += p,
+                    Some(b) => *branch_sums.entry(b).or_insert(0.0) += p,
+                }
+            }
+            if !branch_sums.is_empty() {
+                total += branch_sums.values().cloned().fold(f64::MIN, f64::max);
+            }
+            total
+        }
+        let cfg = WorkloadConfig::default();
+        for seed in 0..20 {
+            let app = generate(seed, &cfg);
+            let map = GroupMap::structured(&app.spec);
+            assert!(map.group_graph.is_none(), "gen:SEED specs stay legacy");
+            let mut rng = Rng::new(seed ^ 0xB17);
+            for _ in 0..20 {
+                let preds: Vec<f64> = (0..map.num_groups())
+                    .map(|_| rng.range_f64(0.0, 120.0))
+                    .collect();
+                let offset = rng.range_f64(0.0, 10.0);
+                let (a, b) = (map.combine(&preds, offset), legacy(&map, &preds, offset));
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gen_dag_specs_validate_and_declare_group_dags() {
+        let cfg = WorkloadConfig { dag: Some(DagConfig::default()), ..Default::default() };
+        let mut saw_multi_parent = false;
+        let mut saw_skip = false;
+        for seed in 0..25u64 {
+            let app = generate(seed, &cfg);
+            app.spec.validate().unwrap();
+            assert_eq!(app.spec.name, format!("gendag{seed}"));
+            assert_eq!(app.graph.len(), app.spec.stages.len());
+            assert_eq!(app.graph.sources().len(), 1, "seed {seed}");
+            assert_eq!(app.graph.sinks().len(), 1, "seed {seed}");
+            assert!(app.spec.num_vars() >= 2, "seed {seed}");
+            assert!(app.spec.groups.len() >= 2, "seed {seed}");
+            assert!(
+                app.spec.groups.iter().all(|g| g.deps.is_some()),
+                "seed {seed}: group DAG must be declared"
+            );
+            // witness the non-series-parallel shapes across the seed set:
+            // diamond joins (>= 2 parents) and skip connections (a parent
+            // whose longest-path depth sits >= 2 below the child's — in a
+            // strictly layered graph every parent is exactly one level up)
+            let mut gdepth: std::collections::HashMap<&str, usize> =
+                std::collections::HashMap::new();
+            for g in &app.spec.groups {
+                let deps = g.deps.as_deref().unwrap();
+                if deps.len() >= 2 {
+                    saw_multi_parent = true;
+                }
+                let d = deps
+                    .iter()
+                    .map(|p| gdepth[p.as_str()] + 1)
+                    .max()
+                    .unwrap_or(0);
+                if deps.iter().any(|p| gdepth[p.as_str()] + 2 <= d) {
+                    saw_skip = true;
+                }
+                gdepth.insert(g.name.as_str(), d);
+            }
+        }
+        assert!(saw_multi_parent, "no seed produced a diamond join");
+        assert!(saw_skip, "no seed produced a skip connection");
+    }
+
+    #[test]
+    fn gen_dag_same_seed_same_app() {
+        let cfg = WorkloadConfig { dag: Some(DagConfig::default()), ..Default::default() };
+        let a = generate(123, &cfg);
+        let b = generate(123, &cfg);
+        assert_eq!(a.spec.name, b.spec.name);
+        assert_eq!(a.spec.latency_bounds_ms, b.spec.latency_bounds_ms);
+        let names_a: Vec<&str> = a.spec.stages.iter().map(|s| s.name.as_str()).collect();
+        let names_b: Vec<&str> = b.spec.stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names_a, names_b);
+        let c = generate(124, &cfg);
+        assert!(
+            a.spec.stages.len() != c.spec.stages.len()
+                || a.spec.latency_bounds_ms != c.spec.latency_bounds_ms,
+            "seeds 123 and 124 generated identical DAG apps"
+        );
+    }
+
+    #[test]
+    fn gen_dag_group_combine_reproduces_critical_path() {
+        // the tentpole exactness claim: on general DAGs the structured
+        // critical-path combine equals the simulator's weighted critical
+        // path (offset = source + sink, group weights = segment sums)
+        let cfg = WorkloadConfig { dag: Some(DagConfig::default()), ..Default::default() };
+        for seed in 0..15 {
+            let app = generate(seed, &cfg);
+            let map = GroupMap::structured(&app.spec);
+            assert!(map.group_graph.is_some(), "seed {seed}");
+            let mut rng = Rng::new(seed ^ 0xABCD);
+            for _ in 0..10 {
+                let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
+                let ks = app.spec.denormalize(&u);
+                let content = app.model.content(rng.below(900));
+                let stage_ms = app.stage_latencies(&ks, &content);
+                let e2e = critical_path(&app.graph, &stage_ms);
+                let (y, offset) = map.targets(&stage_ms, e2e);
+                let combined = map.combine(&y, offset);
+                assert!(
+                    (combined - e2e).abs() < 1e-9,
+                    "seed {seed}: combined {combined} vs e2e {e2e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gen_dag_profiles_mirror_series_parallel_semantics() {
+        let light = WorkloadConfig {
+            dag: Some(DagConfig::default()),
+            profile: AppProfile::Light,
+            ..Default::default()
+        };
+        let heavy = WorkloadConfig {
+            dag: Some(DagConfig::default()),
+            profile: AppProfile::Heavy,
+            ..Default::default()
+        };
+        for seed in [1u64, 8, 33] {
+            let l = generate(seed, &light);
+            assert!(
+                l.spec.params.iter().all(|p| !p.name.starts_with("par_")),
+                "seed {seed}: light DAG app grew a parallel knob"
+            );
+            let h = generate(seed, &heavy);
+            let par = h.spec.params.iter().filter(|p| p.name.starts_with("par_")).count();
+            assert!(par >= 2, "seed {seed}: only {par} parallel knobs");
+        }
+    }
+
+    #[test]
+    fn gen_dag_bounds_leave_a_feasible_region() {
+        let cfg = WorkloadConfig { dag: Some(DagConfig::default()), ..Default::default() };
+        for seed in [0u64, 7, 19] {
+            let app = generate(seed, &cfg);
+            let bound = app.spec.latency_bounds_ms[0];
+            let costs = probe_costs(&app, &Cluster::default(), cfg.probe_configs, seed);
+            let feasible = costs.iter().filter(|&&c| c <= bound).count();
+            let frac = feasible as f64 / costs.len() as f64;
+            assert!(frac >= 0.2, "seed {seed}: only {frac} of probes feasible");
+            assert!(frac <= 0.9, "seed {seed}: bound too loose ({frac} feasible)");
+        }
+    }
+
+    #[test]
+    fn drift_is_rng_neutral_and_stays_inside_the_walk_band() {
+        for dag in [false, true] {
+            let plain_cfg = WorkloadConfig {
+                dag: dag.then(DagConfig::default),
+                ..Default::default()
+            };
+            let drift_cfg = WorkloadConfig { drift: Some(0.25), ..plain_cfg.clone() };
+            for seed in [3u64, 11, 42] {
+                let plain = generate(seed, &plain_cfg);
+                let drifting = generate(seed, &drift_cfg);
+                // rng-neutral: identical topology and knob table
+                assert_eq!(plain.spec.stages.len(), drifting.spec.stages.len());
+                for (a, b) in plain.spec.params.iter().zip(&drifting.spec.params) {
+                    assert_eq!(a.name, b.name, "drift must not disturb the draw stream");
+                }
+                // per-frame stage costs stay within the configured band
+                let ks = plain.spec.defaults();
+                let mut sp = ClusterSim::deterministic(Cluster::default());
+                let mut sd = ClusterSim::deterministic(Cluster::default());
+                let mut moved = false;
+                for f in (0..900).step_by(37) {
+                    let rp = sp.run_frame(&plain, &ks, f);
+                    let rd = sd.run_frame(&drifting, &ks, f);
+                    for s in 0..rp.stage_ms.len() {
+                        let ratio = rd.stage_ms[s] / rp.stage_ms[s];
+                        assert!(
+                            (0.75 - 1e-9..=1.25 + 1e-9).contains(&ratio),
+                            "dag {dag} seed {seed} frame {f} stage {s}: ratio {ratio}"
+                        );
+                        if (ratio - 1.0).abs() > 0.02 {
+                            moved = true;
+                        }
+                    }
+                    // drift is cost-only
+                    assert_eq!(rp.fidelity, rd.fidelity);
+                }
+                assert!(moved, "dag {dag} seed {seed}: drift never moved a cost");
+                // drifted bounds are calibrated under drift (not copied)
+                assert!(drifting.spec.latency_bounds_ms[0] > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn drift_composes_with_scripted_load_drop() {
+        let cfg = WorkloadConfig {
+            drift: Some(0.2),
+            load_shift: Some(load_drop(150)),
+            ..Default::default()
+        };
+        let app = generate(9, &cfg);
+        // the scene cut still fires under drift ...
+        let before = app.model.content(149);
+        let after = app.model.content(150);
+        assert_eq!(before.scene_id, 0);
+        assert_eq!(after.scene_id, 1);
+        assert!(after.features < before.features * 0.75);
+        // ... and the walk still applies frame-to-frame
+        assert!(app.model.cost_drift(1, 500) != 1.0 || app.model.cost_drift(2, 500) != 1.0);
     }
 
     #[test]

@@ -111,6 +111,61 @@ impl ContentScript {
 /// a little slower than pixel count — same shape as the two case studies).
 pub const FEATURE_DECAY: f64 = 1.35;
 
+/// Slow per-stage cost-coefficient drift: one bounded random walk per
+/// stage, precomputed into a table at generation time so the model stays
+/// a pure (deterministic, `Send + Sync`) function of the frame index.
+///
+/// Walk dynamics: `w[0] = 1`, `w[t+1] = clamp(w[t] + U(-step, step),
+/// 1 − bound, 1 + bound)` — the coefficient wanders slowly inside the
+/// band instead of jumping the way the scripted scene change does. The
+/// two compose: a scene cut moves the *content*, the walk moves the
+/// *cost model* (On-line Application Autotuning Exploiting Ensemble
+/// Models, PAPERS.md). Past the precomputed horizon the walk holds its
+/// last value (drift is "slow" by definition; runs longer than the table
+/// see a frozen tail, not a wrap-around jump).
+#[derive(Debug, Clone)]
+pub struct DriftWalk {
+    /// Walk amplitude B: every multiplier stays within `[1 − B, 1 + B]`.
+    pub bound: f64,
+    /// Per-stage multiplier tables, `tables[stage][frame]`.
+    tables: Vec<Vec<f64>>,
+}
+
+impl DriftWalk {
+    /// Generate `stages` independent walks of `frames` steps from `seed`
+    /// (one rng stream, stages in order — deterministic).
+    pub fn generate(seed: u64, stages: usize, bound: f64, frames: usize, step: f64) -> Self {
+        assert!(bound > 0.0 && bound < 1.0, "drift bound must be in (0, 1): {bound}");
+        assert!(step > 0.0 && frames >= 1);
+        let mut rng = crate::util::Rng::new(seed);
+        let tables = (0..stages)
+            .map(|_| {
+                let mut w = 1.0f64;
+                (0..frames)
+                    .map(|_| {
+                        let cur = w;
+                        w = (w + rng.range_f64(-step, step))
+                            .clamp(1.0 - bound, 1.0 + bound);
+                        cur
+                    })
+                    .collect()
+            })
+            .collect();
+        DriftWalk { bound, tables }
+    }
+
+    /// The multiplier for `stage` at `frame` (clamped to the table tail).
+    pub fn at(&self, stage: usize, frame: usize) -> f64 {
+        let t = &self.tables[stage];
+        t[frame.min(t.len() - 1)]
+    }
+
+    /// Precomputed horizon (frames per stage table).
+    pub fn horizon(&self) -> usize {
+        self.tables.first().map(|t| t.len()).unwrap_or(0)
+    }
+}
+
 /// The generated cost model: pure data, deterministic, `Send + Sync`.
 pub struct GeneratedModel {
     pub script: ContentScript,
@@ -119,6 +174,8 @@ pub struct GeneratedModel {
     pub stages: Vec<StageCost>,
     pub cost_scale: f64,
     pub base_fidelity: f64,
+    /// Optional per-stage cost drift (the `--drift` scenario family).
+    pub drift: Option<DriftWalk>,
 }
 
 impl GeneratedModel {
@@ -149,6 +206,13 @@ impl CostModel for GeneratedModel {
 
     fn par_knob(&self, stage: usize) -> Option<usize> {
         self.stages[stage].par_knob
+    }
+
+    fn cost_drift(&self, stage: usize, frame: usize) -> f64 {
+        match &self.drift {
+            Some(d) => d.at(stage, frame),
+            None => 1.0,
+        }
     }
 
     fn stage_latency(&self, stage: usize, ks: &[f64], content: &Content, workers: usize) -> f64 {
@@ -227,5 +291,32 @@ mod tests {
             assert_eq!(a, b);
             assert!(a.features >= 50.0);
         }
+    }
+
+    #[test]
+    fn drift_walk_stays_inside_band_and_moves_slowly() {
+        let d = DriftWalk::generate(7, 4, 0.25, 1000, 0.0125);
+        assert_eq!(d.horizon(), 1000);
+        for s in 0..4 {
+            for f in 0..1200 {
+                let w = d.at(s, f);
+                assert!((0.75..=1.25).contains(&w), "stage {s} frame {f}: {w}");
+                if f > 0 && f < 1000 {
+                    let step = (w - d.at(s, f - 1)).abs();
+                    assert!(step <= 0.0125 + 1e-12, "stage {s} frame {f} jumped {step}");
+                }
+            }
+            // past the horizon the walk holds (no wrap-around jump)
+            assert_eq!(d.at(s, 5000), d.at(s, 999));
+        }
+        // deterministic given the seed; stages walk independently
+        let e = DriftWalk::generate(7, 4, 0.25, 1000, 0.0125);
+        assert_eq!(d.at(2, 500), e.at(2, 500));
+        assert_ne!(d.at(0, 500), d.at(1, 500));
+        // the walk actually goes somewhere (not stuck at 1.0)
+        let spread: f64 = (0..4)
+            .map(|s| (0..1000).map(|f| (d.at(s, f) - 1.0).abs()).fold(0.0, f64::max))
+            .fold(0.0, f64::max);
+        assert!(spread > 0.05, "walk never left 1.0: {spread}");
     }
 }

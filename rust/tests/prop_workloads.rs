@@ -9,6 +9,12 @@
 //! * every generated pipeline validates, is series-parallel consistent
 //!   (structured combine == critical path), has a calibrated feasible
 //!   bound, and respects the paper's knob-semantics invariants
+//! * `gen-dag` pipelines (general DAGs: multi-level fan-out, diamond
+//!   joins, skip connections) stay *exact* under the critical-path
+//!   combine over the declared group graph, cross-checked against the
+//!   brute-force path enumeration
+//! * `--drift` keeps every per-frame stage cost inside the configured
+//!   walk band, on both generator families
 
 use iptune::dataflow::critical_path::{critical_path_brute, critical_path_nodes};
 use iptune::dataflow::{critical_path, Graph};
@@ -16,7 +22,7 @@ use iptune::learner::GroupMap;
 use iptune::simulator::{Cluster, ClusterSim};
 use iptune::trace::TraceSet;
 use iptune::util::prop::{check, random_dag, unit_vec};
-use iptune::workloads::{self, WorkloadConfig};
+use iptune::workloads::{self, DagConfig, WorkloadConfig};
 
 fn graph_from(deps: &[Vec<usize>]) -> Graph {
     let stages: Vec<(String, Vec<String>)> = deps
@@ -150,6 +156,75 @@ fn prop_generated_pipelines_are_valid_apps() {
                 assert_eq!(k, k.round());
             }
         }
+    });
+}
+
+#[test]
+fn prop_gen_dag_combine_equals_critical_path() {
+    // the ISSUE-5 extension of `group_combine_reproduces_critical_path`:
+    // on general DAGs the structured combine (critical path over the
+    // declared group graph + source/sink offset) equals the simulator's
+    // weighted critical path, itself cross-checked against brute force
+    let cfg = WorkloadConfig { dag: Some(DagConfig::default()), ..Default::default() };
+    check("gen-dag-exact", 200, |rng, case| {
+        let app = workloads::generate(case as u64, &cfg);
+        app.spec.validate().expect("generated DAG spec validates");
+        assert_eq!(app.graph.sources().len(), 1);
+        assert_eq!(app.graph.sinks().len(), 1);
+        let map = GroupMap::structured(&app.spec);
+        assert!(map.group_graph.is_some(), "gen-dag must declare the group DAG");
+        let u = unit_vec(rng, app.spec.num_vars());
+        let ks = app.spec.denormalize(&u);
+        let content = app.model.content(rng.below(900));
+        let stage_ms = app.stage_latencies(&ks, &content);
+        assert!(stage_ms.iter().all(|&t| t > 0.0 && t.is_finite()));
+        let e2e = critical_path(&app.graph, &stage_ms);
+        assert!(
+            (e2e - critical_path_brute(&app.graph, &stage_ms)).abs() < 1e-9,
+            "case {case}: critical path disagrees with brute force"
+        );
+        let (y, offset) = map.targets(&stage_ms, e2e);
+        let combined = map.combine(&y, offset);
+        assert!(
+            (combined - e2e).abs() < 1e-9,
+            "case {case}: combined {combined} vs e2e {e2e}"
+        );
+    });
+}
+
+#[test]
+fn prop_drift_keeps_costs_within_walk_bounds() {
+    // --drift B: every per-frame stage cost moves by a factor inside
+    // [1-B, 1+B] relative to the drift-free twin (which is otherwise
+    // byte-identical — drift draws on an independent rng stream)
+    check("gen-drift-band", 30, |rng, case| {
+        let seed = case as u64 + 2100;
+        let dag = case % 2 == 1;
+        let bound = 0.15 + 0.05 * ((case % 3) as f64);
+        let plain_cfg = WorkloadConfig {
+            dag: dag.then(DagConfig::default),
+            ..Default::default()
+        };
+        let drift_cfg = WorkloadConfig { drift: Some(bound), ..plain_cfg.clone() };
+        let plain = workloads::generate(seed, &plain_cfg);
+        let drifting = workloads::generate(seed, &drift_cfg);
+        assert_eq!(plain.spec.params.len(), drifting.spec.params.len());
+        let u = unit_vec(rng, plain.spec.num_vars());
+        let ks = plain.spec.denormalize(&u);
+        let mut sp = ClusterSim::deterministic(Cluster::default());
+        let mut sd = ClusterSim::deterministic(Cluster::default());
+        // sample frames inside and beyond the precomputed walk horizon
+        let f = rng.below(3000);
+        let rp = sp.run_frame(&plain, &ks, f);
+        let rd = sd.run_frame(&drifting, &ks, f);
+        for s in 0..rp.stage_ms.len() {
+            let ratio = rd.stage_ms[s] / rp.stage_ms[s];
+            assert!(
+                ratio >= 1.0 - bound - 1e-9 && ratio <= 1.0 + bound + 1e-9,
+                "case {case} frame {f} stage {s}: ratio {ratio} outside ±{bound}"
+            );
+        }
+        assert_eq!(rp.fidelity, rd.fidelity, "drift is cost-only");
     });
 }
 

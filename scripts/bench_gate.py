@@ -15,17 +15,77 @@ regressions stay visible across commits.
 
 Usage:
     bench_gate.py <json_dir> <baseline.json> <out.json> [--sha SHA]
+    bench_gate.py --suggest <baseline.json> <trajectory.json> [...]
+                  [--factor F]
+
+`--suggest` tightens budgets from accumulated trajectory artifacts: for
+every bench present in the given `BENCH_<sha>.json` files it prints a
+baseline-shaped JSON whose budget is `F x` the worst observed median
+(default F = 3, rounded up to two significant digits so re-runs over
+the same artifacts are reproducible). Benches already in the baseline
+keep their gated/tracked bucket; new benches land in "tracked" for a
+human to promote. Paste the output over the "gated"/"tracked" maps in
+ci/bench-baseline.json once enough runs have accumulated.
 
 stdlib only — runs on any CI python3.
 """
 import json
+import math
 import pathlib
 import sys
 
 REGRESSION_FACTOR = 2.0
+SUGGEST_FACTOR = 3.0
+
+
+def round_up_2sig(ns):
+    """Round up to two significant digits (stable across re-runs)."""
+    if ns <= 0:
+        return 1
+    exp = 10 ** max(int(math.floor(math.log10(ns))) - 1, 0)
+    return int(math.ceil(ns / exp) * exp)
+
+
+def suggest(argv):
+    factor = SUGGEST_FACTOR
+    args = list(argv)
+    if "--factor" in args:
+        i = args.index("--factor")
+        try:
+            factor = float(args[i + 1])
+        except (IndexError, ValueError):
+            print(__doc__)
+            return 2
+        del args[i:i + 2]
+    if len(args) < 2:
+        print(__doc__)
+        return 2
+    baseline = json.loads(pathlib.Path(args[0]).read_text())
+    medians = {}
+    for p in args[1:]:
+        doc = json.loads(pathlib.Path(p).read_text())
+        for tdoc in doc.get("targets", {}).values():
+            for r in tdoc.get("results", []):
+                medians.setdefault(r["name"], []).append(r["median_ns"])
+    if not medians:
+        print("bench_gate --suggest: no bench results in the given trajectories")
+        return 1
+    out = {"gated": {}, "tracked": {}}
+    gated_names = set(baseline.get("gated", {}))
+    for name in sorted(medians):
+        budget = round_up_2sig(factor * max(medians[name]))
+        bucket = "gated" if name in gated_names else "tracked"
+        out[bucket][name] = budget
+    print(json.dumps(out, indent=2, sort_keys=True))
+    for name in sorted(gated_names - set(medians)):
+        print(f"# gated bench {name} absent from the trajectories "
+              "(budget left for a human)", file=sys.stderr)
+    return 0
 
 
 def main(argv):
+    if len(argv) >= 2 and argv[1] == "--suggest":
+        return suggest(argv[2:])
     if len(argv) < 4:
         print(__doc__)
         return 2
