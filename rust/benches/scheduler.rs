@@ -8,6 +8,7 @@
 
 use iptune::learner::GroupMap;
 use iptune::runtime::native::NativeBackend;
+use iptune::scheduler::frontier::ProgressFrontier;
 use iptune::scheduler::{allocate, allocate_v2, core_levels};
 use iptune::simulator::Cluster;
 use iptune::trace::{LadderTraceSet, TraceSet};
@@ -158,6 +159,18 @@ fn main() {
     b.metric("workloads/gen_dag_groups", map.num_groups() as f64);
     b.bench("learner/combine_dag", || {
         black_box(map.combine(black_box(&preds), 2.5));
+    });
+
+    // ---- PR 6: progress-frontier bookkeeping ----------------------------
+    // the per-frame cost the live recv loop pays: one clock advance plus
+    // an envelope scan per arrival (16 tenants, worst case all admitted)
+    let mut frontier = ProgressFrontier::new(16, 30, &[true; 16]);
+    let mut ftick = 0usize;
+    b.bench("scheduler/frontier_on_frame_envelope_16t", || {
+        let i = ftick % 16;
+        ftick += 1;
+        black_box(frontier.on_frame(black_box(i)));
+        black_box(frontier.passed(black_box(ftick / (16 * 30))));
     });
 
     println!("\n{} benchmarks complete", b.results.len());

@@ -7,6 +7,13 @@ use super::{Graph, StageId};
 ///
 /// O(V + E): one pass in topological order (graphs are stored
 /// topologically). Panics if `weights.len() != g.len()`.
+///
+/// Signed weights: every join anchors at zero (`fold(0.0, max)` over
+/// parent distances) — the identity that makes source nodes start from
+/// zero *also clamps negative partial path sums*, and so does the
+/// zero-initialized running `best`. Callers feeding signed predictions
+/// (the learner's DAG `combine`) rely on that clamp for small transient
+/// undershoots and validate magnitude themselves.
 pub fn critical_path(g: &Graph, weights: &[f64]) -> f64 {
     assert_eq!(weights.len(), g.len());
     let mut dist = vec![0.0f64; g.len()];

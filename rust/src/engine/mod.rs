@@ -36,6 +36,26 @@ pub struct EngineConfig {
     /// pipeline until [`PauseHandle::resume`] — how the live scheduler
     /// parks a tenant from frame zero without dropping anything.
     pub start_paused: bool,
+    /// Source-side epoch cadence: every `epoch_frames` emitted frames the
+    /// source advances its epoch stamp ([`FrameRecord::epoch`]); a
+    /// [`PauseHandle::resume_at`] fast-forwards the stamp. 0 disables
+    /// stamping (every record carries epoch 0).
+    pub epoch_frames: usize,
+    /// Extra *wall-clock* delay (ms of real time, independent of
+    /// `realtime_scale`) the source sleeps before each frame — the
+    /// injected-straggler hook for the live-path frontier tests and the
+    /// CI `live-smoke` job. 0 disables it.
+    pub source_delay_ms: f64,
+    /// `Some(h)`: knobs come from a *frame-indexed schedule* instead of
+    /// the free-running [`KnobHandle`] — frames `0..h` run under the
+    /// initial knobs, and the source **blocks** at the first frame past
+    /// the scheduled horizon until [`ScheduleHandle::extend`] decides it.
+    /// This pins "which knobs did frame `f` run under" to a pure function
+    /// of the schedule, independent of OS thread timing — the property
+    /// the live path's frontier-ordered replay is built on. `None` keeps
+    /// the legacy free-running latch (retunes apply to whatever frame the
+    /// source emits next).
+    pub knob_horizon: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -46,6 +66,9 @@ impl Default for EngineConfig {
             frames: 100,
             seed: 0,
             start_paused: false,
+            epoch_frames: 0,
+            source_delay_ms: 0.0,
+            knob_horizon: None,
         }
     }
 }
@@ -59,6 +82,8 @@ struct Token {
     vt: f64,
     /// The knob vector latched when the frame entered the pipeline.
     knobs: Arc<Vec<f64>>,
+    /// Source epoch stamp latched when the frame entered the pipeline.
+    epoch: usize,
 }
 
 /// One completed frame at the sink.
@@ -72,18 +97,61 @@ pub struct FrameRecord {
     pub fidelity: f64,
     /// The knob vector this frame ran under.
     pub knobs: Vec<f64>,
+    /// The source's epoch stamp when this frame entered the pipeline
+    /// (see [`EngineConfig::epoch_frames`]; 0 when stamping is off).
+    /// Advisory for frames emitted inside a park/resume window — the
+    /// live scheduler folds by its own deterministic per-tenant counts,
+    /// not by this stamp.
+    pub epoch: usize,
 }
 
 enum Evt {
     StageLat { frame: usize, stage: usize, lat: f64 },
-    Done { frame: usize, vt: f64, knobs: Arc<Vec<f64>> },
+    Done { frame: usize, vt: f64, knobs: Arc<Vec<f64>>, epoch: usize },
+}
+
+/// Source-gate state shared between the source thread and its
+/// [`PauseHandle`]s: the pause flag plus the epoch-stamp counter the
+/// source latches into each frame.
+#[derive(Debug)]
+struct SourceGate {
+    paused: bool,
+    /// Epoch stamped into the next emitted frame.
+    epoch: usize,
+    /// Frames already stamped with the current epoch.
+    into_epoch: usize,
+}
+
+/// Frame-indexed knob plan (see [`EngineConfig::knob_horizon`]): the
+/// entries map each frame to the knob vector decided for it, and the
+/// horizon is the first *undecided* frame — the source blocks there
+/// until the scheduler extends the plan.
+#[derive(Debug)]
+struct KnobPlan {
+    /// `(from_frame, knobs)` in ascending `from_frame` order; frame `f`
+    /// latches the last entry with `from_frame <= f`.
+    entries: Vec<(usize, Arc<Vec<f64>>)>,
+    /// Frames `0..horizon` are decided.
+    horizon: usize,
+}
+
+impl KnobPlan {
+    fn knobs_for(&self, frame: usize) -> Arc<Vec<f64>> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|(from, _)| *from <= frame)
+            .map(|(_, ks)| Arc::clone(ks))
+            .expect("knob plan always holds a frame-0 entry")
+    }
 }
 
 /// Handle to a running stream: consume [`FrameRecord`]s, retune knobs.
 pub struct StreamHandle {
     pub records: Receiver<FrameRecord>,
     knobs: Arc<RwLock<Arc<Vec<f64>>>>,
-    pause: Arc<(Mutex<bool>, Condvar)>,
+    pause: Arc<(Mutex<SourceGate>, Condvar)>,
+    plan: Option<Arc<(Mutex<KnobPlan>, Condvar)>>,
 }
 
 impl StreamHandle {
@@ -114,30 +182,88 @@ impl StreamHandle {
     pub fn pause_handle(&self) -> PauseHandle {
         PauseHandle(Arc::clone(&self.pause))
     }
+
+    /// A cloneable extender for the frame-indexed knob schedule; `None`
+    /// unless the stream was spawned with [`EngineConfig::knob_horizon`].
+    pub fn schedule_handle(&self) -> Option<ScheduleHandle> {
+        self.plan.as_ref().map(|p| ScheduleHandle(Arc::clone(p)))
+    }
+}
+
+/// Cloneable, thread-safe extender for a scheduled stream's knob plan
+/// (see [`EngineConfig::knob_horizon`]).
+#[derive(Clone)]
+pub struct ScheduleHandle(Arc<(Mutex<KnobPlan>, Condvar)>);
+
+impl ScheduleHandle {
+    /// Decide frames `from_frame..horizon`: they run under `knobs`
+    /// (frames before `from_frame` keep their already-decided entries).
+    /// Wakes a source blocked at the old horizon. `from_frame` must not
+    /// precede an existing entry — the plan is append-only, so a frame's
+    /// knobs can never be rewritten after the fact.
+    pub fn extend(&self, from_frame: usize, knobs: Vec<f64>, horizon: usize) {
+        let (m, cv) = &*self.0;
+        let mut plan = m.lock().unwrap();
+        debug_assert!(
+            plan.entries.last().map(|(f, _)| *f <= from_frame).unwrap_or(true),
+            "knob plan extended backwards"
+        );
+        plan.entries.push((from_frame, Arc::new(knobs)));
+        if horizon > plan.horizon {
+            plan.horizon = horizon;
+        }
+        cv.notify_all();
+    }
+
+    /// The first undecided frame.
+    pub fn horizon(&self) -> usize {
+        let (m, _) = &*self.0;
+        m.lock().unwrap().horizon
+    }
 }
 
 /// Cloneable, thread-safe source gate detached from a [`StreamHandle`]
 /// (see [`StreamHandle::pause_handle`]).
 #[derive(Clone)]
-pub struct PauseHandle(Arc<(Mutex<bool>, Condvar)>);
+pub struct PauseHandle(Arc<(Mutex<SourceGate>, Condvar)>);
 
 impl PauseHandle {
     /// Close the gate: the source blocks before emitting its next frame.
     pub fn pause(&self) {
         let (m, _) = &*self.0;
-        *m.lock().unwrap() = true;
+        m.lock().unwrap().paused = true;
     }
 
     /// Reopen the gate and wake the source.
     pub fn resume(&self) {
         let (m, cv) = &*self.0;
-        *m.lock().unwrap() = false;
+        m.lock().unwrap().paused = false;
+        cv.notify_all();
+    }
+
+    /// Reopen the gate and *fast-forward* the source's epoch stamp to
+    /// `epoch` (monotone — a stamp already past `epoch` is kept): the
+    /// frontier protocol's re-admission. The partial epoch in progress
+    /// is abandoned; the next emitted frame starts a fresh
+    /// `epoch_frames` batch stamped `epoch`, so a re-admitted tenant
+    /// owes one epoch of frames for the *current* decision, not a
+    /// backlog of stale ones.
+    pub fn resume_at(&self, epoch: usize) {
+        let (m, cv) = &*self.0;
+        {
+            let mut g = m.lock().unwrap();
+            g.paused = false;
+            if g.epoch < epoch {
+                g.epoch = epoch;
+            }
+            g.into_epoch = 0;
+        }
         cv.notify_all();
     }
 
     pub fn paused(&self) -> bool {
         let (m, _) = &*self.0;
-        *m.lock().unwrap()
+        m.lock().unwrap().paused
     }
 }
 
@@ -167,8 +293,20 @@ fn sleep_scaled(ms: f64, scale: f64) {
 /// record channel then closes and all threads exit.
 pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -> StreamHandle {
     let n_stages = app.graph.len();
-    let knobs = Arc::new(RwLock::new(Arc::new(initial_knobs)));
-    let pause = Arc::new((Mutex::new(cfg.start_paused), Condvar::new()));
+    let knobs = Arc::new(RwLock::new(Arc::new(initial_knobs.clone())));
+    let plan = cfg.knob_horizon.map(|h| {
+        Arc::new((
+            Mutex::new(KnobPlan {
+                entries: vec![(0, Arc::new(initial_knobs))],
+                horizon: h,
+            }),
+            Condvar::new(),
+        ))
+    });
+    let pause = Arc::new((
+        Mutex::new(SourceGate { paused: cfg.start_paused, epoch: 0, into_epoch: 0 }),
+        Condvar::new(),
+    ));
     let (rec_tx, rec_rx) = channel::<FrameRecord>();
     let (evt_tx, evt_rx) = channel::<Evt>();
 
@@ -197,6 +335,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
         let app = Arc::clone(&app);
         let evt_tx = evt_tx.clone();
         let knobs_cell = Arc::clone(&knobs);
+        let plan2 = plan.clone();
         let cfg2 = cfg.clone();
         let pause_gate = Arc::clone(&pause);
         let is_source = sources.contains(&stage);
@@ -212,16 +351,47 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                     let token = if is_source {
                         // parked tenants hold here: no frame enters the
                         // pipe until the scheduler reopens the gate
-                        {
+                        let epoch = {
                             let (m, cv) = &*pause_gate;
-                            let mut paused = m.lock().unwrap();
-                            while *paused {
-                                paused = cv.wait(paused).unwrap();
+                            let mut gate = m.lock().unwrap();
+                            while gate.paused {
+                                gate = cv.wait(gate).unwrap();
                             }
-                        }
+                            // stamp-then-advance under the same lock, so
+                            // a resume_at fast-forward never splits a
+                            // stamped batch
+                            let epoch = gate.epoch;
+                            if cfg2.epoch_frames > 0 {
+                                gate.into_epoch += 1;
+                                if gate.into_epoch >= cfg2.epoch_frames {
+                                    gate.epoch += 1;
+                                    gate.into_epoch = 0;
+                                }
+                            }
+                            epoch
+                        };
                         sleep_scaled(interval_ms, cfg2.realtime_scale); // camera pace
-                        let ks = knobs_cell.read().unwrap().clone();
-                        Token { id: frame, vt: 0.0, knobs: ks }
+                        if cfg2.source_delay_ms > 0.0 {
+                            // injected straggler: real wall-clock lag
+                            thread::sleep(std::time::Duration::from_secs_f64(
+                                cfg2.source_delay_ms * 1e-3,
+                            ));
+                        }
+                        let ks = match &plan2 {
+                            // scheduled mode: block until the plan decides
+                            // this frame, then latch its decided knobs —
+                            // content is a pure function of the schedule
+                            Some(p) => {
+                                let (m, cv) = &**p;
+                                let mut plan = m.lock().unwrap();
+                                while frame >= plan.horizon {
+                                    plan = cv.wait(plan).unwrap();
+                                }
+                                plan.knobs_for(frame)
+                            }
+                            None => knobs_cell.read().unwrap().clone(),
+                        };
+                        Token { id: frame, vt: 0.0, knobs: ks, epoch }
                     } else {
                         let mut joined: Option<Token> = None;
                         for rx in &inputs {
@@ -233,6 +403,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                                             id: prev.id,
                                             vt: prev.vt.max(t.vt),
                                             knobs: prev.knobs,
+                                            epoch: prev.epoch,
                                         },
                                     });
                                 }
@@ -257,13 +428,19 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                     let lat = noise.apply(base, &mut rng);
                     sleep_scaled(lat, cfg2.realtime_scale);
                     let _ = evt_tx.send(Evt::StageLat { frame, stage, lat });
-                    let out = Token { id: token.id, vt: token.vt + lat, knobs: token.knobs };
+                    let out = Token {
+                        id: token.id,
+                        vt: token.vt + lat,
+                        knobs: token.knobs,
+                        epoch: token.epoch,
+                    };
 
                     if is_sink {
                         let _ = evt_tx.send(Evt::Done {
                             frame,
                             vt: out.vt,
                             knobs: Arc::clone(&out.knobs),
+                            epoch: out.epoch,
                         });
                     }
                     for tx in &outputs {
@@ -287,7 +464,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
             let n_stages = app2.graph.len();
             let mut lat_acc: HashMap<usize, Vec<f64>> = HashMap::new();
             let mut lat_count: HashMap<usize, usize> = HashMap::new();
-            let mut done: HashMap<usize, (f64, Arc<Vec<f64>>)> = HashMap::new();
+            let mut done: HashMap<usize, (f64, Arc<Vec<f64>>, usize)> = HashMap::new();
             let mut emitted = 0usize;
             while let Ok(evt) = evt_rx.recv() {
                 match evt {
@@ -296,12 +473,12 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                             lat;
                         *lat_count.entry(frame).or_insert(0) += 1;
                     }
-                    Evt::Done { frame, vt, knobs } => {
-                        done.insert(frame, (vt, knobs));
+                    Evt::Done { frame, vt, knobs, epoch } => {
+                        done.insert(frame, (vt, knobs, epoch));
                     }
                 }
                 // emit in frame order once complete
-                while let (Some(&count), Some((vt, ks))) =
+                while let (Some(&count), Some((vt, ks, epoch))) =
                     (lat_count.get(&emitted), done.get(&emitted))
                 {
                     if count < n_stages {
@@ -316,6 +493,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                         stage_ms,
                         fidelity,
                         knobs: ks.as_ref().clone(),
+                        epoch: *epoch,
                     };
                     lat_count.remove(&emitted);
                     done.remove(&emitted);
@@ -331,7 +509,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
         })
         .expect("spawn assembler");
 
-    StreamHandle { records: rec_rx, knobs, pause }
+    StreamHandle { records: rec_rx, knobs, pause, plan }
 }
 
 /// Run a stream to completion, collecting all records (convenience for
@@ -371,6 +549,96 @@ mod tests {
             assert_eq!(r.frame, i);
             assert_eq!(r.stage_ms.len(), a.graph.len());
             assert!(r.end_to_end_ms > 0.0);
+            assert_eq!(r.epoch, 0, "stamping off must stamp epoch 0");
+        }
+    }
+
+    #[test]
+    fn scheduled_knobs_switch_at_exact_frame_indices() {
+        // with a knob plan, "which knobs did frame f run under" is a pure
+        // function of the schedule — no retune/emission race
+        let a = app("pose");
+        let slow = a.spec.defaults();
+        let fast = vec![3.0, 2.0_f64.powi(31), 16.0, 10.0, 10.0];
+        let handle = spawn_stream(
+            Arc::clone(&a),
+            slow.clone(),
+            EngineConfig { frames: 30, knob_horizon: Some(10), ..Default::default() },
+        );
+        let sched = handle.schedule_handle().expect("scheduled stream");
+        assert_eq!(sched.horizon(), 10);
+        sched.extend(10, fast.clone(), 30);
+        let mut recs = Vec::new();
+        while let Ok(r) = handle.records.recv() {
+            recs.push(r);
+        }
+        assert_eq!(recs.len(), 30);
+        for r in &recs {
+            let want = if r.frame < 10 { &slow } else { &fast };
+            assert_eq!(&r.knobs, want, "frame {}", r.frame);
+        }
+    }
+
+    #[test]
+    fn scheduled_source_blocks_at_the_horizon_until_extended() {
+        let a = app("pose");
+        let handle = spawn_stream(
+            Arc::clone(&a),
+            a.spec.defaults(),
+            EngineConfig { frames: 12, knob_horizon: Some(4), ..Default::default() },
+        );
+        let sched = handle.schedule_handle().unwrap();
+        for want in 0..4 {
+            let r = handle.records.recv().unwrap();
+            assert_eq!(r.frame, want);
+        }
+        // frames past the horizon are undecided: nothing may arrive
+        assert!(
+            handle.records.recv_timeout(std::time::Duration::from_millis(100)).is_err(),
+            "a frame ran past the undecided horizon"
+        );
+        sched.extend(4, a.spec.defaults(), 12);
+        let rest: Vec<_> = handle.records.iter().collect();
+        assert_eq!(rest.len(), 8, "extension must release the source");
+    }
+
+    #[test]
+    fn unscheduled_streams_have_no_schedule_handle() {
+        let a = app("pose");
+        let handle = spawn_stream(
+            Arc::clone(&a),
+            a.spec.defaults(),
+            EngineConfig { frames: 1, ..Default::default() },
+        );
+        assert!(handle.schedule_handle().is_none());
+        let _ = handle.records.iter().count();
+    }
+
+    #[test]
+    fn epoch_stamps_advance_by_count_and_fast_forward_on_resume_at() {
+        let a = app("pose");
+        let handle = spawn_stream(
+            Arc::clone(&a),
+            a.spec.defaults(),
+            EngineConfig {
+                frames: 20,
+                epoch_frames: 5,
+                start_paused: true,
+                ..Default::default()
+            },
+        );
+        let pause = handle.pause_handle();
+        // fast-forward the clock before any frame is emitted: the
+        // re-admission path — stamps start at the handed epoch, then
+        // advance every epoch_frames frames
+        pause.resume_at(3);
+        let mut recs = Vec::new();
+        while let Ok(r) = handle.records.recv() {
+            recs.push(r);
+        }
+        assert_eq!(recs.len(), 20);
+        for r in &recs {
+            assert_eq!(r.epoch, 3 + r.frame / 5, "frame {}", r.frame);
         }
     }
 

@@ -246,6 +246,11 @@ pub struct AppReport {
     /// whole-run-parked tenant; epoch-granular admission produces partial
     /// counts as parking rotates.
     pub parked_epochs: usize,
+    /// Reallocation epochs this app ran admitted (full epoch batch
+    /// executed). The trace fleet runs whole batches, so this is simply
+    /// total epochs minus [`parked_epochs`](Self::parked_epochs); the
+    /// live path reports the frontier's decision-cadence analogue.
+    pub completed_epochs: usize,
     /// Frames this app actually ran (its controller stepped).
     pub admitted_frames: usize,
     /// Post-warmup frames this app ran — the denominator of
@@ -286,6 +291,7 @@ impl AppReport {
             .put("explore_frames", self.explore_frames)
             .put("avg_cores", self.avg_cores)
             .put("parked_epochs", self.parked_epochs)
+            .put("completed_epochs", self.completed_epochs)
             .put("admitted_frames", self.admitted_frames)
             .put("scored_frames", self.scored_frames)
             .put("dropped_frames", self.dropped_frames)
@@ -463,7 +469,8 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     // v1 capacity) and then re-decides every epoch from learned demands
     let floor_req = cfg.scheduler.requested_floor(total, cfg.apps);
     let mut adm_state =
-        EpochAdmission::new(cfg.apps, cfg.scheduler.starvation_bound_or_default());
+        EpochAdmission::new(cfg.apps, cfg.scheduler.starvation_bound_or_default())
+            .with_hysteresis(cfg.scheduler.admission_hysteresis);
     let admitted0: Vec<bool> = if epoch_mode {
         adm_state.decide(
             total,
@@ -607,11 +614,13 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 let mut core_frames: Vec<usize> = vec![0; my.len()];
                 let mut parked_epochs: Vec<usize> = vec![0; my.len()];
                 let mut dropped: Vec<usize> = vec![0; my.len()];
+                let mut epochs_seen = 0usize;
 
                 // ---- epoch loop ----------------------------------------
                 while let Ok(cmd) = cmd_rx.recv() {
                     match cmd {
                         Cmd::Epoch { lo, hi, rungs, admitted } => {
+                            epochs_seen += 1;
                             for (slot, &i) in my.iter().enumerate() {
                                 // parked apps drop the epoch's frames on
                                 // the floor: nothing runs, nothing is
@@ -680,6 +689,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                         explore_frames: 0,
                         avg_cores: 0.0,
                         parked_epochs: parked_epochs[slot],
+                        completed_epochs: epochs_seen - parked_epochs[slot],
                         admitted_frames: 0,
                         scored_frames: 0,
                         dropped_frames: dropped[slot],

@@ -44,6 +44,15 @@ impl Variant {
     }
 }
 
+/// Loud-failure threshold for negative group predictions in the DAG
+/// [`combine`](GroupMap::combine): OGD's signed corrections legitimately
+/// undershoot zero by a few ms early in learning (the critical-path
+/// clamp absorbs those), but a prediction this far below zero means a
+/// diverged regressor whose clamp would silently bias every combined
+/// latency. Generous on purpose — the full debug test suite trains from
+/// empty models and must never trip it.
+pub const COMBINE_NEG_TOLERANCE_MS: f64 = 1000.0;
+
 /// How per-frame observations map onto learning targets for each group,
 /// and how group predictions combine into an end-to-end latency.
 #[derive(Debug, Clone)]
@@ -172,6 +181,22 @@ impl GroupMap {
     pub fn combine(&self, group_pred: &[f64], offset: f64) -> f64 {
         debug_assert_eq!(group_pred.len(), self.num_groups());
         if let Some(g) = &self.group_graph {
+            // The critical-path recursion anchors every join at zero
+            // (`fold(0.0, max)` over parent distances), so a *negative*
+            // partial path sum — a signed group-regressor correction
+            // overshooting below zero — is clamped back to the join's
+            // own weight rather than propagated (ISSUE 6; PR 5 note).
+            // That clamp is the intended semantics for the small
+            // transient undershoots OGD produces early in learning, but
+            // it would also silently mask a diverged regressor biasing
+            // every prediction upward — so fail loudly (debug builds)
+            // when a prediction is materially negative.
+            debug_assert!(
+                group_pred.iter().all(|&p| p >= -COMBINE_NEG_TOLERANCE_MS),
+                "group prediction below -{COMBINE_NEG_TOLERANCE_MS} ms — \
+                 a diverged signed group regressor, not an OGD transient: \
+                 {group_pred:?}"
+            );
             return offset + critical_path(g, group_pred);
         }
         let mut total = offset;
@@ -427,6 +452,29 @@ mod tests {
         // edge; the skip matters for connectivity, not for the max
         let skip = dag.combine(&[10.0, 0.1, 0.2, 1.0], 0.0);
         assert!((skip - 11.2).abs() < 1e-12, "{skip}");
+    }
+
+    #[test]
+    fn dag_combine_clamps_small_negative_partials_at_the_join() {
+        // chain g0 -> g1 -> g2 with a transiently negative middle
+        // prediction: the join anchors at zero, so the negative partial
+        // (g0 + g1 = -2) is clamped and g2 starts from 0, not -2 — the
+        // documented (now explicit) semantics for OGD undershoot
+        let dag = dag_map(3, &[(0, 1), (1, 2)]);
+        let total = dag.combine(&[3.0, -5.0, 4.0], 0.0);
+        assert!((total - 4.0).abs() < 1e-12, "{total}");
+        // while the partial stays positive a small undershoot propagates
+        // exactly (3 - 1 + 2): the clamp engages only at negative joins
+        let signed = dag.combine(&[3.0, -1.0, 2.0], 0.0);
+        assert!((signed - 4.0).abs() < 1e-12, "{signed}");
+    }
+
+    #[test]
+    #[should_panic(expected = "diverged signed group regressor")]
+    #[cfg(debug_assertions)]
+    fn dag_combine_fails_loudly_on_materially_negative_predictions() {
+        let dag = dag_map(2, &[(0, 1)]);
+        dag.combine(&[5.0, -2.0 * COMBINE_NEG_TOLERANCE_MS], 0.0);
     }
 
     #[test]

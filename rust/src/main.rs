@@ -102,14 +102,17 @@ commands:
         [--warmup N] [--headroom F] [--blend K] [--threads N] [--out FILE]
         [--mode static|dynamic] [--hetero] [--shift FRAME] [--shift-mult M]
         [--epoch N] [--floor CORES] [--priority W1,W2,..] [--hysteresis H]
-        [--admission] [--admission-epoch] [--starvation-bound K]
-        [--demand-confidence N] [--tier-shift FRAME:W1,W2,..|FRAME:auto]
+        [--admission] [--admission-epoch] [--admission-hysteresis S]
+        [--starvation-bound K] [--demand-confidence N]
+        [--tier-shift FRAME:W1,W2,..|FRAME:auto]
         [--thrash MULT] [--dag] [--drift B]
   schedule [--apps N] [--frames N] [--seed N] [--epoch N] [--floor CORES]
         [--candidates N] [--realtime SCALE] [--uniform]
         [--priority W1,W2,..] [--hysteresis H] [--admission-epoch]
-        [--starvation-bound K] [--demand-confidence N]
-        [--tier-shift FRAME:W1,W2,..|FRAME:auto] [--dag] [--drift B]
+        [--admission-hysteresis S] [--starvation-bound K]
+        [--demand-confidence N] [--tier-shift FRAME:W1,W2,..|FRAME:auto]
+        [--dag] [--drift B] [--straggler IDX:MS] [--barrier-epochs]
+        [--out FILE]
 
 APP is pose, motion-sift, gen:SEED, or gen-dag:SEED (procedurally
 generated pipelines; see the workloads module — gen-dag emits general
@@ -136,9 +139,17 @@ epochs; --demand-confidence N only lets a ladder rung carry a tenant's
 demand once it holds >= N observations (immature models reserve the
 calibration share instead of optimistically under-reserving);
 --tier-shift scripts a mid-run priority change (FRAME:auto draws the
-generated upgrade/downgrade scenario). On `schedule`, --admission-epoch
-parks live tenants by pausing their sources (frames are deferred, never
-dropped).";
+generated upgrade/downgrade scenario); --admission-hysteresis S keeps a
+parked, non-overdue tenant out until S idle cores remain beyond its
+reservation, damping park/resume thrash. On `schedule`, epochs are
+per-tenant progress
+frontiers: decisions fire as the frontier's lower envelope advances, and
+--admission-epoch parks live tenants by freezing their knob schedules
+(frames are deferred, never dropped). --straggler IDX:MS injects MS of
+wall-clock delay per source frame into tenant IDX (the straggler-
+isolation regression hook), --barrier-epochs runs the legacy frame-count
+barrier protocol for A/B comparison, and --out FILE writes the live
+report (per-tenant epoch counts included) as JSON.";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -158,6 +169,7 @@ fn main() -> Result<()> {
             "admission",
             "admission-epoch",
             "dag",
+            "barrier-epochs",
         ],
     )?;
 
@@ -309,6 +321,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if let Some(n) = args.get_parse::<usize>("demand-confidence")? {
         cfg.scheduler.demand_confidence = n;
     }
+    if let Some(s) = args.get_parse::<usize>("admission-hysteresis")? {
+        cfg.scheduler.admission_hysteresis = s;
+    }
     if cfg.apps == 0
         || (!cfg.scheduler.admission_any() && cfg.apps > cfg.cluster.total_cores())
     {
@@ -455,17 +470,36 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     if let Some(n) = args.get_parse::<usize>("demand-confidence")? {
         cfg.scheduler.demand_confidence = n;
     }
+    if let Some(s) = args.get_parse::<usize>("admission-hysteresis")? {
+        cfg.scheduler.admission_hysteresis = s;
+    }
+    if let Some(spec) = args.get("straggler") {
+        let (idx, ms) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("--straggler wants IDX:MS, got '{spec}'"))?;
+        let idx: usize = idx
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--straggler tenant '{idx}': {e}"))?;
+        let ms: f64 = ms
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--straggler delay '{ms}': {e}"))?;
+        cfg.straggler = Some((idx, ms));
+    }
+    if args.has("barrier-epochs") {
+        cfg.barrier = true;
+    }
     eprintln!(
-        "schedule: streaming {} generated apps x {} frames live (seed {}, epoch {} frames, {} shared cores) ...",
+        "schedule: streaming {} generated apps x {} frames live (seed {}, epoch {} frames, {} shared cores, {} protocol) ...",
         cfg.apps,
         cfg.frames,
         cfg.seed,
         cfg.scheduler.epoch_frames,
         cfg.cluster.total_cores(),
+        if cfg.barrier { "barrier" } else { "frontier" },
     );
     let report = iptune::scheduler::live::run_live(&cfg)?;
     println!(
-        "{:<8} {:<9} {:>8} {:>8} {:>12} {:>10} {:>12} {:>11} {:>8}",
+        "{:<8} {:<9} {:>8} {:>8} {:>12} {:>10} {:>12} {:>11} {:>8} {:>8}",
         "app",
         "profile",
         "frames",
@@ -474,11 +508,12 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         "fidelity",
         "bound-met%",
         "final-cores",
-        "parked"
+        "parked",
+        "epochs"
     );
     for a in &report.apps {
         println!(
-            "{:<8} {:<9} {:>8} {:>8.1} {:>10.1}ms {:>10.3} {:>11.1}% {:>11} {:>8}",
+            "{:<8} {:<9} {:>8} {:>8.1} {:>10.1}ms {:>10.3} {:>11.1}% {:>11} {:>8} {:>8}",
             a.name,
             a.profile,
             a.frames,
@@ -488,6 +523,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
             100.0 * a.bound_met_frac,
             a.final_cores,
             a.parked_epochs,
+            a.completed_epochs,
         );
     }
     for alloc in &report.allocations {
@@ -501,9 +537,13 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "schedule: ladder {:?}, fairness floor {} cores",
-        report.levels, report.fairness_floor
+        "schedule: {} protocol, ladder {:?}, fairness floor {} cores",
+        report.protocol, report.levels, report.fairness_floor
     );
+    if let Some(path) = args.get("out") {
+        report.save(path)?;
+        eprintln!("schedule: wrote live report to {path}");
+    }
     Ok(())
 }
 

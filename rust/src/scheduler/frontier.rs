@@ -1,0 +1,234 @@
+//! Progress-frontier protocol for the live path (ISSUE 6).
+//!
+//! Replaces the frame-count barrier epoch of `scheduler/live` with
+//! per-tenant epoch clocks in the spirit of timely dataflow's progress
+//! tracking (`timely/src/progress/{broadcast,subgraph}.rs`): each tenant
+//! advances its own clock as *its* frames complete, the frontier is the
+//! lower envelope of the participating clocks, and the allocator fires
+//! whenever the envelope advances — acting on whatever observations each
+//! tenant has banked, instead of waiting for the slowest stream.
+//!
+//! Three properties the live loop builds on:
+//!
+//! * **Per-tenant progress.** A tenant seals epoch `e` after delivering
+//!   its `epoch_frames`-th frame of that epoch. Sealing is a pure
+//!   function of the tenant's own frame count — no cross-tenant wait.
+//! * **Straggler isolation.** Parked tenants leave the participation
+//!   set, so they never hold the envelope back. On re-admission a
+//!   tenant's clock *fast-forwards* to the current decision epoch (the
+//!   skipped epochs are what `parked_epochs` counts): its next
+//!   `epoch_frames` frames seal the *current* epoch, not a backlog of
+//!   stale ones, so a re-admitted straggler delays only its own
+//!   updates, never the fleet's.
+//! * **Deterministic replay.** Decision `e` folds, per tenant, exactly
+//!   the records from that tenant's sealed epochs `<= e` — even if more
+//!   frames have already arrived (the surplus folds at later
+//!   decisions). Per-tenant record arrival is frame-ordered and the
+//!   per-tenant models are independent, so the decision sequence is a
+//!   pure function of `(seed, apps, frames)` and live reports are
+//!   byte-identical across thread counts.
+
+/// Per-tenant epoch clocks plus the lower envelope over the admitted
+/// participation set. The live loop owns one of these; the engine
+/// threads never see it (they just stamp frames with their epoch).
+#[derive(Debug, Clone)]
+pub struct ProgressFrontier {
+    /// Frames per epoch — the sealing cadence every clock shares.
+    epoch_frames: usize,
+    /// Next epoch each tenant will seal (clock `c` means epochs
+    /// `0..c` are sealed for that tenant).
+    clock: Vec<usize>,
+    /// Frames banked toward each tenant's next seal.
+    pending: Vec<usize>,
+    /// Whether the tenant participates in the envelope (admitted and
+    /// not yet finished). Parked and finished tenants are excluded.
+    participating: Vec<bool>,
+    /// Tenants that delivered every frame (their clock stops but they
+    /// must not freeze the envelope).
+    finished: Vec<bool>,
+}
+
+impl ProgressFrontier {
+    /// A frontier over `n` tenants sealing every `epoch_frames` frames;
+    /// `participating[i]` is the initial admission set.
+    pub fn new(n: usize, epoch_frames: usize, participating: &[bool]) -> Self {
+        assert!(epoch_frames >= 1, "epoch_frames must be >= 1");
+        assert_eq!(participating.len(), n);
+        ProgressFrontier {
+            epoch_frames,
+            clock: vec![0; n],
+            pending: vec![0; n],
+            participating: participating.to_vec(),
+            finished: vec![false; n],
+        }
+    }
+
+    /// Record one completed frame for tenant `i`; returns the epoch the
+    /// tenant sealed by this frame, if any.
+    pub fn on_frame(&mut self, i: usize) -> Option<usize> {
+        self.pending[i] += 1;
+        if self.pending[i] >= self.epoch_frames {
+            self.pending[i] = 0;
+            let sealed = self.clock[i];
+            self.clock[i] += 1;
+            Some(sealed)
+        } else {
+            None
+        }
+    }
+
+    /// Tenant `i` delivered all its frames: it stops participating in
+    /// the envelope (a finished stream must not freeze the frontier).
+    pub fn finish(&mut self, i: usize) {
+        self.finished[i] = true;
+        self.participating[i] = false;
+    }
+
+    /// Park tenant `i`: it leaves the envelope and its partial epoch is
+    /// discarded (those frames were already folded as observations; the
+    /// epoch they belonged to will be re-sealed after fast-forward).
+    pub fn park(&mut self, i: usize) {
+        if !self.finished[i] {
+            self.participating[i] = false;
+            self.pending[i] = 0;
+        }
+    }
+
+    /// Re-admit tenant `i`, fast-forwarding its clock to `epoch`: the
+    /// epochs it sat out are *skipped*, not replayed, so its next
+    /// `epoch_frames` frames seal the current epoch rather than a
+    /// backlog — the structural fix for the straggler stall.
+    pub fn resume_at(&mut self, i: usize, epoch: usize) {
+        if !self.finished[i] {
+            self.participating[i] = true;
+            self.pending[i] = 0;
+            if self.clock[i] < epoch {
+                self.clock[i] = epoch;
+            }
+        }
+    }
+
+    /// The lower envelope: the smallest clock among participating
+    /// tenants, i.e. the highest epoch `e` such that every participant
+    /// has sealed all epochs `< e`. With no participants the envelope
+    /// is unbounded (`None`) — every banked decision may fire.
+    pub fn envelope(&self) -> Option<usize> {
+        self.clock
+            .iter()
+            .zip(&self.participating)
+            .filter(|&(_, &p)| p)
+            .map(|(&c, _)| c)
+            .min()
+    }
+
+    /// Has the envelope passed `epoch`, i.e. may decision `epoch` fire?
+    /// (True when every participant sealed `epoch`, or nobody
+    /// participates any more.)
+    pub fn passed(&self, epoch: usize) -> bool {
+        self.envelope().map(|e| e > epoch).unwrap_or(true)
+    }
+
+    /// Tenant `i`'s clock: the number of epochs it has sealed.
+    pub fn sealed(&self, i: usize) -> usize {
+        self.clock[i]
+    }
+
+    /// Whether tenant `i` currently participates in the envelope.
+    pub fn participating(&self, i: usize) -> bool {
+        self.participating[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clocks_advance_independently_and_envelope_is_min() {
+        let mut f = ProgressFrontier::new(3, 2, &[true, true, true]);
+        assert_eq!(f.envelope(), Some(0));
+        // tenant 0 seals epoch 0 after 2 frames; others lag
+        assert_eq!(f.on_frame(0), None);
+        assert_eq!(f.on_frame(0), Some(0));
+        assert_eq!(f.sealed(0), 1);
+        assert_eq!(f.envelope(), Some(0), "envelope waits for the slowest");
+        assert!(!f.passed(0));
+        // the rest catch up; envelope advances, decision 0 may fire
+        for i in 1..3 {
+            f.on_frame(i);
+            f.on_frame(i);
+        }
+        assert_eq!(f.envelope(), Some(1));
+        assert!(f.passed(0));
+        assert!(!f.passed(1));
+    }
+
+    #[test]
+    fn parked_tenants_leave_the_envelope() {
+        let mut f = ProgressFrontier::new(3, 1, &[true, true, false]);
+        assert_eq!(f.envelope(), Some(0), "parked tenant 2 is excluded");
+        f.on_frame(0);
+        f.on_frame(1);
+        assert_eq!(f.envelope(), Some(1), "tenant 2's zero clock never gates");
+        f.park(1);
+        f.on_frame(0);
+        assert_eq!(f.envelope(), Some(2), "only tenant 0 participates now");
+    }
+
+    #[test]
+    fn resume_fast_forwards_instead_of_replaying_backlog() {
+        let mut f = ProgressFrontier::new(2, 2, &[true, false]);
+        for _ in 0..10 {
+            f.on_frame(0);
+        }
+        assert_eq!(f.sealed(0), 5);
+        assert_eq!(f.envelope(), Some(5));
+        // re-admit tenant 1 at the current decision epoch: its clock
+        // jumps to 5 — it owes one epoch of frames, not five
+        f.resume_at(1, 5);
+        assert_eq!(f.sealed(1), 5);
+        assert_eq!(f.envelope(), Some(5));
+        f.on_frame(1);
+        f.on_frame(1);
+        assert_eq!(f.sealed(1), 6, "first post-resume seal is the current epoch");
+    }
+
+    #[test]
+    fn resume_never_rewinds_a_clock() {
+        let mut f = ProgressFrontier::new(1, 1, &[true]);
+        for _ in 0..4 {
+            f.on_frame(0);
+        }
+        f.park(0);
+        f.resume_at(0, 2);
+        assert_eq!(f.sealed(0), 4, "fast-forward is monotone");
+    }
+
+    #[test]
+    fn park_discards_the_partial_epoch() {
+        let mut f = ProgressFrontier::new(1, 3, &[true]);
+        f.on_frame(0);
+        f.on_frame(0);
+        f.park(0);
+        f.resume_at(0, 1);
+        // the two banked frames were discarded with the park: a full
+        // epoch_frames batch is owed after resume
+        assert_eq!(f.on_frame(0), None);
+        assert_eq!(f.on_frame(0), None);
+        assert_eq!(f.on_frame(0), Some(1));
+    }
+
+    #[test]
+    fn finished_tenants_do_not_freeze_the_frontier() {
+        let mut f = ProgressFrontier::new(2, 1, &[true, true]);
+        f.on_frame(0);
+        f.finish(0);
+        for _ in 0..3 {
+            f.on_frame(1);
+        }
+        assert_eq!(f.envelope(), Some(3), "finished tenant 0 is excluded");
+        f.finish(1);
+        assert_eq!(f.envelope(), None);
+        assert!(f.passed(100), "empty participation unblocks everything");
+    }
+}

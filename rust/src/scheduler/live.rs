@@ -11,56 +11,84 @@
 //! the utility curves, water-fills the shared core pool, and *applies*
 //! each app's new quota by retuning the running pipeline: the chosen
 //! configuration's parallelism knobs are clamped to what the quota would
-//! grant ([`effective_candidates`]) and installed via the stream's
-//! detached [`KnobHandle`] — the engine never pauses.
+//! grant ([`effective_candidates`]) and installed for the frames the
+//! decision governs — the engine never pauses.
 //!
-//! Unlike the trace-based fleet, live runs are **not** bit-deterministic:
-//! frames already inside the bounded connectors when a retune lands run
-//! under the old knobs, and how many there are depends on OS scheduling.
-//! The structural invariants (quota sums, fairness floors, frame counts)
-//! hold regardless and are what the tests assert.
+//! # The progress-frontier protocol (default)
+//!
+//! Epochs are **per-tenant clocks**, not a global barrier: a tenant
+//! seals epoch `e` after delivering its `epoch_frames`-th frame of that
+//! epoch, and the allocator fires decision `e` as soon as the
+//! [`ProgressFrontier`]'s lower envelope passes `e` — acting on the
+//! observations each tenant banked, never waiting for a re-admitted
+//! straggler to replay a parked backlog (on re-admission a tenant's
+//! clock *fast-forwards* to the current decision epoch, so it owes one
+//! epoch of frames, not the epochs it sat out). A tenant's new
+//! quota/knob decision applies as *its own* frontier passes the epoch:
+//! the engine's frame-indexed knob schedule pins decision `e`'s knobs to
+//! the tenant's frames `e*epoch_frames..(e+1)*epoch_frames`, and the
+//! source blocks at the first *undecided* frame — one epoch of lookahead
+//! beyond the envelope, timely-dataflow style.
+//!
+//! That bounded lookahead is what buys **byte-identical replay**: which
+//! knobs a frame ran under is a pure function of the decision sequence
+//! (never of retune/emission races), each stage's noise stream is drawn
+//! in frame order, and every decision folds records in (tenant, epoch,
+//! seq) order up to a deterministic per-tenant prefix — surplus frames
+//! wait in a per-tenant buffer for the decision that owns them. Live
+//! reports are therefore byte-identical across thread counts and
+//! real-time pacing, the same determinism bar the trace-based fleet
+//! meets. ([`FrameRecord::epoch`] stamps are advisory; the fold trusts
+//! only its own counts.)
+//!
+//! **Parking a live tenant freezes its schedule.** Run-level (v1)
+//! admission stays rejected up front (a live stream cannot drop frames
+//! retroactively); epoch-granular admission
+//! ([`SchedulerConfig::admission_epoch`]) parks a tenant by *not
+//! extending* its knob schedule — the source blocks at the frozen
+//! horizon with every emitted frame already folded, so parking is exact
+//! and deterministic, and the parked tenant leaves the frontier's
+//! participation set (it cannot stall anyone else's decisions). After
+//! the final decision every remaining frame is scheduled under the last
+//! decided knobs, so parked tenants drain their deferred tails and no
+//! frame is ever lost. Tier shifts ([`SchedulerConfig::tier_shift`])
+//! land at epoch boundaries like the fleet's.
 //!
 //! The v2 scheduler features carry over: per-app priority weights scale
 //! the utility curves and the hysteresis term pins each stream to its
 //! incumbent quota unless the predicted gain clears the migration
-//! penalty — retuning a *running* pipeline is exactly where switching
-//! cost is real (in-flight frames execute under stale knobs).
+//! penalty. [`SchedulerConfig::admission_hysteresis`] additionally keeps
+//! a parked tenant out until the pool has real slack, so a load blip
+//! cannot thrash park/resume cycles.
 //!
-//! **Parking a live tenant pauses its source.** A live stream cannot drop
-//! frames retroactively the way the trace-replaying fleet does, so
-//! run-level (v1) admission stays rejected up front; epoch-granular
-//! admission ([`SchedulerConfig::admission_epoch`]) instead closes the
-//! parked tenant's source gate ([`PauseHandle`]) — no new frame enters the
-//! pipeline, frames already inside the bounded connectors drain normally,
-//! and re-admission reopens the gate with the tenant's learned model
-//! intact. Parked tenants finish their remaining frames after the
-//! scheduled window (the final drain), so no frame is ever lost. Tier
-//! shifts ([`SchedulerConfig::tier_shift`]) land at epoch boundaries like
-//! the fleet's.
-//!
-//! Known limitation: epoch boundaries are frame-count barriers over the
-//! admitted set, so after a mid-run re-admission the next boundary waits
-//! for the returning tenant to stream through its parked backlog — under
-//! real-time pacing that defers further scheduling decisions for roughly
-//! as long as the tenant was parked (with `realtime_scale == 0`, the
-//! default demo mode, catch-up is immediate). Per-tenant epoch clocks are
-//! the recorded follow-on (see ROADMAP).
+//! The pre-frontier **barrier protocol** (a frame-count barrier over the
+//! admitted set, eager folding, wall-clock knob latching) is retained
+//! behind [`LiveConfig::barrier`] as the A/B baseline for the straggler
+//! regression tests; it keeps its historical caveat that reports are not
+//! bit-deterministic and that a re-admitted straggler's backlog stalls
+//! every tenant's next decision.
 
-use std::sync::mpsc::channel;
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::apps::App;
-use crate::engine::{spawn_stream, EngineConfig, FrameRecord, KnobHandle, PauseHandle};
+use crate::engine::{
+    spawn_stream, EngineConfig, FrameRecord, KnobHandle, PauseHandle, ScheduleHandle,
+};
 use crate::runtime::native::NativeBackend;
 use crate::runtime::Backend;
+use crate::scheduler::frontier::ProgressFrontier;
 use crate::scheduler::{
     self, demand_cores_confident, reserve_top_up, AllocationFrame, EpochAdmission,
     SchedulerConfig,
 };
 use crate::simulator::{Cluster, SharedCluster};
 use crate::tuner::budgeted::effective_candidates;
+use crate::util::json::Json;
 use crate::util::Rng;
 use crate::workloads::{AppProfile, WorkloadConfig};
 
@@ -80,6 +108,14 @@ pub struct LiveConfig {
     pub realtime_scale: f64,
     /// The controller solves against `bound × headroom`.
     pub bound_headroom: f64,
+    /// Inject a straggler: `(tenant, delay_ms)` adds that much raw
+    /// wall-clock delay per source frame (independent of
+    /// `realtime_scale`) — the regression hook for the frontier's
+    /// straggler-isolation tests and the CI `live-smoke` job.
+    pub straggler: Option<(usize, f64)>,
+    /// Run the legacy frame-count barrier protocol instead of the
+    /// progress frontier (A/B baseline; see the module docs).
+    pub barrier: bool,
     pub cluster: Cluster,
     pub scheduler: SchedulerConfig,
     pub workload: WorkloadConfig,
@@ -95,6 +131,8 @@ impl Default for LiveConfig {
             heterogeneous: true,
             realtime_scale: 0.0,
             bound_headroom: 0.90,
+            straggler: None,
+            barrier: false,
             cluster: Cluster::default(),
             scheduler: SchedulerConfig::default(),
             workload: WorkloadConfig::default(),
@@ -115,13 +153,39 @@ pub struct LiveAppSummary {
     pub bound_met_frac: f64,
     /// Core quota at the final epoch.
     pub final_cores: usize,
-    /// Scheduled epochs this tenant spent parked (source paused).
+    /// Scheduled epochs this tenant spent parked (source frozen).
     pub parked_epochs: usize,
+    /// Epochs this tenant completed *at decision cadence*: reallocation
+    /// decisions that consumed a full fresh `epoch_frames` batch of its
+    /// frames. Under the frontier every admitted tenant completes one
+    /// epoch per decision; under the barrier a stalled boundary gulps a
+    /// fast tenant's banked frames in bulk and this count collapses —
+    /// the divergence the straggler regression test measures.
+    pub completed_epochs: usize,
+}
+
+impl LiveAppSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .put("index", self.index)
+            .put("name", self.name.as_str())
+            .put("profile", self.profile)
+            .put("bound_ms", self.bound_ms)
+            .put("frames", self.frames)
+            .put("avg_latency_ms", self.avg_latency_ms)
+            .put("avg_fidelity", self.avg_fidelity)
+            .put("bound_met_frac", self.bound_met_frac)
+            .put("final_cores", self.final_cores)
+            .put("parked_epochs", self.parked_epochs)
+            .put("completed_epochs", self.completed_epochs)
+    }
 }
 
 /// Outcome of a live scheduled run.
 #[derive(Debug, Clone)]
 pub struct LiveReport {
+    /// `"frontier"` or `"barrier"` (see [`LiveConfig::barrier`]).
+    pub protocol: &'static str,
     pub apps: Vec<LiveAppSummary>,
     pub allocations: Vec<AllocationFrame>,
     pub levels: Vec<usize>,
@@ -129,33 +193,410 @@ pub struct LiveReport {
     pub fairness_floor: usize,
 }
 
+impl LiveReport {
+    pub fn to_json(&self) -> Json {
+        let apps: Vec<Json> = self.apps.iter().map(|a| a.to_json()).collect();
+        let allocs: Vec<Json> = self.allocations.iter().map(|a| a.to_json()).collect();
+        Json::obj()
+            .put("protocol", self.protocol)
+            .put("total_cores", self.total_cores)
+            .put("fairness_floor", self.fairness_floor)
+            .put(
+                "levels",
+                Json::Arr(self.levels.iter().map(|&l| Json::from(l)).collect()),
+            )
+            .put("apps", Json::Arr(apps))
+            .put("allocations", Json::Arr(allocs))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing live report {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// All mutable state of a live run. Both protocols share
+/// [`fire_decision`](LiveRun::fire_decision); they differ in *when* it
+/// fires and *how* records reach the learners (deterministic frontier
+/// folds vs. the barrier's eager arrival-order folds).
+struct LiveRun<'a> {
+    cfg: &'a LiveConfig,
+    epoch_mode: bool,
+    epoch_frames: usize,
+    total: usize,
+    even: usize,
+    floor_req: usize,
+    levels: Vec<usize>,
+    apps: Vec<Arc<App>>,
+    knob_handles: Vec<KnobHandle>,
+    pause_handles: Vec<PauseHandle>,
+    sched_handles: Vec<Option<ScheduleHandle>>,
+    backends: Vec<NativeBackend>,
+    /// Effective (budget-clamped) candidates per app per rung.
+    cand_at: Vec<Vec<Vec<Vec<f64>>>>,
+    rewards: Vec<Vec<f64>>,
+    bounds: Vec<f64>,
+    shared: SharedCluster,
+    adm_state: EpochAdmission,
+    admitted: Vec<bool>,
+    rungs: Vec<usize>,
+    allocations: Vec<AllocationFrame>,
+    parked_epochs: Vec<usize>,
+    completed_epochs: Vec<usize>,
+    /// Frames folded into each tenant's learner/stats (= arrivals under
+    /// the barrier; = the deterministic fold prefix under the frontier).
+    frames_seen: Vec<usize>,
+    lat_sum: Vec<f64>,
+    fid_sum: Vec<f64>,
+    met: Vec<usize>,
+    /// Rung-residency frame counts: the live path's demand-confidence
+    /// evidence (the model is learned from live records, so "observations
+    /// at a rung" = frames folded while holding that rung).
+    rung_frames: Vec<Vec<u64>>,
+    last_seen: Vec<usize>,
+    // ---- frontier bookkeeping (idle under the barrier) ---------------
+    frontier: ProgressFrontier,
+    /// Per-tenant fold prefix for the next decision == the tenant's knob
+    /// horizon: every emitted frame is decided, every decided frame is
+    /// folded before the next decision reads the models.
+    target: Vec<usize>,
+    /// Arrived-but-unfolded records, per tenant, in frame order.
+    buf: Vec<VecDeque<FrameRecord>>,
+    delivered: Vec<usize>,
+    /// Last knobs scheduled per tenant (the drain extends these over any
+    /// post-window tail).
+    current_ks: Vec<Vec<f64>>,
+}
+
+impl LiveRun<'_> {
+    /// Fold one record into tenant `i`'s learner and summary stats.
+    fn fold(&mut self, i: usize, rec: &FrameRecord) {
+        let u = self.apps[i].spec.normalize(&rec.knobs);
+        let (y, off) = self.backends[i].group_map().targets(&rec.stage_ms, rec.end_to_end_ms);
+        self.backends[i].update(&u, &y);
+        self.backends[i].observe_offset(off);
+        self.frames_seen[i] += 1;
+        self.lat_sum[i] += rec.end_to_end_ms;
+        self.fid_sum[i] += rec.fidelity;
+        if rec.end_to_end_ms <= self.bounds[i] {
+            self.met[i] += 1;
+        }
+    }
+
+    /// Frontier-ordered replay: fold tenant `i`'s buffered records up to
+    /// its deterministic prefix for the firing decision.
+    fn fold_to_target(&mut self, i: usize) {
+        while self.frames_seen[i] < self.target[i] {
+            let rec = self.buf[i]
+                .pop_front()
+                .expect("frontier fired before its fold prefix arrived");
+            self.fold(i, &rec);
+        }
+    }
+
+    /// The scheduled window is over: decide every remaining frame under
+    /// the last decided knobs so parked tenants drain their deferred
+    /// tails — a live stream never loses frames to parking.
+    fn drain_schedules(&mut self) {
+        for i in 0..self.cfg.apps {
+            if self.target[i] < self.cfg.frames {
+                let from = self.target[i];
+                let ks = self.current_ks[i].clone();
+                self.sched_handles[i]
+                    .as_ref()
+                    .expect("frontier streams are scheduled")
+                    .extend(from, ks, self.cfg.frames);
+                self.target[i] = self.cfg.frames;
+            }
+        }
+    }
+
+    /// One reallocation decision: rebuild utility curves from the folded
+    /// models, re-decide admission, water-fill the pool, install quotas
+    /// and knobs, and record the allocation frame.
+    fn fire_decision(&mut self, epoch_idx: usize, draining: bool) {
+        let n = self.cfg.apps;
+        if !self.cfg.barrier {
+            // fold each tenant's deterministic prefix, in (tenant, epoch,
+            // seq) order, before anything reads the models
+            for a in 0..n {
+                self.fold_to_target(a);
+            }
+        }
+        // one batched prediction per (app, rung): the curve point and the
+        // best action it came from are recorded together so the retune
+        // below never re-predicts the grid
+        let mut curves: Vec<Vec<f64>> = Vec::with_capacity(n);
+        let mut best_at: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for a in 0..n {
+            let target = self.bounds[a] * self.cfg.bound_headroom;
+            let mut curve = Vec::with_capacity(self.levels.len());
+            let mut bests = Vec::with_capacity(self.levels.len());
+            for l in 0..self.levels.len() {
+                let costs = self.backends[a].predict(&self.cand_at[a][l]);
+                let best = crate::runtime::constrained_argmax(&costs, &self.rewards[a], target);
+                curve.push(if costs[best] <= target { self.rewards[a][best] } else { 0.0 });
+                bests.push(best);
+            }
+            curves.push(curve);
+            best_at.push(bests);
+        }
+        let w = self.cfg.scheduler.weights_at(n, epoch_idx * self.epoch_frames);
+        // charge the closing epoch's folded frames to the rung each
+        // stream held (rungs[] is still the closing epoch's assignment);
+        // a decision that consumed a full fresh batch completes an epoch
+        // for that tenant at decision cadence
+        for a in 0..n {
+            let fresh = self.frames_seen[a] - self.last_seen[a];
+            self.rung_frames[a][self.rungs[a]] += fresh as u64;
+            if fresh >= self.epoch_frames {
+                self.completed_epochs[a] += 1;
+            }
+            self.last_seen[a] = self.frames_seen[a];
+        }
+        let reservations: Vec<usize> = (0..n)
+            .map(|a| {
+                if self.frames_seen[a] > 0 {
+                    demand_cores_confident(
+                        &curves[a],
+                        &self.levels,
+                        self.even,
+                        &self.rung_frames[a],
+                        self.cfg.scheduler.demand_confidence,
+                    )
+                    .clamp(1, self.even)
+                } else {
+                    self.floor_req.clamp(1, self.even)
+                }
+            })
+            .collect();
+        let review_due = epoch_idx > self.cfg.scheduler.warmup_epochs
+            || self.adm_state.overdue_pending();
+        if self.epoch_mode && !draining && review_due {
+            let next = self.adm_state.decide(self.total, &w, &reservations);
+            for a in 0..n {
+                if next[a] && !self.admitted[a] {
+                    if self.cfg.barrier {
+                        // re-admitted: reopen the source gate (the warm
+                        // model learned so far is still in `backends`)
+                        self.pause_handles[a].resume();
+                    } else {
+                        // fast-forward: the re-admitted tenant owes one
+                        // epoch of frames for the *current* decision, not
+                        // the backlog it sat out — the straggler-stall fix
+                        self.frontier.resume_at(a, epoch_idx);
+                        self.pause_handles[a].resume_at(epoch_idx);
+                    }
+                } else if !next[a] && self.admitted[a] {
+                    if self.cfg.barrier {
+                        self.pause_handles[a].pause();
+                    } else {
+                        // parking = not extending the knob schedule: the
+                        // source blocks at the frozen horizon with every
+                        // emitted frame already folded, and the tenant
+                        // leaves the frontier's participation set
+                        self.frontier.park(a);
+                    }
+                }
+            }
+            self.admitted = next;
+        } else if self.epoch_mode && !draining {
+            self.admitted = self.adm_state.hold();
+        }
+        for (a, &adm) in self.admitted.iter().enumerate() {
+            if !adm {
+                self.parked_epochs[a] += 1;
+            }
+        }
+        let active: Vec<usize> = (0..n).filter(|&a| self.admitted[a]).collect();
+        let sub_curves: Vec<Vec<f64>> = active.iter().map(|&a| curves[a].clone()).collect();
+        let sub_w: Vec<f64> = active.iter().map(|&a| w[a]).collect();
+        let sub_prev: Vec<usize> = active.iter().map(|&a| self.rungs[a]).collect();
+        let sub = scheduler::allocate_v2(
+            &sub_curves,
+            &self.levels,
+            self.total,
+            &sub_w,
+            Some(&sub_prev),
+            self.cfg.scheduler.hysteresis,
+        );
+        for (k, &a) in active.iter().enumerate() {
+            self.rungs[a] = sub[k];
+        }
+        if self.epoch_mode {
+            reserve_top_up(
+                &mut self.rungs,
+                &self.levels,
+                self.total,
+                &self.admitted,
+                &reservations,
+                self.even,
+                &w,
+            );
+        }
+        let cores: Vec<usize> = (0..n)
+            .map(|a| if self.admitted[a] { self.levels[self.rungs[a]] } else { 0 })
+            .collect();
+        let parked: Vec<bool> = self.admitted.iter().map(|&a| !a).collect();
+        self.shared.set_quotas_parked(&cores, &parked);
+        // retune every running pipeline to the best predicted-feasible
+        // config at its new quota, parallelism clamped to the grant: the
+        // barrier latches "from now", the frontier pins the knobs to the
+        // exact frames the decision governs
+        for &a in &active {
+            let pick = best_at[a][self.rungs[a]];
+            let ks = self.apps[a].spec.denormalize(&self.cand_at[a][self.rungs[a]][pick]);
+            if self.cfg.barrier {
+                self.knob_handles[a].set(ks);
+            } else if self.target[a] < self.cfg.frames {
+                let from = self.target[a];
+                let to = (from + self.epoch_frames).min(self.cfg.frames);
+                self.sched_handles[a]
+                    .as_ref()
+                    .expect("frontier streams are scheduled")
+                    .extend(from, ks.clone(), to);
+                self.current_ks[a] = ks;
+                self.target[a] = to;
+            }
+        }
+        let churn_cores = self
+            .allocations
+            .last()
+            .map(|prev| AllocationFrame::churn_vs(self.shared.quotas(), prev))
+            .unwrap_or(0);
+        let predicted_utility: Vec<f64> = (0..n)
+            .map(|a| if self.admitted[a] { curves[a][self.rungs[a]] } else { 0.0 })
+            .collect();
+        self.allocations.push(AllocationFrame {
+            epoch: epoch_idx,
+            start_frame: epoch_idx * self.epoch_frames,
+            levels: self.rungs.clone(),
+            // read back from the shared cluster: the bookkeeper that
+            // enforced the budget is the one the report quotes
+            cores: self.shared.quotas().to_vec(),
+            predicted_utility,
+            parked,
+            churn_cores,
+        });
+    }
+
+    /// Frontier protocol: decisions fire as the envelope advances, each
+    /// folding a deterministic per-tenant prefix.
+    fn frontier_loop(&mut self, rx: &Receiver<(usize, FrameRecord)>) {
+        let mut next_decision = 1usize;
+        if next_decision * self.epoch_frames >= self.cfg.frames {
+            // zero-decision run: the whole stream is decided up front
+            self.drain_schedules();
+        }
+        while let Ok((i, rec)) = rx.recv() {
+            self.delivered[i] += 1;
+            if self.admitted[i] {
+                self.frontier.on_frame(i);
+            }
+            if self.delivered[i] == self.cfg.frames {
+                self.frontier.finish(i);
+            }
+            self.buf[i].push_back(rec);
+            while next_decision * self.epoch_frames < self.cfg.frames
+                && self.frontier.passed(next_decision - 1)
+            {
+                self.fire_decision(next_decision, false);
+                next_decision += 1;
+                if next_decision * self.epoch_frames >= self.cfg.frames {
+                    self.drain_schedules();
+                }
+            }
+        }
+        // fold every banked tail record (post-window epochs feed the
+        // summary stats, not decisions), still in per-tenant frame order
+        for i in 0..self.cfg.apps {
+            while let Some(rec) = self.buf[i].pop_front() {
+                self.fold(i, &rec);
+            }
+        }
+    }
+
+    /// Legacy barrier protocol: eager folds, frame-count boundaries over
+    /// the admitted set, wall-clock knob latching.
+    fn barrier_loop(&mut self, rx: &Receiver<(usize, FrameRecord)>) {
+        let mut boundary = self.epoch_frames;
+        let mut draining = false;
+        while let Ok((i, rec)) = rx.recv() {
+            self.fold(i, &rec);
+            // an epoch completes when every *admitted* app has streamed
+            // past the boundary (paused sources cannot advance)
+            let all_past = (0..self.cfg.apps)
+                .filter(|&a| self.admitted[a])
+                .all(|a| self.frames_seen[a] >= boundary.min(self.cfg.frames));
+            if all_past && boundary < self.cfg.frames {
+                let epoch_idx = self.allocations.len();
+                self.fire_decision(epoch_idx, draining);
+                boundary += self.epoch_frames;
+            }
+            // final drain: once every admitted tenant has delivered all
+            // its frames, reopen the parked tenants' gates so they finish
+            // too (frames are deferred by parking, never lost)
+            if !draining
+                && self.admitted.iter().any(|&a| !a)
+                && (0..self.cfg.apps)
+                    .filter(|&a| self.admitted[a])
+                    .all(|a| self.frames_seen[a] >= self.cfg.frames)
+            {
+                draining = true;
+                for a in 0..self.cfg.apps {
+                    if !self.admitted[a] {
+                        self.pause_handles[a].resume();
+                        self.admitted[a] = true;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Stream `cfg.apps` generated pipelines through the threaded engine
 /// concurrently, learning each latency model online and reallocating the
-/// shared cores every `scheduler.epoch_frames` frames. With
+/// shared cores every `scheduler.epoch_frames` frames of per-tenant
+/// progress (see the module docs for the frontier protocol). With
 /// `scheduler.admission_epoch`, an over-subscribed floor parks tenants by
-/// pausing their sources; parking is re-decided every epoch from learned
-/// demands with starvation-bounded rotation, and parked tenants drain
-/// their remaining frames after the scheduled window.
+/// freezing their schedules; parking is re-decided every epoch from
+/// learned demands with starvation-bounded rotation, and parked tenants
+/// drain their remaining frames after the scheduled window.
 pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     assert!(cfg.apps > 0 && cfg.frames > 0);
     let total = cfg.cluster.total_cores();
     assert!(cfg.apps <= total, "one core per app minimum");
+    if let Some((s, delay)) = cfg.straggler {
+        anyhow::ensure!(
+            s < cfg.apps,
+            "straggler tenant {s} out of range (run has {} apps)",
+            cfg.apps
+        );
+        anyhow::ensure!(delay >= 0.0, "straggler delay must be >= 0 ms");
+    }
     let epoch_mode = cfg.scheduler.admission_epoch;
     let weights0 = cfg.scheduler.weights_at(cfg.apps, 0);
     let floor_req = cfg.scheduler.requested_floor(total, cfg.apps);
     // run-level parking cannot work on live streams (frames cannot be
     // dropped retroactively): an over-subscribed floor is rejected unless
-    // epoch-granular admission is on, which parks by pausing sources
+    // epoch-granular admission is on, which parks by freezing schedules
     anyhow::ensure!(
         epoch_mode || floor_req * cfg.apps <= total,
         "fairness floor x apps exceeds the {total}-core pool; whole-run \
          admission parking is fleet-only (a live stream cannot drop frames) \
          — lower --floor, or pass --admission-epoch to park live tenants by \
-         pausing their sources"
+         freezing their sources"
     );
-    let mut adm_state =
-        EpochAdmission::new(cfg.apps, cfg.scheduler.starvation_bound_or_default());
-    let mut admitted: Vec<bool> = if epoch_mode {
+    let mut adm_state = EpochAdmission::new(cfg.apps, cfg.scheduler.starvation_bound_or_default())
+        .with_hysteresis(cfg.scheduler.admission_hysteresis);
+    let admitted: Vec<bool> = if epoch_mode {
         adm_state.decide(
             total,
             &weights0,
@@ -185,6 +626,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     let mut apps: Vec<Arc<App>> = Vec::with_capacity(cfg.apps);
     let mut knob_handles: Vec<KnobHandle> = Vec::with_capacity(cfg.apps);
     let mut pause_handles: Vec<PauseHandle> = Vec::with_capacity(cfg.apps);
+    let mut sched_handles: Vec<Option<ScheduleHandle>> = Vec::with_capacity(cfg.apps);
     let mut profiles: Vec<AppProfile> = Vec::with_capacity(cfg.apps);
     for i in 0..cfg.apps {
         let profile = AppProfile::for_fleet_member(cfg.heterogeneous, i, cfg.workload.profile);
@@ -200,6 +642,10 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
             &wcfg,
             &slice,
         ));
+        let source_delay_ms = match cfg.straggler {
+            Some((s, d)) if s == i => d,
+            _ => 0.0,
+        };
         let handle = spawn_stream(
             Arc::clone(&app),
             app.spec.defaults(),
@@ -208,13 +654,23 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                 realtime_scale: cfg.realtime_scale,
                 queue_capacity: 8,
                 seed: cfg.seed.wrapping_add(0x11CE ^ i as u64),
-                // parked tenants spawn with the source gate closed: not a
-                // single frame enters the pipe until re-admission
-                start_paused: !admitted[i],
+                // the barrier parks by closing the source gate; the
+                // frontier parks by freezing the knob-schedule horizon
+                // (an initially-parked tenant simply starts with an
+                // empty schedule), so its gate stays open
+                start_paused: cfg.barrier && !admitted[i],
+                epoch_frames: if cfg.barrier { 0 } else { epoch_frames },
+                source_delay_ms,
+                knob_horizon: if cfg.barrier {
+                    None
+                } else {
+                    Some(if admitted[i] { epoch_frames.min(cfg.frames) } else { 0 })
+                },
             },
         );
         knob_handles.push(handle.knob_handle());
         pause_handles.push(handle.pause_handle());
+        sched_handles.push(handle.schedule_handle());
         let tx = rec_tx.clone();
         std::thread::Builder::new()
             .name(format!("forward-{}", app.spec.name))
@@ -232,9 +688,8 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     drop(rec_tx);
 
     // ---- per-app scheduler state: model, candidate grid, rewards -------
-    let mut backends: Vec<NativeBackend> =
+    let backends: Vec<NativeBackend> =
         apps.iter().map(|a| NativeBackend::structured(&a.spec)).collect();
-    // effective (budget-clamped) candidates per app per rung
     let mut cand_at: Vec<Vec<Vec<Vec<f64>>>> = Vec::with_capacity(cfg.apps);
     let mut rewards: Vec<Vec<f64>> = Vec::with_capacity(cfg.apps);
     for (i, app) in apps.iter().enumerate() {
@@ -252,15 +707,15 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     }
 
     let bounds: Vec<f64> = apps.iter().map(|a| a.spec.latency_bounds_ms[0]).collect();
-    let mut shared = SharedCluster::parked_even(cfg.cluster.clone(), &admitted);
-    let mut rungs = vec![even_rung; cfg.apps];
+    let shared = SharedCluster::parked_even(cfg.cluster.clone(), &admitted);
+    let rungs = vec![even_rung; cfg.apps];
     let mut parked_epochs = vec![0usize; cfg.apps];
     for (i, &a) in admitted.iter().enumerate() {
         if !a {
             parked_epochs[i] += 1;
         }
     }
-    let mut allocations: Vec<AllocationFrame> = vec![AllocationFrame {
+    let allocations: Vec<AllocationFrame> = vec![AllocationFrame {
         epoch: 0,
         start_frame: 0,
         levels: rungs.clone(),
@@ -270,202 +725,81 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
         churn_cores: 0,
     }];
 
-    // ---- consume live records, learn, reallocate at epoch boundaries ---
-    let mut frames_seen = vec![0usize; cfg.apps];
-    let mut lat_sum = vec![0.0f64; cfg.apps];
-    let mut fid_sum = vec![0.0f64; cfg.apps];
-    let mut met = vec![0usize; cfg.apps];
-    // rung-residency frame counts: the live path's demand-confidence
-    // evidence (the model is learned from live records, so "observations
-    // at a rung" = frames streamed while holding that rung)
-    let mut rung_frames: Vec<Vec<u64>> = vec![vec![0; levels.len()]; cfg.apps];
-    let mut last_seen = vec![0usize; cfg.apps];
-    let mut boundary = epoch_frames;
-    let mut draining = false;
-    while let Ok((i, rec)) = rec_rx.recv() {
-        let u = apps[i].spec.normalize(&rec.knobs);
-        let (y, off) = backends[i].group_map().targets(&rec.stage_ms, rec.end_to_end_ms);
-        backends[i].update(&u, &y);
-        backends[i].observe_offset(off);
-        frames_seen[i] += 1;
-        lat_sum[i] += rec.end_to_end_ms;
-        fid_sum[i] += rec.fidelity;
-        if rec.end_to_end_ms <= bounds[i] {
-            met[i] += 1;
-        }
-
-        // an epoch completes when every *admitted* app has streamed past
-        // the boundary (parked sources are gated and cannot advance)
-        let all_past = (0..cfg.apps)
-            .filter(|&a| admitted[a])
-            .all(|a| frames_seen[a] >= boundary.min(cfg.frames));
-        if all_past && boundary < cfg.frames {
-            // one batched prediction per (app, rung): the curve point and
-            // the best action it came from are recorded together so the
-            // retune below never re-predicts the grid
-            let mut curves: Vec<Vec<f64>> = Vec::with_capacity(cfg.apps);
-            let mut best_at: Vec<Vec<usize>> = Vec::with_capacity(cfg.apps);
-            for a in 0..cfg.apps {
-                let target = bounds[a] * cfg.bound_headroom;
-                let mut curve = Vec::with_capacity(levels.len());
-                let mut bests = Vec::with_capacity(levels.len());
-                for l in 0..levels.len() {
-                    let costs = backends[a].predict(&cand_at[a][l]);
-                    let best =
-                        crate::runtime::constrained_argmax(&costs, &rewards[a], target);
-                    curve.push(if costs[best] <= target { rewards[a][best] } else { 0.0 });
-                    bests.push(best);
-                }
-                curves.push(curve);
-                best_at.push(bests);
-            }
-            let epoch_idx = allocations.len();
-            let w = cfg.scheduler.weights_at(cfg.apps, boundary);
-            // charge the closing epoch's frames to the rung each stream
-            // held (rungs[] is still the closing epoch's assignment here)
-            for a in 0..cfg.apps {
-                rung_frames[a][rungs[a]] += (frames_seen[a] - last_seen[a]) as u64;
-                last_seen[a] = frames_seen[a];
-            }
-            let reservations: Vec<usize> = (0..cfg.apps)
-                .map(|a| {
-                    if frames_seen[a] > 0 {
-                        demand_cores_confident(
-                            &curves[a],
-                            &levels,
-                            even,
-                            &rung_frames[a],
-                            cfg.scheduler.demand_confidence,
-                        )
-                        .clamp(1, even)
-                    } else {
-                        floor_req.clamp(1, even)
-                    }
-                })
-                .collect();
-            let review_due = epoch_idx > cfg.scheduler.warmup_epochs
-                || adm_state.overdue_pending();
-            if epoch_mode && !draining && review_due {
-                let next = adm_state.decide(total, &w, &reservations);
-                for a in 0..cfg.apps {
-                    if next[a] && !admitted[a] {
-                        // re-admitted: reopen the source gate (the warm
-                        // model learned so far is still in `backends`)
-                        pause_handles[a].resume();
-                    } else if !next[a] && admitted[a] {
-                        pause_handles[a].pause();
-                    }
-                }
-                admitted = next;
-            } else if epoch_mode && !draining {
-                admitted = adm_state.hold();
-            }
-            for (a, &adm) in admitted.iter().enumerate() {
-                if !adm {
-                    parked_epochs[a] += 1;
-                }
-            }
-            let active: Vec<usize> = (0..cfg.apps).filter(|&a| admitted[a]).collect();
-            let sub_curves: Vec<Vec<f64>> =
-                active.iter().map(|&a| curves[a].clone()).collect();
-            let sub_w: Vec<f64> = active.iter().map(|&a| w[a]).collect();
-            let sub_prev: Vec<usize> = active.iter().map(|&a| rungs[a]).collect();
-            let sub = scheduler::allocate_v2(
-                &sub_curves,
-                &levels,
-                total,
-                &sub_w,
-                Some(&sub_prev),
-                cfg.scheduler.hysteresis,
-            );
-            for (k, &a) in active.iter().enumerate() {
-                rungs[a] = sub[k];
-            }
-            if epoch_mode {
-                reserve_top_up(
-                    &mut rungs,
-                    &levels,
-                    total,
-                    &admitted,
-                    &reservations,
-                    even,
-                    &w,
-                );
-            }
-            let cores: Vec<usize> = (0..cfg.apps)
-                .map(|a| if admitted[a] { levels[rungs[a]] } else { 0 })
-                .collect();
-            let parked: Vec<bool> = admitted.iter().map(|&a| !a).collect();
-            shared.set_quotas_parked(&cores, &parked);
-            // retune every running pipeline to the best predicted-feasible
-            // config at its new quota, parallelism clamped to the grant
-            for &a in &active {
-                let pick = best_at[a][rungs[a]];
-                let ks = apps[a].spec.denormalize(&cand_at[a][rungs[a]][pick]);
-                knob_handles[a].set(ks);
-            }
-            let churn_cores = allocations
-                .last()
-                .map(|prev| AllocationFrame::churn_vs(shared.quotas(), prev))
-                .unwrap_or(0);
-            allocations.push(AllocationFrame {
-                epoch: epoch_idx,
-                start_frame: boundary,
-                levels: rungs.clone(),
-                // read back from the shared cluster: the bookkeeper that
-                // enforced the budget is the one the report quotes
-                cores: shared.quotas().to_vec(),
-                predicted_utility: (0..cfg.apps)
-                    .map(|a| if admitted[a] { curves[a][rungs[a]] } else { 0.0 })
-                    .collect(),
-                parked,
-                churn_cores,
-            });
-            boundary += epoch_frames;
-        }
-
-        // final drain: once every admitted tenant has delivered all its
-        // frames, reopen the parked tenants' gates so they finish too (a
-        // live stream never loses frames to parking — they are deferred)
-        if !draining
-            && admitted.iter().any(|&a| !a)
-            && (0..cfg.apps).filter(|&a| admitted[a]).all(|a| frames_seen[a] >= cfg.frames)
-        {
-            draining = true;
-            for a in 0..cfg.apps {
-                if !admitted[a] {
-                    pause_handles[a].resume();
-                    admitted[a] = true;
-                }
-            }
-        }
+    let frontier = ProgressFrontier::new(cfg.apps, epoch_frames, &admitted);
+    let target: Vec<usize> = admitted
+        .iter()
+        .map(|&a| if a { epoch_frames.min(cfg.frames) } else { 0 })
+        .collect();
+    let current_ks: Vec<Vec<f64>> = apps.iter().map(|a| a.spec.defaults()).collect();
+    let n_levels = levels.len();
+    let mut run = LiveRun {
+        cfg,
+        epoch_mode,
+        epoch_frames,
+        total,
+        even,
+        floor_req,
+        levels,
+        apps,
+        knob_handles,
+        pause_handles,
+        sched_handles,
+        backends,
+        cand_at,
+        rewards,
+        bounds,
+        shared,
+        adm_state,
+        admitted,
+        rungs,
+        allocations,
+        parked_epochs,
+        completed_epochs: vec![0; cfg.apps],
+        frames_seen: vec![0; cfg.apps],
+        lat_sum: vec![0.0; cfg.apps],
+        fid_sum: vec![0.0; cfg.apps],
+        met: vec![0; cfg.apps],
+        rung_frames: vec![vec![0; n_levels]; cfg.apps],
+        last_seen: vec![0; cfg.apps],
+        frontier,
+        target,
+        buf: (0..cfg.apps).map(|_| VecDeque::new()).collect(),
+        delivered: vec![0; cfg.apps],
+        current_ks,
+    };
+    if cfg.barrier {
+        run.barrier_loop(&rec_rx);
+    } else {
+        run.frontier_loop(&rec_rx);
     }
 
     // the closing quota is what the last epoch actually installed (a
     // tenant parked at the final decide closes at zero cores, not at its
     // stale pre-park rung)
-    let final_cores = allocations.last().expect("epoch 0 recorded").cores.clone();
+    let final_cores = run.allocations.last().expect("epoch 0 recorded").cores.clone();
     let summaries: Vec<LiveAppSummary> = (0..cfg.apps)
         .map(|i| {
-            let n = frames_seen[i].max(1) as f64;
+            let n = run.frames_seen[i].max(1) as f64;
             LiveAppSummary {
                 index: i,
-                name: apps[i].spec.name.clone(),
+                name: run.apps[i].spec.name.clone(),
                 profile: profiles[i].name(),
-                bound_ms: bounds[i],
-                frames: frames_seen[i],
-                avg_latency_ms: lat_sum[i] / n,
-                avg_fidelity: fid_sum[i] / n,
-                bound_met_frac: met[i] as f64 / n,
+                bound_ms: run.bounds[i],
+                frames: run.frames_seen[i],
+                avg_latency_ms: run.lat_sum[i] / n,
+                avg_fidelity: run.fid_sum[i] / n,
+                bound_met_frac: run.met[i] as f64 / n,
                 final_cores: final_cores[i],
-                parked_epochs: parked_epochs[i],
+                parked_epochs: run.parked_epochs[i],
+                completed_epochs: run.completed_epochs[i],
             }
         })
         .collect();
     Ok(LiveReport {
+        protocol: if cfg.barrier { "barrier" } else { "frontier" },
         apps: summaries,
-        allocations,
-        levels,
+        allocations: run.allocations,
+        levels: run.levels,
         total_cores: total,
         fairness_floor: floor,
     })
@@ -488,6 +822,7 @@ mod tests {
             ..Default::default()
         };
         let report = run_live(&cfg).unwrap();
+        assert_eq!(report.protocol, "frontier");
         assert_eq!(report.apps.len(), 3);
         for a in &report.apps {
             assert_eq!(a.frames, 90, "app {} lost frames", a.index);
@@ -503,6 +838,12 @@ mod tests {
         // profiles alternate
         assert_eq!(report.apps[0].profile, "light");
         assert_eq!(report.apps[1].profile, "heavy");
+        // without stragglers or parking every tenant completes one epoch
+        // per decision, at decision cadence
+        let decisions = report.allocations.len() - 1;
+        for a in &report.apps {
+            assert_eq!(a.completed_epochs, decisions, "app {}", a.index);
+        }
     }
 
     #[test]
@@ -549,9 +890,9 @@ mod tests {
     }
 
     #[test]
-    fn live_epoch_admission_parks_by_pausing_and_loses_no_frames() {
+    fn live_epoch_admission_parks_and_loses_no_frames() {
         // 3 tenants demanding a 5-core floor on a 12-core pool: one is
-        // parked (source paused) per epoch; every tenant still delivers
+        // parked (schedule frozen) per epoch; every tenant still delivers
         // all its frames (parked tenants drain after the window)
         let cfg = LiveConfig {
             apps: 3,
@@ -582,6 +923,16 @@ mod tests {
         assert!(
             report.apps.iter().any(|a| a.parked_epochs > 0),
             "nobody was ever parked"
+        );
+        // a parked tenant skips epochs instead of replaying them, so its
+        // decision-cadence epoch count falls behind the admitted tenants'
+        let max_completed = report.apps.iter().map(|a| a.completed_epochs).max().unwrap();
+        let parked_most =
+            report.apps.iter().max_by_key(|a| a.parked_epochs).unwrap();
+        assert!(
+            parked_most.completed_epochs < max_completed
+                || report.apps.iter().all(|a| a.parked_epochs == 0),
+            "parked tenant completed as many epochs as the admitted ones: {report:?}"
         );
         // budget safety at every epoch; parked tenants hold zero cores
         for alloc in &report.allocations {
@@ -622,5 +973,56 @@ mod tests {
         for alloc in &report.allocations {
             assert!(alloc.total_cores() <= report.total_cores);
         }
+    }
+
+    #[test]
+    fn barrier_protocol_remains_available_for_ab_comparison() {
+        let cfg = LiveConfig {
+            apps: 2,
+            frames: 60,
+            seed: 3,
+            candidates: 8,
+            realtime_scale: 0.0,
+            barrier: true,
+            scheduler: SchedulerConfig { epoch_frames: 20, ..Default::default() },
+            ..Default::default()
+        };
+        let report = run_live(&cfg).unwrap();
+        assert_eq!(report.protocol, "barrier");
+        for a in &report.apps {
+            assert_eq!(a.frames, 60, "app {} lost frames", a.index);
+        }
+        for alloc in &report.allocations {
+            assert!(alloc.total_cores() <= report.total_cores);
+        }
+    }
+
+    #[test]
+    fn live_report_serializes_per_tenant_epoch_counts() {
+        let cfg = LiveConfig {
+            apps: 2,
+            frames: 40,
+            seed: 6,
+            candidates: 6,
+            scheduler: SchedulerConfig { epoch_frames: 20, ..Default::default() },
+            ..Default::default()
+        };
+        let report = run_live(&cfg).unwrap();
+        let json = report.to_json().to_string();
+        assert!(json.contains("\"protocol\""), "{json}");
+        assert!(json.contains("\"completed_epochs\""), "{json}");
+        assert!(json.contains("\"parked_epochs\""), "{json}");
+        assert!(json.contains("\"allocations\""), "{json}");
+    }
+
+    #[test]
+    fn live_rejects_out_of_range_straggler() {
+        let cfg = LiveConfig {
+            apps: 2,
+            straggler: Some((5, 10.0)),
+            ..Default::default()
+        };
+        let err = run_live(&cfg).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
     }
 }

@@ -55,6 +55,7 @@
 //! [`BudgetedController::utility_at`]:
 //!     crate::tuner::BudgetedController::utility_at
 
+pub mod frontier;
 pub mod live;
 
 use crate::util::json::Json;
@@ -122,6 +123,16 @@ pub struct SchedulerConfig {
     /// (PR 4 ROADMAP note). 0 (the default) reproduces the historical
     /// optimistic demand bit-for-bit.
     pub demand_confidence: usize,
+    /// Re-admission hysteresis for epoch-granular admission (cores): a
+    /// *parked, non-overdue* tenant is only re-admitted when the pool
+    /// holds this many idle cores beyond its reservation. Without it, a
+    /// load blip that frees exactly one tenant's floor re-admits then
+    /// immediately re-parks — each transition costing a pause/drain
+    /// cycle. Set it to roughly one rotation period's churn (the floor
+    /// of the tenants being rotated). Overdue tenants bypass the gate —
+    /// the starvation bound stays honored. 0 (the default) reproduces
+    /// the historical decision bit-for-bit.
+    pub admission_hysteresis: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -139,6 +150,7 @@ impl Default for SchedulerConfig {
             starvation_bound: 0,
             tier_shift: None,
             demand_confidence: 0,
+            admission_hysteresis: 0,
         }
     }
 }
@@ -331,6 +343,9 @@ pub struct EpochAdmission {
     parked_streak: Vec<usize>,
     admitted_streak: Vec<usize>,
     decided: bool,
+    /// Re-admission slack gate (cores); see
+    /// [`SchedulerConfig::admission_hysteresis`].
+    hysteresis: usize,
 }
 
 impl EpochAdmission {
@@ -342,7 +357,16 @@ impl EpochAdmission {
             parked_streak: vec![0; apps],
             admitted_streak: vec![0; apps],
             decided: false,
+            hysteresis: 0,
         }
+    }
+
+    /// Enable the re-admission slack gate: a parked, non-overdue tenant
+    /// is only re-admitted when `slack` idle cores remain beyond its
+    /// reservation ([`SchedulerConfig::admission_hysteresis`]).
+    pub fn with_hysteresis(mut self, slack: usize) -> Self {
+        self.hysteresis = slack;
+        self
     }
 
     /// The starvation bound in force.
@@ -355,16 +379,23 @@ impl EpochAdmission {
         &self.admitted
     }
 
-    /// Tenants ranked for admission (see the type docs for the order).
-    fn rank(&self, weights: &[f64]) -> Vec<usize> {
-        let n = weights.len();
-        let overdue: Vec<bool> = (0..n)
+    /// Per-tenant overdue flags: parked tenants whose next parked epoch
+    /// would break the starvation bound.
+    fn overdue_flags(&self) -> Vec<bool> {
+        (0..self.admitted.len())
             .map(|i| {
                 self.decided
                     && !self.admitted[i]
                     && self.parked_streak[i] + 1 >= self.bound
             })
-            .collect();
+            .collect()
+    }
+
+    /// Tenants ranked for admission (see the type docs for the order).
+    fn rank(&self, weights: &[f64]) -> Vec<usize> {
+        let n = weights.len();
+        let overdue = self.overdue_flags();
+        debug_assert_eq!(overdue.len(), n);
         let class = |i: usize| -> u8 {
             if overdue[i] {
                 0
@@ -406,11 +437,19 @@ impl EpochAdmission {
         assert_eq!(weights.len(), n, "weight vector shape");
         assert_eq!(reservations.len(), n, "reservation vector shape");
         let order = self.rank(weights);
+        let overdue = self.overdue_flags();
         let mut next = vec![false; n];
         let mut used = 0usize;
         for &i in &order {
             let r = reservations[i].clamp(1, total.max(1));
-            if used + r <= total {
+            // re-admission hysteresis: a parked, non-overdue tenant only
+            // re-enters when `hysteresis` idle cores remain beyond its
+            // reservation, so a one-epoch load blip cannot flap it
+            // through a re-admit/re-park pause/drain cycle. Overdue
+            // tenants bypass the gate (the starvation bound wins).
+            let slack =
+                if self.decided && !self.admitted[i] && !overdue[i] { self.hysteresis } else { 0 };
+            if used + r + slack <= total {
                 next[i] = true;
                 used += r;
             }
@@ -468,10 +507,7 @@ impl EpochAdmission {
     /// than the warmup span) forces an early decision instead of silently
     /// overshooting the guarantee.
     pub fn overdue_pending(&self) -> bool {
-        self.decided
-            && (0..self.admitted.len()).any(|i| {
-                !self.admitted[i] && self.parked_streak[i] + 1 >= self.bound
-            })
+        self.overdue_flags().into_iter().any(|o| o)
     }
 }
 
@@ -1046,6 +1082,44 @@ mod tests {
                 }
             }
             assert!(ran.iter().all(|&r| r), "a tenant never ran: {ran:?}");
+        }
+    }
+
+    #[test]
+    fn admission_hysteresis_blocks_marginal_readmission_until_overdue() {
+        // pool 10; tenants 0,1 reserve 4 each, tenant 2 gets parked.
+        // With slack 3, the 2 idle cores left by tenant 2's shrunken
+        // demand are not enough headroom to re-admit it ...
+        let mut adm = EpochAdmission::new(3, 2).with_hysteresis(3);
+        assert_eq!(adm.decide(10, &[1.0; 3], &[4, 4, 4]), vec![true, true, false]);
+        let next = adm.decide(10, &[1.0; 3], &[4, 4, 2]);
+        assert!(!next[2], "marginal slack must not flap the tenant back in: {next:?}");
+        // ... but the starvation bound still wins: once overdue, the
+        // tenant bypasses the slack gate entirely
+        let next = adm.decide(10, &[1.0; 3], &[4, 4, 2]);
+        assert!(next[2], "overdue tenant must bypass the hysteresis gate: {next:?}");
+        // and ample slack re-admits immediately (no gate once it fits)
+        let mut adm = EpochAdmission::new(3, 8).with_hysteresis(3);
+        assert_eq!(adm.decide(10, &[1.0; 3], &[4, 4, 4]), vec![true, true, false]);
+        let next = adm.decide(10, &[1.0; 3], &[2, 2, 2]);
+        assert!(next[2], "slack 10-6=4 >= reservation 2 + gate 3: {next:?}");
+    }
+
+    #[test]
+    fn admission_hysteresis_zero_is_bit_identical_to_legacy() {
+        let mut rng = crate::util::Rng::new(0xB22);
+        for _case in 0..20 {
+            let n = 2 + rng.below(5);
+            let total = 6 + rng.below(10);
+            let mut legacy = EpochAdmission::new(n, 3);
+            let mut gated = EpochAdmission::new(n, 3).with_hysteresis(0);
+            for _e in 0..30 {
+                let res: Vec<usize> = (0..n).map(|_| 1 + rng.below(5)).collect();
+                assert_eq!(
+                    legacy.decide(total, &vec![1.0; n], &res),
+                    gated.decide(total, &vec![1.0; n], &res)
+                );
+            }
         }
     }
 

@@ -231,8 +231,12 @@ impl Default for DagConfig {
 /// clamps engage).
 pub const DRIFT_STEP_FRAC: f64 = 0.05;
 
-/// Minimum precomputed drift-walk horizon (frames); the table covers at
-/// least `max(trace_frames, this)` and holds its last value beyond.
+/// Minimum *legacy* drift-walk horizon (frames): below
+/// `max(trace_frames, this)` the streamed walk reproduces the historical
+/// precomputed tables byte-for-byte; past it the walk keeps walking on a
+/// per-stage continuation stream (ISSUE 6 frozen-tail fix) instead of
+/// holding its last value. Nothing is precomputed any more — values
+/// materialize lazily as frames are queried ([`DriftWalk`]).
 pub const DRIFT_TABLE_FRAMES: usize = 2048;
 
 /// The drift walk for a generated app, on its own seed stream (never

@@ -112,57 +112,135 @@ impl ContentScript {
 pub const FEATURE_DECAY: f64 = 1.35;
 
 /// Slow per-stage cost-coefficient drift: one bounded random walk per
-/// stage, precomputed into a table at generation time so the model stays
-/// a pure (deterministic, `Send + Sync`) function of the frame index.
+/// stage, *streamed incrementally* — the model stays a pure
+/// (deterministic, `Send + Sync`) function of `(seed, stage, frame)`
+/// without precomputing `max(trace_frames, 2048)` frames per stage
+/// (ISSUE 6: memory used to scale with fleet size × drift horizon, and
+/// long live runs silently hit a frozen tail).
 ///
 /// Walk dynamics: `w[0] = 1`, `w[t+1] = clamp(w[t] + U(-step, step),
 /// 1 − bound, 1 + bound)` — the coefficient wanders slowly inside the
 /// band instead of jumping the way the scripted scene change does. The
 /// two compose: a scene cut moves the *content*, the walk moves the
 /// *cost model* (On-line Application Autotuning Exploiting Ensemble
-/// Models, PAPERS.md). Past the precomputed horizon the walk holds its
-/// last value (drift is "slow" by definition; runs longer than the table
-/// see a frozen tail, not a wrap-around jump).
-#[derive(Debug, Clone)]
+/// Models, PAPERS.md).
+///
+/// Implementation: the historical generator consumed ONE sequential rng
+/// stream, stage by stage, `horizon` draws each. Construction now only
+/// *checkpoints* the rng state at each stage's draw offset (O(stages)
+/// memory, O(stages × horizon) cheap xoshiro advances); each stage's
+/// value table then grows lazily, in chunks, as frames are queried —
+/// values below the legacy horizon are byte-identical to the historical
+/// precomputed tables. Past the horizon the walk *keeps walking* on a
+/// per-stage continuation stream (seeded from `(seed, stage)`, stepping
+/// continuously from the legacy end state) instead of freezing at its
+/// last value — the frozen-tail fix.
+#[derive(Debug)]
 pub struct DriftWalk {
     /// Walk amplitude B: every multiplier stays within `[1 − B, 1 + B]`.
     pub bound: f64,
-    /// Per-stage multiplier tables, `tables[stage][frame]`.
-    tables: Vec<Vec<f64>>,
+    /// Per-frame step amplitude.
+    step: f64,
+    /// Legacy horizon: draws below it come from the historical shared
+    /// stream (byte-compat); draws past it from the continuation stream.
+    horizon: usize,
+    /// Lazily grown per-stage walks (interior mutability: `at` is called
+    /// through `&self` from concurrent engine/simulator threads).
+    stages: Vec<std::sync::RwLock<StageWalk>>,
 }
 
+/// One stage's walk state: the values materialized so far plus the rng
+/// cursors positioned at the next draw.
+#[derive(Debug, Clone)]
+struct StageWalk {
+    /// Values materialized so far (`vals[frame]`), grown in chunks.
+    vals: Vec<f64>,
+    /// Next walk value (the one `vals[vals.len()]` would hold).
+    w: f64,
+    /// Historical shared stream, checkpointed at this stage's offset.
+    legacy: crate::util::Rng,
+    /// Continuation stream for draws past the legacy horizon.
+    cont: crate::util::Rng,
+}
+
+/// Chunk granularity of lazy walk growth: big enough to amortize the
+/// write-lock, small enough that short live runs stop well before the
+/// historical 2048-frame precompute.
+const DRIFT_CHUNK: usize = 256;
+
 impl DriftWalk {
-    /// Generate `stages` independent walks of `frames` steps from `seed`
-    /// (one rng stream, stages in order — deterministic).
+    /// Set up `stages` independent walks from `seed` with a legacy
+    /// horizon of `frames` (one shared rng stream below the horizon,
+    /// stages in order — byte-identical to the historical precomputed
+    /// tables; per-stage continuation streams past it). No table is
+    /// materialized here.
     pub fn generate(seed: u64, stages: usize, bound: f64, frames: usize, step: f64) -> Self {
         assert!(bound > 0.0 && bound < 1.0, "drift bound must be in (0, 1): {bound}");
         assert!(step > 0.0 && frames >= 1);
         let mut rng = crate::util::Rng::new(seed);
-        let tables = (0..stages)
+        // continuation streams fork off a separate salted master so the
+        // legacy stream's draw positions stay untouched
+        let mut cont_master = crate::util::Rng::new(seed ^ 0xC0_17_1A7E_57AB_1E55);
+        let stage_walks = (0..stages)
             .map(|_| {
-                let mut w = 1.0f64;
-                (0..frames)
-                    .map(|_| {
-                        let cur = w;
-                        w = (w + rng.range_f64(-step, step))
-                            .clamp(1.0 - bound, 1.0 + bound);
-                        cur
-                    })
-                    .collect()
+                let legacy = rng.clone();
+                for _ in 0..frames {
+                    rng.range_f64(-step, step); // advance to the next stage's offset
+                }
+                let cont = cont_master.fork(0xD21F);
+                std::sync::RwLock::new(StageWalk { vals: Vec::new(), w: 1.0, legacy, cont })
             })
             .collect();
-        DriftWalk { bound, tables }
+        DriftWalk { bound, step, horizon: frames, stages: stage_walks }
     }
 
-    /// The multiplier for `stage` at `frame` (clamped to the table tail).
+    /// The multiplier for `stage` at `frame` — a pure function of
+    /// `(seed, stage, frame)` regardless of query order or thread count.
     pub fn at(&self, stage: usize, frame: usize) -> f64 {
-        let t = &self.tables[stage];
-        t[frame.min(t.len() - 1)]
+        {
+            let sw = self.stages[stage].read().unwrap();
+            if frame < sw.vals.len() {
+                return sw.vals[frame];
+            }
+        }
+        let mut sw = self.stages[stage].write().unwrap();
+        let target = (frame / DRIFT_CHUNK + 1) * DRIFT_CHUNK;
+        while sw.vals.len() < target {
+            let cur = sw.w;
+            sw.vals.push(cur);
+            // the draw *after* value i comes from the legacy stream for
+            // i < horizon (the historical generator consumed exactly
+            // `horizon` draws per stage) and the continuation past it
+            let i = sw.vals.len() - 1;
+            let d = if i < self.horizon {
+                sw.legacy.range_f64(-self.step, self.step)
+            } else {
+                sw.cont.range_f64(-self.step, self.step)
+            };
+            sw.w = (cur + d).clamp(1.0 - self.bound, 1.0 + self.bound);
+        }
+        sw.vals[frame]
     }
 
-    /// Precomputed horizon (frames per stage table).
+    /// The legacy horizon (frames drawn from the historical shared
+    /// stream before the continuation stream takes over).
     pub fn horizon(&self) -> usize {
-        self.tables.first().map(|t| t.len()).unwrap_or(0)
+        self.horizon
+    }
+}
+
+impl Clone for DriftWalk {
+    fn clone(&self) -> Self {
+        DriftWalk {
+            bound: self.bound,
+            step: self.step,
+            horizon: self.horizon,
+            stages: self
+                .stages
+                .iter()
+                .map(|s| std::sync::RwLock::new(s.read().unwrap().clone()))
+                .collect(),
+        }
     }
 }
 
@@ -301,16 +379,21 @@ mod tests {
             for f in 0..1200 {
                 let w = d.at(s, f);
                 assert!((0.75..=1.25).contains(&w), "stage {s} frame {f}: {w}");
-                if f > 0 && f < 1000 {
+                if f > 0 {
+                    // the per-frame step bound holds across the
+                    // legacy/continuation seam at the horizon too
                     let step = (w - d.at(s, f - 1)).abs();
                     assert!(step <= 0.0125 + 1e-12, "stage {s} frame {f} jumped {step}");
                 }
             }
-            // past the horizon the walk holds (no wrap-around jump)
-            assert_eq!(d.at(s, 5000), d.at(s, 999));
+            // past the horizon the walk keeps walking (frozen-tail fix)
+            // but stays inside the band
+            assert!((0.75..=1.25).contains(&d.at(s, 5000)), "stage {s} left the band");
         }
-        // deterministic given the seed; stages walk independently
+        // deterministic given the seed — below and past the horizon,
+        // regardless of query order; stages walk independently
         let e = DriftWalk::generate(7, 4, 0.25, 1000, 0.0125);
+        assert_eq!(d.at(2, 5000), e.at(2, 5000));
         assert_eq!(d.at(2, 500), e.at(2, 500));
         assert_ne!(d.at(0, 500), d.at(1, 500));
         // the walk actually goes somewhere (not stuck at 1.0)
@@ -318,5 +401,48 @@ mod tests {
             .map(|s| (0..1000).map(|f| (d.at(s, f) - 1.0).abs()).fold(0.0, f64::max))
             .fold(0.0, f64::max);
         assert!(spread > 0.05, "walk never left 1.0: {spread}");
+    }
+
+    #[test]
+    fn streamed_drift_walk_is_byte_identical_to_the_precomputed_prefix() {
+        // the historical generator: ONE sequential rng stream, stages in
+        // order, `frames` draws each, tables precomputed eagerly. The
+        // streamed walk must reproduce it bit-for-bit below the horizon
+        // (recorded fleet thresholds depend on these values).
+        let (seed, stages, bound, frames, step) = (99u64, 3usize, 0.2f64, 64usize, 0.01f64);
+        let d = DriftWalk::generate(seed, stages, bound, frames, step);
+        // query out of order first: laziness must not change values
+        let probe = d.at(2, 40);
+        let mut rng = crate::util::Rng::new(seed);
+        for s in 0..stages {
+            let mut w = 1.0f64;
+            for f in 0..frames {
+                assert_eq!(d.at(s, f), w, "stage {s} frame {f} diverged");
+                w = (w + rng.range_f64(-step, step)).clamp(1.0 - bound, 1.0 + bound);
+            }
+        }
+        assert_eq!(probe, d.at(2, 40));
+    }
+
+    #[test]
+    fn drift_walk_clones_and_shares_across_threads() {
+        let d = std::sync::Arc::new(DriftWalk::generate(11, 2, 0.25, 100, 0.01));
+        let c = DriftWalk::clone(&d); // deep clone, before any growth
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let d = std::sync::Arc::clone(&d);
+                std::thread::spawn(move || {
+                    (0..400).map(|f| d.at(t % 2, f)).collect::<Vec<f64>>()
+                })
+            })
+            .collect();
+        let got: Vec<Vec<f64>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // concurrent growth returns the same pure function of
+        // (seed, stage, frame) every thread, matching a fresh clone
+        for (t, vals) in got.iter().enumerate() {
+            for (f, v) in vals.iter().enumerate() {
+                assert_eq!(*v, c.at(t % 2, f), "thread {t} frame {f}");
+            }
+        }
     }
 }
