@@ -1,0 +1,172 @@
+"""Behavioral mirror for the streaming latency histogram (rust:
+``obs/hist.rs``): re-implements bucketing, merge, and quantile
+resolution with pure stdlib and validates the edge cases the Rust unit
+tests assert — empty/single-sample/saturating quantiles, boundary
+samples landing in the upper bucket, and merge == concatenation.
+
+The constants are parsed out of ``hist.rs`` so the mirror cannot drift
+silently, and the bucket edges are produced by the *same repeated f64
+multiplication* the Rust walk uses (CPython floats are IEEE-754 doubles,
+so every edge is bit-identical and every `edge <= v` comparison agrees).
+"""
+
+import bisect
+import math
+import pathlib
+import re
+
+HIST_RS = pathlib.Path(__file__).resolve().parents[2] / "rust" / "src" / "obs" / "hist.rs"
+
+
+def _const(name, cast):
+    text = HIST_RS.read_text()
+    m = re.search(rf"pub const {name}: \w+ = ([0-9.]+);", text)
+    assert m, f"{name} not found in {HIST_RS}"
+    return cast(m.group(1))
+
+
+HIST_MIN_MS = _const("HIST_MIN_MS", float)
+HIST_GROWTH = _const("HIST_GROWTH", float)
+HIST_BUCKETS = _const("HIST_BUCKETS", int)
+
+# Finite bucket edges by repeated multiplication — the exact sequence the
+# Rust record() walk generates.
+EDGES = []
+_edge = HIST_MIN_MS
+for _ in range(HIST_BUCKETS):
+    EDGES.append(_edge)
+    _edge *= HIST_GROWTH
+
+
+class Histogram:
+    """Mirror of obs::hist::Histogram."""
+
+    def __init__(self):
+        self.counts = [0] * (HIST_BUCKETS + 1)
+        self.count = 0
+        self.sum_ms = 0.0
+        self.min_ms = math.inf
+        self.max_ms = -math.inf
+
+    def record(self, ms):
+        v = ms if (math.isfinite(ms) and ms > 0.0) else 0.0
+        # number of edges <= v == the Rust early-exit walk's index
+        idx = bisect.bisect_right(EDGES, v)
+        self.counts[idx] += 1
+        self.count += 1
+        self.sum_ms += v
+        self.min_ms = min(self.min_ms, v)
+        self.max_ms = max(self.max_ms, v)
+
+    def merge(self, other):
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum_ms += other.sum_ms
+        self.min_ms = min(self.min_ms, other.min_ms)
+        self.max_ms = max(self.max_ms, other.max_ms)
+
+    def quantile(self, q):
+        if self.count == 0:
+            return None
+        rank = max(1, math.ceil(q * self.count))
+        cum = 0
+        for i, c in enumerate(self.counts):
+            cum += c
+            if cum >= rank:
+                upper = math.inf if i == HIST_BUCKETS else EDGES[i]
+                return min(upper, self.max_ms)
+        return self.max_ms
+
+
+def hist_of(samples):
+    h = Histogram()
+    for s in samples:
+        h.record(s)
+    return h
+
+
+def test_constants_span_interactive_latencies():
+    assert 0.0 < HIST_MIN_MS < 1.0
+    assert 1.0 < HIST_GROWTH < 2.0
+    assert EDGES[-1] > 10_000.0, "top edge must exceed 10 s"
+
+
+def test_empty_histogram_has_no_quantiles():
+    h = Histogram()
+    assert h.count == 0
+    for q in (0.5, 0.95, 0.99, 1.0):
+        assert h.quantile(q) is None
+
+
+def test_single_sample_quantiles_are_exact():
+    h = hist_of([12.34])
+    # the bucket upper edge is clamped to the observed max, so every
+    # quantile of a one-sample histogram is the sample itself
+    for q in (0.01, 0.5, 0.99, 1.0):
+        assert h.quantile(q) == 12.34
+
+
+def test_boundary_sample_lands_in_upper_bucket():
+    # an exact edge value v has edge <= v true, so it counts one more
+    # edge and lands in the bucket *above* the edge — mirror and Rust
+    # must agree on this tie direction
+    for k in (0, 1, 17, HIST_BUCKETS - 1):
+        edge = EDGES[k]
+        h = hist_of([edge])
+        assert h.counts[k + 1] == 1, f"edge {k} must land in bucket {k + 1}"
+    just_below = EDGES[17] * (1 - 1e-12)
+    h = hist_of([just_below])
+    assert h.counts[17] == 1
+
+
+def test_saturating_top_bucket_clamps_to_max():
+    h = hist_of([1e9, 2e9])  # way past the top finite edge
+    assert h.counts[HIST_BUCKETS] == 2
+    # both samples share the saturating bucket, whose upper edge is inf;
+    # the clamp to the observed max keeps every quantile finite
+    assert h.quantile(0.5) == 2e9
+    assert h.quantile(1.0) == 2e9
+    single = hist_of([7e7])
+    assert single.quantile(0.99) == 7e7
+
+
+def test_degenerate_samples_clamp_to_bucket_zero():
+    h = hist_of([-5.0, 0.0, math.nan, math.inf])
+    assert h.counts[0] == 4
+    assert h.quantile(0.5) == 0.0
+
+
+def test_merge_equals_concatenation():
+    a_s = [0.01 * (i % 37) + 0.3 * i for i in range(200)]
+    b_s = [5.0 + 1.7 * i for i in range(113)]
+    a, b = hist_of(a_s), hist_of(b_s)
+    a.merge(b)
+    both = hist_of(a_s + b_s)
+    assert a.counts == both.counts
+    assert a.count == both.count
+    assert a.sum_ms == both.sum_ms
+    assert (a.min_ms, a.max_ms) == (both.min_ms, both.max_ms)
+    for q in (0.5, 0.95, 0.99):
+        assert a.quantile(q) == both.quantile(q)
+
+
+def test_quantiles_are_monotone_and_bounded():
+    h = hist_of([0.07 + 0.91 * i for i in range(500)])
+    qs = [h.quantile(q) for q in (0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0)]
+    assert qs == sorted(qs)
+    assert all(v <= h.max_ms for v in qs)
+    assert h.quantile(1.0) == h.max_ms
+
+
+def test_quantile_never_underestimates_true_percentile():
+    # upper-edge resolution: the reported quantile is >= the true sample
+    # at that rank (conservative for SLO checking), within one bucket
+    samples = sorted(0.11 * (i**1.3) + 0.06 for i in range(1, 400))
+    h = hist_of(samples)
+    for q in (0.5, 0.9, 0.95, 0.99):
+        rank = max(1, math.ceil(q * len(samples)))
+        true_v = samples[rank - 1]
+        got = h.quantile(q)
+        assert got >= true_v * 0.999999
+        assert got <= true_v * (HIST_GROWTH * 1.000001)

@@ -1,0 +1,79 @@
+//! Observability overhead benchmarks (ISSUE 7).
+//!
+//! `obs/on_frame_overhead` is the gated one: the per-frame cost the
+//! always-on instrumentation adds to a hot loop — one histogram record
+//! plus one disabled-sink `record_with` branch. Capture off is the
+//! default production configuration, so this is the number that must
+//! stay within budget.
+//!
+//! `obs/capture_flush_1k` tracks the enabled-capture path end to end:
+//! record 1k events through a sink (one buffer-swap flush), close, and
+//! drain into canonical order. Per-iteration collector keeps memory
+//! bounded.
+//!
+//! Run: `cargo bench --bench obs`
+
+use iptune::obs::{Event, EventKind, Histogram, TraceCollector};
+use iptune::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    // ---- gated: the disabled-capture per-frame cost ---------------------
+    let collector = TraceCollector::new(false);
+    let mut sink = collector.sink();
+    let mut hist = Histogram::new();
+    let mut tick = 0usize;
+    b.bench("obs/on_frame_overhead", || {
+        let ms = 5.0 + (tick % 97) as f64 * 0.37;
+        hist.record(black_box(ms));
+        sink.record_with(|| Event {
+            tenant: Some(tick % 8),
+            epoch: tick / 30,
+            frame: Some(tick),
+            seq: 0,
+            kind: EventKind::Frame {
+                ms,
+                stage_ms: Vec::new(),
+                fidelity: 0.9,
+            },
+        });
+        tick += 1;
+    });
+    b.metric("obs/hist_count", hist.count() as f64);
+
+    // ---- tracked: enabled capture, flush, and canonical drain -----------
+    b.bench("obs/capture_flush_1k", || {
+        let collector = TraceCollector::new(true);
+        let mut sink = collector.sink();
+        for f in 0..1000usize {
+            sink.record_with(|| Event {
+                tenant: Some(f % 8),
+                epoch: f / 30,
+                frame: Some(f),
+                seq: 0,
+                kind: EventKind::Frame {
+                    ms: 4.2,
+                    stage_ms: Vec::new(),
+                    fidelity: 0.9,
+                },
+            });
+        }
+        sink.close();
+        black_box(collector.drain().len());
+    });
+
+    // ---- tracked: histogram quantile extraction -------------------------
+    let mut full = Histogram::new();
+    for i in 0..4096u64 {
+        full.record(0.1 + (i % 613) as f64 * 0.21);
+    }
+    b.bench("obs/hist_quantiles", || {
+        black_box(full.quantile(black_box(0.5)));
+        black_box(full.quantile(black_box(0.95)));
+        black_box(full.quantile(black_box(0.99)));
+    });
+
+    iptune::log_info!("\n{} benchmarks complete", b.results.len());
+    b.write_json_env("obs");
+}

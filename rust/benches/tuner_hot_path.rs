@@ -60,7 +60,7 @@ fn main() {
                 black_box(xla.solve(black_box(&candidates), &rewards, 100.0));
             });
         }
-        Err(e) => eprintln!("skipping xla benches: {e}"),
+        Err(e) => iptune::log_warn!("skipping xla benches: {e}"),
     }
 
     // --- full controller step -------------------------------------------

@@ -17,6 +17,7 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread;
 
 use crate::apps::App;
+use crate::obs::Histogram;
 use crate::simulator::NoiseModel;
 use crate::util::Rng;
 
@@ -110,6 +111,17 @@ enum Evt {
     Done { frame: usize, vt: f64, knobs: Arc<Vec<f64>>, epoch: usize },
 }
 
+/// Always-on per-stream statistics built by the assembler thread as it
+/// emits records (no locks on the stage hot path — the assembler owns
+/// the accumulator) and delivered once when the stream finishes.
+#[derive(Debug, Clone)]
+pub struct EngineStats {
+    /// Frames emitted at the sink.
+    pub frames: usize,
+    /// End-to-end virtual latency distribution across those frames.
+    pub latency: Histogram,
+}
+
 /// Source-gate state shared between the source thread and its
 /// [`PauseHandle`]s: the pause flag plus the epoch-stamp counter the
 /// source latches into each frame.
@@ -152,6 +164,7 @@ pub struct StreamHandle {
     knobs: Arc<RwLock<Arc<Vec<f64>>>>,
     pause: Arc<(Mutex<SourceGate>, Condvar)>,
     plan: Option<Arc<(Mutex<KnobPlan>, Condvar)>>,
+    stats_rx: Receiver<EngineStats>,
 }
 
 impl StreamHandle {
@@ -187,6 +200,13 @@ impl StreamHandle {
     /// unless the stream was spawned with [`EngineConfig::knob_horizon`].
     pub fn schedule_handle(&self) -> Option<ScheduleHandle> {
         self.plan.as_ref().map(|p| ScheduleHandle(Arc::clone(p)))
+    }
+
+    /// Block until the stream's assembler finishes, then return its
+    /// always-on stats (frame count + end-to-end latency histogram).
+    /// `None` if the assembler died without reporting.
+    pub fn stats(&self) -> Option<EngineStats> {
+        self.stats_rx.recv().ok()
     }
 }
 
@@ -457,6 +477,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
     // assembler: joins per-stage latencies + sink completions into records
     let app2 = Arc::clone(&app);
     let frames = cfg.frames;
+    let (stats_tx, stats_rx) = channel::<EngineStats>();
     thread::Builder::new()
         .name("assembler".into())
         .spawn(move || {
@@ -466,7 +487,8 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
             let mut lat_count: HashMap<usize, usize> = HashMap::new();
             let mut done: HashMap<usize, (f64, Arc<Vec<f64>>, usize)> = HashMap::new();
             let mut emitted = 0usize;
-            while let Ok(evt) = evt_rx.recv() {
+            let mut stats = EngineStats { frames: 0, latency: Histogram::new() };
+            'pump: while let Ok(evt) = evt_rx.recv() {
                 match evt {
                     Evt::StageLat { frame, stage, lat } => {
                         lat_acc.entry(frame).or_insert_with(|| vec![0.0; n_stages])[stage] =
@@ -497,19 +519,22 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                     };
                     lat_count.remove(&emitted);
                     done.remove(&emitted);
+                    stats.frames += 1;
+                    stats.latency.record(rec.end_to_end_ms);
                     if rec_tx.send(rec).is_err() {
-                        return;
+                        break 'pump;
                     }
                     emitted += 1;
                     if emitted == frames {
-                        return;
+                        break 'pump;
                     }
                 }
             }
+            let _ = stats_tx.send(stats);
         })
         .expect("spawn assembler");
 
-    StreamHandle { records: rec_rx, knobs, pause, plan }
+    StreamHandle { records: rec_rx, knobs, pause, plan, stats_rx }
 }
 
 /// Run a stream to completion, collecting all records (convenience for
@@ -769,5 +794,27 @@ mod tests {
         for r in &recs {
             assert!(r.knobs == slow || r.knobs == fast, "mixed knobs {:?}", r.knobs);
         }
+    }
+
+    #[test]
+    fn stream_stats_track_every_emitted_frame() {
+        let a = app("pose");
+        let ks = a.spec.defaults();
+        let handle = spawn_stream(
+            Arc::clone(&a),
+            ks,
+            EngineConfig { frames: 25, ..Default::default() },
+        );
+        let mut max_e2e: f64 = 0.0;
+        while let Ok(rec) = handle.records.recv() {
+            max_e2e = max_e2e.max(rec.end_to_end_ms);
+        }
+        let stats = handle.stats().expect("assembler reports stats");
+        assert_eq!(stats.frames, 25);
+        assert_eq!(stats.latency.count(), 25);
+        assert_eq!(stats.latency.max_ms(), Some(max_e2e));
+        let p50 = stats.latency.quantile(0.5).unwrap();
+        let p99 = stats.latency.quantile(0.99).unwrap();
+        assert!(p50 > 0.0 && p50 <= p99 && p99 <= max_e2e);
     }
 }

@@ -196,7 +196,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
         );
     }
     let path = csv.finish()?;
-    println!("claims -> {}", path.display());
+    crate::log_info!("claims -> {}", path.display());
     let _ = f(0.0); // keep helper linked
     Ok(())
 }

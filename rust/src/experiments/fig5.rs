@@ -38,7 +38,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
             .payoffs
             .iter()
             .fold((f64::INFINITY, 0.0f64), |(lo, hi), &(c, _)| (lo.min(c), hi.max(c)));
-        println!(
+        crate::log_info!(
             "fig5[{app}]: {} configs, cost {:.1}..{:.1} ms, hull {} vertices -> {}",
             r.payoffs.len(),
             cmin,

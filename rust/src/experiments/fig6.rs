@@ -100,7 +100,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
                 )
             })
             .collect();
-        println!("fig6[{app}]: {} -> {}", finals.join(" | "), path.display());
+        crate::log_info!("fig6[{app}]: {} -> {}", finals.join(" | "), path.display());
     }
     Ok(())
 }

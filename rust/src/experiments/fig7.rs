@@ -61,7 +61,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
         }
         let path = csv.finish()?;
         let last = r.per_frame.last().unwrap();
-        println!(
+        crate::log_info!(
             "fig7[{app}]: features {} vs {} | final expected {:.2} vs {:.2} | max-norm {:.1} vs {:.1} (unstructured vs structured) -> {}",
             r.unstructured_features,
             r.structured_features,

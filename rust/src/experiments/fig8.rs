@@ -110,7 +110,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
                 csv.row(&["hull".into(), String::new(), f(r), f(v), String::new()])?;
             }
             let path = csv.finish()?;
-            println!(
+            crate::log_info!(
                 "fig8[{app}, L={bound}ms]: diamond eps={:.3} reward {:.3} violation {:.1} ms -> {}",
                 TunerConfig::epsilon_for_horizon(ctx.frames),
                 dr,

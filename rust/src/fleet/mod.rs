@@ -65,6 +65,7 @@ use std::sync::mpsc::channel;
 use anyhow::{Context, Result};
 
 use crate::metrics::PolicyStats;
+use crate::obs::{self, EpochLatencies, Event, EventKind, TraceCollector};
 use crate::runtime::native::NativeBackend;
 use crate::scheduler::{
     self, admit, demand_cores_confident, reserve_top_up, AllocationFrame, EpochAdmission,
@@ -156,6 +157,10 @@ pub struct FleetConfig {
     pub load_shift_mult: f64,
     /// Scheduler policy (epoch length, fairness floor, ladder shape).
     pub scheduler: SchedulerConfig,
+    /// Capture the full event trace into [`FleetReport::timeline`]
+    /// (`--trace-out`). Off, instrumentation degrades to the always-on
+    /// counters/histograms — one branch per frame on the hot path.
+    pub trace_events: bool,
 }
 
 impl Default for FleetConfig {
@@ -177,6 +182,7 @@ impl Default for FleetConfig {
             load_shift_frame: None,
             load_shift_mult: LOAD_SHIFT_MULT,
             scheduler: SchedulerConfig::default(),
+            trace_events: false,
         }
     }
 }
@@ -260,6 +266,9 @@ pub struct AppReport {
     pub scored_frames: usize,
     /// Frames dropped instead of run (all of them for a parked app).
     pub dropped_frames: usize,
+    /// Per-epoch end-to-end latency histograms (always on; empty epochs
+    /// for the spans this app spent parked).
+    pub latency: EpochLatencies,
     /// Raw accumulator (kept for fleet-wide merging).
     pub stats: PolicyStats,
 }
@@ -295,6 +304,8 @@ impl AppReport {
             .put("admitted_frames", self.admitted_frames)
             .put("scored_frames", self.scored_frames)
             .put("dropped_frames", self.dropped_frames)
+            .put("latency_ms", self.latency.total().summary_json())
+            .put("epoch_latency_ms", self.latency.to_json())
     }
 }
 
@@ -338,6 +349,10 @@ pub struct FleetReport {
     /// Σ over epochs of the number of apps whose quota moved.
     pub realloc_moves: usize,
     pub merged: PolicyStats,
+    /// Full event trace; `Some` only under [`FleetConfig::trace_events`].
+    /// Saved as its own artifact (`--trace-out`), never inlined into the
+    /// report JSON.
+    pub timeline: Option<obs::Timeline>,
 }
 
 impl FleetReport {
@@ -519,6 +534,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     let (rep_tx, rep_rx) = channel::<AppReport>();
     let mut allocations: Vec<AllocationFrame> = Vec::with_capacity(epochs);
     let mut shared = SharedCluster::parked_even(cfg.cluster.clone(), &admitted0);
+    let trace = TraceCollector::new(cfg.trace_events);
 
     std::thread::scope(|scope| {
         let mut cmd_txs = Vec::with_capacity(threads);
@@ -529,6 +545,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
             let rep_tx = rep_tx.clone();
             let levels = &levels;
             let admitted0 = &admitted0;
+            let mut sink = trace.sink();
             scope.spawn(move || {
                 // ---- per-worker construction: apps pinned by index ------
                 let my: Vec<usize> = (w..cfg.apps).step_by(threads).collect();
@@ -611,6 +628,8 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                     .collect();
                 let mut steps: Vec<Vec<StepOutcome>> =
                     my.iter().map(|_| Vec::with_capacity(cfg.frames)).collect();
+                let mut lat: Vec<EpochLatencies> =
+                    my.iter().map(|_| EpochLatencies::with_epochs(epochs)).collect();
                 let mut core_frames: Vec<usize> = vec![0; my.len()];
                 let mut parked_epochs: Vec<usize> = vec![0; my.len()];
                 let mut dropped: Vec<usize> = vec![0; my.len()];
@@ -642,8 +661,21 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                                 };
                                 ctl.set_level(rung);
                                 core_frames[slot] += ctl.cores() * (hi - lo);
+                                let ep = lo / epoch_frames;
                                 for f in lo..hi {
                                     let s = ctl.step(f);
+                                    lat[slot].record(ep, s.latency_ms);
+                                    sink.record_with(|| Event {
+                                        tenant: Some(i),
+                                        epoch: ep,
+                                        frame: Some(f),
+                                        seq: 0,
+                                        kind: EventKind::Frame {
+                                            ms: s.latency_ms,
+                                            stage_ms: Vec::new(),
+                                            fidelity: s.reward,
+                                        },
+                                    });
                                     steps[slot].push(s);
                                 }
                                 let (curve, obs) = match cfg.mode {
@@ -693,6 +725,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                         admitted_frames: 0,
                         scored_frames: 0,
                         dropped_frames: dropped[slot],
+                        latency: std::mem::take(&mut lat[slot]),
                         stats: PolicyStats::new(),
                     };
                     let report = match &ladders[slot] {
@@ -775,6 +808,10 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
         // incumbent rungs for the hysteresis term (active apps only)
         let mut prev_rungs: Vec<usize> = vec![even_rung; cfg.apps];
         let mut admitted = admitted0.clone();
+        // scheduler-side event sink (single-threaded, deterministic);
+        // transitions are diffed against the nominal all-admitted start
+        let mut sched_sink = trace.sink();
+        let mut prev_admitted: Vec<bool> = vec![true; cfg.apps];
         for e in 0..epochs {
             let frame0 = e * epoch_frames;
             let w = cfg.scheduler.weights_at(cfg.apps, frame0);
@@ -923,6 +960,43 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 parked: parked.clone(),
                 churn_cores,
             });
+            for i in 0..cfg.apps {
+                if admitted[i] != prev_admitted[i] {
+                    sched_sink.record_with(|| Event {
+                        tenant: Some(i),
+                        epoch: e,
+                        frame: None,
+                        seq: 0,
+                        kind: if admitted[i] {
+                            EventKind::Resume { at_epoch: e }
+                        } else {
+                            EventKind::Park
+                        },
+                    });
+                }
+            }
+            prev_admitted.copy_from_slice(&admitted);
+            sched_sink.record_with(|| Event {
+                tenant: None,
+                epoch: e,
+                frame: None,
+                seq: 0,
+                kind: EventKind::Admission {
+                    admitted: admitted.clone(),
+                    reservations: reservations.clone(),
+                },
+            });
+            sched_sink.record_with(|| Event {
+                tenant: None,
+                epoch: e,
+                frame: None,
+                seq: 0,
+                kind: EventKind::Alloc {
+                    cores: shared.quotas().to_vec(),
+                    parked: parked.clone(),
+                    churn_cores,
+                },
+            });
             let lo = e * epoch_frames;
             let hi = (lo + epoch_frames).min(cfg.frames);
             for tx in &cmd_txs {
@@ -949,6 +1023,16 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
         for tx in &cmd_txs {
             tx.send(Cmd::Finish).expect("worker alive");
         }
+    });
+
+    // every sink (workers + scheduler) is dropped by now; drain cannot block
+    let timeline = cfg.trace_events.then(|| obs::Timeline {
+        source: "fleet".to_string(),
+        seed: cfg.seed,
+        apps: cfg.apps,
+        frames: cfg.frames,
+        epoch_frames,
+        events: trace.drain(),
     });
 
     let mut apps: Vec<AppReport> = rep_rx.iter().collect();
@@ -1001,6 +1085,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
         core_churn,
         realloc_moves,
         merged,
+        timeline,
         apps,
     }
 }

@@ -49,6 +49,7 @@ pub mod experiments;
 pub mod fleet;
 pub mod learner;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod scheduler;
 pub mod simulator;

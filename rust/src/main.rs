@@ -9,7 +9,8 @@
 //! repro engine --app APP [--frames N] [--bound MS] [--period N]
 //! ```
 //!
-//! Global flags: `--config FILE` (JSON run config), `--specs DIR`.
+//! Global flags: `--config FILE` (JSON run config), `--specs DIR`,
+//! `--quiet` / `--verbose` (progress-log level; stderr only).
 //! Argument parsing is in-tree (`cli` module below) — the workspace
 //! builds offline without clap.
 
@@ -88,7 +89,7 @@ impl Args {
     }
 }
 
-const USAGE: &str = "usage: repro [--config FILE] [--specs DIR] <command>
+const USAGE: &str = "usage: repro [--config FILE] [--specs DIR] [--quiet|--verbose] <command>
 
 commands:
   spec [APP] [--graph]                     print Tables 1-2 / DOT graphs
@@ -105,14 +106,15 @@ commands:
         [--admission] [--admission-epoch] [--admission-hysteresis S]
         [--starvation-bound K] [--demand-confidence N]
         [--tier-shift FRAME:W1,W2,..|FRAME:auto]
-        [--thrash MULT] [--dag] [--drift B]
+        [--thrash MULT] [--dag] [--drift B] [--trace-out FILE]
   schedule [--apps N] [--frames N] [--seed N] [--epoch N] [--floor CORES]
         [--candidates N] [--realtime SCALE] [--uniform]
         [--priority W1,W2,..] [--hysteresis H] [--admission-epoch]
         [--admission-hysteresis S] [--starvation-bound K]
         [--demand-confidence N] [--tier-shift FRAME:W1,W2,..|FRAME:auto]
         [--dag] [--drift B] [--straggler IDX:MS] [--barrier-epochs]
-        [--out FILE]
+        [--out FILE] [--trace-out FILE]
+  inspect TIMELINE [--tenant N]            render a saved --trace-out trace
 
 APP is pose, motion-sift, gen:SEED, or gen-dag:SEED (procedurally
 generated pipelines; see the workloads module — gen-dag emits general
@@ -149,7 +151,16 @@ frontiers: decisions fire as the frontier's lower envelope advances, and
 wall-clock delay per source frame into tenant IDX (the straggler-
 isolation regression hook), --barrier-epochs runs the legacy frame-count
 barrier protocol for A/B comparison, and --out FILE writes the live
-report (per-tenant epoch counts included) as JSON.";
+report (per-tenant epoch counts included) as JSON. Both fleet and
+schedule stream per-tenant per-epoch latency histograms into their
+reports (latency_ms / epoch_latency_ms) always; --trace-out FILE
+additionally captures the full structured event trace — frame
+completions, knob-schedule extensions, frontier advances, admission and
+allocation decisions, park/resume transitions — stamped with logical
+clocks only, so the saved timeline is byte-identical across thread
+counts, pacing and stragglers. `inspect` renders a saved timeline as
+per-tenant epoch/grant/knob tables, a per-stage latency table, and an
+allocation-churn view.";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -170,8 +181,16 @@ fn main() -> Result<()> {
             "admission-epoch",
             "dag",
             "barrier-epochs",
+            "quiet",
+            "verbose",
         ],
     )?;
+
+    if args.has("quiet") {
+        iptune::util::log::set_level(iptune::util::log::QUIET);
+    } else if args.has("verbose") {
+        iptune::util::log::set_level(iptune::util::log::VERBOSE);
+    }
 
     let run_cfg = RunConfig::load_or_default(args.get("config").map(std::path::Path::new))?;
     let spec_dir = find_spec_dir(args.get("specs").map(std::path::Path::new))?;
@@ -184,6 +203,7 @@ fn main() -> Result<()> {
         "engine" => cmd_engine(&args, &spec_dir),
         "fleet" => cmd_fleet(&args),
         "schedule" => cmd_schedule(&args),
+        "inspect" => cmd_inspect(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
@@ -338,8 +358,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         bail!("--shift only affects heavy apps; pass --hetero so the fleet has some");
     }
     let out = PathBuf::from(args.get("out").unwrap_or("fleet_report.json"));
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    cfg.trace_events = trace_out.is_some();
 
-    eprintln!(
+    iptune::log_info!(
         "fleet[{}]: tuning {} generated apps x {} frames (seed {}, {} shared cores, even share {}) ...",
         cfg.mode.name(),
         cfg.apps,
@@ -400,7 +422,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         },
     );
     report.save(&out)?;
-    println!("report -> {}", out.display());
+    iptune::log_info!("report -> {}", out.display());
+    if let Some(path) = &trace_out {
+        let tl = report.timeline.as_ref().expect("trace_events captures a timeline");
+        tl.save(path)?;
+        iptune::log_info!("timeline ({} events) -> {}", tl.events.len(), path.display());
+    }
     if !report.all_apps_meet_slo() {
         bail!(
             "{} of {} apps missed the {:.0}% bound-met SLO (report saved to {})",
@@ -488,7 +515,9 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     if args.has("barrier-epochs") {
         cfg.barrier = true;
     }
-    eprintln!(
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    cfg.trace_events = trace_out.is_some();
+    iptune::log_info!(
         "schedule: streaming {} generated apps x {} frames live (seed {}, epoch {} frames, {} shared cores, {} protocol) ...",
         cfg.apps,
         cfg.frames,
@@ -542,7 +571,174 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     );
     if let Some(path) = args.get("out") {
         report.save(path)?;
-        eprintln!("schedule: wrote live report to {path}");
+        iptune::log_info!("schedule: wrote live report to {path}");
+    }
+    if let Some(path) = &trace_out {
+        let tl = report.timeline.as_ref().expect("trace_events captures a timeline");
+        tl.save(path)?;
+        iptune::log_info!(
+            "schedule: wrote timeline ({} events) to {}",
+            tl.events.len(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+/// Render a saved `--trace-out` timeline: per-tenant epoch/grant/knob
+/// tables, a per-stage latency table, and the allocation-churn view.
+/// Everything here reads the artifact only — no simulation state.
+fn cmd_inspect(args: &Args) -> Result<()> {
+    use iptune::obs::{EventKind, Timeline};
+
+    let path = args
+        .positional
+        .first()
+        .context("inspect: usage: repro inspect TIMELINE.json [--tenant N]")?;
+    let tl = Timeline::load(path)?;
+    let only = args.get_parse::<usize>("tenant")?;
+    if let Some(t) = only {
+        anyhow::ensure!(t < tl.apps, "--tenant {t} out of range (timeline has {})", tl.apps);
+    }
+    println!(
+        "timeline {path}: {} run, seed {}, {} tenants x {} frames, epoch {} frames, {} events",
+        tl.source,
+        tl.seed,
+        tl.apps,
+        tl.frames,
+        tl.epoch_frames,
+        tl.events.len()
+    );
+
+    let n_epochs = tl.events.iter().map(|e| e.epoch + 1).max().unwrap_or(0);
+    #[derive(Clone, Default)]
+    struct EpochRow {
+        frames: usize,
+        ms_sum: f64,
+        ms_max: f64,
+        fid_sum: f64,
+        cores: Option<usize>,
+        parked: Option<bool>,
+        transition: Option<&'static str>,
+        knob_exts: usize,
+    }
+    let mut rows: Vec<Vec<EpochRow>> = vec![vec![EpochRow::default(); n_epochs]; tl.apps];
+    let mut stage_sum: Vec<Vec<f64>> = vec![Vec::new(); tl.apps];
+    let mut total_sum: Vec<f64> = vec![0.0; tl.apps];
+    let mut total_n: Vec<usize> = vec![0; tl.apps];
+    let mut allocs: Vec<(usize, Vec<usize>, usize)> = Vec::new();
+    let mut frontier_epochs = 0usize;
+    for e in &tl.events {
+        if e.epoch >= n_epochs {
+            continue;
+        }
+        match (&e.kind, e.tenant) {
+            (EventKind::Frame { ms, stage_ms, fidelity }, Some(t)) if t < tl.apps => {
+                let row = &mut rows[t][e.epoch];
+                row.frames += 1;
+                row.ms_sum += ms;
+                row.ms_max = row.ms_max.max(*ms);
+                row.fid_sum += fidelity;
+                if stage_sum[t].len() < stage_ms.len() {
+                    stage_sum[t].resize(stage_ms.len(), 0.0);
+                }
+                for (s, v) in stage_ms.iter().enumerate() {
+                    stage_sum[t][s] += v;
+                }
+                total_sum[t] += ms;
+                total_n[t] += 1;
+            }
+            (EventKind::Knobs { .. }, Some(t)) if t < tl.apps => {
+                rows[t][e.epoch].knob_exts += 1;
+            }
+            (EventKind::Park, Some(t)) if t < tl.apps => {
+                rows[t][e.epoch].transition = Some("park");
+            }
+            (EventKind::Resume { .. }, Some(t)) if t < tl.apps => {
+                rows[t][e.epoch].transition = Some("resume");
+            }
+            (EventKind::Frontier { .. }, None) => frontier_epochs += 1,
+            (EventKind::Alloc { cores, parked, churn_cores }, None) => {
+                for t in 0..tl.apps.min(cores.len()) {
+                    rows[t][e.epoch].cores = Some(cores[t]);
+                    rows[t][e.epoch].parked = parked.get(t).copied();
+                }
+                allocs.push((e.epoch, cores.clone(), *churn_cores));
+            }
+            _ => {}
+        }
+    }
+
+    // ---- view 1: per-tenant epoch timeline ----------------------------
+    for t in 0..tl.apps {
+        if only.is_some_and(|o| o != t) {
+            continue;
+        }
+        println!("\n== tenant {t} timeline ==");
+        println!(
+            "{:>5} {:>7} {:>9} {:>9} {:>9} {:>6} {:>8} {:>10}",
+            "epoch", "frames", "avg-ms", "max-ms", "fidelity", "cores", "state", "knob-exts"
+        );
+        for (ep, row) in rows[t].iter().enumerate() {
+            if row.frames == 0 && row.cores.is_none() && row.transition.is_none() {
+                continue;
+            }
+            let n = row.frames.max(1) as f64;
+            let state = match (row.transition, row.parked) {
+                (Some(tr), _) => tr,
+                (None, Some(true)) => "parked",
+                _ => "run",
+            };
+            println!(
+                "{:>5} {:>7} {:>9.1} {:>9.1} {:>9.3} {:>6} {:>8} {:>10}",
+                ep,
+                row.frames,
+                row.ms_sum / n,
+                row.ms_max,
+                row.fid_sum / n,
+                row.cores.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
+                state,
+                row.knob_exts,
+            );
+        }
+    }
+
+    // ---- view 2: per-stage latency table ------------------------------
+    if stage_sum.iter().any(|s| !s.is_empty()) {
+        println!("\n== per-stage latency (avg self ms per frame; total = critical path) ==");
+        println!("{:>6} {:>7}  {:<40} {:>9}", "tenant", "frames", "stages", "total-ms");
+        for t in 0..tl.apps {
+            if only.is_some_and(|o| o != t) || total_n[t] == 0 {
+                continue;
+            }
+            let n = total_n[t] as f64;
+            let stages: Vec<String> =
+                stage_sum[t].iter().map(|s| format!("{:.1}", s / n)).collect();
+            println!(
+                "{:>6} {:>7}  {:<40} {:>9.1}",
+                t,
+                total_n[t],
+                format!("[{}]", stages.join(", ")),
+                total_sum[t] / n,
+            );
+        }
+    }
+
+    // ---- view 3: allocation churn -------------------------------------
+    if !allocs.is_empty() {
+        println!("\n== allocations ==");
+        println!("{:>5} {:>7}  cores", "epoch", "churn");
+        let mut churn_total = 0usize;
+        for (ep, cores, churn) in &allocs {
+            churn_total += churn;
+            println!("{ep:>5} {churn:>7}  {cores:?}");
+        }
+        println!(
+            "{} reallocation epochs ({} frontier-released), churn {} cores total",
+            allocs.len(),
+            frontier_epochs,
+            churn_total
+        );
     }
     Ok(())
 }
@@ -589,7 +785,7 @@ fn cmd_trace(args: &Args, spec_dir: &std::path::Path, run_cfg: &RunConfig) -> Re
     let n_cfg = args.get_parse::<usize>("configs")?.unwrap_or(run_cfg.trace.configs);
     let n_frames = args.get_parse::<usize>("frames")?.unwrap_or(run_cfg.trace.frames);
     let seed = args.get_parse::<u64>("seed")?.unwrap_or(run_cfg.trace.seed);
-    eprintln!(
+    iptune::log_info!(
         "generating {n_cfg} configs x {n_frames} frames for {} (seed {seed}) ...",
         app.spec.name
     );
@@ -632,7 +828,7 @@ fn cmd_tune(args: &Args, spec_dir: &std::path::Path, run_cfg: &RunConfig) -> Res
             Box::new(XlaBackend::from_default_artifacts(&app.spec, Variant::Structured)?)
         }
     };
-    eprintln!(
+    iptune::log_info!(
         "tuning {} for {frames} frames: eps={eps:.3}, L={bound} ms, backend={}",
         app.spec.name,
         be.name()
@@ -774,6 +970,16 @@ fn run_engine_demo(
             over = 0;
             n = 0;
         }
+    }
+    if let Some(stats) = handle.stats() {
+        let p = |q: f64| stats.latency.quantile(q).unwrap_or(0.0);
+        println!(
+            "latency percentiles over {} frames: p50 {:.1} ms | p95 {:.1} ms | p99 {:.1} ms",
+            stats.frames,
+            p(0.50),
+            p(0.95),
+            p(0.99),
+        );
     }
     println!("engine demo complete ({frames} frames, L={bound} ms)");
     Ok(())

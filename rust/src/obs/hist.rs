@@ -1,0 +1,326 @@
+//! Streaming log-spaced latency histograms (ISSUE 7).
+//!
+//! Fixed geometric buckets so that recording is allocation-free and two
+//! histograms merge by element-wise addition — the properties that let
+//! per-(tenant, epoch) latency distributions stream on the hot path and
+//! still aggregate deterministically at report time. Bucket boundaries
+//! are produced by *repeated* `f64` multiplication from [`HIST_MIN_MS`]
+//! (never `ln`/`powf`), so the exact same bit pattern falls out of the
+//! Python mirror (`python/tests/test_obs_mirror.py`) and quantiles are
+//! byte-identical across platforms, thread counts, and pacing.
+//!
+//! Quantiles are resolved to the *upper edge* of the bucket holding the
+//! rank-`ceil(q*n)` sample, clamped to the observed maximum — which makes
+//! the single-sample and saturating-top-bucket cases exact instead of
+//! merely approximate.
+
+use crate::util::Json;
+
+/// Lower edge of bucket 1 (ms). Bucket 0 is `[0, HIST_MIN_MS)`.
+pub const HIST_MIN_MS: f64 = 0.05;
+/// Geometric growth factor between consecutive bucket edges (~12%
+/// relative resolution).
+pub const HIST_GROWTH: f64 = 1.12;
+/// Number of finite bucket edges; the histogram has `HIST_BUCKETS + 1`
+/// counters, the last one saturating (`[top_edge, inf)`). The span is
+/// roughly 0.05 ms .. 89 s.
+pub const HIST_BUCKETS: usize = 128;
+
+/// A fixed-bucket latency histogram with exact count/sum/min/max.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ms: f64,
+    min_ms: f64,
+    max_ms: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS + 1],
+            count: 0,
+            sum_ms: 0.0,
+            min_ms: f64::INFINITY,
+            max_ms: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one latency sample. Non-finite or negative values are
+    /// clamped to 0 (bucket 0) so counters stay sane on degenerate input.
+    #[inline]
+    pub fn record(&mut self, ms: f64) {
+        let v = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        // Count edges <= v by walking the geometric edge sequence with
+        // the same repeated multiplication the mirror uses; the walk
+        // early-exits at the first edge above the sample.
+        let mut idx = 0usize;
+        let mut edge = HIST_MIN_MS;
+        while idx < HIST_BUCKETS && edge <= v {
+            edge *= HIST_GROWTH;
+            idx += 1;
+        }
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum_ms += v;
+        self.min_ms = self.min_ms.min(v);
+        self.max_ms = self.max_ms.max(v);
+    }
+
+    /// Element-wise merge; equivalent to having recorded the union of
+    /// both sample streams (in any order).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum_ms += other.sum_ms;
+        self.min_ms = self.min_ms.min(other.min_ms);
+        self.max_ms = self.max_ms.max(other.max_ms);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ms
+    }
+
+    pub fn min_ms(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.min_ms)
+    }
+
+    pub fn max_ms(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max_ms)
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// The q-quantile (0 < q <= 1): upper edge of the bucket holding the
+    /// rank-`max(1, ceil(q*n))` sample, clamped to the observed max.
+    /// `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        let mut edge = HIST_MIN_MS;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += *c;
+            if cum >= rank {
+                let upper = if i == HIST_BUCKETS { f64::INFINITY } else { edge };
+                return Some(upper.min(self.max_ms));
+            }
+            edge *= HIST_GROWTH;
+        }
+        Some(self.max_ms)
+    }
+
+    /// Append the standard summary fields (`count`/`p50`/`p95`/`p99`/
+    /// `max_ms`) to a JSON object under construction.
+    pub fn summary_fields(&self, j: Json) -> Json {
+        let q = |p: f64| match self.quantile(p) {
+            Some(v) => Json::from(v),
+            None => Json::Null,
+        };
+        j.put("count", self.count)
+            .put("p50", q(0.50))
+            .put("p95", q(0.95))
+            .put("p99", q(0.99))
+            .put(
+                "max_ms",
+                match self.max_ms() {
+                    Some(v) => Json::from(v),
+                    None => Json::Null,
+                },
+            )
+    }
+
+    pub fn summary_json(&self) -> Json {
+        self.summary_fields(Json::obj())
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Per-epoch latency histograms for one tenant, plus a deterministic
+/// whole-run merge. Epoch slots are pre-sized so epochs a tenant never
+/// ran (parked) still appear in the report with `count == 0`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EpochLatencies {
+    epochs: Vec<Histogram>,
+}
+
+impl EpochLatencies {
+    pub fn with_epochs(n: usize) -> EpochLatencies {
+        EpochLatencies {
+            epochs: vec![Histogram::new(); n],
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, epoch: usize, ms: f64) {
+        if epoch >= self.epochs.len() {
+            self.epochs.resize(epoch + 1, Histogram::new());
+        }
+        self.epochs[epoch].record(ms);
+    }
+
+    pub fn epochs(&self) -> &[Histogram] {
+        &self.epochs
+    }
+
+    /// Whole-run histogram: per-epoch histograms merged in epoch order.
+    pub fn total(&self) -> Histogram {
+        let mut t = Histogram::new();
+        for h in &self.epochs {
+            t.merge(h);
+        }
+        t
+    }
+
+    /// `[{"epoch", "count", "p50", "p95", "p99"}, ...]`, one row per
+    /// epoch (empty epochs included with null percentiles).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .epochs
+            .iter()
+            .enumerate()
+            .map(|(e, h)| {
+                let q = |p: f64| match h.quantile(p) {
+                    Some(v) => Json::from(v),
+                    None => Json::Null,
+                };
+                Json::obj()
+                    .put("epoch", e)
+                    .put("count", h.count())
+                    .put("p50", q(0.50))
+                    .put("p95", q(0.95))
+                    .put("p99", q(0.99))
+            })
+            .collect::<Vec<_>>();
+        Json::Arr(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn boundaries() -> Vec<f64> {
+        let mut b = Vec::with_capacity(HIST_BUCKETS);
+        let mut edge = HIST_MIN_MS;
+        for _ in 0..HIST_BUCKETS {
+            b.push(edge);
+            edge *= HIST_GROWTH;
+        }
+        b
+    }
+
+    #[test]
+    fn empty_histogram_has_no_quantiles() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.quantile(0.99), None);
+        assert_eq!(h.max_ms(), None);
+        let j = h.summary_json().to_string();
+        assert!(j.contains("\"p50\":null"), "{j}");
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let mut h = Histogram::new();
+        h.record(37.25);
+        for q in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Some(37.25), "q={q}");
+        }
+    }
+
+    #[test]
+    fn saturating_top_bucket_clamps_to_max() {
+        let mut h = Histogram::new();
+        h.record(1.0e9); // far above the ~89 s top edge
+        h.record(2.0e9);
+        assert_eq!(h.bucket_counts()[HIST_BUCKETS], 2);
+        assert_eq!(h.quantile(0.99), Some(2.0e9));
+        assert_eq!(h.quantile(0.5), Some(2.0e9)); // both in one bucket
+    }
+
+    #[test]
+    fn boundary_sample_lands_in_upper_bucket() {
+        // An edge value v == boundaries[k] must count toward bucket k+1
+        // (edges are half-open on the right): mirror of bisect_right.
+        let b = boundaries();
+        let mut h = Histogram::new();
+        h.record(b[7]);
+        assert_eq!(h.bucket_counts()[8], 1);
+        // Just below the edge stays in bucket 7.
+        let mut g = Histogram::new();
+        g.record(b[7] * (1.0 - 1e-12));
+        assert_eq!(g.bucket_counts()[7], 1);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let samples = [0.01, 0.05, 0.4, 3.0, 3.1, 40.0, 41.5, 900.0, 5e5];
+        let mut all = Histogram::new();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, &s) in samples.iter().enumerate() {
+            all.record(s);
+            if i % 2 == 0 {
+                a.record(s)
+            } else {
+                b.record(s)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+        assert_eq!(a.quantile(0.95), all.quantile(0.95));
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bounded() {
+        let mut h = Histogram::new();
+        let mut v = 0.07;
+        for _ in 0..500 {
+            h.record(v);
+            v = (v * 1.17) % 2000.0 + 0.05;
+        }
+        let mut prev = 0.0;
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            let x = h.quantile(q).unwrap();
+            assert!(x >= prev, "q={q}: {x} < {prev}");
+            assert!(x <= h.max_ms().unwrap());
+            prev = x;
+        }
+        assert_eq!(h.quantile(1.0), h.max_ms());
+    }
+
+    #[test]
+    fn epoch_latencies_total_merges_in_order_and_keeps_empty_epochs() {
+        let mut el = EpochLatencies::with_epochs(3);
+        el.record(0, 10.0);
+        el.record(2, 20.0);
+        el.record(2, 30.0);
+        assert_eq!(el.epochs()[1].count(), 0);
+        let t = el.total();
+        assert_eq!(t.count(), 3);
+        assert_eq!(t.max_ms(), Some(30.0));
+        let j = el.to_json().to_string();
+        assert!(j.contains("\"epoch\":1,\"count\":0,\"p50\":null"), "{j}");
+    }
+}

@@ -1,0 +1,583 @@
+//! Deterministic event tracing and latency metrics (ISSUE 7).
+//!
+//! The observability substrate for the repo: per-worker [`EventSink`]s
+//! push structured [`Event`]s into thread-local buffers that are swapped
+//! out over an `mpsc` channel (no locks, no allocation on the common
+//! path), and a [`TraceCollector`] drains them into a [`Timeline`] whose
+//! canonical order depends only on the run's *logical clocks* — tenant,
+//! epoch, frame, sequence — never wall time. A drained timeline is
+//! therefore byte-identical across thread counts, pacing
+//! (`--realtime-scale`), and injected stragglers, exactly like reports.
+//!
+//! Capture is gated by a single boolean per sink: with tracing disabled
+//! (`--trace-out` absent) the hot path pays one branch, which the gated
+//! `obs/on_frame_overhead` bench holds to budget. Always-on counters and
+//! the streaming histograms in [`hist`] are separate from capture and
+//! never turn off.
+
+pub mod hist;
+
+pub use hist::{EpochLatencies, Histogram, HIST_BUCKETS, HIST_GROWTH, HIST_MIN_MS};
+
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Buffered events per sink before the buffer is swapped out to the
+/// collector (`mem::take` + channel send — the "ring" rotation).
+const FLUSH_EVENTS: usize = 1024;
+
+/// What happened. Payloads carry the decision inputs/outputs that the
+/// `inspect` views render; all values are logical or deterministic model
+/// quantities (virtual-time latencies, knob vectors, core grants) —
+/// never wall-clock readings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A frame entered the pipeline with this knob vector (live only).
+    FrameStart { knobs: Vec<f64> },
+    /// A frame completed: end-to-end latency, per-stage latencies
+    /// (empty where stages are not tracked), and fidelity/reward.
+    Frame {
+        ms: f64,
+        stage_ms: Vec<f64>,
+        fidelity: f64,
+    },
+    /// A knob schedule was extended for one tenant.
+    Knobs {
+        from_frame: usize,
+        horizon: usize,
+        knobs: Vec<f64>,
+    },
+    /// A tenant was parked by admission control.
+    Park,
+    /// A parked tenant was re-admitted, fast-forwarded to this epoch.
+    Resume { at_epoch: usize },
+    /// The completion frontier passed this epoch, releasing a decision.
+    Frontier { passed: usize },
+    /// An admission decision: who runs this epoch, with the per-tenant
+    /// core demand summaries it was based on.
+    Admission {
+        admitted: Vec<bool>,
+        reservations: Vec<usize>,
+    },
+    /// A core allocation across tenants, with churn vs the previous one.
+    Alloc {
+        cores: Vec<usize>,
+        parked: Vec<bool>,
+        churn_cores: usize,
+    },
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::FrameStart { .. } => "frame_start",
+            EventKind::Frame { .. } => "frame",
+            EventKind::Knobs { .. } => "knobs",
+            EventKind::Park => "park",
+            EventKind::Resume { .. } => "resume",
+            EventKind::Frontier { .. } => "frontier",
+            EventKind::Admission { .. } => "admission",
+            EventKind::Alloc { .. } => "alloc",
+        }
+    }
+
+    /// Tie-break rank within one (epoch, tenant, frame, seq) cell; also
+    /// fixes the semantic order of same-epoch control events (frontier
+    /// advance, then admission, then allocation).
+    fn rank(&self) -> usize {
+        match self {
+            EventKind::FrameStart { .. } => 0,
+            EventKind::Frame { .. } => 1,
+            EventKind::Knobs { .. } => 2,
+            EventKind::Park => 3,
+            EventKind::Resume { .. } => 4,
+            EventKind::Frontier { .. } => 5,
+            EventKind::Admission { .. } => 6,
+            EventKind::Alloc { .. } => 7,
+        }
+    }
+}
+
+/// One trace event, stamped with logical clocks only.
+///
+/// `tenant == None` marks a run-global (scheduler) event; `frame ==
+/// None` marks a control event not tied to one frame. Within an epoch
+/// the canonical order is: per-tenant frame events (by frame, then
+/// seq), per-tenant control events, then global control events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub tenant: Option<usize>,
+    pub epoch: usize,
+    pub frame: Option<usize>,
+    pub seq: usize,
+    pub kind: EventKind,
+}
+
+impl Event {
+    fn key(&self) -> (usize, usize, usize, usize, usize) {
+        (
+            self.epoch,
+            self.tenant.unwrap_or(usize::MAX),
+            self.frame.unwrap_or(usize::MAX),
+            self.seq,
+            self.kind.rank(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<usize>| match v {
+            Some(x) => Json::from(x),
+            None => Json::Null,
+        };
+        let j = Json::obj()
+            .put("tenant", opt(self.tenant))
+            .put("epoch", self.epoch)
+            .put("frame", opt(self.frame))
+            .put("seq", self.seq)
+            .put("kind", self.kind.name());
+        let usizes = |xs: &[usize]| Json::Arr(xs.iter().map(|&x| Json::from(x)).collect());
+        let bools = |xs: &[bool]| Json::Arr(xs.iter().map(|&x| Json::from(x)).collect());
+        match &self.kind {
+            EventKind::FrameStart { knobs } => j.put("knobs", Json::from_f64_slice(knobs)),
+            EventKind::Frame {
+                ms,
+                stage_ms,
+                fidelity,
+            } => j
+                .put("ms", *ms)
+                .put("stage_ms", Json::from_f64_slice(stage_ms))
+                .put("fidelity", *fidelity),
+            EventKind::Knobs {
+                from_frame,
+                horizon,
+                knobs,
+            } => j
+                .put("from_frame", *from_frame)
+                .put("horizon", *horizon)
+                .put("knobs", Json::from_f64_slice(knobs)),
+            EventKind::Park => j,
+            EventKind::Resume { at_epoch } => j.put("at_epoch", *at_epoch),
+            EventKind::Frontier { passed } => j.put("passed", *passed),
+            EventKind::Admission {
+                admitted,
+                reservations,
+            } => j
+                .put("admitted", bools(admitted))
+                .put("reservations", usizes(reservations)),
+            EventKind::Alloc {
+                cores,
+                parked,
+                churn_cores,
+            } => j
+                .put("cores", usizes(cores))
+                .put("parked", bools(parked))
+                .put("churn_cores", *churn_cores),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Event> {
+        let opt = |key: &str| -> Result<Option<usize>> {
+            match j.get(key) {
+                None => bail!("event missing {key:?}"),
+                Some(Json::Null) => Ok(None),
+                Some(v) => Ok(Some(v.as_usize()?)),
+            }
+        };
+        let bools = |key: &str| -> Result<Vec<bool>> {
+            j.req(key)?.as_arr()?.iter().map(|v| v.as_bool()).collect()
+        };
+        let kind = match j.req("kind")?.as_str()? {
+            "frame_start" => EventKind::FrameStart {
+                knobs: j.req("knobs")?.as_f64_vec()?,
+            },
+            "frame" => EventKind::Frame {
+                ms: j.req("ms")?.as_f64()?,
+                stage_ms: j.req("stage_ms")?.as_f64_vec()?,
+                fidelity: j.req("fidelity")?.as_f64()?,
+            },
+            "knobs" => EventKind::Knobs {
+                from_frame: j.req("from_frame")?.as_usize()?,
+                horizon: j.req("horizon")?.as_usize()?,
+                knobs: j.req("knobs")?.as_f64_vec()?,
+            },
+            "park" => EventKind::Park,
+            "resume" => EventKind::Resume {
+                at_epoch: j.req("at_epoch")?.as_usize()?,
+            },
+            "frontier" => EventKind::Frontier {
+                passed: j.req("passed")?.as_usize()?,
+            },
+            "admission" => EventKind::Admission {
+                admitted: bools("admitted")?,
+                reservations: j.req("reservations")?.as_usize_vec()?,
+            },
+            "alloc" => EventKind::Alloc {
+                cores: j.req("cores")?.as_usize_vec()?,
+                parked: bools("parked")?,
+                churn_cores: j.req("churn_cores")?.as_usize()?,
+            },
+            other => bail!("unknown event kind {other:?}"),
+        };
+        Ok(Event {
+            tenant: opt("tenant")?,
+            epoch: j.req("epoch")?.as_usize()?,
+            frame: opt("frame")?,
+            seq: j.req("seq")?.as_usize()?,
+            kind,
+        })
+    }
+}
+
+/// Sort events into canonical (logical-clock) order. Every recorded
+/// event has a unique key by construction, so the order is total and
+/// independent of arrival order.
+pub fn sort_events(events: &mut [Event]) {
+    events.sort_unstable_by_key(|e| e.key());
+}
+
+/// Per-worker event buffer. `record_with` takes a closure so the event
+/// payload is never even constructed when capture is disabled — the
+/// disabled path is a single branch (gated bench `obs/on_frame_overhead`).
+pub struct EventSink {
+    enabled: bool,
+    buf: Vec<Event>,
+    tx: Option<Sender<Vec<Event>>>,
+}
+
+impl EventSink {
+    /// A sink that drops everything; useful as a default/bench stand-in.
+    pub fn disabled() -> EventSink {
+        EventSink {
+            enabled: false,
+            buf: Vec::new(),
+            tx: None,
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn record_with<F: FnOnce() -> Event>(&mut self, make: F) {
+        if !self.enabled {
+            return;
+        }
+        self.buf.push(make());
+        if self.buf.len() >= FLUSH_EVENTS {
+            self.flush();
+        }
+    }
+
+    /// Swap the buffer out to the collector.
+    pub fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        match &self.tx {
+            Some(tx) => {
+                let _ = tx.send(std::mem::take(&mut self.buf));
+            }
+            None => self.buf.clear(),
+        }
+    }
+
+    /// Flush and detach from the collector so a later
+    /// [`TraceCollector::drain`] does not wait on this sink.
+    pub fn close(&mut self) {
+        self.flush();
+        self.tx = None;
+    }
+}
+
+impl Drop for EventSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+impl std::fmt::Debug for EventSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventSink")
+            .field("enabled", &self.enabled)
+            .field("buffered", &self.buf.len())
+            .finish()
+    }
+}
+
+/// Hands out sinks to workers and drains their buffers into a
+/// canonically ordered event list.
+pub struct TraceCollector {
+    enabled: bool,
+    tx: Sender<Vec<Event>>,
+    rx: Receiver<Vec<Event>>,
+}
+
+impl TraceCollector {
+    pub fn new(enabled: bool) -> TraceCollector {
+        let (tx, rx) = channel();
+        TraceCollector { enabled, tx, rx }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn sink(&self) -> EventSink {
+        EventSink {
+            enabled: self.enabled,
+            buf: Vec::new(),
+            tx: Some(self.tx.clone()),
+        }
+    }
+
+    /// Collect every flushed buffer and sort. All sinks must have been
+    /// dropped or [`EventSink::close`]d by now (drain would otherwise
+    /// wait for them).
+    pub fn drain(self) -> Vec<Event> {
+        let TraceCollector { tx, rx, .. } = self;
+        drop(tx);
+        let mut events = Vec::new();
+        while let Ok(mut batch) = rx.recv() {
+            events.append(&mut batch);
+        }
+        sort_events(&mut events);
+        events
+    }
+}
+
+/// A saved trace: run identity plus the canonically ordered events.
+/// Serialized as a versioned JSON artifact (`--trace-out PATH`) and read
+/// back by the `inspect` subcommand and `scripts/validate_timeline.py`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timeline {
+    /// `"fleet"` or `"live"`.
+    pub source: String,
+    pub seed: u64,
+    pub apps: usize,
+    pub frames: usize,
+    pub epoch_frames: usize,
+    pub events: Vec<Event>,
+}
+
+pub const TIMELINE_VERSION: u64 = 1;
+
+impl Timeline {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .put("version", TIMELINE_VERSION)
+            .put("kind", "iptune-timeline")
+            .put("source", self.source.as_str())
+            .put("seed", self.seed)
+            .put("apps", self.apps)
+            .put("frames", self.frames)
+            .put("epoch_frames", self.epoch_frames)
+            .put(
+                "events",
+                Json::Arr(self.events.iter().map(|e| e.to_json()).collect()),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Timeline> {
+        let version = j.req("version")?.as_u64()?;
+        if version != TIMELINE_VERSION {
+            bail!("unsupported timeline version {version}");
+        }
+        let kind = j.req("kind")?.as_str()?;
+        if kind != "iptune-timeline" {
+            bail!("not a timeline artifact (kind {kind:?})");
+        }
+        let events = j
+            .req("events")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Event::from_json(e).with_context(|| format!("event {i}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Timeline {
+            source: j.req("source")?.as_str()?.to_string(),
+            seed: j.req("seed")?.as_u64()?,
+            apps: j.req("apps")?.as_usize()?,
+            frames: j.req("frames")?.as_usize()?,
+            epoch_frames: j.req("epoch_frames")?.as_usize()?,
+            events,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Timeline> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Timeline::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing timeline {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_event(tenant: usize, epoch: usize, frame: usize, ms: f64) -> Event {
+        Event {
+            tenant: Some(tenant),
+            epoch,
+            frame: Some(frame),
+            seq: 1,
+            kind: EventKind::Frame {
+                ms,
+                stage_ms: vec![ms * 0.5, ms * 0.5],
+                fidelity: 0.9,
+            },
+        }
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing_and_is_cheap_to_drop() {
+        let collector = TraceCollector::new(false);
+        let mut sink = collector.sink();
+        let mut built = 0;
+        sink.record_with(|| {
+            built += 1;
+            frame_event(0, 0, 0, 1.0)
+        });
+        drop(sink);
+        assert_eq!(built, 0, "payload closure must not run when disabled");
+        assert!(collector.drain().is_empty());
+    }
+
+    #[test]
+    fn drain_orders_events_canonically_regardless_of_arrival() {
+        let collector = TraceCollector::new(true);
+        let mut expect = Vec::new();
+        std::thread::scope(|s| {
+            for w in 0..3usize {
+                let mut sink = collector.sink();
+                s.spawn(move || {
+                    // Deliberately record epochs out of order.
+                    for epoch in [1usize, 0] {
+                        for f in 0..4usize {
+                            sink.record_with(|| frame_event(w, epoch, epoch * 4 + f, 2.0));
+                        }
+                    }
+                });
+            }
+        });
+        let mut sched = collector.sink();
+        sched.record_with(|| Event {
+            tenant: None,
+            epoch: 0,
+            frame: None,
+            seq: 0,
+            kind: EventKind::Alloc {
+                cores: vec![4, 4, 4],
+                parked: vec![false; 3],
+                churn_cores: 0,
+            },
+        });
+        sched.close();
+        for epoch in 0..2usize {
+            for w in 0..3usize {
+                for f in 0..4usize {
+                    expect.push(frame_event(w, epoch, epoch * 4 + f, 2.0));
+                }
+            }
+            if epoch == 0 {
+                expect.push(Event {
+                    tenant: None,
+                    epoch: 0,
+                    frame: None,
+                    seq: 0,
+                    kind: EventKind::Alloc {
+                        cores: vec![4, 4, 4],
+                        parked: vec![false; 3],
+                        churn_cores: 0,
+                    },
+                });
+            }
+        }
+        let events = collector.drain();
+        assert_eq!(events, expect);
+    }
+
+    #[test]
+    fn timeline_json_round_trips() {
+        let mut events = vec![
+            Event {
+                tenant: Some(1),
+                epoch: 0,
+                frame: None,
+                seq: 0,
+                kind: EventKind::Knobs {
+                    from_frame: 0,
+                    horizon: 30,
+                    knobs: vec![2.0, 1024.0],
+                },
+            },
+            Event {
+                tenant: None,
+                epoch: 0,
+                frame: None,
+                seq: 0,
+                kind: EventKind::Admission {
+                    admitted: vec![true, false],
+                    reservations: vec![3, 5],
+                },
+            },
+            Event {
+                tenant: Some(0),
+                epoch: 1,
+                frame: None,
+                seq: 0,
+                kind: EventKind::Park,
+            },
+            Event {
+                tenant: Some(0),
+                epoch: 2,
+                frame: None,
+                seq: 0,
+                kind: EventKind::Resume { at_epoch: 2 },
+            },
+            Event {
+                tenant: None,
+                epoch: 2,
+                frame: None,
+                seq: 0,
+                kind: EventKind::Frontier { passed: 1 },
+            },
+            frame_event(0, 0, 3, 12.5),
+            Event {
+                tenant: Some(0),
+                epoch: 0,
+                frame: Some(3),
+                seq: 0,
+                kind: EventKind::FrameStart {
+                    knobs: vec![2.0, 1024.0],
+                },
+            },
+        ];
+        sort_events(&mut events);
+        let tl = Timeline {
+            source: "live".to_string(),
+            seed: 42,
+            apps: 2,
+            frames: 60,
+            epoch_frames: 30,
+            events,
+        };
+        let text = tl.to_json().to_string();
+        let back = Timeline::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, tl);
+        assert_eq!(back.to_json().to_string(), text);
+    }
+}

@@ -79,6 +79,7 @@ use crate::apps::App;
 use crate::engine::{
     spawn_stream, EngineConfig, FrameRecord, KnobHandle, PauseHandle, ScheduleHandle,
 };
+use crate::obs::{self, EpochLatencies, Event, EventKind, EventSink, TraceCollector};
 use crate::runtime::native::NativeBackend;
 use crate::runtime::Backend;
 use crate::scheduler::frontier::ProgressFrontier;
@@ -119,6 +120,9 @@ pub struct LiveConfig {
     pub cluster: Cluster,
     pub scheduler: SchedulerConfig,
     pub workload: WorkloadConfig,
+    /// Capture the full event trace into [`LiveReport::timeline`]
+    /// (`--trace-out`). Off, only the always-on histograms/counters run.
+    pub trace_events: bool,
 }
 
 impl Default for LiveConfig {
@@ -136,6 +140,7 @@ impl Default for LiveConfig {
             cluster: Cluster::default(),
             scheduler: SchedulerConfig::default(),
             workload: WorkloadConfig::default(),
+            trace_events: false,
         }
     }
 }
@@ -162,6 +167,9 @@ pub struct LiveAppSummary {
     /// fast tenant's banked frames in bulk and this count collapses —
     /// the divergence the straggler regression test measures.
     pub completed_epochs: usize,
+    /// Streaming end-to-end latency histograms, bucketed per epoch
+    /// (always on; independent of [`LiveConfig::trace_events`]).
+    pub latency: EpochLatencies,
 }
 
 impl LiveAppSummary {
@@ -178,6 +186,8 @@ impl LiveAppSummary {
             .put("final_cores", self.final_cores)
             .put("parked_epochs", self.parked_epochs)
             .put("completed_epochs", self.completed_epochs)
+            .put("latency_ms", self.latency.total().summary_json())
+            .put("epoch_latency_ms", self.latency.to_json())
     }
 }
 
@@ -191,6 +201,11 @@ pub struct LiveReport {
     pub levels: Vec<usize>,
     pub total_cores: usize,
     pub fairness_floor: usize,
+    /// Full event timeline, populated only under
+    /// [`LiveConfig::trace_events`]. Deliberately *not* serialized into
+    /// [`to_json`](Self::to_json): the report stays byte-comparable and
+    /// the timeline is saved separately (`--trace-out`).
+    pub timeline: Option<obs::Timeline>,
 }
 
 impl LiveReport {
@@ -273,6 +288,10 @@ struct LiveRun<'a> {
     /// Last knobs scheduled per tenant (the drain extends these over any
     /// post-window tail).
     current_ks: Vec<Vec<f64>>,
+    /// Per-tenant per-epoch latency histograms (always on).
+    lat: Vec<EpochLatencies>,
+    /// Event sink for the fold thread (no-op unless `trace_events`).
+    sink: EventSink,
 }
 
 impl LiveRun<'_> {
@@ -282,6 +301,28 @@ impl LiveRun<'_> {
         let (y, off) = self.backends[i].group_map().targets(&rec.stage_ms, rec.end_to_end_ms);
         self.backends[i].update(&u, &y);
         self.backends[i].observe_offset(off);
+        // the tenant's epoch is its own fold count, not wall time — the
+        // same frame lands in the same bucket under any pacing
+        let epoch = self.frames_seen[i] / self.epoch_frames;
+        self.lat[i].record(epoch, rec.end_to_end_ms);
+        self.sink.record_with(|| Event {
+            tenant: Some(i),
+            epoch,
+            frame: Some(rec.frame),
+            seq: 0,
+            kind: EventKind::FrameStart { knobs: rec.knobs.clone() },
+        });
+        self.sink.record_with(|| Event {
+            tenant: Some(i),
+            epoch,
+            frame: Some(rec.frame),
+            seq: 1,
+            kind: EventKind::Frame {
+                ms: rec.end_to_end_ms,
+                stage_ms: rec.stage_ms.clone(),
+                fidelity: rec.fidelity,
+            },
+        });
         self.frames_seen[i] += 1;
         self.lat_sum[i] += rec.end_to_end_ms;
         self.fid_sum[i] += rec.fidelity;
@@ -305,15 +346,26 @@ impl LiveRun<'_> {
     /// the last decided knobs so parked tenants drain their deferred
     /// tails — a live stream never loses frames to parking.
     fn drain_schedules(&mut self) {
+        // drain extensions are stamped past every decision epoch so they
+        // sort after all in-window knob events
+        let drain_epoch = (self.cfg.frames + self.epoch_frames - 1) / self.epoch_frames;
+        let frames = self.cfg.frames;
         for i in 0..self.cfg.apps {
-            if self.target[i] < self.cfg.frames {
+            if self.target[i] < frames {
                 let from = self.target[i];
                 let ks = self.current_ks[i].clone();
                 self.sched_handles[i]
                     .as_ref()
                     .expect("frontier streams are scheduled")
-                    .extend(from, ks, self.cfg.frames);
-                self.target[i] = self.cfg.frames;
+                    .extend(from, ks.clone(), frames);
+                self.sink.record_with(|| Event {
+                    tenant: Some(i),
+                    epoch: drain_epoch,
+                    frame: None,
+                    seq: 0,
+                    kind: EventKind::Knobs { from_frame: from, horizon: frames, knobs: ks },
+                });
+                self.target[i] = frames;
             }
         }
     }
@@ -383,6 +435,13 @@ impl LiveRun<'_> {
             let next = self.adm_state.decide(self.total, &w, &reservations);
             for a in 0..n {
                 if next[a] && !self.admitted[a] {
+                    self.sink.record_with(|| Event {
+                        tenant: Some(a),
+                        epoch: epoch_idx,
+                        frame: None,
+                        seq: 0,
+                        kind: EventKind::Resume { at_epoch: epoch_idx },
+                    });
                     if self.cfg.barrier {
                         // re-admitted: reopen the source gate (the warm
                         // model learned so far is still in `backends`)
@@ -395,6 +454,13 @@ impl LiveRun<'_> {
                         self.pause_handles[a].resume_at(epoch_idx);
                     }
                 } else if !next[a] && self.admitted[a] {
+                    self.sink.record_with(|| Event {
+                        tenant: Some(a),
+                        epoch: epoch_idx,
+                        frame: None,
+                        seq: 0,
+                        kind: EventKind::Park,
+                    });
                     if self.cfg.barrier {
                         self.pause_handles[a].pause();
                     } else {
@@ -409,6 +475,19 @@ impl LiveRun<'_> {
             self.admitted = next;
         } else if self.epoch_mode && !draining {
             self.admitted = self.adm_state.hold();
+        }
+        if self.sink.enabled() {
+            let ev = Event {
+                tenant: None,
+                epoch: epoch_idx,
+                frame: None,
+                seq: 0,
+                kind: EventKind::Admission {
+                    admitted: self.admitted.clone(),
+                    reservations: reservations.clone(),
+                },
+            };
+            self.sink.record_with(|| ev);
         }
         for (a, &adm) in self.admitted.iter().enumerate() {
             if !adm {
@@ -462,6 +541,13 @@ impl LiveRun<'_> {
                     .as_ref()
                     .expect("frontier streams are scheduled")
                     .extend(from, ks.clone(), to);
+                self.sink.record_with(|| Event {
+                    tenant: Some(a),
+                    epoch: epoch_idx,
+                    frame: None,
+                    seq: 0,
+                    kind: EventKind::Knobs { from_frame: from, horizon: to, knobs: ks.clone() },
+                });
                 self.current_ks[a] = ks;
                 self.target[a] = to;
             }
@@ -471,6 +557,20 @@ impl LiveRun<'_> {
             .last()
             .map(|prev| AllocationFrame::churn_vs(self.shared.quotas(), prev))
             .unwrap_or(0);
+        if self.sink.enabled() {
+            let ev = Event {
+                tenant: None,
+                epoch: epoch_idx,
+                frame: None,
+                seq: 0,
+                kind: EventKind::Alloc {
+                    cores: self.shared.quotas().to_vec(),
+                    parked: parked.clone(),
+                    churn_cores,
+                },
+            };
+            self.sink.record_with(|| ev);
+        }
         let predicted_utility: Vec<f64> = (0..n)
             .map(|a| if self.admitted[a] { curves[a][self.rungs[a]] } else { 0.0 })
             .collect();
@@ -507,6 +607,15 @@ impl LiveRun<'_> {
             while next_decision * self.epoch_frames < self.cfg.frames
                 && self.frontier.passed(next_decision - 1)
             {
+                // stamp the *decided* epoch, not the racy envelope state:
+                // the trace is identical under any arrival interleaving
+                self.sink.record_with(|| Event {
+                    tenant: None,
+                    epoch: next_decision,
+                    frame: None,
+                    seq: 0,
+                    kind: EventKind::Frontier { passed: next_decision - 1 },
+                });
                 self.fire_decision(next_decision, false);
                 next_decision += 1;
                 if next_decision * self.epoch_frames >= self.cfg.frames {
@@ -732,6 +841,8 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
         .collect();
     let current_ks: Vec<Vec<f64>> = apps.iter().map(|a| a.spec.defaults()).collect();
     let n_levels = levels.len();
+    let trace = TraceCollector::new(cfg.trace_events);
+    let total_epochs = (cfg.frames + epoch_frames - 1) / epoch_frames;
     let mut run = LiveRun {
         cfg,
         epoch_mode,
@@ -766,7 +877,65 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
         buf: (0..cfg.apps).map(|_| VecDeque::new()).collect(),
         delivered: vec![0; cfg.apps],
         current_ks,
+        lat: (0..cfg.apps).map(|_| EpochLatencies::with_epochs(total_epochs)).collect(),
+        sink: trace.sink(),
     };
+    if run.sink.enabled() {
+        // the epoch-0 decision happens before any frame streams: record
+        // its admission verdict, initial schedules, and even-share grants
+        for i in 0..cfg.apps {
+            if !run.admitted[i] {
+                let ev = Event {
+                    tenant: Some(i),
+                    epoch: 0,
+                    frame: None,
+                    seq: 0,
+                    kind: EventKind::Park,
+                };
+                run.sink.record_with(|| ev);
+            } else if !cfg.barrier {
+                let ev = Event {
+                    tenant: Some(i),
+                    epoch: 0,
+                    frame: None,
+                    seq: 0,
+                    kind: EventKind::Knobs {
+                        from_frame: 0,
+                        horizon: run.target[i],
+                        knobs: run.current_ks[i].clone(),
+                    },
+                };
+                run.sink.record_with(|| ev);
+            }
+        }
+        let ev = Event {
+            tenant: None,
+            epoch: 0,
+            frame: None,
+            seq: 0,
+            kind: EventKind::Admission {
+                admitted: run.admitted.clone(),
+                reservations: if epoch_mode {
+                    vec![floor_req.clamp(1, total.max(1)); cfg.apps]
+                } else {
+                    Vec::new()
+                },
+            },
+        };
+        run.sink.record_with(|| ev);
+        let ev = Event {
+            tenant: None,
+            epoch: 0,
+            frame: None,
+            seq: 0,
+            kind: EventKind::Alloc {
+                cores: run.shared.quotas().to_vec(),
+                parked: run.admitted.iter().map(|&a| !a).collect(),
+                churn_cores: 0,
+            },
+        };
+        run.sink.record_with(|| ev);
+    }
     if cfg.barrier {
         run.barrier_loop(&rec_rx);
     } else {
@@ -777,6 +946,10 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     // tenant parked at the final decide closes at zero cores, not at its
     // stale pre-park rung)
     let final_cores = run.allocations.last().expect("epoch 0 recorded").cores.clone();
+    // release the fold thread's sender before draining: the collector's
+    // receiver only hangs up once every sink has flushed and closed
+    run.sink.close();
+    let mut lat = std::mem::take(&mut run.lat);
     let summaries: Vec<LiveAppSummary> = (0..cfg.apps)
         .map(|i| {
             let n = run.frames_seen[i].max(1) as f64;
@@ -792,9 +965,18 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                 final_cores: final_cores[i],
                 parked_epochs: run.parked_epochs[i],
                 completed_epochs: run.completed_epochs[i],
+                latency: std::mem::take(&mut lat[i]),
             }
         })
         .collect();
+    let timeline = cfg.trace_events.then(|| obs::Timeline {
+        source: "live".to_string(),
+        seed: cfg.seed,
+        apps: cfg.apps,
+        frames: cfg.frames,
+        epoch_frames,
+        events: trace.drain(),
+    });
     Ok(LiveReport {
         protocol: if cfg.barrier { "barrier" } else { "frontier" },
         apps: summaries,
@@ -802,6 +984,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
         levels: run.levels,
         total_cores: total,
         fairness_floor: floor,
+        timeline,
     })
 }
 

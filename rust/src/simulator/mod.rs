@@ -216,6 +216,17 @@ pub struct FrameResult {
     pub granted_workers: Vec<usize>,
 }
 
+/// Always-on observability counters a [`ClusterSim`] accumulates as it
+/// runs frames (ISSUE 7): frame count plus the end-to-end latency
+/// distribution, cheap enough to never turn off.
+#[derive(Debug, Clone, Default)]
+pub struct SimCounters {
+    /// Frames simulated through [`ClusterSim::run_frame`].
+    pub frames: u64,
+    /// End-to-end latency histogram across those frames.
+    pub latency: crate::obs::Histogram,
+}
+
 /// Virtual-time cluster simulator.
 pub struct ClusterSim {
     pub cluster: Cluster,
@@ -223,6 +234,7 @@ pub struct ClusterSim {
     rng: crate::util::Rng,
     /// Per-frame fidelity measurement noise sigma.
     pub fidelity_sigma: f64,
+    counters: SimCounters,
     /// Optional per-app core quota on a shared cluster: grants are made
     /// against `min(core_budget, total_cores)` instead of the whole pool.
     /// `None` (the default) reproduces the dedicated-cluster behavior.
@@ -242,9 +254,15 @@ impl ClusterSim {
             noise,
             rng: crate::util::Rng::new(seed),
             fidelity_sigma: 0.02,
+            counters: SimCounters::default(),
             core_budget: None,
             time_multiplex: false,
         }
+    }
+
+    /// Always-on counters: frames simulated and their latency histogram.
+    pub fn counters(&self) -> &SimCounters {
+        &self.counters
     }
 
     /// Deterministic simulator (no latency or fidelity noise).
@@ -334,6 +352,8 @@ impl ClusterSim {
         if self.fidelity_sigma > 0.0 {
             fidelity += self.fidelity_sigma * self.rng.normal();
         }
+        self.counters.frames += 1;
+        self.counters.latency.record(end_to_end_ms);
         FrameResult {
             stage_ms,
             end_to_end_ms,
@@ -363,6 +383,20 @@ mod tests {
         let fb = b.run_frame(&app, &ks, 10);
         assert_eq!(fa.stage_ms, fb.stage_ms);
         assert_eq!(fa.fidelity, fb.fidelity);
+    }
+
+    #[test]
+    fn counters_track_simulated_frames() {
+        let app = pose();
+        let ks = app.spec.defaults();
+        let mut sim = ClusterSim::deterministic(Cluster::default());
+        for f in 0..10 {
+            sim.run_frame(&app, &ks, f);
+        }
+        let c = sim.counters();
+        assert_eq!(c.frames, 10);
+        assert_eq!(c.latency.count(), 10);
+        assert!(c.latency.quantile(0.5).unwrap() > 0.0);
     }
 
     #[test]

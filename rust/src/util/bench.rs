@@ -115,9 +115,9 @@ impl Bencher {
         if let Err(e) = std::fs::create_dir_all(&dir)
             .and_then(|_| std::fs::write(&path, self.to_json(target).to_string()))
         {
-            eprintln!("bench: could not write {}: {e}", path.display());
+            crate::log_warn!("bench: could not write {}: {e}", path.display());
         } else {
-            println!("bench json -> {}", path.display());
+            crate::log_info!("bench json -> {}", path.display());
         }
     }
 
@@ -158,7 +158,7 @@ impl Bencher {
         let min = samples[0];
         let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
         let result = BenchResult { name: name.to_string(), iters: n, mean, median, min };
-        println!(
+        crate::log_info!(
             "bench {:<44} median {:>12} mean {:>12} min {:>12} ({} samples x {} iters)",
             result.name,
             fmt_dur(median),
@@ -178,7 +178,7 @@ impl Bencher {
 
     /// Record a scalar side-metric (printed and serialized with the run).
     pub fn metric(&mut self, name: &str, value: f64) {
-        println!("metric {name:<42} {value}");
+        crate::log_info!("metric {name:<42} {value}");
         self.metrics.push((name.to_string(), value));
     }
 }

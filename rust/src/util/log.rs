@@ -1,0 +1,82 @@
+//! Minimal leveled stderr logger (ISSUE 7 satellite).
+//!
+//! Progress and status lines across the crate go through [`log_info!`] /
+//! [`log_verbose!`] / [`log_warn!`] instead of ad-hoc
+//! `println!`/`eprintln!`, so stdout stays clean for machine-readable
+//! output (JSON reports, result tables) and the CLI's `--quiet` /
+//! `--verbose` flags work uniformly. Everything the logger emits goes to
+//! stderr.
+//!
+//! Levels: `QUIET` silences info and verbose (warnings still print),
+//! `INFO` (the default) shows progress lines, `VERBOSE` adds chatty
+//! diagnostics.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const QUIET: u8 = 0;
+pub const INFO: u8 = 1;
+pub const VERBOSE: u8 = 2;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+
+/// Set the global log level (normally once, from CLI flag parsing).
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Would a message at `level` print?
+pub fn enabled(level: u8) -> bool {
+    level <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Progress/status line; suppressed by `--quiet`.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::INFO) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Chatty diagnostics; shown only with `--verbose`.
+#[macro_export]
+macro_rules! log_verbose {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::VERBOSE) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Warnings always print, even under `--quiet`.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        eprintln!($($arg)*);
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_gate_as_expected() {
+        // Note: global state — keep this the only test that mutates it.
+        set_level(QUIET);
+        assert!(!enabled(INFO));
+        assert!(!enabled(VERBOSE));
+        set_level(VERBOSE);
+        assert!(enabled(INFO));
+        assert!(enabled(VERBOSE));
+        set_level(INFO);
+        assert!(enabled(INFO));
+        assert!(!enabled(VERBOSE));
+        assert_eq!(level(), INFO);
+    }
+}

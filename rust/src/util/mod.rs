@@ -1,10 +1,12 @@
 //! In-tree substrates that keep the workspace building offline: a JSON
 //! codec ([`json`]), a deterministic PRNG ([`rng`]), a micro-benchmark
-//! harness ([`bench`]), a property-testing loop ([`prop`]) and test
-//! tempdir helpers ([`testdir`]).
+//! harness ([`bench`]), a leveled stderr logger ([`log`]), a
+//! property-testing loop ([`prop`]) and test tempdir helpers
+//! ([`testdir`]).
 
 pub mod bench;
 pub mod json;
+pub mod log;
 pub mod prop;
 pub mod rng;
 pub mod testdir;

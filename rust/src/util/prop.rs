@@ -17,7 +17,7 @@ pub fn check<F: FnMut(&mut Rng, usize)>(name: &str, cases: usize, mut prop: F) {
             prop(&mut rng, case)
         }));
         if let Err(e) = result {
-            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            crate::log_warn!("property '{name}' failed at case {case} (seed {seed:#x})");
             std::panic::resume_unwind(e);
         }
     }

@@ -114,6 +114,72 @@ fn frontier_reports_are_byte_identical_across_runs_and_pacing() {
 }
 
 #[test]
+fn frontier_timelines_and_percentiles_are_byte_identical_across_pacing() {
+    // the ISSUE 7 extension of the byte-identity bar: with tracing on,
+    // the *timeline* is a pure function of the config too, and the
+    // report now carries per-tenant latency percentiles
+    let mut cfg = LiveConfig {
+        apps: 3,
+        frames: 150,
+        seed: 42,
+        candidates: 10,
+        heterogeneous: true,
+        realtime_scale: 0.0,
+        cluster: Cluster { servers: 1, cores_per_server: 12, comm_ms_per_frame: 0.0 },
+        scheduler: SchedulerConfig {
+            epoch_frames: 30,
+            fairness_floor: 5,
+            admission_epoch: true,
+            starvation_bound: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.trace_events = true;
+    let base = run_live(&cfg).unwrap();
+    let report = base.to_json().to_string();
+    assert!(report.contains("\"latency_ms\""), "{report}");
+    assert!(report.contains("\"epoch_latency_ms\""), "{report}");
+    for a in &base.apps {
+        let h = a.latency.total();
+        assert_eq!(h.count(), a.frames as u64, "app {}", a.index);
+        let (p50, p95, p99) = (
+            h.quantile(0.50).unwrap(),
+            h.quantile(0.95).unwrap(),
+            h.quantile(0.99).unwrap(),
+        );
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "app {}: {p50} {p95} {p99}", a.index);
+    }
+    let tl = base.timeline.as_ref().expect("trace_events captures a timeline");
+    assert_eq!(tl.source, "live");
+    assert!(
+        tl.events.iter().any(|e| e.kind.name() == "frontier"),
+        "frontier advances must be traced"
+    );
+    let base_tl = tl.to_json().to_string();
+
+    let mut paced = cfg.clone();
+    paced.realtime_scale = 1e-7;
+    let paced = run_live(&paced).unwrap();
+    assert_eq!(report, paced.to_json().to_string(), "pacing changed the report bytes");
+    assert_eq!(
+        base_tl,
+        paced.timeline.as_ref().unwrap().to_json().to_string(),
+        "pacing changed the timeline bytes"
+    );
+
+    let mut slow = cfg.clone();
+    slow.straggler = Some((2, 1.5));
+    let slow = run_live(&slow).unwrap();
+    assert_eq!(report, slow.to_json().to_string(), "a straggler changed the report bytes");
+    assert_eq!(
+        base_tl,
+        slow.timeline.as_ref().unwrap().to_json().to_string(),
+        "a straggler changed the timeline bytes"
+    );
+}
+
+#[test]
 fn frontier_and_barrier_agree_on_frame_accounting_without_stragglers() {
     // with no straggler and no admission pressure the two protocols see
     // the same per-tenant frame totals (content differs: the barrier

@@ -1,0 +1,124 @@
+//! Deterministic-tracing guarantees (ISSUE 7): a captured timeline is a
+//! pure function of the run config — byte-identical across worker thread
+//! counts (fleet) — its events arrive in canonical logical-clock order,
+//! the artifact round-trips through JSON, and the always-on per-epoch
+//! histograms in the reports agree with the traced frame events.
+
+use iptune::fleet::{run_fleet, FleetConfig, FleetMode};
+use iptune::obs::{sort_events, EventKind, Timeline};
+use iptune::scheduler::SchedulerConfig;
+use iptune::util::Json;
+
+fn traced_cfg(threads: usize) -> FleetConfig {
+    FleetConfig {
+        apps: 3,
+        frames: 120,
+        seed: 42,
+        configs_per_app: 10,
+        threads,
+        mode: FleetMode::Dynamic,
+        heterogeneous: true,
+        scheduler: SchedulerConfig { epoch_frames: 30, ..Default::default() },
+        trace_events: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fleet_timeline_is_byte_identical_across_thread_counts() {
+    let base = run_fleet(&traced_cfg(1));
+    let report1 = base.to_json().to_string();
+    let tl1 = base.timeline.as_ref().unwrap().to_json().to_string();
+    for threads in [2usize, 4] {
+        let r = run_fleet(&traced_cfg(threads));
+        assert_eq!(
+            report1,
+            r.to_json().to_string(),
+            "report bytes diverged at {threads} threads"
+        );
+        assert_eq!(
+            tl1,
+            r.timeline.as_ref().unwrap().to_json().to_string(),
+            "timeline bytes diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn fleet_timeline_events_are_canonical_and_complete() {
+    let report = run_fleet(&traced_cfg(2));
+    let tl = report.timeline.as_ref().unwrap();
+    assert_eq!(tl.source, "fleet");
+    assert_eq!(tl.apps, 3);
+
+    // already in canonical order: re-sorting is a no-op
+    let mut resorted = tl.events.clone();
+    sort_events(&mut resorted);
+    assert_eq!(resorted, tl.events, "drained events were not canonically ordered");
+
+    // every tuned frame appears exactly once per tenant
+    for t in 0..tl.apps {
+        let frames: Vec<usize> = tl
+            .events
+            .iter()
+            .filter(|e| e.tenant == Some(t) && matches!(e.kind, EventKind::Frame { .. }))
+            .map(|e| e.frame.unwrap())
+            .collect();
+        let expect: Vec<usize> = (0..tl.frames).collect();
+        assert_eq!(frames, expect, "tenant {t} frame events");
+    }
+    // the dynamic scheduler traced its decisions
+    assert!(tl.events.iter().any(|e| matches!(e.kind, EventKind::Alloc { .. })));
+    assert!(tl.events.iter().any(|e| matches!(e.kind, EventKind::Admission { .. })));
+}
+
+#[test]
+fn fleet_histograms_match_the_traced_frame_events() {
+    let report = run_fleet(&traced_cfg(2));
+    let tl = report.timeline.as_ref().unwrap();
+    for (t, app) in report.apps.iter().enumerate() {
+        let traced: Vec<f64> = tl
+            .events
+            .iter()
+            .filter(|e| e.tenant == Some(t))
+            .filter_map(|e| match &e.kind {
+                EventKind::Frame { ms, .. } => Some(*ms),
+                _ => None,
+            })
+            .collect();
+        let mut mirror = iptune::obs::Histogram::new();
+        for ms in &traced {
+            mirror.record(*ms);
+        }
+        let total = app.latency.total();
+        assert_eq!(total.count(), traced.len() as u64, "app {t} count");
+        assert_eq!(total.bucket_counts(), mirror.bucket_counts(), "app {t} buckets");
+        assert_eq!(total.quantile(0.95), mirror.quantile(0.95), "app {t} p95");
+    }
+}
+
+#[test]
+fn timeline_artifact_round_trips_through_disk() {
+    let report = run_fleet(&traced_cfg(1));
+    let tl = report.timeline.as_ref().unwrap();
+    let dir = iptune::util::testdir::TestDir::new("obs_timeline_roundtrip");
+    let path = dir.path().join("timeline.json");
+    tl.save(&path).unwrap();
+    let back = Timeline::load(&path).unwrap();
+    assert_eq!(&back, tl);
+    // the artifact is schema-versioned
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(j.req("version").unwrap().as_u64().unwrap(), iptune::obs::TIMELINE_VERSION);
+    assert_eq!(j.req("kind").unwrap().as_str().unwrap(), "iptune-timeline");
+}
+
+#[test]
+fn tracing_off_leaves_no_timeline_but_keeps_histograms() {
+    let mut cfg = traced_cfg(1);
+    cfg.trace_events = false;
+    let report = run_fleet(&cfg);
+    assert!(report.timeline.is_none());
+    for app in &report.apps {
+        assert_eq!(app.latency.total().count(), cfg.frames as u64);
+    }
+}

@@ -111,32 +111,52 @@ def main(argv):
             results[r["name"]] = r
         for name, value in doc.get("metrics", {}).items():
             metrics[name] = value
-    for name in sorted(metrics):
-        print(f"[metric]  {name:<44} {metrics[name]}")
 
+    # one summary row per bench: (bucket, name, median, budget, headroom,
+    # status). headroom = how much slower the bench may get before the
+    # 2x-budget tripwire fires (">1.00x" means within budget).
+    rows = []
     failures, warnings, missing = [], [], []
     for name, budget_ns in sorted(gated.items()):
         r = results.get(name)
         if r is None:
             missing.append(name)
+            rows.append(("gated", name, None, budget_ns, None, "MISSING"))
             continue
         ratio = r["median_ns"] / budget_ns
         status = "FAIL" if ratio > REGRESSION_FACTOR else "ok"
-        print(f"[gated]   {name:<44} median {r['median_ns']:>12} ns"
-              f"  budget {budget_ns:>12} ns  x{ratio:.2f}  {status}")
+        rows.append(("gated", name, r["median_ns"], budget_ns,
+                     REGRESSION_FACTOR / ratio, status))
         if ratio > REGRESSION_FACTOR:
             failures.append((name, r["median_ns"], budget_ns))
     for name, budget_ns in sorted(tracked.items()):
         r = results.get(name)
         if r is None:
-            print(f"[tracked] {name:<44} absent (target skipped?)")
+            rows.append(("tracked", name, None, budget_ns, None, "absent"))
             continue
         ratio = r["median_ns"] / budget_ns
-        print(f"[tracked] {name:<44} median {r['median_ns']:>12} ns"
-              f"  budget {budget_ns:>12} ns  x{ratio:.2f}"
-              f"{'  WARN' if ratio > REGRESSION_FACTOR else ''}")
+        status = "WARN" if ratio > REGRESSION_FACTOR else "ok"
+        rows.append(("tracked", name, r["median_ns"], budget_ns,
+                     REGRESSION_FACTOR / ratio, status))
         if ratio > REGRESSION_FACTOR:
             warnings.append(name)
+    budgeted = set(gated) | set(tracked)
+    for name in sorted(set(results) - budgeted):
+        rows.append(("untracked", name, results[name]["median_ns"], None, None, "-"))
+
+    name_w = max([len(r[1]) for r in rows] + [len("bench")])
+    print(f"{'bench':<{name_w}}  {'bucket':<9} {'median':>12} {'budget':>12} "
+          f"{'headroom':>9}  status")
+    print("-" * (name_w + 52))
+    for bucket, name, median_ns, budget_ns, headroom, status in rows:
+        med = f"{median_ns} ns" if median_ns is not None else "-"
+        bud = f"{budget_ns} ns" if budget_ns is not None else "-"
+        head = f"{headroom:.2f}x" if headroom is not None else "-"
+        print(f"{name:<{name_w}}  {bucket:<9} {med:>12} {bud:>12} {head:>9}  {status}")
+    if metrics:
+        print(f"\n{'side metric':<{name_w}}  value")
+        for name in sorted(metrics):
+            print(f"{name:<{name_w}}  {metrics[name]}")
 
     out = {
         "sha": sha,

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Schema-validate a --trace-out timeline artifact (CI obs-smoke).
+
+Checks, with pure stdlib:
+  * the versioned envelope (version/kind/source/seed/apps/frames/
+    epoch_frames/events) with the right types;
+  * every event's required fields per kind, and that logical clocks are
+    in range (tenant < apps, frame < frames);
+  * canonical sort order: the event list is non-decreasing in the
+    (epoch, tenant|inf, frame|inf, seq, kind-rank) key the Rust drain
+    sorts by (rust: ``obs::sort_events``).
+
+Exit 0 on a valid artifact, 1 with a diagnostic otherwise.
+
+Usage: validate_timeline.py TIMELINE.json
+"""
+
+import json
+import sys
+
+KIND_RANK = {
+    "frame_start": 0,
+    "frame": 1,
+    "knobs": 2,
+    "park": 3,
+    "resume": 4,
+    "frontier": 5,
+    "admission": 6,
+    "alloc": 7,
+}
+
+# required payload fields (beyond the clock fields) and their types
+KIND_FIELDS = {
+    "frame_start": {"knobs": list},
+    "frame": {"ms": (int, float), "stage_ms": list, "fidelity": (int, float)},
+    "knobs": {"from_frame": int, "horizon": int, "knobs": list},
+    "park": {},
+    "resume": {"at_epoch": int},
+    "frontier": {"passed": int},
+    "admission": {"admitted": list, "reservations": list},
+    "alloc": {"cores": list, "parked": list, "churn_cores": int},
+}
+
+INF = float("inf")
+
+
+def fail(msg):
+    print(f"validate_timeline: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def expect(cond, msg):
+    if not cond:
+        fail(msg)
+
+
+def check_event(i, e, apps, frames):
+    expect(isinstance(e, dict), f"event {i}: not an object")
+    for key in ("tenant", "epoch", "frame", "seq", "kind"):
+        expect(key in e, f"event {i}: missing {key!r}")
+    kind = e["kind"]
+    expect(kind in KIND_RANK, f"event {i}: unknown kind {kind!r}")
+    expect(
+        e["tenant"] is None or (isinstance(e["tenant"], int) and 0 <= e["tenant"] < apps),
+        f"event {i}: tenant {e['tenant']!r} out of range",
+    )
+    expect(isinstance(e["epoch"], int) and e["epoch"] >= 0, f"event {i}: bad epoch")
+    expect(
+        e["frame"] is None or (isinstance(e["frame"], int) and 0 <= e["frame"] < frames),
+        f"event {i}: frame {e['frame']!r} out of range",
+    )
+    expect(isinstance(e["seq"], int) and e["seq"] >= 0, f"event {i}: bad seq")
+    for field, ty in KIND_FIELDS[kind].items():
+        expect(field in e, f"event {i} ({kind}): missing {field!r}")
+        expect(
+            isinstance(e[field], ty) and not isinstance(e[field], bool),
+            f"event {i} ({kind}): {field!r} has wrong type",
+        )
+    if kind in ("admission", "alloc"):
+        for field in KIND_FIELDS[kind]:
+            if isinstance(e[field], list) and field in ("admitted", "parked", "cores"):
+                expect(
+                    len(e[field]) == apps,
+                    f"event {i} ({kind}): {field!r} has {len(e[field])} entries, want {apps}",
+                )
+    return (
+        e["epoch"],
+        INF if e["tenant"] is None else e["tenant"],
+        INF if e["frame"] is None else e["frame"],
+        e["seq"],
+        KIND_RANK[kind],
+    )
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail("usage: validate_timeline.py TIMELINE.json")
+    try:
+        with open(sys.argv[1]) as f:
+            tl = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot read {sys.argv[1]}: {e}")
+
+    expect(isinstance(tl, dict), "top level is not an object")
+    expect(tl.get("version") == 1, f"version {tl.get('version')!r} != 1")
+    expect(tl.get("kind") == "iptune-timeline", f"kind {tl.get('kind')!r}")
+    expect(tl.get("source") in ("fleet", "live"), f"source {tl.get('source')!r}")
+    for key in ("seed", "apps", "frames", "epoch_frames"):
+        expect(
+            isinstance(tl.get(key), int) and not isinstance(tl.get(key), bool),
+            f"{key!r} is not an integer",
+        )
+    expect(tl["apps"] > 0 and tl["frames"] > 0 and tl["epoch_frames"] > 0, "empty run shape")
+    events = tl.get("events")
+    expect(isinstance(events, list), "'events' is not an array")
+    expect(len(events) > 0, "timeline has no events")
+
+    prev = None
+    kinds = set()
+    for i, e in enumerate(events):
+        key = check_event(i, e, tl["apps"], tl["frames"])
+        if prev is not None:
+            expect(prev <= key, f"event {i}: out of canonical order ({prev} > {key})")
+        prev = key
+        kinds.add(e["kind"])
+    expect("frame" in kinds, "no frame events traced")
+    expect("alloc" in kinds, "no allocation events traced")
+
+    print(
+        f"validate_timeline: OK: {tl['source']} run, {tl['apps']} tenants, "
+        f"{len(events)} events, kinds {sorted(kinds)}"
+    )
+
+
+if __name__ == "__main__":
+    main()
