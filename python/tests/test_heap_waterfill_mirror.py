@@ -1,0 +1,293 @@
+"""Behavioral mirror for the PR 8 heap water-filler (rust:
+``scheduler/mod.rs`` ``allocate_v2``): reimplements both the legacy
+full-scan allocator and the priority-heap allocator over the same
+semantics and validates, on random instances,
+
+* **exact equivalence** — the heap fill must reproduce the scan's rung
+  vector bit-for-bit, including the tie-break order (gain descending,
+  app ascending, target rung ascending; top-up by lowest allocation,
+  then lowest index). Instances quantize utilities so exact float ties
+  actually occur.
+* **sub-linear per-tenant cost** — the op-count of one heap epoch,
+  divided by the tenant count, may grow at most 1.5x between 1k and
+  100k tenants on the bench-shaped instance family
+  (``allocate_v2/{1k,100k}_tenants`` in ``rust/benches/scheduler.rs``).
+  This is the acceptance bound behind the
+  ``allocate_v2/per_tenant_ratio_100k_over_1k`` side metric recorded
+  in ``ci/bench-trajectory.json``; the legacy scan's per-tenant cost
+  grows ~linearly (O(moves x tenants x rungs) total), which is exactly
+  what the tripwire exists to catch.
+
+Pure stdlib — no jax/hypothesis required.
+"""
+
+import heapq
+import math
+import random
+
+
+# ---------------------------------------------------------------------------
+# mirrors of rust/src/scheduler/mod.rs
+# ---------------------------------------------------------------------------
+
+def core_levels(total, apps, floor, rungs, boost):
+    """Mirror of ``core_levels``: shared rung ladder (sorted, distinct)."""
+    even = max(total // max(apps, 1), 1)
+    floor = min(max(floor, 1), even)
+    cap = max(min(math.ceil(even * boost),
+                  max(total - (apps - 1) * floor, 0)), even)
+    levels = {floor, even, cap}
+    if rungs > 1 and cap > floor:
+        ratio = cap / floor
+        for i in range(rungs):
+            lvl = round(floor * ratio ** (i / (rungs - 1)))
+            levels.add(min(max(lvl, floor), cap))
+    return sorted(levels)
+
+
+def _adj(curves, weights, prev, hysteresis, a, l):
+    u = weights[a] * curves[a][l]
+    if hysteresis > 0.0 and prev is not None and prev[a] == l:
+        u += hysteresis
+    return u
+
+
+def allocate_v2_scan(curves, levels, total, weights, prev, hysteresis):
+    """The legacy full-scan water-filler, both phases, verbatim
+    semantics (the pre-PR8 ``allocate_v2`` body)."""
+    napps = len(curves)
+    lvl = [0] * napps
+    used = napps * levels[0]
+    assert used <= total, "floor rung oversubscribes the cluster"
+
+    def adj(a, l):
+        return _adj(curves, weights, prev, hysteresis, a, l)
+
+    while True:
+        best = None  # (gain/core, app, rung)
+        for a in range(napps):
+            for j in range(lvl[a] + 1, len(levels)):
+                if used - levels[lvl[a]] + levels[j] > total:
+                    continue
+                du = adj(a, j) - adj(a, lvl[a])
+                if du <= 1e-12:
+                    continue
+                g = du / (levels[j] - levels[lvl[a]])
+                if best is None or g > best[0]:
+                    best = (g, a, j)
+        if best is None:
+            break
+        _, a, j = best
+        used = used - levels[lvl[a]] + levels[j]
+        lvl[a] = j
+
+    even = total // napps
+    while True:
+        cand = None  # (cores, app, rung)
+        for a in range(napps):
+            j = lvl[a] + 1
+            if j >= len(levels) or levels[j] > even:
+                continue
+            if used - levels[lvl[a]] + levels[j] > total:
+                continue
+            if cand is None or levels[lvl[a]] < cand[0]:
+                cand = (levels[lvl[a]], a, j)
+        if cand is None:
+            break
+        _, a, j = cand
+        used = used - levels[lvl[a]] + levels[j]
+        lvl[a] = j
+    return lvl
+
+
+def allocate_v2_heap(curves, levels, total, weights, prev, hysteresis):
+    """The PR 8 priority-heap water-filler. Returns ``(lvl, ops)`` where
+    ``ops`` counts elementary work: one per candidate rung examined in a
+    best-jump scan, plus ``ceil(log2(len + 1))`` per heap push/pop (the
+    comparison cost a binary heap pays). The Rust heap orders jumps by
+    (gain desc, app asc, rung asc); ``heapq`` is a min-heap, so entries
+    are ``(-gain, app, rung)`` — tuple order then matches exactly
+    (gains are positive finite, where IEEE total order and the normal
+    float order agree)."""
+    napps = len(curves)
+    lvl = [0] * napps
+    used = napps * levels[0]
+    assert used <= total, "floor rung oversubscribes the cluster"
+    assert all(a < b for a, b in zip(levels, levels[1:])), \
+        "heap path requires a strictly increasing ladder"
+    ops = 0
+
+    def adj(a, l):
+        return _adj(curves, weights, prev, hysteresis, a, l)
+
+    def heap_cost(heap):
+        return max(1, math.ceil(math.log2(len(heap) + 1)))
+
+    def best_jump(a):
+        nonlocal ops
+        best = None  # (gain, rung)
+        for j in range(lvl[a] + 1, len(levels)):
+            ops += 1
+            if used - levels[lvl[a]] + levels[j] > total:
+                continue
+            du = adj(a, j) - adj(a, lvl[a])
+            if du <= 1e-12:
+                continue
+            g = du / (levels[j] - levels[lvl[a]])
+            if best is None or g > best[0]:
+                best = (g, j)
+        if best is None:
+            return None
+        return (-best[0], a, best[1])
+
+    heap = []
+    for a in range(napps):
+        e = best_jump(a)
+        if e is not None:
+            heap.append(e)
+    heapq.heapify(heap)
+    ops += len(heap)  # heapify is linear
+    while heap:
+        ops += heap_cost(heap)
+        neg_gain, a, rung = heapq.heappop(heap)
+        if used - levels[lvl[a]] + levels[rung] > total:
+            e = best_jump(a)
+            if e is not None:
+                ops += heap_cost(heap)
+                heapq.heappush(heap, e)
+            continue
+        used = used - levels[lvl[a]] + levels[rung]
+        lvl[a] = rung
+        e = best_jump(a)
+        if e is not None:
+            ops += heap_cost(heap)
+            heapq.heappush(heap, e)
+
+    even = total // napps
+
+    def eligible(a):
+        j = lvl[a] + 1
+        return j < len(levels) and levels[j] <= even
+
+    heap = [(levels[lvl[a]], a) for a in range(napps) if eligible(a)]
+    heapq.heapify(heap)
+    ops += len(heap)
+    while heap:
+        ops += heap_cost(heap)
+        _, a = heapq.heappop(heap)
+        j = lvl[a] + 1
+        if used - levels[lvl[a]] + levels[j] > total:
+            continue  # used only grows: never feasible again, drop for good
+        used = used - levels[lvl[a]] + levels[j]
+        lvl[a] = j
+        if eligible(a):
+            ops += heap_cost(heap)
+            heapq.heappush(heap, (levels[lvl[a]], a))
+    return lvl, ops
+
+
+# ---------------------------------------------------------------------------
+# instance generators
+# ---------------------------------------------------------------------------
+
+def random_instance(rng):
+    """Mirror of the Rust regression test's generator: small random
+    fleets with quantized (exact-tie) curves, flat tops, weight tiers,
+    optional incumbents and hysteresis."""
+    napps = 1 + rng.randrange(24)
+    nlevels = 2 + rng.randrange(7)
+    floor = 1 + rng.randrange(4)
+    levels, cur = [], floor
+    for _ in range(nlevels):
+        levels.append(cur)
+        cur += 1 + rng.randrange(9)
+    hi = napps * levels[-1]
+    lo = napps * levels[0]
+    total = lo + rng.randrange(hi - lo + 1)
+    curves = []
+    for _ in range(napps):
+        u = sorted(rng.random() for _ in range(nlevels))
+        if rng.random() < 0.5:  # quantize: manufacture exact ties
+            u = [math.floor(x * 8.0) / 8.0 for x in u]
+        if rng.random() < 0.3 and nlevels >= 2:  # flat top
+            u[nlevels - 1] = u[nlevels - 2]
+        curves.append(u)
+    weights = [1.0 if rng.random() < 0.5 else float(1 + rng.randrange(4))
+               for _ in range(napps)]
+    prev = ([rng.randrange(nlevels) for _ in range(napps)]
+            if rng.random() < 0.5 else None)
+    hysteresis = 0.0 if rng.random() < 0.5 else rng.random() * 0.2
+    return curves, levels, total, weights, prev, hysteresis
+
+
+def bench_instance(n, seed):
+    """The ``allocate_v2/{n}_tenants`` bench shape: pool of 3 cores per
+    tenant, floor-1 8-rung ladder, sorted quantized curves, three
+    weight tiers, incumbent rungs, hysteresis 0.05."""
+    rng = random.Random(seed)
+    pool = 3 * n
+    levels = core_levels(pool, n, 1, 8, 3.0)
+    curves = [sorted(math.floor(rng.random() * 64.0) / 64.0
+                     for _ in range(len(levels)))
+              for _ in range(n)]
+    weights = [1.0 + (i % 3) for i in range(n)]
+    prev = [i % len(levels) for i in range(n)]
+    return curves, levels, pool, weights, prev, 0.05
+
+
+# ---------------------------------------------------------------------------
+# tests
+# ---------------------------------------------------------------------------
+
+def test_heap_matches_scan_on_random_instances():
+    rng = random.Random(0x8EA9)
+    for case in range(250):
+        curves, levels, total, weights, prev, hyst = random_instance(rng)
+        want = allocate_v2_scan(curves, levels, total, weights, prev, hyst)
+        got, _ = allocate_v2_heap(curves, levels, total, weights, prev, hyst)
+        assert got == want, (
+            f"case {case}: heap {got} != scan {want} "
+            f"(levels={levels} total={total} hyst={hyst})"
+        )
+
+
+def test_tie_break_order_is_exact():
+    # Two apps with IDENTICAL curves: every jump gain ties exactly, so
+    # the result is decided purely by (app asc, rung asc) — app 0 must
+    # climb first, and within an app the LOWEST rung achieving the max
+    # gain must win (strict-> first-wins over an ascending rung scan).
+    levels = [1, 2, 4, 8]
+    curve = [0.0, 0.5, 0.75, 1.0]
+    curves = [list(curve), list(curve)]
+    weights = [1.0, 1.0]
+    for total in range(2, 17):
+        want = allocate_v2_scan(curves, levels, total, weights, None, 0.0)
+        got, _ = allocate_v2_heap(curves, levels, total, weights, None, 0.0)
+        assert got == want, (total, got, want)
+    # with budget for exactly one jump, app 0 takes it
+    got, _ = allocate_v2_heap(curves, levels, 3, weights, None, 0.0)
+    assert got == [1, 0], got
+
+
+def test_invariants_on_bench_shape():
+    curves, levels, pool, weights, prev, hyst = bench_instance(2000, 7)
+    got, _ = allocate_v2_heap(curves, levels, pool, weights, prev, hyst)
+    used = sum(levels[l] for l in got)
+    assert used <= pool, (used, pool)
+    assert all(0 <= l < len(levels) for l in got)
+    want = allocate_v2_scan(curves, levels, pool, weights, prev, hyst)
+    assert got == want
+
+
+def test_per_tenant_cost_sublinear_1k_to_100k():
+    small_n, big_n = 1_000, 100_000
+    _, ops_small = allocate_v2_heap(*bench_instance(small_n, 11))
+    _, ops_big = allocate_v2_heap(*bench_instance(big_n, 11))
+    per_small = ops_small / small_n
+    per_big = ops_big / big_n
+    ratio = per_big / per_small
+    assert ratio <= 1.5, (
+        f"per-tenant epoch cost grew {ratio:.3f}x from {small_n} to "
+        f"{big_n} tenants ({per_small:.1f} -> {per_big:.1f} ops/tenant); "
+        "the heap water-fill must stay sub-linear (<= 1.5x)"
+    )

@@ -173,6 +173,58 @@ fn main() {
         black_box(frontier.passed(black_box(ftick / (16 * 30))));
     });
 
+    // ---- PR 8: the 100k-tenant reallocation epoch ------------------------
+    // One heap water-fill epoch at fleet scale: floor-1 ladders so
+    // `tenants * levels[0] <= pool` holds at every size, sorted-random
+    // curves with manufactured exact ties, tiered weights, and incumbent
+    // hysteresis (the stateful path every production epoch takes). The
+    // legacy full-scan allocator was O(moves x tenants x rungs) — at 100k
+    // tenants a single epoch took minutes, which is why no bench existed
+    // above 64 apps. The per-tenant side metrics feed the trajectory: the
+    // 100k/1k ratio proves the epoch cost grows sub-linearly (the Python
+    // mirror asserts the op-count version of the same bound <= 1.5x).
+    let mut per_tenant_ns = Vec::new();
+    for &(n, label) in &[
+        (1_000usize, "allocate_v2/1k_tenants"),
+        (10_000, "allocate_v2/10k_tenants"),
+        (100_000, "allocate_v2/100k_tenants"),
+    ] {
+        let pool = 3 * n;
+        let lv = core_levels(pool, n, 1, 8, 3.0);
+        let mut trng = Rng::new(0x8EA1 + n as u64);
+        let tcurves: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let mut u: Vec<f64> = (0..lv.len())
+                    .map(|_| (trng.f64() * 64.0).floor() / 64.0)
+                    .collect();
+                u.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                u
+            })
+            .collect();
+        let tweights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+        let tprev: Vec<usize> = (0..n).map(|i| i % lv.len()).collect();
+        let med = b
+            .bench(label, || {
+                black_box(allocate_v2(
+                    black_box(&tcurves),
+                    &lv,
+                    pool,
+                    &tweights,
+                    Some(&tprev),
+                    0.05,
+                ));
+            })
+            .per_iter_ns();
+        per_tenant_ns.push(med / n as f64);
+    }
+    b.metric("allocate_v2/ns_per_tenant_1k", per_tenant_ns[0]);
+    b.metric("allocate_v2/ns_per_tenant_10k", per_tenant_ns[1]);
+    b.metric("allocate_v2/ns_per_tenant_100k", per_tenant_ns[2]);
+    b.metric(
+        "allocate_v2/per_tenant_ratio_100k_over_1k",
+        per_tenant_ns[2] / per_tenant_ns[0],
+    );
+
     println!("\n{} benchmarks complete", b.results.len());
     b.write_json_env("scheduler");
 }

@@ -59,6 +59,8 @@
 //! [`BudgetedController::utility_at`]:
 //!     crate::tuner::BudgetedController::utility_at
 
+pub mod scale;
+
 use std::path::Path;
 use std::sync::mpsc::channel;
 

@@ -1,0 +1,283 @@
+//! The allocator scale epoch — admission + heap water-filling over a
+//! synthetic 10k–100k tenant fleet, with no simulators or learners in
+//! the loop.
+//!
+//! The full fleet runner ([`super`]) carries a ladder-trace set and a
+//! budgeted controller per tenant, which caps how far a smoke test can
+//! push tenant counts. This module drives exactly the layers the
+//! 100k-tenant epoch exercises — deterministic synthetic utility
+//! curves, [`demand_cores`] reservations, [`EpochAdmission::decide`],
+//! and the [`allocate_v2`] heap water-fill — so CI can assert the
+//! epoch's invariants at fleet scale in seconds:
+//!
+//! * granted quotas never exceed the pool,
+//! * every utility that reaches the report is finite,
+//! * `admitted + parked == tenants` every epoch,
+//! * the JSON report is **byte-identical** across worker-thread counts.
+//!
+//! Thread-count independence is by construction: each tenant's curve is
+//! a pure function of `(seed, tenant, epoch)` (worker threads only
+//! split the tenant range; they never share RNG streams), and the
+//! admission / allocation passes downstream of generation are serial
+//! and index-ordered. The `alloc-epoch` CLI subcommand and the
+//! `alloc-scale-smoke` CI job are thin wrappers over [`run`].
+
+use anyhow::{ensure, Result};
+
+use crate::scheduler::{allocate_v2, core_levels, demand_cores, EpochAdmission};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// Shape of a scale run. `pool = tenants * cores_per_tenant`; with the
+/// default 3 cores per tenant and demands that average above the even
+/// share, every epoch parks a real fraction of the fleet, so admission
+/// accounting is exercised rather than vacuously all-admitted.
+#[derive(Debug, Clone)]
+pub struct ScaleConfig {
+    pub tenants: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Worker threads for curve/demand generation. Never affects output.
+    pub threads: usize,
+    /// Requested ladder rung count (see [`core_levels`]).
+    pub rungs: usize,
+    pub cores_per_tenant: usize,
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        ScaleConfig {
+            tenants: 10_000,
+            epochs: 3,
+            seed: 42,
+            threads: 1,
+            rungs: 8,
+            cores_per_tenant: 3,
+        }
+    }
+}
+
+/// One tenant's epoch inputs: utility curve over the ladder plus its
+/// core demand. Pure in `(seed, tenant, epoch)`.
+fn synth_tenant(
+    seed: u64,
+    epoch: usize,
+    tenant: usize,
+    levels: &[usize],
+    even: usize,
+) -> (Vec<f64>, usize) {
+    let mut rng = Rng::new(seed).fork(((tenant as u64) << 16) | epoch as u64);
+    let nlv = levels.len();
+    // ~3% of tenants per epoch present a flat-zero curve (a starved or
+    // freshly reset model): demand must fall back to the calibration
+    // share, not to contentment.
+    if rng.f64() < 0.03 {
+        let c = vec![0.0; nlv];
+        let d = demand_cores(&c, levels, even);
+        return (c, d);
+    }
+    // Non-decreasing curve that satiates at a random rung: random
+    // positive increments up to `sat`, flat after, scaled to a random
+    // top utility. Quantizing to 1/64 manufactures exact ties so the
+    // allocator's tie-break order is exercised at scale.
+    let sat = 1 + rng.below(nlv);
+    let top = 0.3 + 0.7 * rng.f64();
+    let mut acc = 0.0;
+    let mut c = Vec::with_capacity(nlv);
+    for l in 0..nlv {
+        if l < sat {
+            acc += 0.05 + rng.f64();
+        }
+        c.push(acc);
+    }
+    let mx = acc.max(1e-9);
+    for v in &mut c {
+        *v = (top * *v / mx * 64.0).round() / 64.0;
+    }
+    let d = demand_cores(&c, levels, even);
+    (c, d)
+}
+
+/// All tenants' curves and demands for one epoch, generated on
+/// `threads` workers over contiguous tenant ranges. Chunking never
+/// changes a value — only which thread computes it.
+fn synth_epoch(
+    cfg: &ScaleConfig,
+    epoch: usize,
+    levels: &[usize],
+    even: usize,
+) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let n = cfg.tenants;
+    let threads = cfg.threads.max(1).min(n);
+    let chunk = (n + threads - 1) / threads;
+    let mut curves: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut demands: Vec<usize> = vec![0; n];
+    std::thread::scope(|s| {
+        for (ci, (cs, ds)) in curves
+            .chunks_mut(chunk)
+            .zip(demands.chunks_mut(chunk))
+            .enumerate()
+        {
+            let base = ci * chunk;
+            s.spawn(move || {
+                for (off, (c, d)) in cs.iter_mut().zip(ds.iter_mut()).enumerate() {
+                    let (curve, demand) =
+                        synth_tenant(cfg.seed, epoch, base + off, levels, even);
+                    *c = curve;
+                    *d = demand;
+                }
+            });
+        }
+    });
+    (curves, demands)
+}
+
+/// FNV-1a over the quota vector — a cheap fingerprint humans can eyeball
+/// when diffing reports across thread counts or machines.
+fn quota_fingerprint(quota: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &q in quota {
+        for b in (q as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Run `cfg.epochs` reallocation epochs and return the JSON report.
+///
+/// The report deliberately omits the thread count: CI diffs the bytes
+/// of `--threads 1/2/4` runs against each other.
+pub fn run(cfg: &ScaleConfig) -> Result<Json> {
+    ensure!(cfg.tenants > 0, "alloc-epoch needs at least one tenant");
+    ensure!(cfg.epochs > 0, "alloc-epoch needs at least one epoch");
+    let n = cfg.tenants;
+    let pool = n * cfg.cores_per_tenant.max(1);
+    let levels = core_levels(pool, n, 1, cfg.rungs.max(2), 3.0);
+    let even = (pool / n).max(1);
+    // Three priority tiers, deterministic by index.
+    let weights: Vec<f64> = (0..n)
+        .map(|i| match i % 5 {
+            0 => 4.0,
+            1 | 2 => 2.0,
+            _ => 1.0,
+        })
+        .collect();
+    let mut adm = EpochAdmission::new(n, 4).with_hysteresis(even);
+    let mut prev_rung = vec![0usize; n];
+    let mut prev_admitted = vec![false; n];
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    for e in 0..cfg.epochs {
+        let (curves, demands) = synth_epoch(cfg, e, &levels, even);
+        let admitted = adm.decide(pool, &weights, &demands);
+        let idx: Vec<usize> = (0..n).filter(|&i| admitted[i]).collect();
+        let sub_curves: Vec<Vec<f64>> =
+            idx.iter().map(|&i| curves[i].clone()).collect();
+        let sub_weights: Vec<f64> = idx.iter().map(|&i| weights[i]).collect();
+        // A tenant parked last epoch restarts at the floor rung.
+        let sub_prev: Vec<usize> = idx
+            .iter()
+            .map(|&i| if prev_admitted[i] { prev_rung[i] } else { 0 })
+            .collect();
+        let grant =
+            allocate_v2(&sub_curves, &levels, pool, &sub_weights, Some(&sub_prev), 0.02);
+        let mut quota = vec![0usize; n];
+        let mut util_sum = 0.0;
+        let mut moved = 0usize;
+        for (s, &i) in idx.iter().enumerate() {
+            quota[i] = levels[grant[s]];
+            let u = sub_curves[s][grant[s]];
+            ensure!(u.is_finite(), "tenant {i} epoch {e}: non-finite utility {u}");
+            util_sum += weights[i] * u;
+            if prev_admitted[i] && grant[s] != prev_rung[i] {
+                moved += 1;
+            }
+            prev_rung[i] = grant[s];
+        }
+        let used: usize = quota.iter().sum();
+        ensure!(
+            used <= pool,
+            "epoch {e}: granted {used} cores from a pool of {pool}"
+        );
+        let parked = n - idx.len();
+        ensure!(idx.len() + parked == n, "epoch {e}: admission accounting");
+        epochs.push(
+            Json::obj()
+                .put("epoch", e)
+                .put("admitted", idx.len())
+                .put("parked", parked)
+                .put("used_cores", used)
+                .put("moved_tenants", moved)
+                .put("weighted_utility", util_sum)
+                .put("quota_fingerprint", format!("{:016x}", quota_fingerprint(&quota))),
+        );
+        prev_admitted = admitted;
+    }
+    Ok(Json::obj()
+        .put("tenants", n)
+        .put("pool", pool)
+        .put("seed", cfg.seed)
+        .put(
+            "levels",
+            Json::from_f64_slice(&levels.iter().map(|&l| l as f64).collect::<Vec<_>>()),
+        )
+        .put("epochs", Json::Arr(epochs)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_with_threads(threads: usize) -> String {
+        let cfg = ScaleConfig { tenants: 600, epochs: 3, threads, ..Default::default() };
+        run(&cfg).unwrap().to_string()
+    }
+
+    #[test]
+    fn report_byte_identical_across_threads() {
+        let one = run_with_threads(1);
+        let two = run_with_threads(2);
+        let four = run_with_threads(4);
+        assert_eq!(one, two, "1-thread vs 2-thread report drift");
+        assert_eq!(one, four, "1-thread vs 4-thread report drift");
+    }
+
+    #[test]
+    fn epoch_invariants_hold() {
+        let cfg = ScaleConfig { tenants: 400, epochs: 4, ..Default::default() };
+        let report = run(&cfg).unwrap();
+        let pool = report.req("pool").unwrap().as_usize().unwrap();
+        let epochs = report.req("epochs").unwrap().as_arr().unwrap();
+        assert_eq!(epochs.len(), 4);
+        for e in epochs {
+            let admitted = e.req("admitted").unwrap().as_usize().unwrap();
+            let parked = e.req("parked").unwrap().as_usize().unwrap();
+            let used = e.req("used_cores").unwrap().as_usize().unwrap();
+            assert_eq!(admitted + parked, 400);
+            assert!(used <= pool, "used {used} > pool {pool}");
+            assert!(admitted > 0, "top-ranked tenant is always admitted");
+            assert!(
+                e.req("weighted_utility").unwrap().as_f64().unwrap().is_finite()
+            );
+        }
+    }
+
+    #[test]
+    fn parking_actually_happens() {
+        // With 3 cores/tenant and demands that average above the even
+        // share, at least one epoch must park somebody — otherwise the
+        // smoke is vacuous.
+        let cfg = ScaleConfig { tenants: 500, epochs: 3, ..Default::default() };
+        let report = run(&cfg).unwrap();
+        let parked: usize = report
+            .req("epochs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.req("parked").unwrap().as_usize().unwrap())
+            .sum();
+        assert!(parked > 0, "scale smoke never exercised admission parking");
+    }
+}

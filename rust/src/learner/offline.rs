@@ -81,7 +81,7 @@ pub fn samples_from_traces(
         for f in t.frames.iter() {
             out.push(Sample {
                 u: u.clone(),
-                stage_ms: f.stage_ms.clone(),
+                stage_ms: f.stage_ms.to_vec(),
                 end_to_end_ms: f.end_to_end_ms,
             });
         }

@@ -115,6 +115,8 @@ commands:
         [--dag] [--drift B] [--straggler IDX:MS] [--barrier-epochs]
         [--out FILE] [--trace-out FILE]
   inspect TIMELINE [--tenant N]            render a saved --trace-out trace
+  alloc-epoch [--tenants N] [--epochs N] [--seed N] [--threads N]
+        [--rungs N] [--cores-per-tenant N] [--out FILE]
 
 APP is pose, motion-sift, gen:SEED, or gen-dag:SEED (procedurally
 generated pipelines; see the workloads module — gen-dag emits general
@@ -160,7 +162,14 @@ allocation decisions, park/resume transitions — stamped with logical
 clocks only, so the saved timeline is byte-identical across thread
 counts, pacing and stragglers. `inspect` renders a saved timeline as
 per-tenant epoch/grant/knob tables, a per-stage latency table, and an
-allocation-churn view.";
+allocation-churn view. `alloc-epoch` is the allocator scale smoke: it
+drives N synthetic tenants (deterministic utility curves, no simulator
+or learner) through demand reservation, epoch admission and the heap
+water-filling allocator for --epochs reallocation epochs and writes a
+JSON report whose bytes are independent of --threads — CI diffs the
+1/2/4-thread reports against each other and asserts the epoch
+invariants (quota sum <= pool, finite utilities,
+admitted + parked == tenants).";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -204,6 +213,7 @@ fn main() -> Result<()> {
         "fleet" => cmd_fleet(&args),
         "schedule" => cmd_schedule(&args),
         "inspect" => cmd_inspect(&args),
+        "alloc-epoch" => cmd_alloc_epoch(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
@@ -739,6 +749,46 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             frontier_epochs,
             churn_total
         );
+    }
+    Ok(())
+}
+
+/// Allocator scale smoke: synthetic tenants through demand reservation,
+/// epoch admission and the heap water-filler; JSON report whose bytes
+/// never depend on `--threads` (the CI determinism check relies on it).
+fn cmd_alloc_epoch(args: &Args) -> Result<()> {
+    let mut cfg = iptune::fleet::scale::ScaleConfig::default();
+    if let Some(n) = args.get_parse::<usize>("tenants")? {
+        cfg.tenants = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("epochs")? {
+        cfg.epochs = n;
+    }
+    if let Some(n) = args.get_parse::<u64>("seed")? {
+        cfg.seed = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("threads")? {
+        cfg.threads = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("rungs")? {
+        cfg.rungs = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("cores-per-tenant")? {
+        cfg.cores_per_tenant = n;
+    }
+    let report = iptune::fleet::scale::run(&cfg)?;
+    let text = report.to_string();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)
+                .with_context(|| format!("writing alloc-epoch report to {path}"))?;
+            iptune::log_info!(
+                "alloc-epoch: {} tenants x {} epochs -> {path}",
+                cfg.tenants,
+                cfg.epochs
+            );
+        }
+        None => println!("{text}"),
     }
     Ok(())
 }

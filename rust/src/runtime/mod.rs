@@ -43,6 +43,15 @@ pub trait Backend {
     fn group_map(&self) -> &GroupMap;
 
     /// Predicted end-to-end latency (ms) for each normalized candidate.
+    ///
+    /// Contract: row-wise — the cost of candidate `i` depends only on
+    /// candidate `i`, never on the rest of the batch, so callers may
+    /// split or concatenate batches freely (the vectorized
+    /// whole-ladder prediction in
+    /// [`BudgetedController::utility_curve`] relies on this).
+    ///
+    /// [`BudgetedController::utility_curve`]:
+    ///     crate::tuner::BudgetedController::utility_curve
     fn predict(&mut self, u_batch: &[Vec<f64>]) -> Vec<f64>;
 
     /// One OGD step: played action `u` (normalized), per-group observed

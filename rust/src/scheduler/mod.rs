@@ -59,6 +59,42 @@ pub mod frontier;
 pub mod live;
 
 use crate::util::json::Json;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One candidate rung jump in the heap water-fill: app `app` moving from
+/// its current rung to `rung` at `gain` marginal utility per core. Heap
+/// order reproduces the legacy scan's strict-`>` tie-breaks exactly:
+/// highest gain first, then the lower app index, then the lower target
+/// rung. Gains are finite and positive (the `du <= 1e-12` filter runs
+/// before an entry is built), so `total_cmp` agrees with the scan's
+/// partial-order comparisons.
+#[derive(Clone, Copy, Debug)]
+struct Jump {
+    gain: f64,
+    app: usize,
+    rung: usize,
+}
+
+impl PartialEq for Jump {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Jump {}
+impl PartialOrd for Jump {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Jump {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.gain
+            .total_cmp(&other.gain)
+            .then_with(|| other.app.cmp(&self.app))
+            .then_with(|| other.rung.cmp(&self.rung))
+    }
+}
 
 /// Scheduler policy knobs.
 #[derive(Debug, Clone)]
@@ -615,6 +651,20 @@ pub fn allocate(curves: &[Vec<f64>], levels: &[usize], total: usize) -> Vec<usiz
 /// incumbent exceeds the migration penalty. With uniform weights and
 /// `hysteresis == 0` this reduces to the PR 2 stateless greedy
 /// water-filler bit-for-bit (`1.0 * u + 0.0` is exact in IEEE 754).
+///
+/// **Implementation (PR 8):** the greedy fill runs as a priority-heap
+/// water-fill — one live heap entry per app holding its best affordable
+/// jump, refreshed lazily when feasibility shrinks — turning the
+/// per-move full scan into O(n·rungs·log n) for a whole epoch, which is
+/// what keeps a 100k-tenant reallocation epoch under the bench gate
+/// (`allocate_v2/100k_tenants` in `ci/bench-baseline.json`). The heap
+/// order reproduces the scan's tie-breaks exactly (gain desc, app asc,
+/// rung asc), so results are bit-identical to the legacy scan on every
+/// input with a strictly increasing ladder; other ladders take the
+/// retained scan path. Equivalence is regression-tested against a
+/// verbatim copy of the scan on random instances
+/// (`heap_waterfill_matches_legacy_scan_*`) and mirrored in
+/// `python/tests/test_heap_waterfill_mirror.py`.
 pub fn allocate_v2(
     curves: &[Vec<f64>],
     levels: &[usize],
@@ -650,28 +700,87 @@ pub fn allocate_v2(
     let mut used = napps * levels[0];
     assert!(used <= total, "floor rung oversubscribes the cluster");
 
-    loop {
-        let mut best: Option<(f64, usize, usize)> = None; // (gain/core, app, rung)
-        for a in 0..napps {
-            for j in (lvl[a] + 1)..levels.len() {
-                if used - levels[lvl[a]] + levels[j] > total {
-                    continue;
-                }
-                let du = adj(a, j) - adj(a, lvl[a]);
-                if du <= 1e-12 {
-                    continue;
-                }
-                let g = du / (levels[j] - levels[lvl[a]]) as f64;
-                if best.map_or(true, |(bg, _, _)| g > bg) {
-                    best = Some((g, a, j));
-                }
+    // Every real ladder is strictly increasing (`core_levels` collects a
+    // sorted set), which is what makes the heap water-fill exact: every
+    // applied jump then strictly grows `used`, so feasibility only ever
+    // shrinks. A pathological hand-built ladder that is not strictly
+    // increasing falls back to the legacy O(moves·n·rungs) full-scan
+    // loops, keeping historical behavior bit-for-bit on any input.
+    let monotone = levels.windows(2).all(|w| w[0] < w[1]);
+
+    // App `a`'s best affordable jump from its current rung: highest gain
+    // per core, ties toward the lower target rung (ascending scan with
+    // strict `>`, exactly the legacy inner loop).
+    let best_jump = |a: usize, lvl: &[usize], used: usize| -> Option<Jump> {
+        let mut best: Option<(f64, usize)> = None;
+        for j in (lvl[a] + 1)..levels.len() {
+            if used - levels[lvl[a]] + levels[j] > total {
+                continue;
+            }
+            let du = adj(a, j) - adj(a, lvl[a]);
+            if du <= 1e-12 {
+                continue;
+            }
+            let g = du / (levels[j] - levels[lvl[a]]) as f64;
+            if best.map_or(true, |(bg, _)| g > bg) {
+                best = Some((g, j));
             }
         }
-        match best {
-            None => break,
-            Some((_, a, j)) => {
-                used = used - levels[lvl[a]] + levels[j];
-                lvl[a] = j;
+        best.map(|(gain, rung)| Jump { gain, app: a, rung })
+    };
+
+    if monotone {
+        // Heap water-fill, O(n·rungs·log n): one live entry per app — its
+        // best affordable jump as of the last time the app was touched.
+        // `used` only grows, so a stored entry's candidate set can only
+        // have shrunk: a popped entry that still fits is still its app's
+        // best jump (a maximum over a superset, still present, is the
+        // maximum of the subset, and no equal-gain lower rung can appear),
+        // while every other app's stored gain upper-bounds its current
+        // best — so the heap top that validates is exactly the jump the
+        // full scan would have picked, tie-breaks included ([`Jump`]'s
+        // order). A popped entry that no longer fits is recomputed at the
+        // current `used` and re-pushed.
+        let mut heap: BinaryHeap<Jump> =
+            (0..napps).filter_map(|a| best_jump(a, &lvl, used)).collect();
+        while let Some(e) = heap.pop() {
+            let a = e.app;
+            if used - levels[lvl[a]] + levels[e.rung] > total {
+                if let Some(next) = best_jump(a, &lvl, used) {
+                    heap.push(next);
+                }
+                continue;
+            }
+            used = used - levels[lvl[a]] + levels[e.rung];
+            lvl[a] = e.rung;
+            if let Some(next) = best_jump(a, &lvl, used) {
+                heap.push(next);
+            }
+        }
+    } else {
+        loop {
+            let mut best: Option<(f64, usize, usize)> = None; // (gain/core, app, rung)
+            for a in 0..napps {
+                for j in (lvl[a] + 1)..levels.len() {
+                    if used - levels[lvl[a]] + levels[j] > total {
+                        continue;
+                    }
+                    let du = adj(a, j) - adj(a, lvl[a]);
+                    if du <= 1e-12 {
+                        continue;
+                    }
+                    let g = du / (levels[j] - levels[lvl[a]]) as f64;
+                    if best.map_or(true, |(bg, _, _)| g > bg) {
+                        best = Some((g, a, j));
+                    }
+                }
+            }
+            match best {
+                None => break,
+                Some((_, a, j)) => {
+                    used = used - levels[lvl[a]] + levels[j];
+                    lvl[a] = j;
+                }
             }
         }
     }
@@ -679,25 +788,53 @@ pub fn allocate_v2(
     // top-up: while cores sit idle, raise the lowest-allocated app back
     // toward the even share (uninformative curves degrade to ~static)
     let even = total / napps;
-    loop {
-        let mut cand: Option<(usize, usize, usize)> = None; // (cores, app, rung)
-        for a in 0..napps {
+    if monotone {
+        // Min-heap on (cores, app), matching the scan's strict-`<` pick
+        // of the lowest-allocated app with ties toward the lower index.
+        // Entries stay exact because an app's rung only changes when its
+        // own entry is popped; and since `used` only grows, an entry that
+        // fails the feasibility check on pop can never fit again, so the
+        // app drops out for good — exactly when the scan stops picking it.
+        let eligible = |a: usize, lvl: &[usize]| -> bool {
             let j = lvl[a] + 1;
-            if j >= levels.len() || levels[j] > even {
-                continue;
-            }
+            j < levels.len() && levels[j] <= even
+        };
+        let mut heap: BinaryHeap<Reverse<(usize, usize)>> = (0..napps)
+            .filter(|&a| eligible(a, &lvl))
+            .map(|a| Reverse((levels[lvl[a]], a)))
+            .collect();
+        while let Some(Reverse((_, a))) = heap.pop() {
+            let j = lvl[a] + 1;
             if used - levels[lvl[a]] + levels[j] > total {
                 continue;
             }
-            if cand.map_or(true, |(c, _, _)| levels[lvl[a]] < c) {
-                cand = Some((levels[lvl[a]], a, j));
+            used = used - levels[lvl[a]] + levels[j];
+            lvl[a] = j;
+            if eligible(a, &lvl) {
+                heap.push(Reverse((levels[lvl[a]], a)));
             }
         }
-        match cand {
-            None => break,
-            Some((_, a, j)) => {
-                used = used - levels[lvl[a]] + levels[j];
-                lvl[a] = j;
+    } else {
+        loop {
+            let mut cand: Option<(usize, usize, usize)> = None; // (cores, app, rung)
+            for a in 0..napps {
+                let j = lvl[a] + 1;
+                if j >= levels.len() || levels[j] > even {
+                    continue;
+                }
+                if used - levels[lvl[a]] + levels[j] > total {
+                    continue;
+                }
+                if cand.map_or(true, |(c, _, _)| levels[lvl[a]] < c) {
+                    cand = Some((levels[lvl[a]], a, j));
+                }
+            }
+            match cand {
+                None => break,
+                Some((_, a, j)) => {
+                    used = used - levels[lvl[a]] + levels[j];
+                    lvl[a] = j;
+                }
             }
         }
     }
@@ -882,6 +1019,159 @@ mod tests {
             let v2p = allocate_v2(&curves, &levels, 90, &[1.0; 6], Some(&v1), 0.0);
             assert_eq!(v1, v2p);
         }
+    }
+
+    /// The pre-PR 8 `allocate_v2` body, inlined **verbatim** (both full
+    /// scans), so the heap water-fill is regression-tested against the
+    /// exact code it replaced rather than against a re-derivation that
+    /// could share a bug with it.
+    fn legacy_scan_allocate_v2(
+        curves: &[Vec<f64>],
+        levels: &[usize],
+        total: usize,
+        weights: &[f64],
+        prev: Option<&[usize]>,
+        hysteresis: f64,
+    ) -> Vec<usize> {
+        let napps = curves.len();
+        let adj = |a: usize, l: usize| -> f64 {
+            let mut u = weights[a] * curves[a][l];
+            if hysteresis > 0.0 {
+                if let Some(p) = prev {
+                    if p[a] == l {
+                        u += hysteresis;
+                    }
+                }
+            }
+            u
+        };
+        let mut lvl = vec![0usize; napps];
+        let mut used = napps * levels[0];
+        assert!(used <= total, "floor rung oversubscribes the cluster");
+        loop {
+            let mut best: Option<(f64, usize, usize)> = None; // (gain/core, app, rung)
+            for a in 0..napps {
+                for j in (lvl[a] + 1)..levels.len() {
+                    if used - levels[lvl[a]] + levels[j] > total {
+                        continue;
+                    }
+                    let du = adj(a, j) - adj(a, lvl[a]);
+                    if du <= 1e-12 {
+                        continue;
+                    }
+                    let g = du / (levels[j] - levels[lvl[a]]) as f64;
+                    if best.map_or(true, |(bg, _, _)| g > bg) {
+                        best = Some((g, a, j));
+                    }
+                }
+            }
+            match best {
+                None => break,
+                Some((_, a, j)) => {
+                    used = used - levels[lvl[a]] + levels[j];
+                    lvl[a] = j;
+                }
+            }
+        }
+        let even = total / napps;
+        loop {
+            let mut cand: Option<(usize, usize, usize)> = None; // (cores, app, rung)
+            for a in 0..napps {
+                let j = lvl[a] + 1;
+                if j >= levels.len() || levels[j] > even {
+                    continue;
+                }
+                if used - levels[lvl[a]] + levels[j] > total {
+                    continue;
+                }
+                if cand.map_or(true, |(c, _, _)| levels[lvl[a]] < c) {
+                    cand = Some((levels[lvl[a]], a, j));
+                }
+            }
+            match cand {
+                None => break,
+                Some((_, a, j)) => {
+                    used = used - levels[lvl[a]] + levels[j];
+                    lvl[a] = j;
+                }
+            }
+        }
+        lvl
+    }
+
+    #[test]
+    fn heap_waterfill_matches_legacy_scan_random_instances() {
+        // 300 random fleets spanning tight/loose budgets, weights,
+        // hysteresis, flat curve segments (du <= 1e-12 filter), and
+        // deliberate exact utility ties — the heap must reproduce the
+        // scan's answer bit-for-bit, tie-breaks included.
+        let mut rng = crate::util::Rng::new(0x8EA9);
+        for case in 0..300 {
+            let napps = 1 + rng.below(24);
+            let nlevels = 2 + rng.below(7);
+            let floor = 1 + rng.below(4);
+            let mut levels = vec![floor];
+            for _ in 1..nlevels {
+                levels.push(levels.last().unwrap() + 1 + rng.below(9));
+            }
+            // budget from "floor only fits" up to "everything fits"
+            let max = napps * levels[nlevels - 1];
+            let total = napps * floor + rng.below(max - napps * floor + 1);
+            let quantize = rng.bool_with(0.5); // force exact gain ties
+            let curves: Vec<Vec<f64>> = (0..napps)
+                .map(|_| {
+                    let mut u: Vec<f64> = (0..nlevels)
+                        .map(|_| {
+                            if quantize {
+                                (rng.f64() * 8.0).floor() / 8.0
+                            } else {
+                                rng.f64()
+                            }
+                        })
+                        .collect();
+                    u.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    if rng.bool_with(0.3) && nlevels > 2 {
+                        u[nlevels - 1] = u[nlevels - 2]; // flat top: du == 0
+                    }
+                    u
+                })
+                .collect();
+            let weights: Vec<f64> = (0..napps)
+                .map(|_| if rng.bool_with(0.5) { 1.0 } else { 1.0 + rng.below(4) as f64 })
+                .collect();
+            let prev: Option<Vec<usize>> = if rng.bool_with(0.5) {
+                Some((0..napps).map(|_| rng.below(nlevels)).collect())
+            } else {
+                None
+            };
+            let hysteresis = if rng.bool_with(0.5) { 0.0 } else { rng.f64() * 0.2 };
+            let want = legacy_scan_allocate_v2(
+                &curves,
+                &levels,
+                total,
+                &weights,
+                prev.as_deref(),
+                hysteresis,
+            );
+            let got =
+                allocate_v2(&curves, &levels, total, &weights, prev.as_deref(), hysteresis);
+            assert_eq!(
+                got, want,
+                "case {case}: napps={napps} levels={levels:?} total={total} \
+                 weights={weights:?} prev={prev:?} h={hysteresis}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_monotone_ladder_takes_scan_path_unchanged() {
+        // a hand-built ladder that is not strictly increasing must keep
+        // the historical scan behavior (the heap requires monotonicity)
+        let levels = vec![4, 8, 6, 12];
+        let curves = vec![vec![0.1, 0.5, 0.4, 0.9], vec![0.2, 0.3, 0.7, 0.8]];
+        let want = legacy_scan_allocate_v2(&curves, &levels, 20, &[1.0; 2], None, 0.0);
+        let got = allocate_v2(&curves, &levels, 20, &[1.0; 2], None, 0.0);
+        assert_eq!(got, want);
     }
 
     #[test]

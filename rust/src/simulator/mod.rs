@@ -312,9 +312,13 @@ impl ClusterSim {
         grant_under(requested, self.effective_budget())
     }
 
-    /// Simulate one frame of `app` under raw knob vector `ks`.
-    pub fn run_frame(&mut self, app: &App, ks: &[f64], frame: usize) -> FrameResult {
-        let content = app.model.content(frame);
+    /// The grant plan for playing `ks`: workers granted per stage under
+    /// the effective budget, plus the time-multiplex latency factor those
+    /// grants incur (1.0 when exact accounting is off). Pure in the
+    /// simulator state — the same `(budget, ks)` always plans the same
+    /// grant, which is what lets trace generation hoist the plan out of
+    /// the per-frame loop ([`run_frame_cols`](Self::run_frame_cols)).
+    pub fn plan_grant(&self, app: &App, ks: &[f64]) -> (Vec<usize>, f64) {
         let requested: Vec<usize> =
             (0..app.graph.len()).map(|s| app.model.requested_workers(s, ks)).collect();
         let granted = self.grant_workers(&requested);
@@ -323,17 +327,48 @@ impl ClusterSim {
         } else {
             1.0
         };
-        let stage_ms: Vec<f64> = (0..app.graph.len())
-            .map(|s| {
-                // drift is the model's slow per-stage cost walk (1.0 for
-                // every drift-free model — exact in IEEE 754, so
-                // historical traces stay byte-identical)
-                let base = app.model.stage_latency(s, ks, &content, granted[s])
-                    * app.model.cost_drift(s, frame)
-                    * tm;
-                self.noise.apply(base, &mut self.rng)
-            })
-            .collect();
+        (granted, tm)
+    }
+
+    /// Simulate one frame of `app` under raw knob vector `ks`.
+    pub fn run_frame(&mut self, app: &App, ks: &[f64], frame: usize) -> FrameResult {
+        let (granted, tm) = self.plan_grant(app, ks);
+        let mut stage_ms = Vec::with_capacity(app.graph.len());
+        let (end_to_end_ms, fidelity) =
+            self.run_frame_cols(app, ks, frame, &granted, tm, &mut stage_ms);
+        FrameResult { stage_ms, end_to_end_ms, fidelity, granted_workers: granted }
+    }
+
+    /// Columnar variant of [`run_frame`](Self::run_frame): per-stage
+    /// latencies are **appended** to `stage_out` (the caller's arena
+    /// column, e.g. [`FrameBlock`](crate::trace::FrameBlock)) instead of
+    /// allocating a fresh vector per frame, and the precomputed grant
+    /// plan ([`plan_grant`](Self::plan_grant)) is passed in so trace
+    /// generation pays for it once per configuration instead of once per
+    /// frame. Returns `(end_to_end_ms, fidelity)`. Draws from the noise
+    /// streams in exactly [`run_frame`](Self::run_frame)'s order, so the
+    /// two paths produce byte-identical frames.
+    pub fn run_frame_cols(
+        &mut self,
+        app: &App,
+        ks: &[f64],
+        frame: usize,
+        granted: &[usize],
+        tm: f64,
+        stage_out: &mut Vec<f64>,
+    ) -> (f64, f64) {
+        let content = app.model.content(frame);
+        let start = stage_out.len();
+        for s in 0..app.graph.len() {
+            // drift is the model's slow per-stage cost walk (1.0 for
+            // every drift-free model — exact in IEEE 754, so
+            // historical traces stay byte-identical)
+            let base = app.model.stage_latency(s, ks, &content, granted[s])
+                * app.model.cost_drift(s, frame)
+                * tm;
+            stage_out.push(self.noise.apply(base, &mut self.rng));
+        }
+        let stage_ms = &stage_out[start..];
         let end_to_end_ms = if self.cluster.comm_ms_per_frame > 0.0 {
             // communication cost per connector, shrinking with the image
             // scale active on the upstream side (a scaled frame is smaller
@@ -342,11 +377,11 @@ impl ClusterSim {
                 * crate::apps::pixel_fraction(ks[0].max(1.0)).max(0.05);
             crate::dataflow::critical_path::critical_path_with_edges(
                 &app.graph,
-                &stage_ms,
+                stage_ms,
                 |_, _| comm,
             )
         } else {
-            critical_path(&app.graph, &stage_ms)
+            critical_path(&app.graph, stage_ms)
         };
         let mut fidelity = app.model.fidelity(ks, &content);
         if self.fidelity_sigma > 0.0 {
@@ -354,12 +389,7 @@ impl ClusterSim {
         }
         self.counters.frames += 1;
         self.counters.latency.record(end_to_end_ms);
-        FrameResult {
-            stage_ms,
-            end_to_end_ms,
-            fidelity: fidelity.clamp(0.0, 1.0),
-            granted_workers: granted,
-        }
+        (end_to_end_ms, fidelity.clamp(0.0, 1.0))
     }
 }
 

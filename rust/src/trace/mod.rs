@@ -22,38 +22,165 @@ use crate::simulator::{grant_under, time_multiplex_factor, Cluster, ClusterSim, 
 use crate::util::json::Json;
 use crate::util::Rng;
 
-/// One frame's measurements under a fixed configuration.
-#[derive(Debug, Clone)]
-pub struct TraceFrame {
+/// One frame's measurements under a fixed configuration — a borrowed
+/// view into a [`FrameBlock`] row (the arena owns the data).
+#[derive(Debug, Clone, Copy)]
+pub struct FrameRef<'a> {
     /// Per-stage latencies (ms), indexed like the app graph.
-    pub stage_ms: Vec<f64>,
+    pub stage_ms: &'a [f64],
     /// End-to-end latency (ms): critical path.
     pub end_to_end_ms: f64,
     /// Frame fidelity r.
     pub fidelity: f64,
 }
 
+/// Columnar arena holding every frame of one trace buffer (PR 8).
+///
+/// The per-frame `Vec<f64>` of the old `TraceFrame` rows was the
+/// dominant allocation churn of ladder-trace generation — `levels ×
+/// configs × frames` little vectors built and chased per tenant per
+/// epoch. The arena stores the whole buffer as three flat columns (the
+/// per-stage latency matrix row-major, plus the two per-frame scalars),
+/// so generation allocates O(1) vectors per buffer, readers walk
+/// contiguous memory, and the JSON codec (which was already columnar on
+/// disk) moves columns instead of re-slicing rows. Modeled on
+/// timely-dataflow's slab idiom of batching many small payloads into one
+/// backing buffer.
+#[derive(Debug, Clone, Default)]
+pub struct FrameBlock {
+    n_stages: usize,
+    /// `frames × n_stages`, row-major: frame `f`'s stage latencies are
+    /// `stage_ms[f * n_stages..(f + 1) * n_stages]`.
+    stage_ms: Vec<f64>,
+    end_to_end_ms: Vec<f64>,
+    fidelity: Vec<f64>,
+}
+
+impl FrameBlock {
+    pub fn new(n_stages: usize) -> Self {
+        FrameBlock { n_stages, ..Default::default() }
+    }
+
+    pub fn with_capacity(n_stages: usize, n_frames: usize) -> Self {
+        FrameBlock {
+            n_stages,
+            stage_ms: Vec::with_capacity(n_frames * n_stages),
+            end_to_end_ms: Vec::with_capacity(n_frames),
+            fidelity: Vec::with_capacity(n_frames),
+        }
+    }
+
+    /// Rebuild from the on-disk columns (`stage_ms_flat` et al.).
+    pub fn from_columns(
+        n_stages: usize,
+        stage_ms: Vec<f64>,
+        end_to_end_ms: Vec<f64>,
+        fidelity: Vec<f64>,
+    ) -> Result<Self> {
+        anyhow::ensure!(stage_ms.len() == end_to_end_ms.len() * n_stages, "ragged trace");
+        anyhow::ensure!(fidelity.len() == end_to_end_ms.len(), "ragged fidelity");
+        Ok(FrameBlock { n_stages, stage_ms, end_to_end_ms, fidelity })
+    }
+
+    /// Append one complete frame (test/bench convenience; generation
+    /// writes stages through [`stage_buf`](Self::stage_buf) instead).
+    pub fn push(&mut self, stage_ms: &[f64], end_to_end_ms: f64, fidelity: f64) {
+        assert_eq!(stage_ms.len(), self.n_stages, "stage count mismatch");
+        self.stage_ms.extend_from_slice(stage_ms);
+        self.end_to_end_ms.push(end_to_end_ms);
+        self.fidelity.push(fidelity);
+    }
+
+    /// The raw stage column, for writers that stream latencies in place
+    /// (`ClusterSim::run_frame_cols` appends `n_stages` values here).
+    /// Every append of one frame's stages must be balanced by a
+    /// [`commit_frame`](Self::commit_frame).
+    pub fn stage_buf(&mut self) -> &mut Vec<f64> {
+        &mut self.stage_ms
+    }
+
+    /// Seal the frame whose stages were just appended via
+    /// [`stage_buf`](Self::stage_buf).
+    pub fn commit_frame(&mut self, end_to_end_ms: f64, fidelity: f64) {
+        assert_eq!(
+            self.stage_ms.len(),
+            (self.end_to_end_ms.len() + 1) * self.n_stages,
+            "commit_frame without exactly n_stages appended stages"
+        );
+        self.end_to_end_ms.push(end_to_end_ms);
+        self.fidelity.push(fidelity);
+    }
+
+    pub fn len(&self) -> usize {
+        self.end_to_end_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end_to_end_ms.is_empty()
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.n_stages
+    }
+
+    /// Frame `i` as a borrowed row view.
+    pub fn get(&self, i: usize) -> FrameRef<'_> {
+        FrameRef {
+            stage_ms: &self.stage_ms[i * self.n_stages..(i + 1) * self.n_stages],
+            end_to_end_ms: self.end_to_end_ms[i],
+            fidelity: self.fidelity[i],
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = FrameRef<'_>> + '_ {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    /// The flat `frames × n_stages` latency matrix (serialization).
+    pub fn stage_flat(&self) -> &[f64] {
+        &self.stage_ms
+    }
+
+    /// The end-to-end latency column.
+    pub fn end_to_end(&self) -> &[f64] {
+        &self.end_to_end_ms
+    }
+
+    /// The fidelity column.
+    pub fn fidelities(&self) -> &[f64] {
+        &self.fidelity
+    }
+
+    /// Heap bytes this arena holds (`n_stages + 2` f64 columns per
+    /// frame) — the unit behind the `ladder_trace/*_peak_bytes` bench
+    /// metrics.
+    pub fn heap_bytes(&self) -> usize {
+        (self.stage_ms.len() + self.end_to_end_ms.len() + self.fidelity.len())
+            * std::mem::size_of::<f64>()
+    }
+}
+
 /// A 1000-frame run of one static configuration.
 ///
-/// Frames live behind an [`Arc`] so ladder traces can share one frame
-/// buffer across every rung whose worker grant (and time-multiplex charge)
-/// is identical — the quota only changes execution through the grant, so
-/// equal grants produce byte-identical frames (see
-/// [`LadderTraceSet::generate_with`]).
+/// Frames live in one [`FrameBlock`] arena behind an [`Arc`] so ladder
+/// traces can share one frame buffer across every rung whose worker grant
+/// (and time-multiplex charge) is identical — the quota only changes
+/// execution through the grant, so equal grants produce byte-identical
+/// frames (see [`LadderTraceSet::generate_with`]).
 #[derive(Debug, Clone)]
 pub struct Trace {
     /// Raw knob vector.
     pub config: Vec<f64>,
-    pub frames: Arc<Vec<TraceFrame>>,
+    pub frames: Arc<FrameBlock>,
 }
 
 impl Trace {
     pub fn avg_cost_ms(&self) -> f64 {
-        self.frames.iter().map(|f| f.end_to_end_ms).sum::<f64>() / self.frames.len() as f64
+        self.frames.end_to_end().iter().sum::<f64>() / self.frames.len() as f64
     }
 
     pub fn avg_fidelity(&self) -> f64 {
-        self.frames.iter().map(|f| f.fidelity).sum::<f64>() / self.frames.len() as f64
+        self.frames.fidelities().iter().sum::<f64>() / self.frames.len() as f64
     }
 
     /// Fraction of frames whose end-to-end latency satisfies `bound_ms`
@@ -62,7 +189,7 @@ impl Trace {
         if self.frames.is_empty() {
             return 0.0;
         }
-        let ok = self.frames.iter().filter(|f| f.end_to_end_ms <= bound_ms).count();
+        let ok = self.frames.end_to_end().iter().filter(|&&e| e <= bound_ms).count();
         ok as f64 / self.frames.len() as f64
     }
 }
@@ -96,6 +223,7 @@ impl TraceSet {
     ) -> Self {
         let mut rng = Rng::new(seed);
         let mut traces = Vec::with_capacity(n_configs);
+        let n_stages = app.graph.len();
         for ci in 0..n_configs {
             let u: Vec<f64> = (0..app.spec.num_vars()).map(|_| rng.f64()).collect();
             let config = app.spec.denormalize(&u);
@@ -104,17 +232,16 @@ impl TraceSet {
                 NoiseModel::default(),
                 seed.wrapping_mul(1_000_003).wrapping_add(ci as u64),
             );
-            let frames = (0..n_frames)
-                .map(|f| {
-                    let r = sim.run_frame(app, &config, f);
-                    TraceFrame {
-                        stage_ms: r.stage_ms,
-                        end_to_end_ms: r.end_to_end_ms,
-                        fidelity: r.fidelity,
-                    }
-                })
-                .collect();
-            traces.push(Trace { config, frames: Arc::new(frames) });
+            // the grant plan is a pure function of the knobs, so hoist it
+            // out of the frame loop and stream frames into the arena
+            let (granted, tm) = sim.plan_grant(app, &config);
+            let mut block = FrameBlock::with_capacity(n_stages, n_frames);
+            for f in 0..n_frames {
+                let (e2e, fid) =
+                    sim.run_frame_cols(app, &config, f, &granted, tm, block.stage_buf());
+                block.commit_frame(e2e, fid);
+            }
+            traces.push(Trace { config, frames: Arc::new(block) });
         }
         TraceSet {
             app: app.spec.name.clone(),
@@ -150,8 +277,8 @@ impl TraceSet {
 
     /// The frame record for playing action `config_idx` at time `frame`
     /// (the paper's "predefined alternative futures").
-    pub fn frame(&self, config_idx: usize, frame: usize) -> &TraceFrame {
-        &self.traces[config_idx].frames[frame]
+    pub fn frame(&self, config_idx: usize, frame: usize) -> FrameRef<'_> {
+        self.traces[config_idx].frames.get(frame)
     }
 
     // ---- (de)serialization via the in-tree JSON codec -------------------
@@ -161,22 +288,14 @@ impl TraceSet {
             .traces
             .iter()
             .map(|t| {
-                // frames stored column-major-ish: flat stage matrix + the
-                // per-frame scalars, which keeps files compact
-                let mut stage_flat =
-                    Vec::with_capacity(t.frames.len() * self.stage_names.len());
-                let mut e2e = Vec::with_capacity(t.frames.len());
-                let mut fid = Vec::with_capacity(t.frames.len());
-                for f in t.frames.iter() {
-                    stage_flat.extend_from_slice(&f.stage_ms);
-                    e2e.push(f.end_to_end_ms);
-                    fid.push(f.fidelity);
-                }
+                // the on-disk layout matches the in-memory arena: flat
+                // stage matrix + the per-frame scalar columns, so
+                // serialization is a straight column copy
                 Json::obj()
                     .put("config", Json::from_f64_slice(&t.config))
-                    .put("stage_ms_flat", Json::from_f64_slice(&stage_flat))
-                    .put("end_to_end_ms", Json::from_f64_slice(&e2e))
-                    .put("fidelity", Json::from_f64_slice(&fid))
+                    .put("stage_ms_flat", Json::from_f64_slice(t.frames.stage_flat()))
+                    .put("end_to_end_ms", Json::from_f64_slice(t.frames.end_to_end()))
+                    .put("fidelity", Json::from_f64_slice(t.frames.fidelities()))
             })
             .collect();
         Json::obj()
@@ -201,19 +320,10 @@ impl TraceSet {
                 let flat = t.req("stage_ms_flat")?.as_f64_vec()?;
                 let e2e = t.req("end_to_end_ms")?.as_f64_vec()?;
                 let fid = t.req("fidelity")?.as_f64_vec()?;
-                anyhow::ensure!(flat.len() == e2e.len() * n_stages, "ragged trace");
-                anyhow::ensure!(fid.len() == e2e.len(), "ragged fidelity");
-                let frames = e2e
-                    .iter()
-                    .zip(&fid)
-                    .enumerate()
-                    .map(|(i, (&end_to_end_ms, &fidelity))| TraceFrame {
-                        stage_ms: flat[i * n_stages..(i + 1) * n_stages].to_vec(),
-                        end_to_end_ms,
-                        fidelity,
-                    })
-                    .collect();
-                Ok(Trace { config, frames: Arc::new(frames) })
+                // columns move straight into the arena — no per-frame
+                // re-slicing on load
+                let block = FrameBlock::from_columns(n_stages, flat, e2e, fid)?;
+                Ok(Trace { config, frames: Arc::new(block) })
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(TraceSet {
@@ -344,8 +454,8 @@ impl LadderTraceSet {
         let stage_names: Vec<String> =
             app.spec.stages.iter().map(|s| s.name.clone()).collect();
         let n_stages = app.graph.len();
-        // one cache per config: (granted workers, tm bits) -> shared frames
-        type FrameCache = HashMap<(Vec<usize>, u64), Arc<Vec<TraceFrame>>>;
+        // one cache per config: (granted workers, tm bits) -> shared arena
+        type FrameCache = HashMap<(Vec<usize>, u64), Arc<FrameBlock>>;
         let mut shared: Vec<FrameCache> = vec![HashMap::new(); n_configs];
         let sets = levels
             .iter()
@@ -354,7 +464,7 @@ impl LadderTraceSet {
                     .iter()
                     .enumerate()
                     .map(|(ci, config)| {
-                        // the signature mirrors ClusterSim::run_frame: the
+                        // the signature mirrors ClusterSim::plan_grant: the
                         // grant is made against the effective budget, and
                         // the tm charge (when on) against the same
                         let eff = budget.min(cluster.total_cores());
@@ -367,10 +477,12 @@ impl LadderTraceSet {
                         } else {
                             1.0
                         };
-                        let key = (granted, tm.to_bits());
-                        let frames = shared[ci]
-                            .entry(key)
-                            .or_insert_with(|| {
+                        let key = (granted.clone(), tm.to_bits());
+                        let frames = match shared[ci].entry(key) {
+                            std::collections::hash_map::Entry::Occupied(e) => {
+                                e.get().clone()
+                            }
+                            std::collections::hash_map::Entry::Vacant(e) => {
                                 let mut sim = ClusterSim::new(
                                     cluster.clone(),
                                     NoiseModel::default(),
@@ -378,20 +490,26 @@ impl LadderTraceSet {
                                 )
                                 .with_core_budget(budget)
                                 .with_time_multiplex(time_multiplex);
-                                Arc::new(
-                                    (0..n_frames)
-                                        .map(|f| {
-                                            let r = sim.run_frame(app, config, f);
-                                            TraceFrame {
-                                                stage_ms: r.stage_ms,
-                                                end_to_end_ms: r.end_to_end_ms,
-                                                fidelity: r.fidelity,
-                                            }
-                                        })
-                                        .collect(),
-                                )
-                            })
-                            .clone();
+                                // stream every frame into one columnar
+                                // arena; the grant plan (already the cache
+                                // key) is reused instead of recomputed
+                                // per frame
+                                let mut block =
+                                    FrameBlock::with_capacity(n_stages, n_frames);
+                                for f in 0..n_frames {
+                                    let (e2e, fid) = sim.run_frame_cols(
+                                        app,
+                                        config,
+                                        f,
+                                        &granted,
+                                        tm,
+                                        block.stage_buf(),
+                                    );
+                                    block.commit_frame(e2e, fid);
+                                }
+                                e.insert(Arc::new(block)).clone()
+                            }
+                        };
                         Trace { config: config.clone(), frames }
                     })
                     .collect();
@@ -440,11 +558,15 @@ impl LadderTraceSet {
         best
     }
 
-    /// Approximate heap bytes of one [`TraceFrame`] of this ladder
-    /// (struct + per-stage latency payload).
+    /// Heap bytes one frame occupies in the columnar arena: `n_stages`
+    /// latency cells plus the two per-frame scalar cells. (The pre-arena
+    /// layout also paid a 40-byte `TraceFrame` struct per frame — vector
+    /// header plus scalars — so the same ladder now holds strictly fewer
+    /// bytes; the `ladder_trace/*_peak_bytes` trajectory metrics stepped
+    /// down accordingly at PR 8.)
     fn frame_bytes(&self) -> usize {
         let n_stages = self.sets[0].stage_names.len();
-        std::mem::size_of::<TraceFrame>() + n_stages * std::mem::size_of::<f64>()
+        (n_stages + 2) * std::mem::size_of::<f64>()
     }
 
     /// Trace bytes a share-less ladder would hold:
@@ -499,20 +621,60 @@ mod tests {
 
     #[test]
     fn frac_under_counts_frames() {
-        let t = Trace {
-            config: vec![1.0],
-            frames: Arc::new(
-                [40.0, 60.0, 50.0, 45.0]
-                    .iter()
-                    .map(|&e| TraceFrame { stage_ms: vec![e], end_to_end_ms: e, fidelity: 0.5 })
-                    .collect(),
-            ),
-        };
+        let mut block = FrameBlock::new(1);
+        for e in [40.0, 60.0, 50.0, 45.0] {
+            block.push(&[e], e, 0.5);
+        }
+        let t = Trace { config: vec![1.0], frames: Arc::new(block) };
         assert!((t.frac_under(50.0) - 0.75).abs() < 1e-12);
         assert_eq!(t.frac_under(10.0), 0.0);
         assert_eq!(t.frac_under(100.0), 1.0);
-        let empty = Trace { config: vec![], frames: Arc::new(vec![]) };
+        let empty = Trace { config: vec![], frames: Arc::new(FrameBlock::new(1)) };
         assert_eq!(empty.frac_under(1.0), 0.0);
+    }
+
+    #[test]
+    fn frame_block_arena_discipline() {
+        // push / stage_buf+commit_frame must be interchangeable and the
+        // columnar views must line up with the per-frame refs.
+        let mut a = FrameBlock::with_capacity(3, 2);
+        a.push(&[1.0, 2.0, 3.0], 6.0, 0.5);
+        let mut b = FrameBlock::new(3);
+        b.stage_buf().extend_from_slice(&[1.0, 2.0, 3.0]);
+        b.commit_frame(6.0, 0.5);
+        assert_eq!(a.stage_flat(), b.stage_flat());
+        assert_eq!(a.end_to_end(), b.end_to_end());
+        assert_eq!(a.fidelities(), b.fidelities());
+
+        a.push(&[4.0, 5.0, 6.0], 15.0, 0.75);
+        assert_eq!(a.len(), 2);
+        assert!(!a.is_empty());
+        assert_eq!(a.n_stages(), 3);
+        let f1 = a.get(1);
+        assert_eq!(f1.stage_ms, &[4.0, 5.0, 6.0]);
+        assert_eq!(f1.end_to_end_ms, 15.0);
+        assert_eq!(f1.fidelity, 0.75);
+        let e2e: Vec<f64> = a.iter().map(|f| f.end_to_end_ms).collect();
+        assert_eq!(e2e, vec![6.0, 15.0]);
+        assert_eq!(a.stage_flat(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // one flat stage matrix + two scalar columns, no per-frame Vecs
+        assert_eq!(
+            a.heap_bytes(),
+            (6 + 2 + 2) * std::mem::size_of::<f64>()
+        );
+
+        let c = FrameBlock::from_columns(
+            3,
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![6.0, 15.0],
+            vec![0.5, 0.75],
+        )
+        .unwrap();
+        assert_eq!(c.stage_flat(), a.stage_flat());
+        assert!(
+            FrameBlock::from_columns(3, vec![1.0; 5], vec![6.0], vec![0.5]).is_err(),
+            "ragged stage column must be rejected"
+        );
     }
 
     #[test]
@@ -556,7 +718,10 @@ mod tests {
         ts.save(&path).unwrap();
         let back = TraceSet::load(&path).unwrap();
         assert_eq!(back.num_configs(), ts.num_configs());
-        assert_eq!(back.traces[0].frames[3].end_to_end_ms, ts.traces[0].frames[3].end_to_end_ms);
+        assert_eq!(
+            back.traces[0].frames.get(3).end_to_end_ms,
+            ts.traces[0].frames.get(3).end_to_end_ms
+        );
     }
 
     #[test]
@@ -805,9 +970,9 @@ mod tests {
         let ts = TraceSet::generate(&app, 2, 700, 3);
         let t = &ts.traces[0];
         let before: f64 =
-            (550..600).map(|f| t.frames[f].end_to_end_ms).sum::<f64>() / 50.0;
+            (550..600).map(|f| t.frames.get(f).end_to_end_ms).sum::<f64>() / 50.0;
         let after: f64 =
-            (600..650).map(|f| t.frames[f].end_to_end_ms).sum::<f64>() / 50.0;
+            (600..650).map(|f| t.frames.get(f).end_to_end_ms).sum::<f64>() / 50.0;
         assert!(after > before * 1.1, "frame-600 jump: {before} -> {after}");
     }
 }

@@ -99,6 +99,13 @@ pub struct BudgetedController<'a> {
     level: usize,
     /// `candidates_at[level][action]`: normalized effective knobs.
     candidates_at: Vec<Vec<Vec<f64>>>,
+    /// The same candidates flattened across rungs
+    /// (`candidates_flat[level * num_configs + action]`), precomputed so
+    /// [`utility_curve`](Self::utility_curve) runs **one** batched
+    /// backend prediction for the whole ladder instead of one per rung —
+    /// the vectorized demand-summary path the epoch scheduler hits for
+    /// every tenant every reallocation epoch.
+    candidates_flat: Vec<Vec<f64>>,
     /// Known per-action expected fidelity — identical across levels
     /// (parallelism is fidelity-neutral), taken from the floor rung.
     rewards: Vec<f64>,
@@ -132,6 +139,7 @@ impl<'a> BudgetedController<'a> {
         let rewards: Vec<f64> =
             ladder.set(0).traces.iter().map(|t| t.avg_fidelity()).collect();
         let slots = ladder.num_levels() * ladder.num_configs();
+        let candidates_flat = candidates_at.concat();
         BudgetedController {
             ladder,
             backend,
@@ -139,6 +147,7 @@ impl<'a> BudgetedController<'a> {
             rng: Rng::new(seed),
             level: 0,
             candidates_at,
+            candidates_flat,
             rewards,
             blend_k: 0.0,
             ema_alpha: 0.2,
@@ -206,14 +215,23 @@ impl<'a> BudgetedController<'a> {
     /// (no cross-rung transfer; see [`estimates_at`](Self::estimates_at)).
     fn blended_costs_at(&mut self, level: usize) -> Vec<f64> {
         let costs = self.backend.predict(&self.candidates_at[level]);
+        self.blend_raw(level, &costs)
+    }
+
+    /// Apply exact accounting and the empirical blend to `raw` model
+    /// costs for rung `level`. One implementation shared by the per-rung
+    /// path ([`blended_costs_at`](Self::blended_costs_at)) and the
+    /// vectorized whole-curve path
+    /// ([`utility_curve`](Self::utility_curve)), so the two can't drift.
+    fn blend_raw(&self, level: usize, raw: &[f64]) -> Vec<f64> {
         let n = self.ladder.num_configs();
-        costs
-            .iter()
+        raw.iter()
             .enumerate()
-            .map(|(i, &raw)| {
+            .map(|(i, &raw_c)| {
                 // exact accounting first: the observations being blended
                 // in already carry the time-multiplexing charge
-                let c = if self.time_multiplex { raw * self.tm_at[level][i] } else { raw };
+                let c =
+                    if self.time_multiplex { raw_c * self.tm_at[level][i] } else { raw_c };
                 if self.blend_k <= 0.0 {
                     return c;
                 }
@@ -283,14 +301,23 @@ impl<'a> BudgetedController<'a> {
 
     /// [`utility_at`](Self::utility_at) for every rung — the app's
     /// marginal-utility curve the water-filling allocator consumes.
-    /// Computed in one ascending sweep: the observation-anchored minimum
-    /// is carried upward so each rung costs one batched prediction.
+    /// Vectorized over rungs (PR 8): **one** batched backend prediction
+    /// covers the whole ladder (`candidates_flat`), then one ascending
+    /// sweep applies blending and carries the observation-anchored
+    /// minimum upward. [`Backend::predict`] is defined per-candidate
+    /// (row `i`'s cost depends only on row `i`), so the flat batch's
+    /// per-rung slices are bit-identical to the per-rung calls — the
+    /// demand summary every tenant hands the epoch allocator is computed
+    /// in one pass.
+    ///
+    /// [`Backend::predict`]: crate::runtime::Backend::predict
     pub fn utility_curve(&mut self) -> Vec<f64> {
         let n = self.ladder.num_configs();
+        let flat = self.backend.predict(&self.candidates_flat);
         let mut out = Vec::with_capacity(self.ladder.num_levels());
         let mut obs_min = vec![f64::INFINITY; n];
         for l in 0..self.ladder.num_levels() {
-            let b = self.blended_costs_at(l);
+            let b = self.blend_raw(l, &flat[l * n..(l + 1) * n]);
             let est: Vec<f64> = b
                 .iter()
                 .enumerate()

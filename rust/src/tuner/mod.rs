@@ -381,17 +381,13 @@ mod tests {
         // on the feasible action once it has observed the slow one
         let app = app_by_name("pose", find_spec_dir(None).unwrap()).unwrap();
         let spec = &app.spec;
-        let mk_frames = |stage_ms: Vec<f64>, fid: f64| -> Vec<crate::trace::TraceFrame> {
+        let mk_frames = |stage_ms: Vec<f64>, fid: f64| {
             let e2e: f64 = stage_ms.iter().sum();
-            std::sync::Arc::new(
-                (0..60)
-                    .map(|_| crate::trace::TraceFrame {
-                        stage_ms: stage_ms.clone(),
-                        end_to_end_ms: e2e,
-                        fidelity: fid,
-                    })
-                    .collect(),
-            )
+            let mut block = crate::trace::FrameBlock::new(stage_ms.len());
+            for _ in 0..60 {
+                block.push(&stage_ms, e2e, fid);
+            }
+            std::sync::Arc::new(block)
         };
         let slow = crate::trace::Trace {
             config: spec.defaults(),

@@ -15,17 +15,27 @@ regressions stay visible across commits.
 
 Usage:
     bench_gate.py <json_dir> <baseline.json> <out.json> [--sha SHA]
+                  [--trajectory FILE]
     bench_gate.py --suggest <baseline.json> <trajectory.json> [...]
                   [--factor F]
 
-`--suggest` tightens budgets from accumulated trajectory artifacts: for
-every bench present in the given `BENCH_<sha>.json` files it prints a
+`--trajectory FILE` (the committed `ci/bench-trajectory.json`) appends
+one compact entry per run — the sha, every gated bench's median, and
+the side metrics — pruned to the last 50 entries, so budget-tightening
+has real history instead of whatever artifacts happen to survive
+retention.
+
+`--suggest` tightens budgets from accumulated history: it accepts both
+`BENCH_<sha>.json` artifacts and compact trajectory files (detected by
+their "entries" key) and, for every bench observed, prints a
 baseline-shaped JSON whose budget is `F x` the worst observed median
 (default F = 3, rounded up to two significant digits so re-runs over
-the same artifacts are reproducible). Benches already in the baseline
-keep their gated/tracked bucket; new benches land in "tracked" for a
-human to promote. Paste the output over the "gated"/"tracked" maps in
-ci/bench-baseline.json once enough runs have accumulated.
+the same inputs are reproducible). Benches already in the baseline keep
+their gated/tracked bucket; new benches land in "tracked" for a human
+to promote. Side metrics are no longer dropped: the output's "metrics"
+key summarizes each one (min/max/latest) — informational, not a budget.
+Paste the "gated"/"tracked" maps over ci/bench-baseline.json once
+enough runs have accumulated.
 
 stdlib only — runs on any CI python3.
 """
@@ -36,6 +46,7 @@ import sys
 
 REGRESSION_FACTOR = 2.0
 SUGGEST_FACTOR = 3.0
+TRAJECTORY_KEEP = 50
 
 
 def round_up_2sig(ns):
@@ -62,11 +73,23 @@ def suggest(argv):
         return 2
     baseline = json.loads(pathlib.Path(args[0]).read_text())
     medians = {}
+    metric_series = {}
     for p in args[1:]:
         doc = json.loads(pathlib.Path(p).read_text())
-        for tdoc in doc.get("targets", {}).values():
-            for r in tdoc.get("results", []):
-                medians.setdefault(r["name"], []).append(r["median_ns"])
+        if "entries" in doc:
+            # compact trajectory history (ci/bench-trajectory.json)
+            for entry in doc["entries"]:
+                for name, med in entry.get("medians", {}).items():
+                    medians.setdefault(name, []).append(med)
+                for name, value in entry.get("metrics", {}).items():
+                    metric_series.setdefault(name, []).append(value)
+        else:
+            # one BENCH_<sha>.json artifact
+            for tdoc in doc.get("targets", {}).values():
+                for r in tdoc.get("results", []):
+                    medians.setdefault(r["name"], []).append(r["median_ns"])
+            for name, value in doc.get("metrics", {}).items():
+                metric_series.setdefault(name, []).append(value)
     if not medians:
         print("bench_gate --suggest: no bench results in the given trajectories")
         return 1
@@ -76,6 +99,11 @@ def suggest(argv):
         budget = round_up_2sig(factor * max(medians[name]))
         bucket = "gated" if name in gated_names else "tracked"
         out[bucket][name] = budget
+    if metric_series:
+        out["metrics"] = {
+            name: {"min": min(vs), "max": max(vs), "latest": vs[-1]}
+            for name, vs in sorted(metric_series.items())
+        }
     print(json.dumps(out, indent=2, sort_keys=True))
     for name in sorted(gated_names - set(medians)):
         print(f"# gated bench {name} absent from the trajectories "
@@ -83,14 +111,51 @@ def suggest(argv):
     return 0
 
 
+def append_trajectory(path, sha, results, metrics, gated):
+    """Append this run's gated medians + side metrics to the compact
+    trajectory history, pruned to the last TRAJECTORY_KEEP entries."""
+    p = pathlib.Path(path)
+    try:
+        doc = json.loads(p.read_text())
+    except (FileNotFoundError, json.JSONDecodeError):
+        doc = {}
+    entries = doc.get("entries", [])
+    entries.append({
+        "sha": sha,
+        "medians": {
+            name: results[name]["median_ns"] for name in sorted(gated)
+            if name in results
+        },
+        "metrics": metrics,
+    })
+    doc["entries"] = entries[-TRAJECTORY_KEEP:]
+    p.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print(f"bench trajectory history -> {path} "
+          f"({len(doc['entries'])} entries)")
+
+
 def main(argv):
     if len(argv) >= 2 and argv[1] == "--suggest":
         return suggest(argv[2:])
-    if len(argv) < 4:
+    args = list(argv[1:])
+    sha, trajectory_path = "local", None
+    for flag in ("--sha", "--trajectory"):
+        if flag in args:
+            i = args.index(flag)
+            try:
+                value = args[i + 1]
+            except IndexError:
+                print(__doc__)
+                return 2
+            if flag == "--sha":
+                sha = value
+            else:
+                trajectory_path = value
+            del args[i:i + 2]
+    if len(args) < 3:
         print(__doc__)
         return 2
-    json_dir, baseline_path, out_path = argv[1], argv[2], argv[3]
-    sha = argv[5] if len(argv) > 5 and argv[4] == "--sha" else "local"
+    json_dir, baseline_path, out_path = args[0], args[1], args[2]
 
     baseline = json.loads(pathlib.Path(baseline_path).read_text())
     gated = baseline.get("gated", {})
@@ -173,7 +238,15 @@ def main(argv):
     }
     pathlib.Path(out_path).write_text(json.dumps(out, indent=2, sort_keys=True))
     print(f"bench trajectory -> {out_path}")
+    if trajectory_path is not None:
+        append_trajectory(trajectory_path, sha, results, metrics, gated)
 
+    if warnings:
+        # explicit, not just a WARN cell in the table: tracked benches
+        # regressed past the same 2x tripwire the gate uses — recorded
+        # loudly but never blocking (noisy-runner tolerance).
+        print(f"bench_gate: {len(warnings)} tracked bench(es) regressed "
+              f">{REGRESSION_FACTOR:g}x (warn-only): {sorted(warnings)}")
     if missing:
         print(f"bench_gate: gated benches missing from results: {missing}")
         return 1
