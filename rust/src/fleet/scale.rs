@@ -66,7 +66,9 @@ fn synth_tenant(
     levels: &[usize],
     even: usize,
 ) -> (Vec<f64>, usize) {
-    let mut rng = Rng::new(seed).fork(((tenant as u64) << 16) | epoch as u64);
+    // 32-bit epoch field: epochs >= 2^16 must not bleed into the tenant
+    // bits, or tenant T at epoch E would share a stream with tenant T+1.
+    let mut rng = Rng::new(seed).fork(((tenant as u64) << 32) | epoch as u64);
     let nlv = levels.len();
     // ~3% of tenants per epoch present a flat-zero curve (a starved or
     // freshly reset model): demand must fall back to the calibration

@@ -20,10 +20,10 @@ Usage:
                   [--factor F]
 
 `--trajectory FILE` (the committed `ci/bench-trajectory.json`) appends
-one compact entry per run — the sha, every gated bench's median, and
-the side metrics — pruned to the last 50 entries, so budget-tightening
-has real history instead of whatever artifacts happen to survive
-retention.
+one compact entry per *passing* run — the sha, every gated bench's
+median, and the side metrics — pruned to the last 50 entries, so
+budget-tightening has real history instead of whatever artifacts happen
+to survive retention. Runs that trip the gate leave the file untouched.
 
 `--suggest` tightens budgets from accumulated history: it accepts both
 `BENCH_<sha>.json` artifacts and compact trajectory files (detected by
@@ -117,7 +117,13 @@ def append_trajectory(path, sha, results, metrics, gated):
     p = pathlib.Path(path)
     try:
         doc = json.loads(p.read_text())
-    except (FileNotFoundError, json.JSONDecodeError):
+    except FileNotFoundError:
+        doc = {}
+    except json.JSONDecodeError as exc:
+        # Losing the committed history (and its _comment block) should be
+        # loud — a corrupt file means someone's hand-edit went wrong.
+        print(f"bench_gate: WARNING: {path} is not valid JSON ({exc}); "
+              "starting a fresh history", file=sys.stderr)
         doc = {}
     entries = doc.get("entries", [])
     entries.append({
@@ -238,8 +244,6 @@ def main(argv):
     }
     pathlib.Path(out_path).write_text(json.dumps(out, indent=2, sort_keys=True))
     print(f"bench trajectory -> {out_path}")
-    if trajectory_path is not None:
-        append_trajectory(trajectory_path, sha, results, metrics, gated)
 
     if warnings:
         # explicit, not just a WARN cell in the table: tracked benches
@@ -253,6 +257,10 @@ def main(argv):
     if failures:
         print(f"bench_gate: {len(failures)} gated bench(es) regressed >2x")
         return 1
+    # Only a passing run earns a history entry — a regressed run must not
+    # rewrite the committed trajectory it just failed against.
+    if trajectory_path is not None:
+        append_trajectory(trajectory_path, sha, results, metrics, gated)
     print("bench_gate: all gated benches within budget")
     return 0
 
