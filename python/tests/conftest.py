@@ -1,0 +1,11 @@
+"""Make the ``python/`` source dir importable regardless of pytest's
+invocation directory, so ``from compile import ...`` resolves whether the
+suite runs as ``pytest python/tests`` from the repo root (CI) or from
+inside ``python/``."""
+
+import sys
+from pathlib import Path
+
+_PY_ROOT = str(Path(__file__).resolve().parents[1])
+if _PY_ROOT not in sys.path:
+    sys.path.insert(0, _PY_ROOT)

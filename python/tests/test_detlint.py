@@ -1,0 +1,264 @@
+"""Tests for ``scripts/detlint.py`` — the determinism-invariant static
+analysis pass behind the blocking ``static-analysis`` CI job.
+
+Each rule gets a positive fixture (the hazard in a product-reachable
+module must flag) and a negative one (the safe spelling, or the same
+line out of reach, must not). Fixture trees have no ``lib.rs``, so
+detlint's fixture fallback names every file by its path — ``trace.rs``
+becomes the product root ``trace``, ``util/bench.rs`` the bench-only
+module ``util::bench`` — which makes reachability scenarios one file
+write each. The final test self-checks the real tree: ``rust/src`` must
+lint clean, which is exactly what CI enforces.
+
+Pure stdlib — no jax/hypothesis required.
+"""
+
+import importlib.util
+import json
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+DETLINT = REPO / "scripts" / "detlint.py"
+
+_spec = importlib.util.spec_from_file_location("detlint", DETLINT)
+detlint = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(detlint)
+
+
+def lint(tree):
+    """Run detlint over an in-memory fixture tree; return (exit, report)."""
+    with tempfile.TemporaryDirectory() as td:
+        root = Path(td)
+        for rel, text in tree.items():
+            p = root / rel
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(text)
+        out = root / "report.json"
+        code = detlint.run(root, json_out=out)
+        report = json.loads(out.read_text())
+    return code, report
+
+
+def rules_hit(report):
+    return sorted({v["rule"] for v in report["violations"]})
+
+
+# ---------------------------------------------------------------------------
+# per-rule positives and negatives
+# ---------------------------------------------------------------------------
+
+def test_hash_iter_flagged_in_product_code():
+    code, rep = lint({"trace.rs": (
+        "use std::collections::HashMap;\n"
+        "pub fn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n"
+    )})
+    assert code == 1
+    assert "hash-iter" in rules_hit(rep)
+
+
+def test_btree_is_the_accepted_spelling():
+    code, rep = lint({"trace.rs": (
+        "use std::collections::BTreeMap;\n"
+        "pub fn f() { let m: BTreeMap<u32, u32> = BTreeMap::new(); }\n"
+    )})
+    assert code == 0
+    assert rep["violations"] == []
+
+
+def test_wallclock_flagged_outside_allowlist():
+    code, rep = lint({"scheduler.rs": (
+        "pub fn f() -> std::time::Instant { std::time::Instant::now() }\n"
+    )})
+    assert code == 1
+    assert "wallclock" in rules_hit(rep)
+
+
+def test_wallclock_allowed_in_bench_module():
+    # trace depends on util::bench, pulling it into the product set —
+    # but util::bench is on the wall-clock allowlist.
+    code, rep = lint({
+        "trace.rs": "use crate::util::bench;\npub fn f() { bench::go(); }\n",
+        "util/bench.rs": "pub fn go() { let _ = std::time::Instant::now(); }\n",
+    })
+    assert "util::bench" in rep["reachable_modules"]
+    assert code == 0, rep["violations"]
+
+
+def test_thread_id_flagged():
+    code, rep = lint({"engine.rs": (
+        "pub fn f() -> std::thread::ThreadId { std::thread::current().id() }\n"
+    )})
+    assert code == 1
+    assert "thread-id" in rules_hit(rep)
+
+
+def test_float_eq_flagged_epsilon_compare_clean():
+    code, rep = lint({"learner.rs": (
+        "pub fn bad(x: f64) -> bool { x == 0.5 }\n"
+        "pub fn good(x: f64) -> bool { (x - 0.5).abs() < 1e-9 }\n"
+    )})
+    assert code == 1
+    flagged = [v["line"] for v in rep["violations"] if v["rule"] == "float-eq"]
+    assert flagged == [1], rep["violations"]
+
+
+def test_lossy_cast_flags_float_to_int_not_widening():
+    code, rep = lint({"fleet.rs": (
+        "pub fn bad(x: f64) -> usize { x.round() as usize }\n"
+        "pub fn narrow(y: f64) -> f32 { y as f32 }\n"
+        "pub fn fine(n: usize) -> u64 { n as u64 }\n"
+    )})
+    assert code == 1
+    flagged = sorted(v["line"] for v in rep["violations"] if v["rule"] == "lossy-cast")
+    assert flagged == [1, 2], rep["violations"]
+
+
+def test_unwrap_flagged_idioms_and_tests_exempt():
+    code, rep = lint({"tuner.rs": (
+        "pub fn bad(v: &[u32]) -> u32 { *v.first().unwrap() }\n"
+        "pub fn idiom(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    #[test]\n"
+        "    fn t() { Some(1).unwrap(); }\n"
+        "}\n"
+    )})
+    assert code == 1
+    flagged = [v["line"] for v in rep["violations"] if v["rule"] == "unwrap"]
+    assert flagged == [1], rep["violations"]
+
+
+def test_strings_and_comments_never_flag():
+    code, rep = lint({"obs.rs": (
+        'pub fn f() -> &\'static str { "HashMap Instant::now unwrap()" }\n'
+        "// HashMap in a comment is fine\n"
+        "/* Instant::now in a block comment too */\n"
+    )})
+    assert code == 0, rep["violations"]
+
+
+# ---------------------------------------------------------------------------
+# suppression annotations
+# ---------------------------------------------------------------------------
+
+def test_trailing_allow_with_reason_suppresses():
+    code, rep = lint({"trace.rs": (
+        "pub fn f(v: &[u32]) -> u32 { *v.first().unwrap() } "
+        "// detlint: allow(unwrap) — caller guarantees non-empty\n"
+    )})
+    assert code == 0
+    assert len(rep["suppressed"]) == 1
+    assert rep["suppressed"][0]["reason"] == "caller guarantees non-empty"
+
+
+def test_standalone_allow_covers_next_line():
+    code, rep = lint({"trace.rs": (
+        "// detlint: allow(unwrap) — seeded at construction\n"
+        "pub fn f(v: &[u32]) -> u32 { *v.first().unwrap() }\n"
+    )})
+    assert code == 0
+    assert [s["line"] for s in rep["suppressed"]] == [2]
+
+
+def test_reasonless_allow_is_an_error():
+    code, rep = lint({"trace.rs": (
+        "// detlint: allow(unwrap)\n"
+        "pub fn f(v: &[u32]) -> u32 { *v.first().unwrap() }\n"
+    )})
+    assert code == 1
+    assert rep["annotation_errors"], rep
+    # and the unsuppressed violation still stands
+    assert "unwrap" in rules_hit(rep)
+
+
+def test_unknown_rule_in_allow_is_an_error():
+    code, rep = lint({"trace.rs": (
+        "// detlint: allow(made-up-rule) — whatever\n"
+        "pub fn f() {}\n"
+    )})
+    assert code == 1
+    assert "unknown rule" in rep["annotation_errors"][0]["error"]
+
+
+def test_stale_allow_is_reported_not_fatal():
+    code, rep = lint({"trace.rs": (
+        "// detlint: allow(unwrap) — nothing to suppress here\n"
+        "pub fn f() {}\n"
+    )})
+    assert code == 0
+    assert [s["rule"] for s in rep["stale_allows"]] == ["unwrap"]
+
+
+# ---------------------------------------------------------------------------
+# module-graph reachability
+# ---------------------------------------------------------------------------
+
+def test_bench_only_module_is_out_of_reach():
+    # The identical hash container: harmless in a module no product root
+    # depends on, a violation inside trace/.
+    hazard = "use std::collections::HashMap;\npub type M = HashMap<u32, u32>;\n"
+    code, rep = lint({"util/scratch.rs": hazard})
+    assert code == 0
+    assert "util::scratch" not in rep["reachable_modules"]
+
+    code2, rep2 = lint({"trace.rs": hazard})
+    assert code2 == 1
+    assert "hash-iter" in rules_hit(rep2)
+
+
+def test_reachability_follows_use_edges():
+    # trace -> util::helper makes the helper product-reachable, and its
+    # hazard flags; an unreferenced sibling stays invisible.
+    tree = {
+        "trace.rs": "use crate::util::helper;\npub fn f() { helper::g(); }\n",
+        "util/helper.rs": "pub fn g() { let _ = std::time::Instant::now(); }\n",
+        "util/orphan.rs": "pub fn h() { let _ = std::time::Instant::now(); }\n",
+    }
+    code, rep = lint(tree)
+    assert code == 1
+    files = {v["file"] for v in rep["violations"]}
+    assert "util/helper.rs" in files
+    assert "util/orphan.rs" not in files
+
+
+def test_test_only_dependency_does_not_reach():
+    # A dependency used solely from #[cfg(test)] must not pull the
+    # target into the product set.
+    tree = {
+        "trace.rs": (
+            "pub fn f() {}\n"
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            "    use crate::util::scratch;\n"
+            "    #[test]\n"
+            "    fn t() { scratch::h(); }\n"
+            "}\n"
+        ),
+        "util/scratch.rs": "pub fn h() { let _ = std::time::Instant::now(); }\n",
+    }
+    code, rep = lint(tree)
+    assert code == 0, rep["violations"]
+    assert "util::scratch" not in rep["reachable_modules"]
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+# ---------------------------------------------------------------------------
+
+def test_real_tree_is_clean():
+    """The acceptance criterion CI enforces: rust/src lints clean, and
+    every suppression carries a reasoned annotation."""
+    src = REPO / "rust" / "src"
+    with tempfile.TemporaryDirectory() as td:
+        out = Path(td) / "report.json"
+        code = detlint.run(src, json_out=out)
+        rep = json.loads(out.read_text())
+    assert code == 0, rep["violations"] or rep["annotation_errors"]
+    assert rep["violations"] == []
+    assert rep["annotation_errors"] == []
+    assert rep["stale_allows"] == []
+    assert all(s["reason"] for s in rep["suppressed"])
+    # the determinism roots must actually resolve to modules
+    for root in ("trace", "obs", "scheduler", "learner", "fleet", "engine"):
+        assert root in rep["reachable_modules"], root

@@ -1,0 +1,365 @@
+"""Behavioral mirror of the alloc-epoch synthetic scale run (rust:
+``fleet/scale.rs`` ``run``), post PR 9 fold: demand reservations pass
+through the confidence gate (``demand_cores_confident``) when
+``demand_confidence > 0``, and every epoch finishes with a
+``reserve_top_up`` pass spending idle cores on under-served admitted
+tenants.
+
+The water-filler runs over ``pool - pool // 50``: a 2% fairness reserve
+held back from the utility optimizer and spent by ``reserve_top_up``
+(against the full pool). Without the holdback the top-up is provably a
+no-op after ``allocate_v2`` — the filler's even-share phase raise
+condition (next rung <= pool // admitted, same feasibility check)
+strictly dominates the top-up's (next rung <= min(reservation, even)),
+so phase 2 reaches a fixed point the top-up cannot improve.
+
+The container has no Rust toolchain, so the Rust-side test assertions
+("some epoch tops up", "the confidence gate changes the report",
+"byte-identity still holds") are validated here against a faithful
+reimplementation: xoshiro256** + SplitMix64 (``util/rng.rs``), the
+synthetic tenant curves, ``EpochAdmission::decide``, the heap
+water-filler (imported from the PR 8 mirror), and ``reserve_top_up``.
+Anything asserted by ``rust/src/fleet/scale.rs`` tests about report
+*values* is first proven here on the same seeds and tenant counts.
+
+Pure stdlib — no jax/hypothesis required.
+"""
+
+import math
+
+import test_heap_waterfill_mirror as wf
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+OBS_SALT = 0x0B5E_C04E_7A11_E57A
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """Mirror of ``util/rng.rs``: xoshiro256** seeded via SplitMix64."""
+
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm = (sm + GOLDEN) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            z ^= z >> 31
+            s.append(z)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        # (x >> 11) < 2^53, so the int -> float conversion is exact
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        assert n > 0
+        return (self.next_u64() * n) >> 64
+
+    def fork(self, tag):
+        return Rng(self.next_u64() ^ ((tag * GOLDEN) & MASK))
+
+
+def _round_half_away(x):
+    """Rust ``f64::round`` for the non-negative values used here."""
+    return math.floor(x + 0.5)
+
+
+def demand_cores(curve, levels, fallback):
+    mx = max(curve)
+    if not mx > 0.0:
+        return fallback
+    for l, u in enumerate(curve):
+        if u >= mx - 1e-12:
+            return levels[l]
+    return levels[-1]
+
+
+def demand_cores_confident(curve, levels, fallback, obs, min_obs):
+    if min_obs == 0:
+        return demand_cores(curve, levels, fallback)
+    masked = [u if c >= min_obs else 0.0 for u, c in zip(curve, obs)]
+    return demand_cores(masked, levels, fallback)
+
+
+def synth_obs(seed, epoch, tenant, nlv):
+    rng = Rng(seed ^ OBS_SALT).fork(((tenant << 32) | epoch) & MASK)
+    return [rng.below(4 + (nlv - 1 - l) * 2) for l in range(nlv)]
+
+
+def synth_tenant(seed, epoch, tenant, levels, even, min_obs):
+    rng = Rng(seed).fork(((tenant << 32) | epoch) & MASK)
+    nlv = len(levels)
+
+    def reserve(c):
+        if min_obs == 0:
+            return demand_cores(c, levels, even)
+        obs = synth_obs(seed, epoch, tenant, nlv)
+        return demand_cores_confident(c, levels, even, obs, min_obs)
+
+    if rng.f64() < 0.03:
+        c = [0.0] * nlv
+        return c, reserve(c)
+    sat = 1 + rng.below(nlv)
+    top = 0.3 + 0.7 * rng.f64()
+    acc = 0.0
+    c = []
+    for l in range(nlv):
+        if l < sat:
+            acc += 0.05 + rng.f64()
+        c.append(acc)
+    mx = max(acc, 1e-9)
+    c = [_round_half_away(top * v / mx * 64.0) / 64.0 for v in c]
+    return c, reserve(c)
+
+
+class EpochAdmission:
+    """Mirror of ``scheduler/mod.rs`` ``EpochAdmission`` (rank + decide)."""
+
+    def __init__(self, apps, bound, hysteresis=0):
+        self.bound = max(bound, 1)
+        self.admitted = [True] * apps
+        self.parked_streak = [0] * apps
+        self.admitted_streak = [0] * apps
+        self.decided = False
+        self.hysteresis = hysteresis
+
+    def _overdue(self):
+        return [
+            self.decided and not self.admitted[i] and self.parked_streak[i] + 1 >= self.bound
+            for i in range(len(self.admitted))
+        ]
+
+    def _rank(self, weights):
+        overdue = self._overdue()
+
+        def clazz(i):
+            if overdue[i]:
+                return 0
+            return 1 if self.admitted[i] else 2
+
+        def key(i):
+            c = clazz(i)
+            streak = self.admitted_streak[i] if c == 1 else -self.parked_streak[i]
+            return (-weights[i], c, streak, i)
+
+        return sorted(range(len(weights)), key=key)
+
+    def decide(self, total, weights, reservations):
+        n = len(self.admitted)
+        order = self._rank(weights)
+        overdue = self._overdue()
+        nxt = [False] * n
+        used = 0
+        for i in order:
+            r = min(max(reservations[i], 1), max(total, 1))
+            slack = (
+                self.hysteresis
+                if self.decided and not self.admitted[i] and not overdue[i]
+                else 0
+            )
+            if used + r + slack <= total:
+                nxt[i] = True
+                used += r
+        if not any(nxt):
+            nxt[order[0]] = True
+        fresh = [i for i in order if not nxt[i] and (self.admitted[i] or not self.decided)]
+        m = len(fresh)
+        gpe = max((m + self.bound - 1) // self.bound, 1)
+        is_fresh = [False] * n
+        for j, i in enumerate(fresh):
+            self.parked_streak[i] = (m - 1 - j) // gpe
+            self.admitted_streak[i] = 0
+            is_fresh[i] = True
+        for i in range(n):
+            if nxt[i]:
+                self.parked_streak[i] = 0
+                self.admitted_streak[i] += 1
+            elif not is_fresh[i]:
+                self.parked_streak[i] += 1
+                self.admitted_streak[i] = 0
+        self.admitted = list(nxt)
+        self.decided = True
+        return list(nxt)
+
+
+def reserve_top_up(rungs, levels, total, admitted, reservations, even, weights):
+    """Mirror of ``scheduler/mod.rs`` ``reserve_top_up``."""
+    order = sorted(range(len(rungs)), key=lambda i: (-weights[i], i))
+    used = sum(levels[rungs[i]] for i in range(len(rungs)) if admitted[i])
+    for i in order:
+        if not admitted[i]:
+            continue
+        want = min(reservations[i], even)
+        while (
+            rungs[i] + 1 < len(levels)
+            and levels[rungs[i]] < want
+            and levels[rungs[i] + 1] <= want
+            and used - levels[rungs[i]] + levels[rungs[i] + 1] <= total
+        ):
+            used = used - levels[rungs[i]] + levels[rungs[i] + 1]
+            rungs[i] += 1
+
+
+def fnv_quota(quota):
+    h = 0xCBF29CE484222325
+    for q in quota:
+        for b in (q & MASK).to_bytes(8, "little"):
+            h ^= b
+            h = (h * 0x100000001B3) & MASK
+    return h
+
+
+def run_epochs(tenants, epochs=3, seed=42, rungs=8, cores_per_tenant=3,
+               demand_confidence=0):
+    """Mirror of ``fleet/scale.rs`` ``run`` — per-epoch aggregates."""
+    n = tenants
+    pool = n * max(cores_per_tenant, 1)
+    alloc_pool = pool - pool // 50  # the 2% fairness reserve
+    levels = wf.core_levels(pool, n, 1, max(rungs, 2), 3.0)
+    even = max(pool // n, 1)
+    weights = [4.0 if i % 5 == 0 else 2.0 if i % 5 in (1, 2) else 1.0
+               for i in range(n)]
+    adm = EpochAdmission(n, 4, hysteresis=even)
+    prev_rung = [0] * n
+    prev_admitted = [False] * n
+    out = []
+    for e in range(epochs):
+        pairs = [synth_tenant(seed, e, t, levels, even, demand_confidence)
+                 for t in range(n)]
+        curves = [c for c, _ in pairs]
+        demands = [d for _, d in pairs]
+        admitted = adm.decide(pool, weights, demands)
+        idx = [i for i in range(n) if admitted[i]]
+        sub_curves = [curves[i] for i in idx]
+        sub_weights = [weights[i] for i in idx]
+        sub_prev = [prev_rung[i] if prev_admitted[i] else 0 for i in idx]
+        grant, _ops = wf.allocate_v2_heap(
+            sub_curves, levels, alloc_pool, sub_weights, sub_prev, 0.02)
+        pre = list(grant)
+        sub_res = [demands[i] for i in idx]
+        reserve_top_up(grant, levels, pool, [True] * len(idx), sub_res,
+                       even, sub_weights)
+        top_up = sum(levels[g] - levels[p] for g, p in zip(grant, pre))
+        assert all(g >= p for g, p in zip(grant, pre)), "top-up reduced a grant"
+        quota = [0] * n
+        util = 0.0
+        moved = 0
+        for s, i in enumerate(idx):
+            quota[i] = levels[grant[s]]
+            util += weights[i] * sub_curves[s][grant[s]]
+            if prev_admitted[i] and grant[s] != prev_rung[i]:
+                moved += 1
+            prev_rung[i] = grant[s]
+        used = sum(quota)
+        out.append({
+            "epoch": e, "admitted": len(idx), "parked": n - len(idx),
+            "used_cores": used, "top_up_cores": top_up,
+            "moved_tenants": moved, "weighted_utility": util,
+            "quota_fingerprint": fnv_quota(quota),
+        })
+        prev_admitted = admitted
+    return {"tenants": n, "pool": pool, "levels": levels, "epochs": out}
+
+
+# ---------------------------------------------------------------------------
+# tests — each named after the Rust assertion it underwrites
+# ---------------------------------------------------------------------------
+
+def test_epoch_invariants_hold():
+    """Underwrites ``scale::tests::epoch_invariants_hold`` (n=400, e=4)."""
+    rep = run_epochs(400, epochs=4)
+    for e in rep["epochs"]:
+        assert e["admitted"] + e["parked"] == 400
+        assert e["used_cores"] <= rep["pool"]
+        assert e["admitted"] > 0
+        assert math.isfinite(e["weighted_utility"])
+
+
+def test_parking_happens_at_500():
+    """Underwrites ``scale::tests::parking_actually_happens`` (n=500)."""
+    rep = run_epochs(500, epochs=3)
+    assert sum(e["parked"] for e in rep["epochs"]) > 0
+
+
+def test_top_up_fires_on_default_shape():
+    """Underwrites the Rust ``top_up_spends_the_fairness_reserve``
+    assertion: with the 2% holdback, demand pressure above the even share
+    leaves under-served tenants every epoch, so the top-up always finds
+    work (mirror values at n=400: 12/24/20 cores across the 3 epochs)."""
+    for n in (400, 500, 600):
+        rep = run_epochs(n, epochs=3)
+        for e in rep["epochs"]:
+            assert e["top_up_cores"] > 0, (n, e)
+        assert all(e["used_cores"] <= rep["pool"] for e in rep["epochs"])
+
+
+def test_confidence_gate_changes_reservations():
+    """Underwrites the Rust ``demand_confidence_gates_reservations``
+    assertion: masking unconfident rungs changes some demands, which
+    changes admission packing and the quota fingerprints (n=400)."""
+    base = run_epochs(400, epochs=3)
+    conf = run_epochs(400, epochs=3, demand_confidence=2)
+    assert base != conf
+    # the divergence reaches the fingerprint, not just a count
+    assert any(
+        b["quota_fingerprint"] != c["quota_fingerprint"]
+        for b, c in zip(base["epochs"], conf["epochs"])
+    )
+
+
+def test_confidence_gate_masks_some_demands():
+    """The gate is live at the demand layer itself: with min_obs=2 a real
+    fraction of tenants reserve differently than the optimistic path."""
+    n = 400
+    pool = n * 3
+    levels = wf.core_levels(pool, n, 1, 8, 3.0)
+    even = max(pool // n, 1)
+    diff = sum(
+        1 for t in range(n)
+        if synth_tenant(42, 0, t, levels, even, 0)[1]
+        != synth_tenant(42, 0, t, levels, even, 2)[1]
+    )
+    assert diff > 0, "confidence gate never changed a reservation"
+    # curves must be untouched (independent obs stream)
+    for t in range(0, n, 37):
+        assert (synth_tenant(42, 0, t, levels, even, 0)[0]
+                == synth_tenant(42, 0, t, levels, even, 2)[0])
+
+
+def test_top_up_respects_pool_and_reservations():
+    """Direct unit check of the reserve_top_up mirror semantics: never
+    exceeds the pool, never raises past min(reservation, even)."""
+    levels = [1, 2, 3, 5, 9]
+    rungs = [0, 0, 0, 0]
+    admitted = [True, True, False, True]
+    reservations = [9, 2, 9, 3]
+    weights = [1.0, 4.0, 2.0, 2.0]
+    even = 3
+    total = 8
+    reserve_top_up(rungs, levels, total, admitted, reservations, even, weights)
+    used = sum(levels[r] for r, a in zip(rungs, admitted) if a)
+    assert used <= total
+    # tenant 1 (top priority): reservation 2 < even -> capped at 2 cores
+    assert levels[rungs[1]] <= 2
+    # parked tenant untouched
+    assert rungs[2] == 0
+    # tenant 0: want = min(9, even) = 3, raised only while cores remain
+    assert levels[rungs[0]] <= 3

@@ -56,7 +56,9 @@ impl CostModel for MotionSiftModel {
 
     fn requested_workers(&self, stage: usize, ks: &[f64]) -> usize {
         match stage {
+            // detlint: allow(lossy-cast) — worker-count knob: round() precedes and the spec bounds it to a small exact integer
             FACE_DETECT => ks[K_PAR_FACE].round().max(1.0) as usize,
+            // detlint: allow(lossy-cast) — worker-count knob: round() precedes and the spec bounds it to a small exact integer
             MOTION_EXTRACT => ks[K_PAR_EXTRACT].round().max(1.0) as usize,
             _ => 1,
         }

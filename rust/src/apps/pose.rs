@@ -58,8 +58,11 @@ impl CostModel for PoseModel {
 
     fn requested_workers(&self, stage: usize, ks: &[f64]) -> usize {
         match stage {
+            // detlint: allow(lossy-cast) — worker-count knob: round() precedes and the spec bounds it to a small exact integer
             SIFT => ks[K_PAR_SIFT].round().max(1.0) as usize,
+            // detlint: allow(lossy-cast) — worker-count knob: round() precedes and the spec bounds it to a small exact integer
             MATCH => ks[K_PAR_MATCH].round().max(1.0) as usize,
+            // detlint: allow(lossy-cast) — worker-count knob: round() precedes and the spec bounds it to a small exact integer
             CLUSTER => ks[K_PAR_CLUSTER].round().max(1.0) as usize,
             _ => 1,
         }

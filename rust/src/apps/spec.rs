@@ -267,7 +267,7 @@ impl AppSpec {
             }
         }
         // stages listed in topological order, deps resolve, DAG by construction
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for s in &self.stages {
             for d in &s.deps {
                 if !seen.contains(d.as_str()) {
@@ -309,7 +309,7 @@ impl AppSpec {
                     self.groups.len()
                 );
             }
-            let mut seen_groups = std::collections::HashSet::new();
+            let mut seen_groups = std::collections::BTreeSet::new();
             for g in &self.groups {
                 for d in g.deps.as_deref().unwrap_or(&[]) {
                     if !seen_groups.contains(d.as_str()) {
@@ -327,7 +327,7 @@ impl AppSpec {
             }
         }
         // every knob owned by some group, else the structured solver is blind to it
-        let owned: std::collections::HashSet<usize> =
+        let owned: std::collections::BTreeSet<usize> =
             self.groups.iter().flat_map(|g| g.params.iter().copied()).collect();
         if owned.len() != self.params.len() {
             bail!("spec {}: some knobs not covered by any group", self.name);
@@ -496,7 +496,7 @@ mod tests {
         s.groups.pop();
         // dropping the ransac group still leaves all knobs covered? K2 is
         // shared; removing a group must only fail if coverage breaks.
-        let owned: std::collections::HashSet<usize> =
+        let owned: std::collections::BTreeSet<usize> =
             s.groups.iter().flat_map(|g| g.params.iter().copied()).collect();
         assert_eq!(s.validate().is_ok(), owned.len() == s.params.len());
     }

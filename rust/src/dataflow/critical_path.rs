@@ -52,6 +52,7 @@ pub fn critical_path_nodes(g: &Graph, weights: &[f64]) -> Vec<StageId> {
         }
     }
     let mut path = vec![end];
+    // detlint: allow(unwrap) — path is seeded with the sink node before the backwalk
     while let Some(p) = prev[*path.last().unwrap()] {
         path.push(p);
     }

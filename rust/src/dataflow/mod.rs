@@ -58,6 +58,7 @@ impl Graph {
             .iter()
             .map(|s| (s.name.clone(), s.deps.clone()))
             .collect();
+        // detlint: allow(unwrap) — AppSpec::validate() checks the stage DAG before any Graph is built
         Graph::new(&stages).expect("spec graphs are validated at load")
     }
 

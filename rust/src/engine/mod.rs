@@ -154,6 +154,7 @@ impl KnobPlan {
             .rev()
             .find(|(from, _)| *from <= frame)
             .map(|(_, ks)| Arc::clone(ks))
+            // detlint: allow(unwrap) — KnobPlan::new installs the frame-0 entry; extend never removes it
             .expect("knob plan always holds a frame-0 entry")
     }
 }
@@ -470,6 +471,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                     }
                 }
             })
+            // detlint: allow(unwrap) — OS thread-spawn failure is resource exhaustion — fatal by design
             .expect("spawn stage thread");
     }
     drop(evt_tx);
@@ -481,11 +483,11 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
     thread::Builder::new()
         .name("assembler".into())
         .spawn(move || {
-            use std::collections::HashMap;
+            use std::collections::BTreeMap;
             let n_stages = app2.graph.len();
-            let mut lat_acc: HashMap<usize, Vec<f64>> = HashMap::new();
-            let mut lat_count: HashMap<usize, usize> = HashMap::new();
-            let mut done: HashMap<usize, (f64, Arc<Vec<f64>>, usize)> = HashMap::new();
+            let mut lat_acc: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+            let mut lat_count: BTreeMap<usize, usize> = BTreeMap::new();
+            let mut done: BTreeMap<usize, (f64, Arc<Vec<f64>>, usize)> = BTreeMap::new();
             let mut emitted = 0usize;
             let mut stats = EngineStats { frames: 0, latency: Histogram::new() };
             'pump: while let Ok(evt) = evt_rx.recv() {
@@ -506,6 +508,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
                     if count < n_stages {
                         break;
                     }
+                    // detlint: allow(unwrap) — entry exists: the stage-count check above only passes after every stage inserted
                     let stage_ms = lat_acc.remove(&emitted).unwrap();
                     let content = app2.model.content(emitted);
                     let fidelity = app2.model.fidelity(ks, &content);
@@ -532,6 +535,7 @@ pub fn spawn_stream(app: Arc<App>, initial_knobs: Vec<f64>, cfg: EngineConfig) -
             }
             let _ = stats_tx.send(stats);
         })
+        // detlint: allow(unwrap) — OS thread-spawn failure is resource exhaustion — fatal by design
         .expect("spawn assembler");
 
     StreamHandle { records: rec_rx, knobs, pause, plan, stats_rx }

@@ -127,6 +127,7 @@ pub fn update_speed_ratio(
         traces.configs().iter().map(|c| spec.normalize(c)).collect();
     let time_variant = |variant: Variant| {
         let mut pred = StagePredictor::new(spec, variant, 3);
+        // detlint: allow(wallclock) — measured wall-clock speedup IS this experiment's product; never feeds a report comparison
         let start = Instant::now();
         for t in 0..iters {
             let a = t % candidates.len();

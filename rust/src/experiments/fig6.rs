@@ -94,8 +94,10 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
                 format!(
                     "deg{}: exp {:.2} (off {:.2}) max {:.1}",
                     s.degree,
+                    // detlint: allow(unwrap) — per_frame is non-empty: the harness rejects zero-frame runs
                     s.per_frame.last().unwrap().0,
                     s.offline.0,
+                    // detlint: allow(unwrap) — per_frame is non-empty: the harness rejects zero-frame runs
                     s.per_frame.last().unwrap().1
                 )
             })

@@ -60,6 +60,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
             csv.row(&[t.to_string(), f(ue), f(um), f(se), f(sm)])?;
         }
         let path = csv.finish()?;
+        // detlint: allow(unwrap) — per_frame is non-empty: the harness rejects zero-frame runs
         let last = r.per_frame.last().unwrap();
         crate::log_info!(
             "fig7[{app}]: features {} vs {} | final expected {:.2} vs {:.2} | max-norm {:.1} vs {:.1} (unstructured vs structured) -> {}",

@@ -131,6 +131,7 @@ pub fn run_all(ctx: &ExperimentCtx) -> Result<()> {
 /// Resolve default context directories relative to the repo root.
 pub fn default_ctx(out_dir: Option<&Path>) -> Result<ExperimentCtx> {
     let spec_dir = crate::apps::spec::find_spec_dir(None)?;
+    // detlint: allow(unwrap) — find_spec_dir returns a specs/ directory, which always has a parent
     let root = spec_dir.parent().unwrap().to_path_buf();
     Ok(ExperimentCtx::new(
         spec_dir,

@@ -519,6 +519,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     let even_rung = levels
         .iter()
         .position(|&l| l == even)
+        // detlint: allow(unwrap) — core_levels inserts the even share unconditionally
         .expect("core_levels always contains the even share");
     let epoch_frames = cfg.scheduler.epoch_frames.max(1);
     let epochs = (cfg.frames + epoch_frames - 1) / epoch_frames;
@@ -569,6 +570,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 let local_even_rung = gen_levels
                     .iter()
                     .position(|&l| l == even)
+                    // detlint: allow(unwrap) — core_levels inserts the even share unconditionally
                     .expect("even share is always a generated rung");
                 let mut apps_v = Vec::with_capacity(my.len());
                 let mut ladders: Vec<Option<LadderTraceSet>> = Vec::with_capacity(my.len());
@@ -653,6 +655,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                                     dropped[slot] += hi - lo;
                                     continue;
                                 }
+                                // detlint: allow(unwrap) — controllers are built for every admitted slot in the loop above
                                 let ctl = ctls[slot].as_mut().expect("admitted app");
                                 // rungs index the full ladder; static
                                 // workers hold a trimmed one and always
@@ -1008,6 +1011,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                     rungs: rungs.clone(),
                     admitted: admitted.clone(),
                 })
+                // detlint: allow(unwrap) — a dead fleet worker must take the run down, not silently drop tenants
                 .expect("worker alive");
             }
             for _ in 0..active.len() {
@@ -1017,6 +1021,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 // out far above any epoch length and fail loudly instead
                 let r = res_rx
                     .recv_timeout(std::time::Duration::from_secs(300))
+                    // detlint: allow(unwrap) — a dead fleet worker must take the run down, not silently drop tenants
                     .expect("a fleet worker died mid-epoch (see its panic above)");
                 curves[r.app] = r.curve;
                 rung_obs[r.app] = r.obs;

@@ -6,9 +6,12 @@
 //! budgeted controller per tenant, which caps how far a smoke test can
 //! push tenant counts. This module drives exactly the layers the
 //! 100k-tenant epoch exercises — deterministic synthetic utility
-//! curves, [`demand_cores`] reservations, [`EpochAdmission::decide`],
-//! and the [`allocate_v2`] heap water-fill — so CI can assert the
-//! epoch's invariants at fleet scale in seconds:
+//! curves, [`demand_cores`] reservations (through the
+//! [`demand_cores_confident`] gate when `--demand-confidence` is set),
+//! [`EpochAdmission::decide`], the [`allocate_v2`] heap water-fill over
+//! a 2%-headroom budget, and the [`reserve_top_up`] pass that spends
+//! the held-back cores — so CI can assert the epoch's invariants at
+//! fleet scale in seconds:
 //!
 //! * granted quotas never exceed the pool,
 //! * every utility that reaches the report is finite,
@@ -24,7 +27,10 @@
 
 use anyhow::{ensure, Result};
 
-use crate::scheduler::{allocate_v2, core_levels, demand_cores, EpochAdmission};
+use crate::scheduler::{
+    allocate_v2, core_levels, demand_cores, demand_cores_confident, reserve_top_up,
+    EpochAdmission,
+};
 use crate::util::json::Json;
 use crate::util::Rng;
 
@@ -42,6 +48,12 @@ pub struct ScaleConfig {
     /// Requested ladder rung count (see [`core_levels`]).
     pub rungs: usize,
     pub cores_per_tenant: usize,
+    /// Minimum per-rung observation count before a rung's utility counts
+    /// toward the demand reservation ([`demand_cores_confident`]). `0`
+    /// keeps the historical optimistic demand ([`demand_cores`])
+    /// bit-for-bit; `> 0` draws synthetic observation counts from a
+    /// salted RNG stream, so enabling it never perturbs a curve draw.
+    pub demand_confidence: usize,
 }
 
 impl Default for ScaleConfig {
@@ -53,8 +65,25 @@ impl Default for ScaleConfig {
             threads: 1,
             rungs: 8,
             cores_per_tenant: 3,
+            demand_confidence: 0,
         }
     }
+}
+
+/// Salt separating the observation-count stream from the curve stream:
+/// turning `--demand-confidence` on must not perturb a single curve
+/// draw, so observation counts fork from `seed ^ OBS_SALT` instead of
+/// `seed`.
+const OBS_SALT: u64 = 0x0b5e_c04e_7a11_e57a;
+
+/// Synthetic per-rung observation counts for one tenant-epoch: plentiful
+/// at the low rungs, sparse toward the top of the ladder (tenants spend
+/// most frames near their grant, rarely at boost rungs) — so a
+/// confidence gate of 2 actually masks a real fraction of satiation
+/// rungs. Pure in `(seed, tenant, epoch)`, like the curves.
+fn synth_obs(seed: u64, epoch: usize, tenant: usize, nlv: usize) -> Vec<u64> {
+    let mut rng = Rng::new(seed ^ OBS_SALT).fork(((tenant as u64) << 32) | epoch as u64);
+    (0..nlv).map(|l| rng.below(4 + (nlv - 1 - l) * 2) as u64).collect()
 }
 
 /// One tenant's epoch inputs: utility curve over the ladder plus its
@@ -65,17 +94,26 @@ fn synth_tenant(
     tenant: usize,
     levels: &[usize],
     even: usize,
+    min_obs: usize,
 ) -> (Vec<f64>, usize) {
     // 32-bit epoch field: epochs >= 2^16 must not bleed into the tenant
     // bits, or tenant T at epoch E would share a stream with tenant T+1.
     let mut rng = Rng::new(seed).fork(((tenant as u64) << 32) | epoch as u64);
     let nlv = levels.len();
+    let reserve = |c: &[f64]| {
+        if min_obs == 0 {
+            demand_cores(c, levels, even)
+        } else {
+            let obs = synth_obs(seed, epoch, tenant, nlv);
+            demand_cores_confident(c, levels, even, &obs, min_obs)
+        }
+    };
     // ~3% of tenants per epoch present a flat-zero curve (a starved or
     // freshly reset model): demand must fall back to the calibration
     // share, not to contentment.
     if rng.f64() < 0.03 {
         let c = vec![0.0; nlv];
-        let d = demand_cores(&c, levels, even);
+        let d = reserve(&c);
         return (c, d);
     }
     // Non-decreasing curve that satiates at a random rung: random
@@ -96,7 +134,7 @@ fn synth_tenant(
     for v in &mut c {
         *v = (top * *v / mx * 64.0).round() / 64.0;
     }
-    let d = demand_cores(&c, levels, even);
+    let d = reserve(&c);
     (c, d)
 }
 
@@ -123,8 +161,14 @@ fn synth_epoch(
             let base = ci * chunk;
             s.spawn(move || {
                 for (off, (c, d)) in cs.iter_mut().zip(ds.iter_mut()).enumerate() {
-                    let (curve, demand) =
-                        synth_tenant(cfg.seed, epoch, base + off, levels, even);
+                    let (curve, demand) = synth_tenant(
+                        cfg.seed,
+                        epoch,
+                        base + off,
+                        levels,
+                        even,
+                        cfg.demand_confidence,
+                    );
                     *c = curve;
                     *d = demand;
                 }
@@ -156,6 +200,14 @@ pub fn run(cfg: &ScaleConfig) -> Result<Json> {
     ensure!(cfg.epochs > 0, "alloc-epoch needs at least one epoch");
     let n = cfg.tenants;
     let pool = n * cfg.cores_per_tenant.max(1);
+    // Fairness reserve: the utility water-filler optimizes over the pool
+    // minus a 2% headroom; [`reserve_top_up`] then spends the held-back
+    // cores (against the full pool) seating under-served admitted
+    // tenants at `min(reservation, even)` in priority order. Without the
+    // holdback the top-up is provably a no-op — the water-filler's
+    // even-share phase raise condition strictly dominates the top-up's,
+    // so it reaches a fixed point the top-up cannot improve.
+    let alloc_pool = pool - pool / 50;
     let levels = core_levels(pool, n, 1, cfg.rungs.max(2), 3.0);
     let even = (pool / n).max(1);
     // Three priority tiers, deterministic by index.
@@ -182,8 +234,25 @@ pub fn run(cfg: &ScaleConfig) -> Result<Json> {
             .iter()
             .map(|&i| if prev_admitted[i] { prev_rung[i] } else { 0 })
             .collect();
-        let grant =
-            allocate_v2(&sub_curves, &levels, pool, &sub_weights, Some(&sub_prev), 0.02);
+        let mut grant =
+            allocate_v2(&sub_curves, &levels, alloc_pool, &sub_weights, Some(&sub_prev), 0.02);
+        // Reservation top-up (the fairness restoration [`reserve_top_up`]
+        // documents): spend *idle* cores raising under-served admitted
+        // tenants toward `min(reservation, even)`, priority order. All
+        // slots are admitted in sub-index space by construction.
+        let pre_top_up = grant.clone();
+        let sub_res: Vec<usize> = idx.iter().map(|&i| demands[i]).collect();
+        let all_admitted = vec![true; idx.len()];
+        reserve_top_up(&mut grant, &levels, pool, &all_admitted, &sub_res, even, &sub_weights);
+        let mut top_up = 0usize;
+        for (s, (&g, &p)) in grant.iter().zip(&pre_top_up).enumerate() {
+            ensure!(
+                g >= p,
+                "tenant {} epoch {e}: top-up reduced rung {p} -> {g}",
+                idx[s]
+            );
+            top_up += levels[g] - levels[p];
+        }
         let mut quota = vec![0usize; n];
         let mut util_sum = 0.0;
         let mut moved = 0usize;
@@ -210,6 +279,7 @@ pub fn run(cfg: &ScaleConfig) -> Result<Json> {
                 .put("admitted", idx.len())
                 .put("parked", parked)
                 .put("used_cores", used)
+                .put("top_up_cores", top_up)
                 .put("moved_tenants", moved)
                 .put("weighted_utility", util_sum)
                 .put("quota_fingerprint", format!("{:016x}", quota_fingerprint(&quota))),
@@ -220,6 +290,7 @@ pub fn run(cfg: &ScaleConfig) -> Result<Json> {
         .put("tenants", n)
         .put("pool", pool)
         .put("seed", cfg.seed)
+        .put("demand_confidence", cfg.demand_confidence)
         .put(
             "levels",
             Json::from_f64_slice(&levels.iter().map(|&l| l as f64).collect::<Vec<_>>()),
@@ -263,6 +334,44 @@ mod tests {
                 e.req("weighted_utility").unwrap().as_f64().unwrap().is_finite()
             );
         }
+    }
+
+    #[test]
+    fn top_up_spends_the_fairness_reserve() {
+        // Mirror-validated (python/tests/test_scale_epoch_mirror.py):
+        // with the 2% holdback, demand pressure above the even share
+        // leaves under-served tenants every epoch, so the top-up always
+        // finds work — and never pushes usage past the pool.
+        for tenants in [400, 500, 600] {
+            let cfg = ScaleConfig { tenants, epochs: 3, ..Default::default() };
+            let report = run(&cfg).unwrap();
+            let pool = report.req("pool").unwrap().as_usize().unwrap();
+            for e in report.req("epochs").unwrap().as_arr().unwrap() {
+                let top_up = e.req("top_up_cores").unwrap().as_usize().unwrap();
+                let used = e.req("used_cores").unwrap().as_usize().unwrap();
+                assert!(top_up > 0, "{tenants} tenants: top-up never fired: {e}");
+                assert!(used <= pool, "{tenants} tenants: used {used} > pool {pool}");
+            }
+        }
+    }
+
+    #[test]
+    fn demand_confidence_gates_reservations() {
+        // Mirror-validated: masking unconfident rungs changes demands,
+        // which changes admission packing and the quota fingerprints —
+        // while staying byte-identical across worker-thread counts.
+        let base = ScaleConfig { tenants: 400, epochs: 3, ..Default::default() };
+        let conf =
+            ScaleConfig { tenants: 400, epochs: 3, demand_confidence: 2, ..Default::default() };
+        let base_rep = run(&base).unwrap().to_string();
+        let conf_rep = run(&conf).unwrap().to_string();
+        assert_ne!(base_rep, conf_rep, "confidence gate never changed the report");
+        let conf4 = ScaleConfig { threads: 4, ..conf };
+        assert_eq!(
+            conf_rep,
+            run(&conf4).unwrap().to_string(),
+            "confidence-gated report drifts across thread counts"
+        );
     }
 
     #[test]

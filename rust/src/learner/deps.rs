@@ -70,6 +70,7 @@ pub fn correlation_ratio(xs: &[f64], ys: &[f64], buckets: usize) -> f64 {
     let mut sums = vec![0.0; buckets];
     let mut counts = vec![0usize; buckets];
     for (&x, &y) in xs.iter().zip(ys) {
+        // detlint: allow(lossy-cast) — bucket index: min() clamps to [0, buckets-1]; truncation is the binning rule
         let b = (((x - lo) / (hi - lo)) * buckets as f64).min(buckets as f64 - 1.0) as usize;
         sums[b] += y;
         counts[b] += 1;

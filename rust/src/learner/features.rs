@@ -178,7 +178,7 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(degs, sorted);
         // uniqueness
-        let set: std::collections::HashSet<_> = m.iter().collect();
+        let set: std::collections::BTreeSet<_> = m.iter().collect();
         assert_eq!(set.len(), m.len());
     }
 }

@@ -87,9 +87,10 @@ impl GroupMap {
     ///
     /// [`GroupSpec::deps`]: crate::apps::spec::GroupSpec::deps
     pub fn structured(spec: &AppSpec) -> Self {
-        let in_group: std::collections::HashSet<usize> = spec
+        let in_group: std::collections::BTreeSet<usize> = spec
             .groups
             .iter()
+            // detlint: allow(unwrap) — group stage names resolve: AppSpec::validate() checked them at load
             .flat_map(|g| g.stages.iter().map(|s| spec.stage_index(s).unwrap()))
             .collect();
         let group_graph = if spec.groups.iter().any(|g| g.deps.is_some()) {
@@ -98,6 +99,7 @@ impl GroupMap {
                 .iter()
                 .map(|g| (g.name.clone(), g.deps.clone().unwrap_or_default()))
                 .collect();
+            // detlint: allow(unwrap) — group deps are topologically validated by AppSpec::validate() at load
             Some(Graph::new(&nodes).expect("group deps are validated at load"))
         } else {
             None
@@ -106,6 +108,7 @@ impl GroupMap {
             group_stages: spec
                 .groups
                 .iter()
+                // detlint: allow(unwrap) — group stage names resolve: AppSpec::validate() checked them at load
                 .map(|g| g.stages.iter().map(|s| spec.stage_index(s).unwrap()).collect())
                 .collect(),
             group_vars: spec.groups.iter().map(|g| g.params.clone()).collect(),

@@ -169,6 +169,7 @@ impl MovingAverage {
 
     pub fn observe(&mut self, x: f64) {
         if self.buf.len() == self.window {
+            // detlint: allow(unwrap) — pop only runs when len() == window and window > 0 (asserted in new)
             self.sum -= self.buf.pop_front().unwrap();
         }
         self.buf.push_back(x);

@@ -41,6 +41,11 @@
 //!          outcome.avg_reward, outcome.avg_violation_ms);
 //! ```
 
+// Determinism and memory safety are load-bearing here: every report must
+// be byte-identical across thread counts, and nothing in the tree needs
+// raw pointers. Forbid (not just deny) so no module can opt back in.
+#![forbid(unsafe_code)]
+
 pub mod apps;
 pub mod config;
 pub mod dataflow;

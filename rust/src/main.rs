@@ -116,7 +116,8 @@ commands:
         [--out FILE] [--trace-out FILE]
   inspect TIMELINE [--tenant N]            render a saved --trace-out trace
   alloc-epoch [--tenants N] [--epochs N] [--seed N] [--threads N]
-        [--rungs N] [--cores-per-tenant N] [--out FILE]
+        [--rungs N] [--cores-per-tenant N] [--demand-confidence N]
+        [--out FILE]
 
 APP is pose, motion-sift, gen:SEED, or gen-dag:SEED (procedurally
 generated pipelines; see the workloads module — gen-dag emits general
@@ -164,12 +165,15 @@ counts, pacing and stragglers. `inspect` renders a saved timeline as
 per-tenant epoch/grant/knob tables, a per-stage latency table, and an
 allocation-churn view. `alloc-epoch` is the allocator scale smoke: it
 drives N synthetic tenants (deterministic utility curves, no simulator
-or learner) through demand reservation, epoch admission and the heap
-water-filling allocator for --epochs reallocation epochs and writes a
-JSON report whose bytes are independent of --threads — CI diffs the
+or learner) through demand reservation (confidence-gated when
+--demand-confidence is set, from a salted observation stream that never
+perturbs a curve draw), epoch admission, the heap water-filling
+allocator over a 2%-headroom budget, and the reservation top-up that
+spends the held-back cores, for --epochs reallocation epochs; it writes
+a JSON report whose bytes are independent of --threads — CI diffs the
 1/2/4-thread reports against each other and asserts the epoch
 invariants (quota sum <= pool, finite utilities,
-admitted + parked == tenants).";
+admitted + parked == tenants, top-up spent every epoch).";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -775,6 +779,9 @@ fn cmd_alloc_epoch(args: &Args) -> Result<()> {
     }
     if let Some(n) = args.get_parse::<usize>("cores-per-tenant")? {
         cfg.cores_per_tenant = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("demand-confidence")? {
+        cfg.demand_confidence = n;
     }
     let report = iptune::fleet::scale::run(&cfg)?;
     let text = report.to_string();

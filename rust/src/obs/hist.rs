@@ -111,6 +111,7 @@ impl Histogram {
         if self.count == 0 {
             return None;
         }
+        // detlint: allow(lossy-cast) — rank: ceil of q*count is exact below 2^53 and clamped to >= 1
         let rank = ((q * self.count as f64).ceil() as u64).max(1);
         let mut cum = 0u64;
         let mut edge = HIST_MIN_MS;

@@ -3,7 +3,7 @@
 //! against this before compiling anything.
 
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
@@ -49,8 +49,8 @@ pub struct AppEntry {
 
 #[derive(Debug, Clone)]
 pub struct Manifest {
-    pub artifacts: HashMap<String, ArtifactEntry>,
-    pub apps: HashMap<String, AppEntry>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub apps: BTreeMap<String, AppEntry>,
 }
 
 impl Manifest {
@@ -59,7 +59,7 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
         let v = Json::parse(&text)?;
-        let mut artifacts = HashMap::new();
+        let mut artifacts = BTreeMap::new();
         for (name, e) in v.req("artifacts")?.as_obj()? {
             artifacts.insert(
                 name.clone(),
@@ -87,7 +87,7 @@ impl Manifest {
                 },
             );
         }
-        let mut apps = HashMap::new();
+        let mut apps = BTreeMap::new();
         for (name, a) in v.req("apps")?.as_obj()? {
             apps.insert(
                 name.clone(),

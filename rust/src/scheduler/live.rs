@@ -337,6 +337,7 @@ impl LiveRun<'_> {
         while self.frames_seen[i] < self.target[i] {
             let rec = self.buf[i]
                 .pop_front()
+                // detlint: allow(unwrap) — frontier protocol invariant: a decision fires only after its fold prefix arrived
                 .expect("frontier fired before its fold prefix arrived");
             self.fold(i, &rec);
         }
@@ -356,6 +357,7 @@ impl LiveRun<'_> {
                 let ks = self.current_ks[i].clone();
                 self.sched_handles[i]
                     .as_ref()
+                    // detlint: allow(unwrap) — every scheduled tenant owns a stream entry by construction
                     .expect("frontier streams are scheduled")
                     .extend(from, ks.clone(), frames);
                 self.sink.record_with(|| Event {
@@ -539,6 +541,7 @@ impl LiveRun<'_> {
                 let to = (from + self.epoch_frames).min(self.cfg.frames);
                 self.sched_handles[a]
                     .as_ref()
+                    // detlint: allow(unwrap) — every scheduled tenant owns a stream entry by construction
                     .expect("frontier streams are scheduled")
                     .extend(from, ks.clone(), to);
                 self.sink.record_with(|| Event {
@@ -727,6 +730,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     let even_rung = levels
         .iter()
         .position(|&l| l == even)
+        // detlint: allow(unwrap) — core_levels inserts the even share unconditionally
         .expect("core_levels always contains the even share");
     let epoch_frames = cfg.scheduler.epoch_frames.max(1);
 
@@ -790,6 +794,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                     }
                 }
             })
+            // detlint: allow(unwrap) — OS thread-spawn failure is resource exhaustion — fatal by design
             .expect("spawn forwarder thread");
         apps.push(app);
         profiles.push(profile);
@@ -945,6 +950,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     // the closing quota is what the last epoch actually installed (a
     // tenant parked at the final decide closes at zero cores, not at its
     // stale pre-park rung)
+    // detlint: allow(unwrap) — warmup records the epoch-0 allocation before any decision fires
     let final_cores = run.allocations.last().expect("epoch 0 recorded").cores.clone();
     // release the fold thread's sender before draining: the collector's
     // receiver only hangs up once every sink has flushed and closed

@@ -602,6 +602,7 @@ pub fn core_levels(
 ) -> Vec<usize> {
     let even = (total / apps.max(1)).max(1);
     let floor = floor.clamp(1, even);
+    // detlint: allow(lossy-cast) — core-count cap: ceil of a small positive product, exact below 2^53
     let cap = ((even as f64 * boost).ceil() as usize)
         .min(total.saturating_sub((apps.saturating_sub(1)) * floor))
         .max(even);

@@ -74,6 +74,7 @@ pub fn grant_under(requested: &[usize], budget: usize) -> Vec<usize> {
     let scale = budget as f64 / total as f64;
     requested
         .iter()
+        // detlint: allow(lossy-cast) — scaled worker count: floor-then-max(1) is the documented grant rule, exact below 2^53
         .map(|&r| ((r as f64 * scale).floor() as usize).max(1))
         .collect()
 }

@@ -13,7 +13,7 @@
 //! result so experiments are replayable.
 
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -455,8 +455,8 @@ impl LadderTraceSet {
             app.spec.stages.iter().map(|s| s.name.clone()).collect();
         let n_stages = app.graph.len();
         // one cache per config: (granted workers, tm bits) -> shared arena
-        type FrameCache = HashMap<(Vec<usize>, u64), Arc<FrameBlock>>;
-        let mut shared: Vec<FrameCache> = vec![HashMap::new(); n_configs];
+        type FrameCache = BTreeMap<(Vec<usize>, u64), Arc<FrameBlock>>;
+        let mut shared: Vec<FrameCache> = vec![BTreeMap::new(); n_configs];
         let sets = levels
             .iter()
             .map(|&budget| {
@@ -580,7 +580,7 @@ impl LadderTraceSet {
     /// the bench trajectory records (`ladder_trace` metrics in
     /// `BENCH_<sha>.json`).
     pub fn unique_trace_bytes(&self) -> usize {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         let mut frames = 0usize;
         for set in &self.sets {
             for t in &set.traces {

@@ -35,6 +35,7 @@ pub fn oracle_best(traces: &TraceSet, frames: usize, bound_ms: f64) -> PolicyOut
                 fallback = Some((rec.fidelity, rec.end_to_end_ms));
             }
         }
+        // detlint: allow(unwrap) — candidate grids are non-empty: TraceSet construction asserts configs >= 1
         let (r, l) = best.or(fallback).expect("non-empty action space");
         stats.observe(r, l, bound_ms);
     }
@@ -65,6 +66,7 @@ pub fn best_fixed_action(traces: &TraceSet, bound_ms: f64) -> (usize, PolicyOutc
                     .partial_cmp(&traces.traces[b].avg_cost_ms())
                     .unwrap()
             })
+            // detlint: allow(unwrap) — min_by over 0..num_configs, non-empty by the same construction assert
             .unwrap()
     });
     (c, fixed_action(traces, c, bound_ms))

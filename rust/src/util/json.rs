@@ -63,6 +63,7 @@ impl Json {
 
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
+        // detlint: allow(float-eq) — exact integrality gate for the usize path: fract()==0 is representation-exact
         if x < 0.0 || x.fract() != 0.0 {
             bail!("expected non-negative integer, got {x}");
         }
@@ -391,6 +392,7 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // consume one UTF-8 scalar
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    // detlint: allow(unwrap) — the match arm guarantees rest starts with a non-empty UTF-8 scalar
                     let c = rest.chars().next().unwrap();
                     out.push(c);
                     self.pos += c.len_utf8();

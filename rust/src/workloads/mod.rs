@@ -362,6 +362,7 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
             self.is_heavy.push(heavy);
         }
         fn last_name(&self) -> String {
+            // detlint: allow(unwrap) — names is seeded with the source stage before any accessor runs
             self.names.last().unwrap().clone()
         }
     }
@@ -610,6 +611,7 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
                     ),
                 },
                 KnobKind::Parallel => ParamSpec {
+                    // detlint: allow(unwrap) — par_/quality_ roles always carry Some(stage) — set two lines up
                     name: format!("par_{}", names[role.stage.unwrap()]),
                     symbol: format!("K{}", k + 1),
                     kind: "discrete".into(),
@@ -619,10 +621,12 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
                     log: true,
                     description: format!(
                         "Data-parallel workers for stage {}",
+                        // detlint: allow(unwrap) — par_/quality_ roles always carry Some(stage) — set two lines up
                         names[role.stage.unwrap()]
                     ),
                 },
                 KnobKind::Quality => ParamSpec {
+                    // detlint: allow(unwrap) — par_/quality_ roles always carry Some(stage) — set two lines up
                     name: format!("quality_{}", names[role.stage.unwrap()]),
                     symbol: format!("K{}", k + 1),
                     kind: "discrete".into(),
@@ -632,6 +636,7 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
                     log: false,
                     description: format!(
                         "Quality mode of stage {}: 0 = high (default), 1 = fast",
+                        // detlint: allow(unwrap) — par_/quality_ roles always carry Some(stage) — set two lines up
                         names[role.stage.unwrap()]
                     ),
                 },
@@ -728,6 +733,7 @@ pub fn generate_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> App {
         candidate_pad: 64,
         feature_pad: 64,
     };
+    // detlint: allow(unwrap) — an invalid generated spec is a generator bug: fail loudly at the source
     spec.validate().expect("generated spec must validate");
 
     let graph = Graph::from_spec(&spec);
@@ -825,6 +831,7 @@ pub fn generate_dag_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> Ap
     for s in 0..n_segments {
         for j in 0..seg_len[s] {
             let dep: Vec<String> = if j > 0 {
+                // detlint: allow(unwrap) — names holds the source stage before sink wiring
                 vec![names.last().unwrap().clone()]
             } else if seg_parents[s].is_empty() {
                 vec!["source".into()]
@@ -836,6 +843,7 @@ pub fn generate_dag_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> Ap
             seg_of.push(s);
             is_heavy.push(true);
         }
+        // detlint: allow(unwrap) — names holds the source stage before sink wiring
         seg_tail[s] = names.last().unwrap().clone();
     }
     let mut has_child = vec![false; n_segments];
@@ -1065,6 +1073,7 @@ pub fn generate_dag_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> Ap
                     ),
                 },
                 KnobKind::Parallel => ParamSpec {
+                    // detlint: allow(unwrap) — par_/quality_ roles always carry Some(stage) — set two lines up
                     name: format!("par_{}", names[role.stage.unwrap()]),
                     symbol: format!("K{}", k + 1),
                     kind: "discrete".into(),
@@ -1074,10 +1083,12 @@ pub fn generate_dag_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> Ap
                     log: true,
                     description: format!(
                         "Data-parallel workers for stage {}",
+                        // detlint: allow(unwrap) — par_/quality_ roles always carry Some(stage) — set two lines up
                         names[role.stage.unwrap()]
                     ),
                 },
                 KnobKind::Quality => ParamSpec {
+                    // detlint: allow(unwrap) — par_/quality_ roles always carry Some(stage) — set two lines up
                     name: format!("quality_{}", names[role.stage.unwrap()]),
                     symbol: format!("K{}", k + 1),
                     kind: "discrete".into(),
@@ -1087,6 +1098,7 @@ pub fn generate_dag_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> Ap
                     log: false,
                     description: format!(
                         "Quality mode of stage {}: 0 = high (default), 1 = fast",
+                        // detlint: allow(unwrap) — par_/quality_ roles always carry Some(stage) — set two lines up
                         names[role.stage.unwrap()]
                     ),
                 },
@@ -1163,6 +1175,7 @@ pub fn generate_dag_on(seed: u64, cfg: &WorkloadConfig, cluster: &Cluster) -> Ap
         candidate_pad: 64,
         feature_pad: 64,
     };
+    // detlint: allow(unwrap) — an invalid generated DAG spec is a generator bug: fail loudly at the source
     spec.validate().expect("generated DAG spec must validate");
 
     let graph = Graph::from_spec(&spec);
@@ -1228,6 +1241,7 @@ pub fn calibrated_bound(costs: &[f64], quantile: f64, margin: f64) -> f64 {
     assert!(!costs.is_empty());
     let mut sorted = costs.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // detlint: allow(lossy-cast) — quantile index: rounded product of bounded counts, exact below 2^53
     let idx = ((sorted.len() - 1) as f64 * quantile.clamp(0.0, 1.0)).round() as usize;
     sorted[idx] * margin
 }
@@ -1378,8 +1392,8 @@ mod tests {
             // diamond joins (>= 2 parents) and skip connections (a parent
             // whose longest-path depth sits >= 2 below the child's — in a
             // strictly layered graph every parent is exactly one level up)
-            let mut gdepth: std::collections::HashMap<&str, usize> =
-                std::collections::HashMap::new();
+            let mut gdepth: std::collections::BTreeMap<&str, usize> =
+                std::collections::BTreeMap::new();
             for g in &app.spec.groups {
                 let deps = g.deps.as_deref().unwrap();
                 if deps.len() >= 2 {

@@ -277,6 +277,7 @@ impl CostModel for GeneratedModel {
 
     fn requested_workers(&self, stage: usize, ks: &[f64]) -> usize {
         match self.stages[stage].par_knob {
+            // detlint: allow(lossy-cast) — worker-count knob: round() precedes and the spec bounds it to a small exact integer
             Some(k) => ks[k].round().max(1.0) as usize,
             None => 1,
         }

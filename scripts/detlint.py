@@ -1,0 +1,627 @@
+#!/usr/bin/env python3
+"""detlint — a determinism-invariant static analysis pass over rust/src.
+
+The repo's one non-negotiable bar is that reports and timelines are
+byte-identical across thread counts, pacing and stragglers (ROADMAP
+"determinism bar"). CI enforces that *dynamically* with cmp-based smoke
+jobs, which only catch a nondeterminism bug after someone has written
+the exact scenario that triggers it. detlint shifts the bar left: it
+statically forbids the known nondeterminism *sources* in every module
+whose behavior can reach product output.
+
+How it works (pure stdlib, no toolchain needed):
+
+1. **File model.** Every ``.rs`` file is split into lines; a small state
+   machine strips string/char literals and ``//`` / ``/* */`` comments
+   (raw strings, byte literals and nested block comments included) so
+   rule regexes never fire inside text. ``#[cfg(test)]`` items are
+   located by brace matching and excluded — test code may use wall
+   clocks and unwraps freely.
+
+2. **Module graph.** Modules are discovered by walking ``mod`` / ``pub
+   mod`` declarations from ``lib.rs`` and ``main.rs`` (honoring
+   ``#[path]``). A declaration gated on ``#[cfg(feature = ...)]`` is
+   *not* part of the default build (e.g. ``runtime/xla.rs`` behind
+   ``pjrt``; the stub compiles instead) — such files are skipped and
+   recorded in the report. Dependency edges come from ``use crate::`` /
+   ``use super::`` declarations and inline ``crate::a::b`` paths.
+
+3. **Reachability.** The *product set* is every module transitively
+   reachable from the product-output roots — report/trace/timeline
+   serialization, scheduler decisions, learner updates (prefixes in
+   ``ROOT_PREFIXES``). A hash iteration in a module no root depends on
+   (say, a bench-only helper) is harmless; the same line in ``trace/``
+   is a correctness bug. Rules only fire inside the product set.
+
+4. **Rules.** See ``RULES`` below. Where a rule needs type information
+   a token-level pass cannot have, it over-approximates and documents
+   the approximation (e.g. any ``HashMap`` mention is flagged: a hash
+   container in product code is a standing hazard even before anyone
+   iterates it — the fix is ``BTreeMap``).
+
+5. **Suppressions.** A violation is suppressed only by an inline
+   annotation carrying a reason::
+
+       // detlint: allow(unwrap) — receiver is checked non-empty above
+
+   either trailing on the offending line or standing alone on the
+   line(s) directly above it. Several rules may be listed:
+   ``allow(unwrap, lossy-cast)``. Annotations without a reason are
+   themselves errors; annotations that suppress nothing are reported
+   as stale (warning). Every suppression lands in the JSON report, so
+   the allow inventory is machine-auditable.
+
+Exit status: 0 clean, 1 violations (or reasonless annotations), 2 usage
+error. ``--json FILE`` writes the machine-readable report the
+``static-analysis`` CI job uploads as an artifact.
+"""
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+# --------------------------------------------------------------------------
+# configuration
+# --------------------------------------------------------------------------
+
+# Modules whose behavior reaches product output: report / trace /
+# timeline serialization, scheduler decisions, learner updates, the
+# engine that stamps records, the experiment harness that writes figure
+# JSON. Matched as path prefixes against module paths like
+# "scheduler::live".
+ROOT_PREFIXES = (
+    "trace",
+    "obs",
+    "scheduler",
+    "learner",
+    "fleet",
+    "engine",
+    "tuner",
+    "experiments",
+)
+
+# Modules allowed to read wall clocks: bench harnesses time things by
+# definition, and the test-dir helper stamps unique directory names.
+# Nothing here may feed product output with the value it reads — that
+# property is what the reachability walk + per-site annotations protect
+# elsewhere.
+WALLCLOCK_ALLOW = (
+    "util::bench",
+    "util::testdir",
+)
+
+# Test-infrastructure modules: unwraps in the bench/testdir harnesses
+# abort a measurement run, never a product run.
+TESTINFRA = (
+    "util::bench",
+    "util::testdir",
+)
+
+# Built-in idiom exemptions for the unwrap rule (documented, auditable):
+# lock/wait poisoning and channel disconnect unwraps are fatal-by-design
+# in this codebase (a dead worker must take the run down, not limp), and
+# partial_cmp unwraps sit on floats already asserted finite. The
+# receiver may be on the previous line of a wrapped method chain.
+UNWRAP_IDIOMS = re.compile(
+    r"\.(lock|wait|read|write|join|send|recv|try_recv|partial_cmp)\s*\("
+)
+
+FLOAT_LIT = r"(?:\d+\.\d*(?:[eE][+-]?\d+)?|\.\d+|f(?:32|64)::(?:NAN|INFINITY|NEG_INFINITY|EPSILON))"
+INT_TYPES = r"(?:u8|u16|u32|u64|u128|usize|i8|i16|i32|i64|i128|isize)"
+FLOAT_EVIDENCE = re.compile(
+    r"f64|f32|\d\.\d|\.\d+\b|\b(?:round|floor|ceil|sqrt|fract|powi|powf|ln|exp)\b"
+)
+
+RULES = {
+    "hash-iter": (
+        "HashMap/HashSet in product code: iteration order is seeded per "
+        "process and can silently reach a collection or serializer — use "
+        "BTreeMap/BTreeSet"
+    ),
+    "wallclock": (
+        "wall-clock read (Instant::now / SystemTime) outside allowlisted "
+        "pacing/bench/testdir modules: product decisions must be functions "
+        "of logical clocks only"
+    ),
+    "thread-id": (
+        "thread::current() / ThreadId dependence: worker identity must "
+        "never influence product output"
+    ),
+    "float-eq": (
+        "float == / != comparison: exact float equality is representation-"
+        "dependent; compare against an epsilon or document the exact-"
+        "representation invariant"
+    ),
+    "lossy-cast": (
+        "lossy `as` cast in accounting arithmetic (float->int truncation "
+        "or f32 narrowing): use checked/rounded conversions or annotate "
+        "the bound that makes it exact"
+    ),
+    "unwrap": (
+        "unwrap()/expect() in library code: panics tear down product runs; "
+        "return Result, or annotate the invariant that makes the value "
+        "present"
+    ),
+}
+
+ANNOT_RE = re.compile(
+    r"//\s*detlint:\s*allow\(\s*([a-z0-9_,\s\-]+?)\s*\)\s*(?:[—:-]+\s*(.*?))?\s*$"
+)
+
+
+# --------------------------------------------------------------------------
+# lexical model
+# --------------------------------------------------------------------------
+
+def strip_code(text):
+    """Return ``text`` with comments removed and string/char literal
+    bodies blanked (structure — line count and column positions — is
+    preserved so reported line numbers match the file). Handles nested
+    block comments, raw strings ``r#".."#``, byte strings/literals and
+    escapes. Tolerant by construction: on a lexing surprise it degrades
+    to copying characters through, never crashes."""
+    out = []
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        # line comment
+        if c == "/" and i + 1 < n and text[i + 1] == "/":
+            j = text.find("\n", i)
+            if j == -1:
+                j = n
+            i = j
+            continue
+        # block comment (nested)
+        if c == "/" and i + 1 < n and text[i + 1] == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif text.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    if text[j] == "\n":
+                        out.append("\n")
+                    j += 1
+            i = j
+            continue
+        # raw string r"..." / r#"..."# / br#"..."#
+        m = re.match(r'(?:b?r)(#*)"', text[i:])
+        if m and (i == 0 or not text[i - 1].isalnum() and text[i - 1] != "_"):
+            hashes = m.group(1)
+            close = '"' + hashes
+            j = text.find(close, i + len(m.group(0)))
+            j = n if j == -1 else j + len(close)
+            out.append(m.group(0) + close)
+            out.extend("\n" for k in range(i, j) if text[k] == "\n")
+            i = j
+            continue
+        # string / byte string
+        if c == '"' or (c == "b" and i + 1 < n and text[i + 1] == '"'):
+            j = i + (2 if c == "b" else 1)
+            while j < n and text[j] != '"':
+                if text[j] == "\\":
+                    j += 1
+                if j < n and text[j] == "\n":
+                    out.append("\n")
+                j += 1
+            out.append('""')
+            i = j + 1
+            continue
+        # char / byte-char literal ('a', '\n', b'['), NOT lifetimes ('a)
+        if c == "'" or (c == "b" and i + 1 < n and text[i + 1] == "'"):
+            m2 = re.match(r"b?'(\\.|\\x[0-9a-fA-F]{2}|\\u\{[0-9a-fA-F]+\}|[^'\\])'", text[i:])
+            if m2:
+                out.append("' '" if c == "'" else "b' '")
+                i += len(m2.group(0))
+                continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def test_regions(code_lines):
+    """Line numbers (1-based, inclusive) covered by ``#[cfg(test)]``
+    items, found by matching the braces of the item that follows the
+    attribute."""
+    covered = set()
+    opens = [i for i, l in enumerate(code_lines) if "#[cfg(test)]" in l or "#[cfg(all(test" in l]
+    for start in opens:
+        depth = 0
+        entered = False
+        for j in range(start, len(code_lines)):
+            for ch in code_lines[j]:
+                if ch == "{":
+                    depth += 1
+                    entered = True
+                elif ch == "}":
+                    depth -= 1
+            if entered and depth <= 0:
+                covered.update(range(start + 1, j + 2))
+                break
+        else:
+            covered.update(range(start + 1, len(code_lines) + 1))
+    return covered
+
+
+class SourceFile:
+    def __init__(self, path, rel):
+        self.path = path
+        self.rel = rel
+        self.raw_lines = path.read_text().split("\n")
+        self.code_lines = strip_code(path.read_text()).split("\n")
+        self.tests = test_regions(self.code_lines)
+        # annotations: line -> {rule: reason}; standalone annotation
+        # lines attach to the next non-annotation line.
+        self.allows = {}
+        self.annot_errors = []
+        pending = {}
+        for ln, raw in enumerate(self.raw_lines, 1):
+            m = ANNOT_RE.search(raw)
+            if not m:
+                if pending and raw.strip():
+                    self.allows[ln] = dict(pending)
+                    pending = {}
+                continue
+            rules = [r.strip() for r in m.group(1).split(",") if r.strip()]
+            reason = (m.group(2) or "").strip()
+            bad = [r for r in rules if r not in RULES]
+            if bad:
+                self.annot_errors.append(
+                    (ln, f"unknown rule(s) {bad} in detlint annotation"))
+                continue
+            if not reason:
+                self.annot_errors.append(
+                    (ln, "detlint annotation carries no reason — write "
+                         "`// detlint: allow(rule) — why it is safe`"))
+                continue
+            entry = {r: reason for r in rules}
+            if raw.strip().startswith("//"):
+                pending.update(entry)          # standalone: covers next line
+            else:
+                self.allows.setdefault(ln, {}).update(entry)  # trailing
+
+
+# --------------------------------------------------------------------------
+# module graph
+# --------------------------------------------------------------------------
+
+MOD_DECL = re.compile(r"^\s*(?:pub(?:\([a-z:\s]*\))?\s+)?mod\s+([A-Za-z0-9_]+)\s*;")
+ATTR = re.compile(r"^\s*#\[")
+CFG_FEATURE = re.compile(r"#\[\s*cfg\s*\(\s*(?!not\s*\()[^)]*feature\s*=")
+PATH_ATTR = re.compile(r'#\[\s*path\s*=\s*"([^"]+)"\s*\]')
+
+
+def discover_modules(src_root):
+    """Walk ``mod`` declarations from lib.rs / main.rs, honoring
+    ``#[path]`` and skipping declarations gated on ``#[cfg(feature)]``
+    (not part of the default build). Returns ``(modules, gated)`` where
+    ``modules`` maps module path -> SourceFile and ``gated`` lists
+    skipped files."""
+    modules, gated = {}, []
+    seeds = []
+    for name, modpath in (("lib.rs", "crate"), ("main.rs", "main")):
+        p = src_root / name
+        if p.exists():
+            seeds.append((p, modpath))
+    if not seeds:  # fixture trees without lib/main: every file is a module
+        for p in sorted(src_root.rglob("*.rs")):
+            rel = p.relative_to(src_root)
+            parts = list(rel.with_suffix("").parts)
+            if parts[-1] == "mod":
+                parts = parts[:-1]
+            modules["::".join(parts) or "crate"] = SourceFile(p, str(rel))
+        return modules, gated
+
+    queue = list(seeds)
+    seen = set()
+    while queue:
+        path, modpath = queue.pop()
+        if path in seen:
+            continue
+        seen.add(path)
+        sf = SourceFile(path, str(path.relative_to(src_root)))
+        modules[modpath] = sf
+        moddir = path.parent if path.name in ("mod.rs", "lib.rs", "main.rs") \
+            else path.parent / path.stem
+        attr_buf = []
+        for raw in sf.code_lines:
+            if ATTR.match(raw):
+                attr_buf.append(raw)
+                continue
+            m = MOD_DECL.match(raw)
+            if not m:
+                if raw.strip():
+                    attr_buf = []
+                continue
+            name = m.group(1)
+            attrs = " ".join(attr_buf)
+            attr_buf = []
+            child = name if modpath in ("crate", "main") else f"{modpath}::{name}"
+            pm = PATH_ATTR.search(attrs)
+            if CFG_FEATURE.search(attrs):
+                # non-default build; record the file it would pull in
+                target = moddir / pm.group(1) if pm else None
+                if target is None:
+                    for cand in (moddir / f"{name}.rs", moddir / name / "mod.rs"):
+                        if cand.exists():
+                            target = cand
+                            break
+                if target and target.exists():
+                    gated.append(str(target.relative_to(src_root)))
+                continue
+            if pm:
+                target = moddir / pm.group(1)
+            else:
+                target = None
+                for cand in (moddir / f"{name}.rs", moddir / name / "mod.rs"):
+                    if cand.exists():
+                        target = cand
+                        break
+            if target is None or not target.exists():
+                continue  # inline `mod x;` without a file (or inline mod)
+            queue.append((target, child))
+    return modules, gated
+
+
+USE_RE = re.compile(r"\buse\s+(crate|super)::([A-Za-z0-9_:{},\s*]+?)\s*;")
+INLINE_RE = re.compile(r"\bcrate::([A-Za-z0-9_]+(?:::[A-Za-z0-9_]+)*)")
+# relative imports/re-exports (`pub use rng::Rng;` inside util/mod.rs):
+# the first segment is resolved against the module's declared children.
+REL_USE_RE = re.compile(
+    r"\buse\s+(?:self::)?([a-z_][A-Za-z0-9_]*)\s*(?:::|;)")
+
+
+def dep_edges(modules):
+    """module path -> set of module paths it depends on (non-test lines
+    only: a dependency used solely from tests does not make the target
+    product-reachable)."""
+    known = set(modules)
+    edges = {m: set() for m in modules}
+
+    def resolve(segs):
+        """Longest known-module prefix of a ``::`` path."""
+        for k in range(len(segs), 0, -1):
+            cand = "::".join(segs[:k])
+            if cand in known:
+                return cand
+        return None
+
+    for mod, sf in modules.items():
+        for ln, line in enumerate(sf.code_lines, 1):
+            if ln in sf.tests:
+                continue
+            for kind, rest in USE_RE.findall(line):
+                rest = rest.strip()
+                base = [] if kind == "crate" else mod.split("::")[:-1]
+                if kind == "super" and mod in ("crate", "main"):
+                    base = []
+                # expand one level of {a, b::c} grouping
+                gm = re.match(r"([A-Za-z0-9_:]*)\{(.*)\}", rest)
+                tails = ([t.strip() for t in gm.group(2).split(",")]
+                         if gm else [rest])
+                prefix = (gm.group(1).rstrip(":").split("::")
+                          if gm and gm.group(1).rstrip(":") else [])
+                for t in tails:
+                    segs = base + prefix + [s for s in t.split("::") if s and s != "*"]
+                    tgt = resolve([s for s in segs if s not in ("self",)])
+                    if tgt and tgt != mod:
+                        edges[mod].add(tgt)
+            for path in INLINE_RE.findall(line):
+                tgt = resolve(path.split("::"))
+                if tgt and tgt != mod:
+                    edges[mod].add(tgt)
+            for seg in REL_USE_RE.findall(line):
+                child = seg if mod in ("crate", "main") else f"{mod}::{seg}"
+                if child in known and child != mod:
+                    edges[mod].add(child)
+    return edges
+
+
+def reachable_set(modules, edges):
+    roots = [m for m in modules
+             if any(m == p or m.startswith(p + "::") or m == p.rstrip("::")
+                    for p in ROOT_PREFIXES)]
+    seen = set(roots)
+    stack = list(roots)
+    while stack:
+        m = stack.pop()
+        for d in edges.get(m, ()):
+            if d not in seen:
+                seen.add(d)
+                stack.append(d)
+    return roots, seen
+
+
+# --------------------------------------------------------------------------
+# rules
+# --------------------------------------------------------------------------
+
+def _under(mod, prefixes):
+    return any(mod == p or mod.startswith(p + "::") for p in prefixes)
+
+
+def cast_chunk(line, pos):
+    """The expression text immediately feeding an ``as`` cast at
+    ``pos``: walks back over one postfix chain (identifiers, field/
+    method dots, one balanced paren/bracket group each step)."""
+    i = pos
+    start = pos
+    while i > 0:
+        j = i - 1
+        while j >= 0 and line[j].isspace():
+            j -= 1
+        if j < 0:
+            break
+        if line[j] in ")]":
+            close, open_ = line[j], "(" if line[j] == ")" else "["
+            depth = 0
+            while j >= 0:
+                if line[j] == close:
+                    depth += 1
+                elif line[j] == open_:
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j -= 1
+            start = max(j, 0)
+            i = j
+        elif line[j].isalnum() or line[j] == "_":
+            while j >= 0 and (line[j].isalnum() or line[j] == "_"):
+                j -= 1
+            start = j + 1
+            i = j + 1
+        elif line[j] == ".":
+            start = j
+            i = j
+        else:
+            break
+    return line[start:pos]
+
+
+def scan_file(mod, sf, reachable):
+    """Yield (line, rule, snippet) violations for one file."""
+    in_product = mod in reachable
+    if not in_product:
+        return
+    is_main = mod == "main" or mod.startswith("main::")
+    for ln, line in enumerate(sf.code_lines, 1):
+        if ln in sf.tests or not line.strip():
+            continue
+        snippet = sf.raw_lines[ln - 1].strip() if ln <= len(sf.raw_lines) else ""
+
+        if re.search(r"\b(HashMap|HashSet)\b", line):
+            yield ln, "hash-iter", snippet
+        if not _under(mod, WALLCLOCK_ALLOW) and re.search(
+                r"\bInstant::now\b|\bSystemTime\b|\bUNIX_EPOCH\b", line):
+            yield ln, "wallclock", snippet
+        if re.search(r"\bthread::current\b|\bThreadId\b", line):
+            yield ln, "thread-id", snippet
+        if re.search(rf"(?:{FLOAT_LIT})\s*(?:==|!=)[^=]", line) or re.search(
+                rf"(?:==|!=)\s*[-+]?(?:{FLOAT_LIT})", line):
+            yield ln, "float-eq", snippet
+        for m in re.finditer(rf"\bas\s+({INT_TYPES}|f32)\b", line):
+            if m.group(1) == "f32":
+                yield ln, "lossy-cast", snippet
+                break
+            chunk = cast_chunk(line, m.start())
+            if FLOAT_EVIDENCE.search(chunk):
+                yield ln, "lossy-cast", snippet
+                break
+        if not is_main and not _under(mod, TESTINFRA):
+            for m in re.finditer(r"\.\s*(unwrap\s*\(\s*\)|expect\s*\()", line):
+                before = line[:m.start()]
+                # parser's own `self.expect(b'[')` is not Result::expect
+                if m.group(1).startswith("expect") and re.search(r"\bself\s*$", before):
+                    continue
+                ctx = before
+                if not ctx.strip() or ctx.strip() in (".",):
+                    prev = ln - 2
+                    while prev >= 0 and not sf.code_lines[prev].strip():
+                        prev -= 1
+                    if prev >= 0:
+                        ctx = sf.code_lines[prev] + " " + ctx
+                if UNWRAP_IDIOMS.search(ctx):
+                    continue
+                yield ln, "unwrap", snippet
+                break
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def run(src_root, json_out=None, verbose=False):
+    src_root = Path(src_root)
+    if not src_root.is_dir():
+        print(f"detlint: {src_root} is not a directory", file=sys.stderr)
+        return 2
+    modules, gated = discover_modules(src_root)
+    edges = dep_edges(modules)
+    roots, reachable = reachable_set(modules, edges)
+
+    violations, suppressed, annot_errors, stale = [], [], [], []
+    used_allows = set()
+    for mod in sorted(modules):
+        sf = modules[mod]
+        for ln, rule, snippet in scan_file(mod, sf, reachable):
+            allow = sf.allows.get(ln, {})
+            if rule in allow:
+                suppressed.append({
+                    "file": sf.rel, "line": ln, "rule": rule,
+                    "reason": allow[rule],
+                })
+                used_allows.add((mod, ln, rule))
+            else:
+                violations.append({
+                    "file": sf.rel, "line": ln, "rule": rule,
+                    "module": mod, "snippet": snippet[:160],
+                })
+        for ln, msg in sf.annot_errors:
+            annot_errors.append({"file": sf.rel, "line": ln, "error": msg})
+        for ln, rules in sf.allows.items():
+            for rule in rules:
+                if (mod, ln, rule) not in used_allows:
+                    stale.append({"file": sf.rel, "line": ln, "rule": rule})
+
+    report = {
+        "tool": "detlint",
+        "version": 1,
+        "root": str(src_root),
+        "rules": RULES,
+        "roots": sorted(roots),
+        "reachable_modules": sorted(reachable),
+        "feature_gated_files": sorted(gated),
+        "files_scanned": len(modules),
+        "violations": violations,
+        "suppressed": suppressed,
+        "annotation_errors": annot_errors,
+        "stale_allows": stale,
+        "summary": {
+            r: sum(1 for v in violations if v["rule"] == r) for r in RULES
+        },
+    }
+    if json_out:
+        Path(json_out).write_text(json.dumps(report, indent=2) + "\n")
+
+    for v in violations:
+        print(f"{v['file']}:{v['line']}: [{v['rule']}] {v['snippet']}")
+        if verbose:
+            print(f"    {RULES[v['rule']]}")
+    for e in annot_errors:
+        print(f"{e['file']}:{e['line']}: [bad-annotation] {e['error']}")
+    for s in stale:
+        print(f"{s['file']}:{s['line']}: warning: stale allow({s['rule']}) "
+              "suppresses nothing", file=sys.stderr)
+    ok = not violations and not annot_errors
+    print(
+        f"detlint: {len(modules)} modules ({len(reachable)} product-reachable, "
+        f"{len(gated)} feature-gated file(s) skipped), "
+        f"{len(violations)} violation(s), {len(suppressed)} suppressed, "
+        f"{len(annot_errors)} bad annotation(s)"
+        + (" — clean" if ok else ""))
+    return 0 if ok else 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("src", nargs="?", help="crate source root (e.g. rust/src)")
+    ap.add_argument("--json", help="write the machine-readable report here")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for r, desc in RULES.items():
+            print(f"{r}: {desc}")
+        return 0
+    if args.src is None:
+        ap.error("the following arguments are required: src")
+    return run(args.src, args.json, args.verbose)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
