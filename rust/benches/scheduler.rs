@@ -225,6 +225,27 @@ fn main() {
         per_tenant_ns[2] / per_tenant_ns[0],
     );
 
+    // ---- PR 10: the sharded coordinator epoch ----------------------------
+    // One full 10k-tenant reallocation epoch through the hierarchical
+    // coordinator over 4 mpsc worker shards — synthesis, token-protocol
+    // admission, both water-fill phases, the reservation top-up, and the
+    // statistics fold. Tracked (not gated): the budget anchors the cost
+    // of the cross-shard protocol against the single-pool
+    // allocate_v2/10k_tenants point so a chatty-protocol regression
+    // (e.g. per-tenant messages sneaking into a summary) shows up in the
+    // trajectory.
+    let shard_cfg = iptune::fleet::scale::ScaleConfig {
+        tenants: 10_000,
+        epochs: 1,
+        shards: 4,
+        ..Default::default()
+    };
+    b.bench("scheduler/coordinator_epoch_4shards", || {
+        black_box(
+            iptune::fleet::scale::run(black_box(&shard_cfg)).expect("sharded epoch runs"),
+        );
+    });
+
     println!("\n{} benchmarks complete", b.results.len());
     b.write_json_env("scheduler");
 }

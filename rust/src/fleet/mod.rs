@@ -60,6 +60,7 @@
 //!     crate::tuner::BudgetedController::utility_at
 
 pub mod scale;
+pub mod shard;
 
 use std::path::Path;
 use std::sync::mpsc::channel;
@@ -69,9 +70,9 @@ use anyhow::{Context, Result};
 use crate::metrics::PolicyStats;
 use crate::obs::{self, EpochLatencies, Event, EventKind, TraceCollector};
 use crate::runtime::native::NativeBackend;
+use crate::scheduler::coordinator::{self as coord, AdmissionTier};
 use crate::scheduler::{
-    self, admit, demand_cores_confident, reserve_top_up, AllocationFrame, EpochAdmission,
-    SchedulerConfig,
+    self, admit, demand_cores_confident, reserve_top_up, AllocationFrame, SchedulerConfig,
 };
 use crate::simulator::{Cluster, SharedCluster};
 use crate::trace::LadderTraceSet;
@@ -163,6 +164,12 @@ pub struct FleetConfig {
     /// (`--trace-out`). Off, instrumentation degrades to the always-on
     /// counters/histograms — one branch per frame on the hot path.
     pub trace_events: bool,
+    /// Tenant shards for the admission/water-fill tier. `1` is the
+    /// single-pool path; `> 1` partitions tenants contiguously and runs
+    /// the hierarchical coordinator ([`crate::scheduler::coordinator`])
+    /// over in-process shards. Never changes the report — byte-identity
+    /// across shard counts is the determinism bar CI holds.
+    pub shards: usize,
 }
 
 impl Default for FleetConfig {
@@ -185,6 +192,7 @@ impl Default for FleetConfig {
             load_shift_mult: LOAD_SHIFT_MULT,
             scheduler: SchedulerConfig::default(),
             trace_events: false,
+            shards: 1,
         }
     }
 }
@@ -485,9 +493,12 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     // first call through EpochAdmission (floor reservations reproduce the
     // v1 capacity) and then re-decides every epoch from learned demands
     let floor_req = cfg.scheduler.requested_floor(total, cfg.apps);
-    let mut adm_state =
-        EpochAdmission::new(cfg.apps, cfg.scheduler.starvation_bound_or_default())
-            .with_hysteresis(cfg.scheduler.admission_hysteresis);
+    let mut adm_state = AdmissionTier::new(
+        cfg.apps,
+        cfg.shards,
+        cfg.scheduler.starvation_bound_or_default(),
+        cfg.scheduler.admission_hysteresis,
+    );
     let admitted0: Vec<bool> = if epoch_mode {
         adm_state.decide(
             total,
@@ -888,14 +899,40 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                 let sub_w: Vec<f64> = active.iter().map(|&i| w[i]).collect();
                 let sub_prev: Vec<usize> =
                     active.iter().map(|&i| prev_rungs[i]).collect();
-                let sub = scheduler::allocate_v2(
-                    &sub_curves,
-                    &levels,
-                    total,
-                    &sub_w,
-                    Some(&sub_prev),
-                    cfg.scheduler.hysteresis,
-                );
+                // 2% fairness holdback (epoch mode only): water-fill
+                // over `total - hold` so the reservation top-up below
+                // has idle cores to seat under-served tenants with —
+                // at the full pool it is provably a no-op (the phase-2
+                // even-share raise strictly dominates it). Floor-guarded
+                // so tight pools still seat every admitted floor rung.
+                // Mirror-validated: python/tests/test_shard_mirror.py.
+                let fill_budget = if epoch_mode {
+                    let hold =
+                        (total / 50).min(total.saturating_sub(active.len() * levels[0]));
+                    total - hold
+                } else {
+                    total
+                };
+                let sub = if cfg.shards > 1 {
+                    coord::allocate_v2_sharded(
+                        cfg.shards,
+                        &sub_curves,
+                        &levels,
+                        fill_budget,
+                        &sub_w,
+                        Some(&sub_prev),
+                        cfg.scheduler.hysteresis,
+                    )
+                } else {
+                    scheduler::allocate_v2(
+                        &sub_curves,
+                        &levels,
+                        fill_budget,
+                        &sub_w,
+                        Some(&sub_prev),
+                        cfg.scheduler.hysteresis,
+                    )
+                };
                 let mut full = vec![0usize; cfg.apps];
                 for (k, &i) in active.iter().enumerate() {
                     full[i] = sub[k];
@@ -1002,6 +1039,28 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
                     churn_cores,
                 },
             });
+            if cfg.shards > 1 {
+                // Shard-stamped allocation slices: one event per shard
+                // (seq = shard id keeps the per-epoch event key unique)
+                // so a timeline reader can attribute quota movement to
+                // the owning shard without re-deriving the partition.
+                for (sid, &(lo_t, hi_t)) in
+                    coord::shard_bounds(cfg.apps, cfg.shards).iter().enumerate()
+                {
+                    sched_sink.record_with(|| Event {
+                        tenant: None,
+                        epoch: e,
+                        frame: None,
+                        seq: sid,
+                        kind: EventKind::ShardAlloc {
+                            shard: sid,
+                            lo: lo_t,
+                            hi: hi_t,
+                            cores: shared.quotas()[lo_t..hi_t].to_vec(),
+                        },
+                    });
+                }
+            }
             let lo = e * epoch_frames;
             let hi = (lo + epoch_frames).min(cfg.frames);
             for tx in &cmd_txs {
@@ -1186,6 +1245,36 @@ mod tests {
         let a = run_fleet(&a_cfg);
         let b = run_fleet(&b_cfg);
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn shard_count_does_not_change_results() {
+        // Sharding is topology, not semantics: the coordinator's token
+        // protocol reproduces single-pool admission and water-filling
+        // bit-for-bit (mirror-validated in
+        // python/tests/test_shard_mirror.py), so the whole fleet report
+        // matches byte-for-byte. The cluster is sized so admission
+        // actually parks and rotates tenants — a vacuous all-admitted
+        // run would not exercise the sharded decide at all.
+        let mut base = small_cfg();
+        base.apps = 6;
+        base.frames = 90;
+        base.mode = FleetMode::Dynamic;
+        base.scheduler.epoch_frames = 15;
+        base.scheduler.admission_epoch = true;
+        base.scheduler.fairness_floor = 5;
+        base.cluster = Cluster {
+            servers: 1,
+            cores_per_server: 24,
+            comm_ms_per_frame: 0.0,
+        };
+        let want = run_fleet(&base).to_json().to_string();
+        for shards in [2usize, 3] {
+            let mut cfg = base.clone();
+            cfg.shards = shards;
+            let got = run_fleet(&cfg).to_json().to_string();
+            assert_eq!(got, want, "{shards}-shard fleet drifts from the single pool");
+        }
     }
 
     #[test]

@@ -54,6 +54,11 @@ pub struct ScaleConfig {
     /// bit-for-bit; `> 0` draws synthetic observation counts from a
     /// salted RNG stream, so enabling it never perturbs a curve draw.
     pub demand_confidence: usize,
+    /// Tenant shards. `1` is the legacy single-pool epoch; `> 1` runs
+    /// the hierarchical coordinator over `mpsc` worker shards
+    /// ([`super::shard::run_sharded`]) — byte-identical report by
+    /// construction, which CI asserts.
+    pub shards: usize,
 }
 
 impl Default for ScaleConfig {
@@ -66,6 +71,7 @@ impl Default for ScaleConfig {
             rungs: 8,
             cores_per_tenant: 3,
             demand_confidence: 0,
+            shards: 1,
         }
     }
 }
@@ -87,8 +93,10 @@ fn synth_obs(seed: u64, epoch: usize, tenant: usize, nlv: usize) -> Vec<u64> {
 }
 
 /// One tenant's epoch inputs: utility curve over the ladder plus its
-/// core demand. Pure in `(seed, tenant, epoch)`.
-fn synth_tenant(
+/// core demand. Pure in `(seed, tenant, epoch)` — which is exactly why
+/// the sharded tier ([`super::shard`]) can synthesize each shard's
+/// slice on its own worker without moving the report.
+pub(crate) fn synth_tenant(
     seed: u64,
     epoch: usize,
     tenant: usize,
@@ -198,6 +206,9 @@ fn quota_fingerprint(quota: &[usize]) -> u64 {
 pub fn run(cfg: &ScaleConfig) -> Result<Json> {
     ensure!(cfg.tenants > 0, "alloc-epoch needs at least one tenant");
     ensure!(cfg.epochs > 0, "alloc-epoch needs at least one epoch");
+    if cfg.shards > 1 {
+        return super::shard::run_sharded(cfg);
+    }
     let n = cfg.tenants;
     let pool = n * cfg.cores_per_tenant.max(1);
     // Fairness reserve: the utility water-filler optimizes over the pool
@@ -314,6 +325,35 @@ mod tests {
         let four = run_with_threads(4);
         assert_eq!(one, two, "1-thread vs 2-thread report drift");
         assert_eq!(one, four, "1-thread vs 4-thread report drift");
+    }
+
+    #[test]
+    fn report_byte_identical_across_shards() {
+        // The tentpole determinism bar: the hierarchical coordinator
+        // over mpsc worker shards reproduces the single-pool report
+        // byte-for-byte (mirror-validated in
+        // python/tests/test_shard_mirror.py), and S=1 *is* the legacy
+        // path — `run` only dispatches to the shard tier for S > 1.
+        let single = run_with_threads(1);
+        for shards in [2usize, 4] {
+            let cfg = ScaleConfig { tenants: 600, epochs: 3, shards, ..Default::default() };
+            assert_eq!(
+                run(&cfg).unwrap().to_string(),
+                single,
+                "{shards}-shard report drifts from the single pool"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_report_survives_the_confidence_gate() {
+        // Demand gating changes admission packing; the shard summaries
+        // must carry the gated demands, not recompute optimistic ones.
+        let conf =
+            ScaleConfig { tenants: 400, epochs: 3, demand_confidence: 2, ..Default::default() };
+        let want = run(&conf).unwrap().to_string();
+        let sharded = ScaleConfig { shards: 3, ..conf };
+        assert_eq!(run(&sharded).unwrap().to_string(), want);
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! The `mpsc` shard tier: each tenant shard runs its
+//! [`TenantShard`] server on a dedicated worker thread, exchanging
+//! [`Directive`]/[`Reply`] pairs with the global coordinator over
+//! `std::sync::mpsc` channels — the threaded implementation of the
+//! [`ShardChannel`] seam (the in-process tier is
+//! [`InlineChannel`]). A multi-process tier would replace this module's
+//! transport with a socket codec and change nothing above the trait,
+//! the same layering timely-dataflow uses for its thread/process
+//! allocators.
+//!
+//! [`run_sharded`] is the sharded twin of [`scale::run`]: same
+//! synthetic fleet, same admission/water-fill/top-up epoch, but every
+//! per-tenant computation (curve synthesis, admission bucketing, heap
+//! drains, statistics) happens on the owning shard's worker, and only
+//! the token-protocol summaries cross threads. The report is
+//! byte-identical to the single-pool path for every shard count —
+//! `--shards` is a topology knob, not a semantics knob. See
+//! `docs/DETERMINISM.md` for why that bar is load-bearing and
+//! `docs/ARCHITECTURE.md` for where this tier sits in the stack.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::scheduler::coordinator::{
+    decide_sharded, shard_bounds, top_up_sharded, waterfill_sharded, Directive, InlineChannel,
+    Reply, ShardChannel, TenantShard,
+};
+use crate::scheduler::core_levels;
+use crate::util::json::Json;
+
+use super::scale::{self, synth_tenant, ScaleConfig};
+
+/// How long the coordinator waits on a shard worker before declaring
+/// the protocol wedged. Generous: a shard's largest unit of work (a
+/// full heap drain at 100k tenants) is milliseconds.
+const SHARD_REPLY_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Priority weight of a global tenant index — the same three-tier
+/// pattern [`scale::run`] builds, computed shard-side so weight vectors
+/// never cross the channel.
+fn tenant_weight(i: usize) -> f64 {
+    match i % 5 {
+        0 => 4.0,
+        1 | 2 => 2.0,
+        _ => 1.0,
+    }
+}
+
+/// A [`ShardChannel`] whose [`TenantShard`] server lives on a worker
+/// thread. Directives are fire-and-forget at `send`; the worker queues
+/// exactly one reply per directive, so coordinator broadcasts overlap
+/// shard work across all workers.
+pub struct MpscShardChannel {
+    tx: Sender<Directive>,
+    rx: Receiver<Reply>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MpscShardChannel {
+    /// Spawn the worker for shard `sid` owning tenants `[lo, hi)`.
+    /// `Begin { epoch }` directives are handled transport-side: the
+    /// worker synthesizes its slice of the fleet (pure per-tenant
+    /// functions of `(seed, tenant, epoch)`, so shard topology cannot
+    /// move a value) and loads it into the shard server.
+    pub fn spawn(
+        sid: usize,
+        lo: usize,
+        hi: usize,
+        cfg: &ScaleConfig,
+        levels: Vec<usize>,
+        even: usize,
+        hysteresis: usize,
+    ) -> Self {
+        let (tx, dir_rx) = channel::<Directive>();
+        let (reply_tx, rx) = channel::<Reply>();
+        let seed = cfg.seed;
+        let min_obs = cfg.demand_confidence;
+        let handle = std::thread::spawn(move || {
+            let mut shard = TenantShard::new(sid, lo, hi, 4, hysteresis);
+            while let Ok(d) = dir_rx.recv() {
+                let reply = match d {
+                    Directive::Begin { epoch } => {
+                        let mut curves = Vec::with_capacity(hi - lo);
+                        let mut demands = Vec::with_capacity(hi - lo);
+                        for t in lo..hi {
+                            let (c, d) = synth_tenant(seed, epoch, t, &levels, even, min_obs);
+                            curves.push(c);
+                            demands.push(d);
+                        }
+                        let weights = (lo..hi).map(tenant_weight).collect();
+                        shard.load_epoch(curves, demands, weights);
+                        Reply::Loaded
+                    }
+                    Directive::Shutdown => {
+                        let _ = reply_tx.send(Reply::Done);
+                        break;
+                    }
+                    other => shard.handle(other),
+                };
+                if reply_tx.send(reply).is_err() {
+                    break;
+                }
+            }
+        });
+        MpscShardChannel { tx, rx, handle: Some(handle) }
+    }
+
+    /// Shut the worker down and join it. Idempotent; called by the
+    /// epoch driver on success (error paths just drop the channel,
+    /// which ends the worker's receive loop).
+    pub fn join(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = self.tx.send(Directive::Shutdown);
+            while let Ok(r) = self.rx.recv_timeout(SHARD_REPLY_TIMEOUT) {
+                if matches!(r, Reply::Done) {
+                    break;
+                }
+            }
+            let _ = h.join();
+        }
+    }
+}
+
+impl ShardChannel for MpscShardChannel {
+    fn send(&mut self, d: Directive) {
+        self.tx.send(d).expect("shard worker hung up mid-protocol");
+    }
+
+    fn recv(&mut self) -> Reply {
+        self.rx
+            .recv_timeout(SHARD_REPLY_TIMEOUT)
+            // detlint: allow(unwrap) — every directive owes one reply; a timeout means the worker died or wedged
+            .expect("shard worker failed to reply within the protocol timeout")
+    }
+}
+
+/// The sharded reallocation epoch: [`scale::run`] with tenants
+/// partitioned across `cfg.shards` mpsc workers and the global
+/// coordinator driving admission, both water-fill phases, the
+/// reservation top-up, and the statistics fold through the token
+/// protocol of [`crate::scheduler::coordinator`]. Byte-identical to the
+/// single-pool report for every shard count; `cfg.threads` is ignored
+/// here because synthesis parallelism comes from the shard workers
+/// themselves (and can never move a value either way).
+pub fn run_sharded(cfg: &ScaleConfig) -> Result<Json> {
+    ensure!(cfg.tenants > 0, "alloc-epoch needs at least one tenant");
+    ensure!(cfg.epochs > 0, "alloc-epoch needs at least one epoch");
+    let n = cfg.tenants;
+    let pool = n * cfg.cores_per_tenant.max(1);
+    // Same fairness holdback as the single-pool epoch: water-fill over
+    // 98% of the pool, reservation top-up against the full pool.
+    let alloc_pool = pool - pool / 50;
+    let levels = core_levels(pool, n, 1, cfg.rungs.max(2), 3.0);
+    let even = (pool / n).max(1);
+    let bounds = shard_bounds(n, cfg.shards);
+    let mut channels: Vec<MpscShardChannel> = bounds
+        .iter()
+        .enumerate()
+        .map(|(sid, &(lo, hi))| {
+            MpscShardChannel::spawn(sid, lo, hi, cfg, levels.clone(), even, even)
+        })
+        .collect();
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    for e in 0..cfg.epochs {
+        // Parallel synthesis: every worker builds its slice at once.
+        for ch in channels.iter_mut() {
+            ch.send(Directive::Begin { epoch: e });
+        }
+        for ch in channels.iter_mut() {
+            ensure!(matches!(ch.recv(), Reply::Loaded), "epoch {e}: shard failed to load");
+        }
+        let decision = decide_sharded(&mut channels, pool, 4);
+        let n_adm = decision.flags.iter().filter(|&&a| a).count();
+        ensure!(n_adm > 0, "epoch {e}: admission admitted nobody");
+        for ch in channels.iter_mut() {
+            ch.send(Directive::InstallFillLocal { levels: levels.clone(), hysteresis: 0.02 });
+        }
+        for ch in channels.iter_mut() {
+            ensure!(matches!(ch.recv(), Reply::FillInstalled), "epoch {e}: fill install failed");
+        }
+        let floor = n_adm * levels[0];
+        ensure!(floor <= alloc_pool, "epoch {e}: floor rungs oversubscribe the fill budget");
+        let used = waterfill_sharded(&mut channels, floor, alloc_pool, alloc_pool / n_adm);
+        top_up_sharded(&mut channels, &decision.tiers, even, pool, used);
+        // Statistics fold, shard-major: the chained FNV fingerprint and
+        // the float utility sum accumulate in exactly the single-pool
+        // index order, so the report bytes cannot move.
+        let mut fp: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut util_sum = 0.0f64;
+        let (mut admitted, mut used_cores, mut top_up, mut moved) =
+            (0usize, 0usize, 0usize, 0usize);
+        for ch in channels.iter_mut() {
+            ch.send(Directive::Stats { fp, util: util_sum });
+            match ch.recv() {
+                Reply::Stats { admitted: a, used: u, top_up: t, moved: m, util, fp: h } => {
+                    admitted += a;
+                    used_cores += u;
+                    top_up += t;
+                    moved += m;
+                    util_sum = util;
+                    fp = h;
+                }
+                other => anyhow::bail!("epoch {e}: expected Stats reply, got {other:?}"),
+            }
+        }
+        ensure!(admitted == n_adm, "epoch {e}: admission/fill accounting drift");
+        ensure!(used_cores <= pool, "epoch {e}: granted {used_cores} cores from a pool of {pool}");
+        let parked = n - admitted;
+        epochs.push(
+            Json::obj()
+                .put("epoch", e)
+                .put("admitted", admitted)
+                .put("parked", parked)
+                .put("used_cores", used_cores)
+                .put("top_up_cores", top_up)
+                .put("moved_tenants", moved)
+                .put("weighted_utility", util_sum)
+                .put("quota_fingerprint", format!("{fp:016x}")),
+        );
+    }
+    for ch in channels.iter_mut() {
+        ch.join();
+    }
+    Ok(Json::obj()
+        .put("tenants", n)
+        .put("pool", pool)
+        .put("seed", cfg.seed)
+        .put("demand_confidence", cfg.demand_confidence)
+        .put(
+            "levels",
+            Json::from_f64_slice(&levels.iter().map(|&l| l as f64).collect::<Vec<_>>()),
+        )
+        .put("epochs", Json::Arr(epochs)))
+}
+
+/// In-process shard set for the fleet scheduler's fill tier: builds one
+/// [`InlineChannel`] per contiguous slice of the admitted sub-instance.
+/// Kept here (rather than in the coordinator) so the fleet runner has a
+/// single import point for shard topology.
+pub fn inline_shards(napps: usize, shards: usize) -> Vec<InlineChannel> {
+    shard_bounds(napps, shards)
+        .iter()
+        .enumerate()
+        .map(|(sid, &(lo, hi))| InlineChannel::new(TenantShard::new(sid, lo, hi, 1, 0)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mpsc_channel_round_trips_the_protocol() {
+        let cfg = ScaleConfig { tenants: 10, epochs: 1, ..Default::default() };
+        let levels = vec![1usize, 2, 4];
+        let mut ch = MpscShardChannel::spawn(0, 0, 10, &cfg, levels, 3, 0);
+        ch.send(Directive::Begin { epoch: 0 });
+        assert!(matches!(ch.recv(), Reply::Loaded));
+        ch.send(Directive::Summarize);
+        match ch.recv() {
+            Reply::Summary(s) => {
+                let members: usize = s.buckets.iter().map(|&(_, c, _)| c).sum();
+                assert_eq!(members, 10, "every tenant lands in exactly one bucket");
+            }
+            other => panic!("expected Summary, got {other:?}"),
+        }
+        ch.join();
+    }
+
+    #[test]
+    fn worker_exits_on_channel_drop() {
+        let cfg = ScaleConfig { tenants: 4, epochs: 1, ..Default::default() };
+        let ch = MpscShardChannel::spawn(0, 0, 4, &cfg, vec![1, 2], 1, 0);
+        let handle = {
+            let mut ch = ch;
+            ch.handle.take()
+            // channel endpoints drop here: the worker's recv errors out
+        };
+        handle.expect("spawn sets the handle").join().expect("worker exits cleanly");
+    }
+
+    #[test]
+    fn shard_count_never_moves_the_report() {
+        let base = ScaleConfig { tenants: 500, epochs: 2, ..Default::default() };
+        let want = scale::run(&base).expect("single pool runs").to_string();
+        for shards in [2usize, 3, 5] {
+            let cfg = ScaleConfig { shards, ..base.clone() };
+            let got = run_sharded(&cfg).expect("sharded run").to_string();
+            assert_eq!(got, want, "{shards} shards drift from the single pool");
+        }
+    }
+}

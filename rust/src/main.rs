@@ -104,7 +104,7 @@ commands:
         [--mode static|dynamic] [--hetero] [--shift FRAME] [--shift-mult M]
         [--epoch N] [--floor CORES] [--priority W1,W2,..] [--hysteresis H]
         [--admission] [--admission-epoch] [--admission-hysteresis S]
-        [--starvation-bound K] [--demand-confidence N]
+        [--starvation-bound K] [--demand-confidence N] [--shards S]
         [--tier-shift FRAME:W1,W2,..|FRAME:auto]
         [--thrash MULT] [--dag] [--drift B] [--trace-out FILE]
   schedule [--apps N] [--frames N] [--seed N] [--epoch N] [--floor CORES]
@@ -117,7 +117,7 @@ commands:
   inspect TIMELINE [--tenant N]            render a saved --trace-out trace
   alloc-epoch [--tenants N] [--epochs N] [--seed N] [--threads N]
         [--rungs N] [--cores-per-tenant N] [--demand-confidence N]
-        [--out FILE]
+        [--shards S] [--out FILE]
 
 APP is pose, motion-sift, gen:SEED, or gen-dag:SEED (procedurally
 generated pipelines; see the workloads module — gen-dag emits general
@@ -173,7 +173,13 @@ spends the held-back cores, for --epochs reallocation epochs; it writes
 a JSON report whose bytes are independent of --threads — CI diffs the
 1/2/4-thread reports against each other and asserts the epoch
 invariants (quota sum <= pool, finite utilities,
-admitted + parked == tenants, top-up spent every epoch).";
+admitted + parked == tenants, top-up spent every epoch). --shards S (on
+fleet and alloc-epoch) partitions tenants contiguously across S shards,
+each running the same admission/water-fill machinery over its own slice
+while a hierarchical coordinator exchanges compact demand summaries and
+water-fills budgets across shards (docs/ARCHITECTURE.md); sharding is
+topology, not semantics — reports stay byte-identical across --shards
+1/2/4 (CI's shard-smoke job diffs them), per docs/DETERMINISM.md.";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -357,6 +363,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.get_parse::<usize>("admission-hysteresis")? {
         cfg.scheduler.admission_hysteresis = s;
+    }
+    if let Some(s) = args.get_parse::<usize>("shards")? {
+        anyhow::ensure!(s >= 1, "--shards must be >= 1");
+        cfg.shards = s;
     }
     if cfg.apps == 0
         || (!cfg.scheduler.admission_any() && cfg.apps > cfg.cluster.total_cores())
@@ -782,6 +792,10 @@ fn cmd_alloc_epoch(args: &Args) -> Result<()> {
     }
     if let Some(n) = args.get_parse::<usize>("demand-confidence")? {
         cfg.demand_confidence = n;
+    }
+    if let Some(s) = args.get_parse::<usize>("shards")? {
+        anyhow::ensure!(s >= 1, "--shards must be >= 1");
+        cfg.shards = s;
     }
     let report = iptune::fleet::scale::run(&cfg)?;
     let text = report.to_string();

@@ -67,6 +67,16 @@ pub enum EventKind {
         parked: Vec<bool>,
         churn_cores: usize,
     },
+    /// One shard's slice of an allocation (sharded fleets only): the
+    /// owning shard id, its contiguous tenant range `[lo, hi)`, and the
+    /// granted cores for exactly that range. Emitted with `seq = shard`
+    /// so per-epoch shard events keep unique logical-clock keys.
+    ShardAlloc {
+        shard: usize,
+        lo: usize,
+        hi: usize,
+        cores: Vec<usize>,
+    },
 }
 
 impl EventKind {
@@ -80,6 +90,7 @@ impl EventKind {
             EventKind::Frontier { .. } => "frontier",
             EventKind::Admission { .. } => "admission",
             EventKind::Alloc { .. } => "alloc",
+            EventKind::ShardAlloc { .. } => "shard_alloc",
         }
     }
 
@@ -96,6 +107,7 @@ impl EventKind {
             EventKind::Frontier { .. } => 5,
             EventKind::Admission { .. } => 6,
             EventKind::Alloc { .. } => 7,
+            EventKind::ShardAlloc { .. } => 8,
         }
     }
 }
@@ -174,6 +186,11 @@ impl Event {
                 .put("cores", usizes(cores))
                 .put("parked", bools(parked))
                 .put("churn_cores", *churn_cores),
+            EventKind::ShardAlloc { shard, lo, hi, cores } => j
+                .put("shard", *shard)
+                .put("lo", *lo)
+                .put("hi", *hi)
+                .put("cores", usizes(cores)),
         }
     }
 
@@ -217,6 +234,12 @@ impl Event {
                 cores: j.req("cores")?.as_usize_vec()?,
                 parked: bools("parked")?,
                 churn_cores: j.req("churn_cores")?.as_usize()?,
+            },
+            "shard_alloc" => EventKind::ShardAlloc {
+                shard: j.req("shard")?.as_usize()?,
+                lo: j.req("lo")?.as_usize()?,
+                hi: j.req("hi")?.as_usize()?,
+                cores: j.req("cores")?.as_usize_vec()?,
             },
             other => bail!("unknown event kind {other:?}"),
         };

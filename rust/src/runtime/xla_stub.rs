@@ -14,7 +14,7 @@ use super::Backend;
 use crate::apps::spec::AppSpec;
 use crate::learner::{GroupMap, Variant};
 
-/// Placeholder for [`xla.rs`]'s PJRT-backed predictor backend.
+/// Placeholder for `xla.rs`'s PJRT-backed predictor backend.
 pub struct XlaBackend {
     map: GroupMap,
     weights: Vec<f32>,

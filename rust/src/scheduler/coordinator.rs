@@ -1,0 +1,1556 @@
+//! Hierarchical coordinator for the sharded reallocation epoch.
+//!
+//! Tenants are partitioned contiguously across S shards
+//! ([`shard_bounds`]); each shard runs the existing admission and
+//! water-fill machinery over its own tenant slice, and a global
+//! coordinator drives the cross-shard sequencing with a token-passing
+//! protocol that is **exact** — not approximate — by construction:
+//!
+//! * every global tie-break in the single-pool algorithms
+//!   ([`EpochAdmission::decide`], [`allocate_v2`], [`reserve_top_up`])
+//!   ends on "index ascending"; a contiguous partition turns global
+//!   index order into (shard asc, local index asc), so any
+//!   globally-ordered scan is a concatenation of per-shard segments;
+//! * the admission scan is segmented by rank bucket ([`BucketKey`]:
+//!   weight desc, class, streak): shards report bucket keys + member
+//!   counts + demand totals (the per-priority-tier demand histogram of
+//!   [`ShardSummary`]), the coordinator walks buckets in rank order and
+//!   passes the running `used` token through the owning shards — the
+//!   per-tenant demand vectors never leave the shard;
+//! * both water-fill phases keep one priority heap per shard; the
+//!   coordinator repeatedly hands the fill token to the shard holding
+//!   the globally-best top along with a *boundary* (the best rival
+//!   top), and the shard drains its heap while its top still beats the
+//!   boundary — the single lazy heap of [`allocate_v2`], partitioned
+//!   across shards, stale tops and all;
+//! * the reservation top-up is segmented by (weight desc, shard asc)
+//!   with the same `used` token, and report statistics (float utility
+//!   sum, chained FNV quota fingerprint) fold in shard-major order —
+//!   exactly the single-pool accumulation order, so reports are
+//!   **byte-identical across shard counts**.
+//!
+//! The shard↔coordinator exchange goes through the [`ShardChannel`]
+//! trait: [`InlineChannel`] runs the shard server in-process with no
+//! threads (the S=1 and fleet tiers), `fleet::shard::MpscShardChannel`
+//! runs it on a worker thread over `std::sync::mpsc` (the scale tier).
+//! The trait is the seam for a multi-process tier later, in the spirit
+//! of timely-dataflow's thread/process allocator stack.
+//!
+//! The protocol is mirror-validated: `python/tests/test_shard_mirror.py`
+//! proves (pure stdlib, same token protocol) that the sharded run
+//! reproduces the single-pool report dict exactly — float utility and
+//! fingerprints included — across S ∈ {1..4}, and the unit tests below
+//! re-prove it against the Rust single-pool implementations. See
+//! `docs/DETERMINISM.md` for the contract this module is held to.
+//!
+//! [`EpochAdmission::decide`]: super::EpochAdmission::decide
+//! [`allocate_v2`]: super::allocate_v2
+//! [`reserve_top_up`]: super::reserve_top_up
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use super::Jump;
+
+/// Contiguous balanced partition: shard `s` owns `[s*n/S, (s+1)*n/S)`.
+/// The shard count is clamped to `[1, n]` (an empty fleet keeps one
+/// empty shard), so callers can pass `--shards` values larger than the
+/// tenant count without creating degenerate empty shards.
+pub fn shard_bounds(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let s = shards.clamp(1, n.max(1));
+    (0..s).map(|sid| (sid * n / s, (sid + 1) * n / s)).collect()
+}
+
+/// Admission rank-bucket key, ordered exactly like
+/// [`EpochAdmission::decide`]'s global sort: weight descending, then
+/// class (0 = overdue, 1 = admitted, 2 = parked), then the class-local
+/// streak key (admitted streak ascending for class 1, parked streak
+/// *descending* for the others, encoded as its negation so one
+/// ascending `i64` covers both).
+///
+/// `Ord` uses `f64::total_cmp` on the weight, which agrees with the
+/// single-pool `partial_cmp(..).unwrap()` for the finite weights the
+/// schedulers produce, and gives buckets a total order so they can key
+/// a `BTreeMap` without violating the determinism contract's hash-iter
+/// rule.
+///
+/// [`EpochAdmission::decide`]: super::EpochAdmission::decide
+#[derive(Clone, Copy, Debug)]
+pub struct BucketKey {
+    /// Priority weight of every member of the bucket.
+    pub weight: f64,
+    /// 0 = overdue (parked one epoch short of the starvation bound),
+    /// 1 = currently admitted, 2 = parked.
+    pub class: u8,
+    /// Class-local streak tie-break (see type docs for the encoding).
+    pub streak: i64,
+}
+
+impl PartialEq for BucketKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for BucketKey {}
+impl PartialOrd for BucketKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for BucketKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .weight
+            .total_cmp(&self.weight)
+            .then(self.class.cmp(&other.class))
+            .then(self.streak.cmp(&other.streak))
+    }
+}
+
+/// One shard's compact per-epoch admission summary: for each rank
+/// bucket present on the shard, the member count and the demand total —
+/// a per-priority-tier demand histogram. Sorted by [`BucketKey`]. This
+/// is everything that crosses the shard boundary at admission time;
+/// per-tenant curves and demands stay local.
+#[derive(Clone, Debug)]
+pub struct ShardSummary {
+    /// `(bucket, member count, summed demand)` in bucket rank order.
+    pub buckets: Vec<(BucketKey, usize, usize)>,
+}
+
+/// Coordinator → shard messages. The protocol sequence for one epoch is
+/// driven by [`decide_sharded`], [`waterfill_sharded`] and
+/// [`top_up_sharded`]; every directive elicits exactly one [`Reply`].
+#[derive(Clone, Debug)]
+pub enum Directive {
+    /// Transport-layer epoch kickoff: the channel owner synthesizes or
+    /// gathers the shard's tenant slice and calls
+    /// [`TenantShard::load_epoch`] itself. Never reaches
+    /// [`TenantShard::handle`].
+    Begin { epoch: usize },
+    /// Install this epoch's per-tenant inputs. `curves` may be empty
+    /// for admission-only use (the fleet tier partitions the fill
+    /// separately).
+    LoadEpoch { curves: Vec<Vec<f64>>, demands: Vec<usize>, weights: Vec<f64> },
+    /// Bucket local tenants by rank and report the [`ShardSummary`].
+    Summarize,
+    /// Scan this shard's members of one rank bucket in local index
+    /// order, applying the packing rule with the global `used` token.
+    AdmitSegment { key: BucketKey, used: usize, total: usize },
+    /// Fallback when nothing fit anywhere: admit the bucket's first
+    /// local member (the global `order[0]`).
+    ForceFirst { key: BucketKey },
+    /// Stagger parked streaks over the global fresh cohort: this
+    /// shard's members of `key` occupy `[offset, offset+count)` of the
+    /// `m`-tenant cohort, with `gpe` cohort members per epoch.
+    AssignFresh { key: BucketKey, offset: usize, m: usize, gpe: usize },
+    /// Commit the pending decision and tick streaks.
+    FinalizeAdmission,
+    /// Re-apply the previous decision, ticking streaks (warmup epochs).
+    Hold,
+    /// Would any parked local tenant exceed the starvation bound if
+    /// parked once more?
+    OverduePending,
+    /// Build the fill sub-instance from this shard's *admitted* tenants
+    /// (curves/weights/demands loaded via [`Directive::LoadEpoch`];
+    /// parked tenants restart at the floor rung).
+    InstallFillLocal { levels: Vec<usize>, hysteresis: f64 },
+    /// Install an explicit fill sub-instance (the fleet tier, where the
+    /// admitted set is partitioned independently of tenant ownership).
+    InstallFillWith {
+        curves: Vec<Vec<f64>>,
+        weights: Vec<f64>,
+        prev: Option<Vec<usize>>,
+        reservations: Vec<usize>,
+        levels: Vec<usize>,
+        hysteresis: f64,
+    },
+    /// Build the phase-1 jump heap at the global floor state.
+    FillInit { used: usize, total: usize },
+    /// Drain the phase-1 heap while its top beats `boundary`
+    /// (`(gain, shard)`, gain descending then shard ascending).
+    Fill { used: usize, total: usize, boundary: Option<(f64, usize)> },
+    /// Build the phase-2 even-share raise heap.
+    RaiseInit { even: usize },
+    /// Drain the phase-2 heap while its top beats `boundary`
+    /// (`(cores, shard)`, cores ascending then shard ascending).
+    Raise { used: usize, total: usize, boundary: Option<(usize, usize)> },
+    /// Run one (weight tier × shard) segment of the reservation top-up.
+    TopUpSegment { weight: f64, even: usize, total: usize, used: usize },
+    /// Return the fill sub-instance's final rungs.
+    TakeRungs,
+    /// Fold this shard's epoch statistics onto the running totals
+    /// (chained FNV fingerprint, shard-major float utility sum) and
+    /// roll per-tenant previous-rung state forward.
+    Stats { fp: u64, util: f64 },
+    /// Tear down the channel; the shard server replies [`Reply::Done`]
+    /// and a threaded transport exits its worker loop.
+    Shutdown,
+}
+
+/// Shard → coordinator replies, one per [`Directive`].
+#[derive(Clone, Debug)]
+pub enum Reply {
+    Loaded,
+    Summary(ShardSummary),
+    /// `used` token after the segment, members admitted, members left
+    /// in the segment's fresh cohort.
+    Admitted { used: usize, admitted: usize, fresh: usize },
+    /// Whether the force-admitted tenant was removed from a fresh list.
+    Forced { was_fresh: bool },
+    FreshAssigned,
+    /// The shard's committed admission flags, local index order.
+    Finalized { flags: Vec<bool> },
+    Held { flags: Vec<bool> },
+    Overdue { pending: bool },
+    FillInstalled,
+    /// Best local phase-1 gain after heap construction.
+    FillTop { top: Option<f64> },
+    /// `used` token and new best local gain after a drain run.
+    Filled { used: usize, top: Option<f64> },
+    /// Lowest eligible core count after phase-2 heap construction.
+    RaiseTop { top: Option<usize> },
+    Raised { used: usize, top: Option<usize> },
+    ToppedUp { used: usize },
+    Rungs { rungs: Vec<usize> },
+    /// Folded running totals plus this shard's own per-epoch counts.
+    Stats { admitted: usize, used: usize, top_up: usize, moved: usize, util: f64, fp: u64 },
+    Done,
+}
+
+/// The shard↔coordinator transport seam. [`InlineChannel`] is the
+/// zero-thread in-process tier; `fleet::shard::MpscShardChannel` is the
+/// `mpsc` worker-thread tier; a multi-process tier would serialize
+/// [`Directive`]/[`Reply`] over a socket — the protocol already never
+/// moves per-tenant state, so only this trait needs a new impl.
+///
+/// Drivers broadcast a directive to every shard before collecting
+/// replies, so threaded transports overlap shard work; `send` must
+/// therefore queue exactly one reply per directive for `recv` to
+/// retrieve in order.
+pub trait ShardChannel {
+    fn send(&mut self, d: Directive);
+    fn recv(&mut self) -> Reply;
+}
+
+/// In-process [`ShardChannel`]: owns the [`TenantShard`] and handles
+/// each directive synchronously at `send`, queueing the reply.
+pub struct InlineChannel {
+    shard: TenantShard,
+    pending: VecDeque<Reply>,
+}
+
+impl InlineChannel {
+    pub fn new(shard: TenantShard) -> Self {
+        InlineChannel { shard, pending: VecDeque::new() }
+    }
+
+    /// The owned shard server (tests and diagnostics).
+    pub fn shard(&self) -> &TenantShard {
+        &self.shard
+    }
+}
+
+impl ShardChannel for InlineChannel {
+    fn send(&mut self, d: Directive) {
+        let r = self.shard.handle(d);
+        self.pending.push_back(r);
+    }
+
+    fn recv(&mut self) -> Reply {
+        self.pending
+            .pop_front()
+            // detlint: allow(unwrap) — every send queues exactly one reply; recv without send is a protocol bug
+            .expect("InlineChannel::recv with no pending reply")
+    }
+}
+
+/// One shard's server state: the admission machinery of
+/// [`EpochAdmission`] over the local tenant slice `[lo, hi)`, plus the
+/// per-epoch fill sub-instance. Pure protocol state — it never spawns
+/// threads or reads clocks; transports own the concurrency.
+///
+/// [`EpochAdmission`]: super::EpochAdmission
+pub struct TenantShard {
+    sid: usize,
+    lo: usize,
+    hi: usize,
+    bound: usize,
+    hysteresis: usize,
+    admitted: Vec<bool>,
+    parked_streak: Vec<usize>,
+    admitted_streak: Vec<usize>,
+    decided: bool,
+    prev_rung: Vec<usize>,
+    prev_admitted: Vec<bool>,
+    curves: Vec<Vec<f64>>,
+    demands: Vec<usize>,
+    weights: Vec<f64>,
+    buckets: BTreeMap<BucketKey, Vec<usize>>,
+    next: Vec<bool>,
+    fresh: BTreeMap<BucketKey, Vec<usize>>,
+    fill: Option<FillState>,
+}
+
+impl TenantShard {
+    /// A shard owning tenants `[lo, hi)` with the same `bound` /
+    /// `hysteresis` admission knobs as [`EpochAdmission::new`] +
+    /// [`with_hysteresis`] — every shard of a fleet must share them.
+    ///
+    /// [`EpochAdmission::new`]: super::EpochAdmission::new
+    /// [`with_hysteresis`]: super::EpochAdmission::with_hysteresis
+    pub fn new(sid: usize, lo: usize, hi: usize, bound: usize, hysteresis: usize) -> Self {
+        assert!(lo <= hi, "shard {sid}: inverted tenant range {lo}..{hi}");
+        let n = hi - lo;
+        TenantShard {
+            sid,
+            lo,
+            hi,
+            bound: bound.max(1),
+            hysteresis,
+            admitted: vec![true; n],
+            parked_streak: vec![0; n],
+            admitted_streak: vec![0; n],
+            decided: false,
+            prev_rung: vec![0; n],
+            prev_admitted: vec![false; n],
+            curves: Vec::new(),
+            demands: Vec::new(),
+            weights: Vec::new(),
+            buckets: BTreeMap::new(),
+            next: Vec::new(),
+            fresh: BTreeMap::new(),
+            fill: None,
+        }
+    }
+
+    /// First owned global tenant index.
+    pub fn lo(&self) -> usize {
+        self.lo
+    }
+
+    /// One past the last owned global tenant index.
+    pub fn hi(&self) -> usize {
+        self.hi
+    }
+
+    /// Install this epoch's per-tenant inputs. `curves` may be empty
+    /// when the shard only arbitrates admission (the fleet tier).
+    pub fn load_epoch(&mut self, curves: Vec<Vec<f64>>, demands: Vec<usize>, weights: Vec<f64>) {
+        let n = self.hi - self.lo;
+        assert!(demands.len() == n && weights.len() == n, "shard {}: epoch shape", self.sid);
+        assert!(curves.is_empty() || curves.len() == n, "shard {}: curve shape", self.sid);
+        self.curves = curves;
+        self.demands = demands;
+        self.weights = weights;
+    }
+
+    /// Dispatch one protocol directive. Panics on [`Directive::Begin`]
+    /// (transport-layer) and on protocol-order violations — a shard
+    /// fed out-of-order directives is a coordinator bug, not a
+    /// recoverable condition.
+    pub fn handle(&mut self, d: Directive) -> Reply {
+        match d {
+            Directive::Begin { .. } => {
+                panic!("Begin is transport-layer: the channel owner loads the epoch")
+            }
+            Directive::LoadEpoch { curves, demands, weights } => {
+                self.load_epoch(curves, demands, weights);
+                Reply::Loaded
+            }
+            Directive::Summarize => Reply::Summary(self.summarize()),
+            Directive::AdmitSegment { key, used, total } => {
+                let (used, admitted, fresh) = self.admit_segment(key, used, total);
+                Reply::Admitted { used, admitted, fresh }
+            }
+            Directive::ForceFirst { key } => Reply::Forced { was_fresh: self.force_first(key) },
+            Directive::AssignFresh { key, offset, m, gpe } => {
+                self.assign_fresh(key, offset, m, gpe);
+                Reply::FreshAssigned
+            }
+            Directive::FinalizeAdmission => Reply::Finalized { flags: self.finalize_admission() },
+            Directive::Hold => Reply::Held { flags: self.hold() },
+            Directive::OverduePending => Reply::Overdue { pending: self.overdue_pending() },
+            Directive::InstallFillLocal { levels, hysteresis } => {
+                self.install_fill_local(levels, hysteresis);
+                Reply::FillInstalled
+            }
+            Directive::InstallFillWith {
+                curves,
+                weights,
+                prev,
+                reservations,
+                levels,
+                hysteresis,
+            } => {
+                self.fill =
+                    Some(FillState::new(curves, weights, prev, reservations, levels, hysteresis));
+                Reply::FillInstalled
+            }
+            Directive::FillInit { used, total } => {
+                let f = self.fill_mut();
+                f.heap_init(used, total);
+                Reply::FillTop { top: f.top() }
+            }
+            Directive::Fill { used, total, boundary } => {
+                let sid = self.sid;
+                let f = self.fill_mut();
+                let used = f.fill(sid, used, total, boundary);
+                Reply::Filled { used, top: f.top() }
+            }
+            Directive::RaiseInit { even } => {
+                let f = self.fill_mut();
+                f.raise_init(even);
+                Reply::RaiseTop { top: f.top2() }
+            }
+            Directive::Raise { used, total, boundary } => {
+                let sid = self.sid;
+                let f = self.fill_mut();
+                let used = f.raise(sid, used, total, boundary);
+                Reply::Raised { used, top: f.top2() }
+            }
+            Directive::TopUpSegment { weight, even, total, used } => {
+                let used = self.fill_mut().top_up_segment(weight, even, total, used);
+                Reply::ToppedUp { used }
+            }
+            Directive::TakeRungs => Reply::Rungs { rungs: self.fill_ref().lvl.clone() },
+            Directive::Stats { fp, util } => self.stats(fp, util),
+            Directive::Shutdown => Reply::Done,
+        }
+    }
+
+    fn fill_mut(&mut self) -> &mut FillState {
+        self.fill
+            .as_mut()
+            // detlint: allow(unwrap) — protocol order: InstallFill* precedes every fill directive
+            .expect("shard fill state missing: InstallFill must precede fill directives")
+    }
+
+    fn fill_ref(&self) -> &FillState {
+        self.fill
+            .as_ref()
+            // detlint: allow(unwrap) — protocol order: InstallFill* precedes every fill directive
+            .expect("shard fill state missing: InstallFill must precede fill directives")
+    }
+
+    /// Bucket local tenants by rank key and emit the compact summary,
+    /// resetting the pending-decision scratch ([`EpochAdmission::rank`]
+    /// segmented: the bucket order is the global sort order restricted
+    /// to this shard, members kept in local = global index order).
+    ///
+    /// [`EpochAdmission::rank`]: super::EpochAdmission
+    fn summarize(&mut self) -> ShardSummary {
+        let n = self.hi - self.lo;
+        self.buckets.clear();
+        for k in 0..n {
+            let over =
+                self.decided && !self.admitted[k] && self.parked_streak[k] + 1 >= self.bound;
+            let class = if over {
+                0u8
+            } else if self.admitted[k] {
+                1
+            } else {
+                2
+            };
+            let streak = if class == 1 {
+                self.admitted_streak[k] as i64
+            } else {
+                -(self.parked_streak[k] as i64)
+            };
+            self.buckets
+                .entry(BucketKey { weight: self.weights[k], class, streak })
+                .or_default()
+                .push(k);
+        }
+        self.next = vec![false; n];
+        self.fresh.clear();
+        let buckets = self
+            .buckets
+            .iter()
+            .map(|(k, v)| (*k, v.len(), v.iter().map(|&i| self.demands[i]).sum::<usize>()))
+            .collect();
+        ShardSummary { buckets }
+    }
+
+    /// One bucket segment of the global admission scan, local index
+    /// order, with the exact packing rule of [`EpochAdmission::decide`]:
+    /// reservation clamped to `[1, total]`, the hysteresis slack charged
+    /// only to steady-state parked tenants. Members that neither fit nor
+    /// stay parked join the segment's fresh cohort.
+    ///
+    /// [`EpochAdmission::decide`]: super::EpochAdmission::decide
+    fn admit_segment(
+        &mut self,
+        key: BucketKey,
+        mut used: usize,
+        total: usize,
+    ) -> (usize, usize, usize) {
+        let mut admitted = 0usize;
+        let mut fresh = Vec::new();
+        if let Some(members) = self.buckets.get(&key) {
+            for &k in members {
+                let r = self.demands[k].clamp(1, total.max(1));
+                let slack = if self.decided && key.class == 2 { self.hysteresis } else { 0 };
+                if used + r + slack <= total {
+                    self.next[k] = true;
+                    used += r;
+                    admitted += 1;
+                } else if self.admitted[k] || !self.decided {
+                    fresh.push(k);
+                }
+            }
+        }
+        let nf = fresh.len();
+        self.fresh.insert(key, fresh);
+        (used, admitted, nf)
+    }
+
+    /// Coordinator fallback when nothing fit anywhere: admit this
+    /// bucket's first local member (the global `order[0]`). Returns
+    /// whether the member had joined the fresh cohort (the coordinator
+    /// shrinks its count — a forced tenant is admitted, not fresh).
+    fn force_first(&mut self, key: BucketKey) -> bool {
+        let k0 = self
+            .buckets
+            .get(&key)
+            .and_then(|v| v.first().copied())
+            // detlint: allow(unwrap) — the coordinator only forces a bucket its summary reported non-empty
+            .expect("force_first on an empty bucket");
+        self.next[k0] = true;
+        match self.fresh.get_mut(&key) {
+            Some(f) if f.first() == Some(&k0) => {
+                f.remove(0);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Stagger `parked_streak` over the global fresh cohort exactly as
+    /// the single-pool decide does: member `offset + j` of the
+    /// `m`-tenant cohort gets `(m - 1 - (offset + j)) / gpe`.
+    fn assign_fresh(&mut self, key: BucketKey, offset: usize, m: usize, gpe: usize) {
+        if let Some(f) = self.fresh.get(&key) {
+            for (j, &k) in f.iter().enumerate() {
+                self.parked_streak[k] = (m - 1 - (offset + j)) / gpe;
+                self.admitted_streak[k] = 0;
+            }
+        }
+    }
+
+    fn finalize_admission(&mut self) -> Vec<bool> {
+        let n = self.hi - self.lo;
+        let mut is_fresh = vec![false; n];
+        for f in self.fresh.values() {
+            for &k in f {
+                is_fresh[k] = true;
+            }
+        }
+        for k in 0..n {
+            if self.next[k] {
+                self.parked_streak[k] = 0;
+                self.admitted_streak[k] += 1;
+            } else if !is_fresh[k] {
+                self.parked_streak[k] += 1;
+                self.admitted_streak[k] = 0;
+            }
+        }
+        self.admitted = self.next.clone();
+        self.decided = true;
+        self.admitted.clone()
+    }
+
+    fn hold(&mut self) -> Vec<bool> {
+        for k in 0..self.admitted.len() {
+            if self.admitted[k] {
+                self.admitted_streak[k] += 1;
+            } else {
+                self.parked_streak[k] += 1;
+            }
+        }
+        self.admitted.clone()
+    }
+
+    fn overdue_pending(&self) -> bool {
+        (0..self.admitted.len())
+            .any(|k| self.decided && !self.admitted[k] && self.parked_streak[k] + 1 >= self.bound)
+    }
+
+    /// Fill sub-instance from this shard's admitted tenants: parked
+    /// tenants restart at the floor rung, reservations are the loaded
+    /// demands (the scale tier's `sub_*` vectors, shard-local).
+    fn install_fill_local(&mut self, levels: Vec<usize>, hysteresis: f64) {
+        let n = self.hi - self.lo;
+        assert!(self.curves.len() == n, "shard {}: InstallFillLocal needs loaded curves", self.sid);
+        let idx: Vec<usize> = (0..n).filter(|&k| self.admitted[k]).collect();
+        let curves: Vec<Vec<f64>> = idx.iter().map(|&k| self.curves[k].clone()).collect();
+        let weights: Vec<f64> = idx.iter().map(|&k| self.weights[k]).collect();
+        let prev: Vec<usize> = idx
+            .iter()
+            .map(|&k| if self.prev_admitted[k] { self.prev_rung[k] } else { 0 })
+            .collect();
+        let reservations: Vec<usize> = idx.iter().map(|&k| self.demands[k]).collect();
+        let mut st = FillState::new(curves, weights, Some(prev), reservations, levels, hysteresis);
+        st.idx = idx;
+        self.fill = Some(st);
+    }
+
+    /// Fold this shard's epoch statistics onto the running `(fp, util)`
+    /// totals in local = global index order, mirroring the single-pool
+    /// report loop exactly: per-admitted-tenant quota, weighted utility
+    /// (asserted finite), moved count against the previous epoch, and
+    /// the top-up core delta; then roll `prev_rung`/`prev_admitted`
+    /// forward. The FNV-1a constants must stay in sync with
+    /// `fleet::scale`'s fingerprint (asserted byte-identical by the
+    /// cross-shard report tests).
+    fn stats(&mut self, fp: u64, util0: f64) -> Reply {
+        let f = self
+            .fill
+            .take()
+            // detlint: allow(unwrap) — protocol order: the fill runs before Stats every epoch
+            .expect("shard fill state missing: Stats follows the fill phases");
+        let n = self.hi - self.lo;
+        let mut quota = vec![0usize; n];
+        let mut util = util0;
+        let mut moved = 0usize;
+        for (s, &k) in f.idx.iter().enumerate() {
+            quota[k] = f.levels[f.lvl[s]];
+            let u = f.curves[s][f.lvl[s]];
+            assert!(u.is_finite(), "tenant {}: non-finite utility {u}", self.lo + k);
+            util += self.weights[k] * u;
+            if self.prev_admitted[k] && f.lvl[s] != self.prev_rung[k] {
+                moved += 1;
+            }
+            self.prev_rung[k] = f.lvl[s];
+        }
+        let pre = if f.pre.is_empty() { f.lvl.clone() } else { f.pre.clone() };
+        let mut top_up = 0usize;
+        for (&g, &p) in f.lvl.iter().zip(pre.iter()) {
+            assert!(g >= p, "top-up reduced a rung: {p} -> {g}");
+            top_up += f.levels[g] - f.levels[p];
+        }
+        self.prev_admitted = self.admitted.clone();
+        let used: usize = quota.iter().sum();
+        let mut h = fp;
+        for &q in &quota {
+            for b in (q as u64).to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        Reply::Stats { admitted: f.idx.len(), used, top_up, moved, util, fp: h }
+    }
+}
+
+/// The per-shard slice of the admitted fill sub-instance, with local
+/// heaps for both [`allocate_v2`] phases and the rung cursor the
+/// segmented top-up advances.
+///
+/// [`allocate_v2`]: super::allocate_v2
+struct FillState {
+    /// Local tenant index per sub-instance slot (identity for explicit
+    /// installs; the admitted subset for [`Directive::InstallFillLocal`]).
+    idx: Vec<usize>,
+    curves: Vec<Vec<f64>>,
+    weights: Vec<f64>,
+    prev: Option<Vec<usize>>,
+    reservations: Vec<usize>,
+    levels: Vec<usize>,
+    hysteresis: f64,
+    lvl: Vec<usize>,
+    /// Rung snapshot taken at the first top-up segment (the phase-2
+    /// fixed point), so [`TenantShard::stats`] can report the top-up
+    /// core delta.
+    pre: Vec<usize>,
+    even: usize,
+    heap: BinaryHeap<Jump>,
+    heap2: BinaryHeap<Reverse<(usize, usize)>>,
+}
+
+impl FillState {
+    fn new(
+        curves: Vec<Vec<f64>>,
+        weights: Vec<f64>,
+        prev: Option<Vec<usize>>,
+        reservations: Vec<usize>,
+        levels: Vec<usize>,
+        hysteresis: f64,
+    ) -> FillState {
+        let n = curves.len();
+        assert!(!levels.is_empty(), "sharded fill needs a non-empty ladder");
+        assert!(
+            levels.windows(2).all(|w| w[0] < w[1]),
+            "sharded fill requires a strictly increasing ladder (the heap protocol's precondition)"
+        );
+        assert!(weights.len() == n && reservations.len() == n, "fill sub-instance shape");
+        assert!(curves.iter().all(|c| c.len() == levels.len()), "curve/ladder shape");
+        if let Some(p) = &prev {
+            assert!(p.len() == n, "prev shape");
+        }
+        assert!(hysteresis >= 0.0, "negative hysteresis");
+        FillState {
+            idx: (0..n).collect(),
+            curves,
+            weights,
+            prev,
+            reservations,
+            levels,
+            hysteresis,
+            lvl: vec![0; n],
+            pre: Vec::new(),
+            even: 0,
+            heap: BinaryHeap::new(),
+            heap2: BinaryHeap::new(),
+        }
+    }
+
+    /// Hysteresis-adjusted utility of slot `a` at rung `l` — identical
+    /// to [`allocate_v2`]'s internal adjustment.
+    ///
+    /// [`allocate_v2`]: super::allocate_v2
+    fn adj(&self, a: usize, l: usize) -> f64 {
+        let mut u = self.weights[a] * self.curves[a][l];
+        if self.hysteresis > 0.0 {
+            if let Some(p) = &self.prev {
+                if p[a] == l {
+                    u += self.hysteresis;
+                }
+            }
+        }
+        u
+    }
+
+    /// Best feasible upward jump for slot `a` at the current `used`
+    /// token — the same scan as [`allocate_v2`]'s, strict `>` keeping
+    /// the lowest target rung on gain ties.
+    ///
+    /// [`allocate_v2`]: super::allocate_v2
+    fn best_jump(&self, a: usize, used: usize, total: usize) -> Option<Jump> {
+        let cur = self.levels[self.lvl[a]];
+        let mut best: Option<Jump> = None;
+        for j in self.lvl[a] + 1..self.levels.len() {
+            if used - cur + self.levels[j] > total {
+                continue;
+            }
+            let du = self.adj(a, j) - self.adj(a, self.lvl[a]);
+            if du <= 1e-12 {
+                continue;
+            }
+            let g = du / (self.levels[j] - cur) as f64;
+            let better = match &best {
+                None => true,
+                Some(b) => g > b.gain,
+            };
+            if better {
+                best = Some(Jump { gain: g, app: a, rung: j });
+            }
+        }
+        best
+    }
+
+    fn heap_init(&mut self, used: usize, total: usize) {
+        self.heap.clear();
+        for a in 0..self.curves.len() {
+            if let Some(j) = self.best_jump(a, used, total) {
+                self.heap.push(j);
+            }
+        }
+    }
+
+    fn top(&self) -> Option<f64> {
+        self.heap.peek().map(|j| j.gain)
+    }
+
+    /// Drain the phase-1 heap while the local top beats the boundary
+    /// (gain desc, shard asc): the pop run this produces is exactly the
+    /// run of global pops the single heap would take. Stale entries are
+    /// recomputed and re-pushed, as in [`allocate_v2`].
+    ///
+    /// [`allocate_v2`]: super::allocate_v2
+    fn fill(
+        &mut self,
+        sid: usize,
+        mut used: usize,
+        total: usize,
+        boundary: Option<(f64, usize)>,
+    ) -> usize {
+        loop {
+            let Some(top) = self.heap.peek().copied() else { break };
+            let beat = match boundary {
+                None => true,
+                Some((bg, bsid)) => match top.gain.total_cmp(&bg) {
+                    Ordering::Greater => true,
+                    Ordering::Equal => sid < bsid,
+                    Ordering::Less => false,
+                },
+            };
+            if !beat {
+                break;
+            }
+            self.heap.pop();
+            let a = top.app;
+            let cur = self.levels[self.lvl[a]];
+            if used - cur + self.levels[top.rung] > total {
+                if let Some(j) = self.best_jump(a, used, total) {
+                    self.heap.push(j);
+                }
+                continue;
+            }
+            used = used - cur + self.levels[top.rung];
+            self.lvl[a] = top.rung;
+            if let Some(j) = self.best_jump(a, used, total) {
+                self.heap.push(j);
+            }
+        }
+        used
+    }
+
+    fn eligible(&self, a: usize) -> bool {
+        let j = self.lvl[a] + 1;
+        j < self.levels.len() && self.levels[j] <= self.even
+    }
+
+    fn raise_init(&mut self, even: usize) {
+        self.even = even;
+        self.heap2.clear();
+        for a in 0..self.curves.len() {
+            if self.eligible(a) {
+                self.heap2.push(Reverse((self.levels[self.lvl[a]], a)));
+            }
+        }
+    }
+
+    fn top2(&self) -> Option<usize> {
+        self.heap2.peek().map(|&Reverse((c, _))| c)
+    }
+
+    /// Drain the phase-2 even-share raise heap while the local minimum
+    /// beats the boundary (cores asc, shard asc). Infeasible pops are
+    /// dropped for good — `used` only grows, matching [`allocate_v2`].
+    ///
+    /// [`allocate_v2`]: super::allocate_v2
+    fn raise(
+        &mut self,
+        sid: usize,
+        mut used: usize,
+        total: usize,
+        boundary: Option<(usize, usize)>,
+    ) -> usize {
+        while let Some(&Reverse((cores, a))) = self.heap2.peek() {
+            let beat = match boundary {
+                None => true,
+                Some((bc, bsid)) => cores < bc || (cores == bc && sid < bsid),
+            };
+            if !beat {
+                break;
+            }
+            self.heap2.pop();
+            let j = self.lvl[a] + 1;
+            if used - self.levels[self.lvl[a]] + self.levels[j] > total {
+                continue;
+            }
+            used = used - self.levels[self.lvl[a]] + self.levels[j];
+            self.lvl[a] = j;
+            if self.eligible(a) {
+                self.heap2.push(Reverse((self.levels[self.lvl[a]], a)));
+            }
+        }
+        used
+    }
+
+    /// This shard's members of one weight tier, local index order —
+    /// one segment of [`reserve_top_up`]'s (weight desc, index asc)
+    /// scan. The first segment snapshots the pre-top-up rungs.
+    ///
+    /// [`reserve_top_up`]: super::reserve_top_up
+    fn top_up_segment(&mut self, weight: f64, even: usize, total: usize, mut used: usize) -> usize {
+        if self.pre.is_empty() {
+            self.pre = self.lvl.clone();
+        }
+        for a in 0..self.lvl.len() {
+            if self.weights[a].total_cmp(&weight) != Ordering::Equal {
+                continue;
+            }
+            let want = self.reservations[a].min(even);
+            while self.lvl[a] + 1 < self.levels.len()
+                && self.levels[self.lvl[a]] < want
+                && self.levels[self.lvl[a] + 1] <= want
+                && used - self.levels[self.lvl[a]] + self.levels[self.lvl[a] + 1] <= total
+            {
+                used = used - self.levels[self.lvl[a]] + self.levels[self.lvl[a] + 1];
+                self.lvl[a] += 1;
+            }
+        }
+        used
+    }
+}
+
+// -------------------------------------------------------------------------
+// coordinator drivers
+// -------------------------------------------------------------------------
+
+fn protocol_panic(expected: &str, got: &Reply) -> ! {
+    panic!("shard protocol violation: expected {expected} reply, got {got:?}")
+}
+
+/// Broadcast a directive to every shard, then collect the replies in
+/// shard order — threaded transports overlap the shard work.
+fn broadcast<C: ShardChannel>(channels: &mut [C], make: impl Fn(usize) -> Directive) -> Vec<Reply> {
+    for (i, c) in channels.iter_mut().enumerate() {
+        c.send(make(i));
+    }
+    channels.iter_mut().map(|c| c.recv()).collect()
+}
+
+fn ask<C: ShardChannel>(ch: &mut C, d: Directive) -> Reply {
+    ch.send(d);
+    ch.recv()
+}
+
+/// Outcome of one sharded admission decision.
+pub struct ShardedDecision {
+    /// Global admission flags (shard-major concatenation = global
+    /// tenant index order).
+    pub flags: Vec<bool>,
+    /// Distinct priority weights present this epoch, descending — the
+    /// segment order [`top_up_sharded`] walks. Derived from the bucket
+    /// summaries, so the coordinator stays summary-driven.
+    pub tiers: Vec<f64>,
+}
+
+/// One global admission decision over the shards — the two-level
+/// [`EpochAdmission::decide`]: summaries up, then the `used` token
+/// walks (bucket rank, shard asc) segments, then the force-first
+/// fallback, fresh-cohort staggering, and commit.
+///
+/// `bound` must equal the shards' starvation bound (it sizes the fresh
+/// cohort's stagger groups).
+///
+/// [`EpochAdmission::decide`]: super::EpochAdmission::decide
+pub fn decide_sharded<C: ShardChannel>(
+    channels: &mut [C],
+    total: usize,
+    bound: usize,
+) -> ShardedDecision {
+    let bound = bound.max(1);
+    let summaries: Vec<ShardSummary> = broadcast(channels, |_| Directive::Summarize)
+        .into_iter()
+        .map(|r| match r {
+            Reply::Summary(s) => s,
+            other => protocol_panic("Summary", &other),
+        })
+        .collect();
+    let mut keys: Vec<BucketKey> =
+        summaries.iter().flat_map(|s| s.buckets.iter().map(|&(k, _, _)| k)).collect();
+    keys.sort();
+    keys.dedup();
+    let has_bucket = |sid: usize, key: BucketKey| {
+        summaries[sid].buckets.binary_search_by(|&(k, _, _)| k.cmp(&key)).is_ok()
+    };
+    let mut used = 0usize;
+    let mut n_admitted = 0usize;
+    // (shard, bucket, fresh count) in global scan order — the fresh
+    // cohort's global layout.
+    let mut segments: Vec<(usize, BucketKey, usize)> = Vec::new();
+    for &key in &keys {
+        for sid in 0..channels.len() {
+            if !has_bucket(sid, key) {
+                continue;
+            }
+            match ask(&mut channels[sid], Directive::AdmitSegment { key, used, total }) {
+                Reply::Admitted { used: u, admitted, fresh } => {
+                    used = u;
+                    n_admitted += admitted;
+                    segments.push((sid, key, fresh));
+                }
+                other => protocol_panic("Admitted", &other),
+            }
+        }
+    }
+    if n_admitted == 0 {
+        'force: for &key in &keys {
+            for sid in 0..channels.len() {
+                if !has_bucket(sid, key) {
+                    continue;
+                }
+                match ask(&mut channels[sid], Directive::ForceFirst { key }) {
+                    Reply::Forced { was_fresh } => {
+                        if was_fresh {
+                            // detlint: allow(float-eq) — BucketKey equality is its total_cmp Ord, exact by design
+                            let hit = segments.iter_mut().find(|s| s.0 == sid && s.1 == key);
+                            if let Some(seg) = hit {
+                                seg.2 -= 1;
+                            }
+                        }
+                        break 'force;
+                    }
+                    other => protocol_panic("Forced", &other),
+                }
+            }
+        }
+    }
+    let m: usize = segments.iter().map(|s| s.2).sum();
+    let gpe = ((m + bound - 1) / bound).max(1);
+    let mut off = 0usize;
+    for &(sid, key, fresh) in &segments {
+        if fresh == 0 {
+            continue;
+        }
+        match ask(&mut channels[sid], Directive::AssignFresh { key, offset: off, m, gpe }) {
+            Reply::FreshAssigned => {}
+            other => protocol_panic("FreshAssigned", &other),
+        }
+        off += fresh;
+    }
+    let mut flags = Vec::new();
+    for r in broadcast(channels, |_| Directive::FinalizeAdmission) {
+        match r {
+            Reply::Finalized { flags: f } => flags.extend(f),
+            other => protocol_panic("Finalized", &other),
+        }
+    }
+    let mut tiers: Vec<f64> = Vec::new();
+    for k in &keys {
+        let fresh_tier = match tiers.last() {
+            None => true,
+            Some(t) => t.total_cmp(&k.weight) != Ordering::Equal,
+        };
+        if fresh_tier {
+            tiers.push(k.weight);
+        }
+    }
+    ShardedDecision { flags, tiers }
+}
+
+/// Sharded [`EpochAdmission::hold`]: tick streaks everywhere, return
+/// the concatenated standing flags.
+///
+/// [`EpochAdmission::hold`]: super::EpochAdmission::hold
+pub fn hold_sharded<C: ShardChannel>(channels: &mut [C]) -> Vec<bool> {
+    let mut flags = Vec::new();
+    for r in broadcast(channels, |_| Directive::Hold) {
+        match r {
+            Reply::Held { flags: f } => flags.extend(f),
+            other => protocol_panic("Held", &other),
+        }
+    }
+    flags
+}
+
+/// Sharded [`EpochAdmission::overdue_pending`].
+///
+/// [`EpochAdmission::overdue_pending`]: super::EpochAdmission::overdue_pending
+pub fn overdue_sharded<C: ShardChannel>(channels: &mut [C]) -> bool {
+    broadcast(channels, |_| Directive::OverduePending).into_iter().any(|r| match r {
+        Reply::Overdue { pending } => pending,
+        other => protocol_panic("Overdue", &other),
+    })
+}
+
+/// Both [`allocate_v2`] phases over installed shard fill states: the
+/// coordinator repeatedly hands the `used` token to the shard with the
+/// globally-best heap top, passing the best rival top as the drain
+/// boundary. Returns the final `used`. `even` is phase 2's even-share
+/// cap (`total / napps` in the single-pool fill).
+///
+/// [`allocate_v2`]: super::allocate_v2
+pub fn waterfill_sharded<C: ShardChannel>(
+    channels: &mut [C],
+    mut used: usize,
+    total: usize,
+    even: usize,
+) -> usize {
+    let mut tops: Vec<Option<f64>> = broadcast(channels, |_| Directive::FillInit { used, total })
+        .into_iter()
+        .map(|r| match r {
+            Reply::FillTop { top } => top,
+            other => protocol_panic("FillTop", &other),
+        })
+        .collect();
+    loop {
+        // argmax (gain desc, shard asc): strict Greater keeps the
+        // lowest shard on exact gain ties, like the global heap's
+        // app-index tie-break under a contiguous partition.
+        let mut best: Option<(f64, usize)> = None;
+        for (sid, t) in tops.iter().enumerate() {
+            if let Some(g) = *t {
+                let better = match best {
+                    None => true,
+                    Some((bg, _)) => g.total_cmp(&bg) == Ordering::Greater,
+                };
+                if better {
+                    best = Some((g, sid));
+                }
+            }
+        }
+        let Some((_, sid)) = best else { break };
+        let mut boundary: Option<(f64, usize)> = None;
+        for (osid, t) in tops.iter().enumerate() {
+            if osid == sid {
+                continue;
+            }
+            if let Some(g) = *t {
+                let better = match boundary {
+                    None => true,
+                    Some((bg, _)) => g.total_cmp(&bg) == Ordering::Greater,
+                };
+                if better {
+                    boundary = Some((g, osid));
+                }
+            }
+        }
+        match ask(&mut channels[sid], Directive::Fill { used, total, boundary }) {
+            Reply::Filled { used: u, top } => {
+                used = u;
+                tops[sid] = top;
+            }
+            other => protocol_panic("Filled", &other),
+        }
+    }
+    let mut tops2: Vec<Option<usize>> = broadcast(channels, |_| Directive::RaiseInit { even })
+        .into_iter()
+        .map(|r| match r {
+            Reply::RaiseTop { top } => top,
+            other => protocol_panic("RaiseTop", &other),
+        })
+        .collect();
+    loop {
+        let mut best: Option<(usize, usize)> = None;
+        for (sid, t) in tops2.iter().enumerate() {
+            if let Some(c) = *t {
+                let better = match best {
+                    None => true,
+                    Some((bc, _)) => c < bc,
+                };
+                if better {
+                    best = Some((c, sid));
+                }
+            }
+        }
+        let Some((_, sid)) = best else { break };
+        let mut boundary: Option<(usize, usize)> = None;
+        for (osid, t) in tops2.iter().enumerate() {
+            if osid == sid {
+                continue;
+            }
+            if let Some(c) = *t {
+                let better = match boundary {
+                    None => true,
+                    Some((bc, _)) => c < bc,
+                };
+                if better {
+                    boundary = Some((c, osid));
+                }
+            }
+        }
+        match ask(&mut channels[sid], Directive::Raise { used, total, boundary }) {
+            Reply::Raised { used: u, top } => {
+                used = u;
+                tops2[sid] = top;
+            }
+            other => protocol_panic("Raised", &other),
+        }
+    }
+    used
+}
+
+/// Segmented [`reserve_top_up`]: walk `(weight tier desc, shard asc)`
+/// segments with the `used` token against the full pool. `tiers` is
+/// typically [`ShardedDecision::tiers`]; segments for tiers absent on a
+/// shard are no-ops, so a fixed global tier list is safe.
+///
+/// [`reserve_top_up`]: super::reserve_top_up
+pub fn top_up_sharded<C: ShardChannel>(
+    channels: &mut [C],
+    tiers: &[f64],
+    even: usize,
+    total: usize,
+    mut used: usize,
+) -> usize {
+    for &w in tiers {
+        for ch in channels.iter_mut() {
+            match ask(ch, Directive::TopUpSegment { weight: w, even, total, used }) {
+                Reply::ToppedUp { used: u } => used = u,
+                other => protocol_panic("ToppedUp", &other),
+            }
+        }
+    }
+    used
+}
+
+/// Drop-in sharded [`allocate_v2`]: partition the sub-instance
+/// contiguously across `shards` in-process shards and run the token
+/// protocol. Bit-identical to the single-pool fill for any shard count
+/// (the unit tests below and the Python mirror prove it), so the fleet
+/// tier can swap it in under `--shards` without moving the report.
+///
+/// [`allocate_v2`]: super::allocate_v2
+pub fn allocate_v2_sharded(
+    shards: usize,
+    curves: &[Vec<f64>],
+    levels: &[usize],
+    total: usize,
+    weights: &[f64],
+    prev: Option<&[usize]>,
+    hysteresis: f64,
+) -> Vec<usize> {
+    let napps = curves.len();
+    assert!(napps > 0, "allocate_v2_sharded needs at least one app");
+    let bounds = shard_bounds(napps, shards);
+    let mut channels: Vec<InlineChannel> = bounds
+        .iter()
+        .enumerate()
+        .map(|(sid, &(lo, hi))| InlineChannel::new(TenantShard::new(sid, lo, hi, 1, 0)))
+        .collect();
+    for (ch, &(lo, hi)) in channels.iter_mut().zip(bounds.iter()) {
+        match ask(
+            ch,
+            Directive::InstallFillWith {
+                curves: curves[lo..hi].to_vec(),
+                weights: weights[lo..hi].to_vec(),
+                prev: prev.map(|p| p[lo..hi].to_vec()),
+                reservations: vec![0; hi - lo],
+                levels: levels.to_vec(),
+                hysteresis,
+            },
+        ) {
+            Reply::FillInstalled => {}
+            other => protocol_panic("FillInstalled", &other),
+        }
+    }
+    let used = napps * levels[0];
+    assert!(used <= total, "floor rung oversubscribes the cluster");
+    waterfill_sharded(&mut channels, used, total, total / napps);
+    let mut out = Vec::with_capacity(napps);
+    for ch in &mut channels {
+        match ask(ch, Directive::TakeRungs) {
+            Reply::Rungs { rungs } => out.extend(rungs),
+            other => protocol_panic("Rungs", &other),
+        }
+    }
+    out
+}
+
+/// The fleet scheduler's admission front: the single-pool
+/// [`EpochAdmission`] when `shards <= 1` (bit-identical to the
+/// pre-shard path by construction — it *is* that path), or the sharded
+/// coordinator protocol over [`InlineChannel`]s. Both arms expose the
+/// same `decide`/`hold`/`overdue_pending` shape, so call sites don't
+/// branch.
+///
+/// [`EpochAdmission`]: super::EpochAdmission
+pub enum AdmissionTier {
+    Single(super::EpochAdmission),
+    Sharded { channels: Vec<InlineChannel>, bounds: Vec<(usize, usize)>, bound: usize },
+}
+
+impl AdmissionTier {
+    /// `shards <= 1` builds the legacy single-pool controller; larger
+    /// values partition `apps` contiguously (clamped to `apps` shards).
+    /// `bound`/`hysteresis` as in [`EpochAdmission::new`] /
+    /// [`with_hysteresis`].
+    ///
+    /// [`EpochAdmission::new`]: super::EpochAdmission::new
+    /// [`with_hysteresis`]: super::EpochAdmission::with_hysteresis
+    pub fn new(apps: usize, shards: usize, bound: usize, hysteresis: usize) -> Self {
+        if shards <= 1 {
+            AdmissionTier::Single(
+                super::EpochAdmission::new(apps, bound).with_hysteresis(hysteresis),
+            )
+        } else {
+            let bounds = shard_bounds(apps, shards);
+            let channels = bounds
+                .iter()
+                .enumerate()
+                .map(|(sid, &(lo, hi))| {
+                    InlineChannel::new(TenantShard::new(sid, lo, hi, bound, hysteresis))
+                })
+                .collect();
+            AdmissionTier::Sharded { channels, bounds, bound: bound.max(1) }
+        }
+    }
+
+    /// See [`EpochAdmission::decide`].
+    ///
+    /// [`EpochAdmission::decide`]: super::EpochAdmission::decide
+    pub fn decide(&mut self, total: usize, weights: &[f64], reservations: &[usize]) -> Vec<bool> {
+        match self {
+            AdmissionTier::Single(a) => a.decide(total, weights, reservations),
+            AdmissionTier::Sharded { channels, bounds, bound } => {
+                for (ch, &(lo, hi)) in channels.iter_mut().zip(bounds.iter()) {
+                    match ask(
+                        ch,
+                        Directive::LoadEpoch {
+                            curves: Vec::new(),
+                            demands: reservations[lo..hi].to_vec(),
+                            weights: weights[lo..hi].to_vec(),
+                        },
+                    ) {
+                        Reply::Loaded => {}
+                        other => protocol_panic("Loaded", &other),
+                    }
+                }
+                decide_sharded(channels, total, *bound).flags
+            }
+        }
+    }
+
+    /// See [`EpochAdmission::hold`].
+    ///
+    /// [`EpochAdmission::hold`]: super::EpochAdmission::hold
+    pub fn hold(&mut self) -> Vec<bool> {
+        match self {
+            AdmissionTier::Single(a) => a.hold(),
+            AdmissionTier::Sharded { channels, .. } => hold_sharded(channels),
+        }
+    }
+
+    /// See [`EpochAdmission::overdue_pending`]. Takes `&mut self`
+    /// because the sharded arm queries through its channels.
+    ///
+    /// [`EpochAdmission::overdue_pending`]: super::EpochAdmission::overdue_pending
+    pub fn overdue_pending(&mut self) -> bool {
+        match self {
+            AdmissionTier::Single(a) => a.overdue_pending(),
+            AdmissionTier::Sharded { channels, .. } => overdue_sharded(channels),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{allocate_v2, reserve_top_up, EpochAdmission};
+    use super::*;
+    use crate::util::Rng;
+
+    /// Random monotone-ladder instance with quantized curves (exact
+    /// gain ties) and optional hysteresis — the adversarial family the
+    /// heap-vs-scan mirror uses.
+    fn rand_instance(
+        rng: &mut Rng,
+    ) -> (Vec<Vec<f64>>, Vec<usize>, usize, Vec<f64>, Option<Vec<usize>>, f64) {
+        let napps = 1 + rng.below(24);
+        let nlv = 2 + rng.below(7);
+        let mut levels = vec![1 + rng.below(3)];
+        for _ in 1..nlv {
+            let last = *levels.last().unwrap();
+            levels.push(last + 1 + rng.below(6));
+        }
+        let floor_need = napps * levels[0];
+        let ceil = napps * levels[nlv - 1];
+        let total = floor_need + rng.below(ceil - floor_need + 1);
+        let mut curves = Vec::with_capacity(napps);
+        for _ in 0..napps {
+            let sat = 1 + rng.below(nlv);
+            let mut acc = 0.0;
+            let mut c = Vec::with_capacity(nlv);
+            for l in 0..nlv {
+                if l < sat {
+                    acc += 0.05 + rng.f64();
+                }
+                c.push((acc * 32.0).round() / 32.0);
+            }
+            curves.push(c);
+        }
+        let weights: Vec<f64> = (0..napps).map(|_| (1 + rng.below(4)) as f64).collect();
+        let prev = if rng.below(2) == 1 {
+            Some((0..napps).map(|_| rng.below(nlv)).collect())
+        } else {
+            None
+        };
+        let hysteresis = [0.0, 0.02, 0.1][rng.below(3)];
+        (curves, levels, total, weights, prev, hysteresis)
+    }
+
+    #[test]
+    fn shard_bounds_partition_covers_and_balances() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for s in [1usize, 2, 3, 4, 7, 200] {
+                let b = shard_bounds(n, s);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[b.len() - 1].1, n);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap in partition");
+                }
+                let sizes: Vec<usize> = b.iter().map(|&(lo, hi)| hi - lo).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "unbalanced partition {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_fill_matches_allocate_v2() {
+        // Mirror-validated (python/tests/test_shard_mirror.py): the
+        // token protocol is the single lazy heap partitioned, so the
+        // rung vectors agree exactly — ties, hysteresis and all.
+        let mut rng = Rng::new(0x51A2D);
+        for case in 0..200 {
+            let (curves, levels, total, weights, prev, hyst) = rand_instance(&mut rng);
+            let want = allocate_v2(&curves, &levels, total, &weights, prev.as_deref(), hyst);
+            for s in [1usize, 2, 3, 4] {
+                let got = allocate_v2_sharded(
+                    s,
+                    &curves,
+                    &levels,
+                    total,
+                    &weights,
+                    prev.as_deref(),
+                    hyst,
+                );
+                assert_eq!(got, want, "case {case} shards {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_top_up_matches_reserve_top_up() {
+        // Run the fill at a reduced budget (the fairness holdback),
+        // then the segmented top-up at the full pool, against the
+        // single-pool reserve_top_up on the same start state.
+        let mut rng = Rng::new(0x701A);
+        for case in 0..120 {
+            let (curves, levels, total, weights, prev, hyst) = rand_instance(&mut rng);
+            let napps = curves.len();
+            let reservations: Vec<usize> =
+                (0..napps).map(|_| 1 + rng.below(levels[levels.len() - 1] + 1)).collect();
+            let even = (total / napps).max(1);
+            let full = total + total / 10 + 1;
+            let mut want = allocate_v2(&curves, &levels, total, &weights, prev.as_deref(), hyst);
+            reserve_top_up(
+                &mut want,
+                &levels,
+                full,
+                &vec![true; napps],
+                &reservations,
+                even,
+                &weights,
+            );
+            let s = 1 + rng.below(4);
+            let bounds = shard_bounds(napps, s);
+            let mut channels: Vec<InlineChannel> = bounds
+                .iter()
+                .enumerate()
+                .map(|(sid, &(lo, hi))| InlineChannel::new(TenantShard::new(sid, lo, hi, 1, 0)))
+                .collect();
+            for (ch, &(lo, hi)) in channels.iter_mut().zip(bounds.iter()) {
+                ch.send(Directive::InstallFillWith {
+                    curves: curves[lo..hi].to_vec(),
+                    weights: weights[lo..hi].to_vec(),
+                    prev: prev.as_ref().map(|p| p[lo..hi].to_vec()),
+                    reservations: reservations[lo..hi].to_vec(),
+                    levels: levels.clone(),
+                    hysteresis: hyst,
+                });
+                ch.recv();
+            }
+            let used = waterfill_sharded(&mut channels, napps * levels[0], total, total / napps);
+            let mut tiers: Vec<f64> = weights.clone();
+            tiers.sort_by(|a, b| b.total_cmp(a));
+            tiers.dedup_by(|a, b| a.total_cmp(b) == Ordering::Equal);
+            top_up_sharded(&mut channels, &tiers, even, full, used);
+            let mut got = Vec::new();
+            for ch in &mut channels {
+                match ask(ch, Directive::TakeRungs) {
+                    Reply::Rungs { rungs } => got.extend(rungs),
+                    other => protocol_panic("Rungs", &other),
+                }
+            }
+            assert_eq!(got, want, "case {case} shards {s}");
+        }
+    }
+
+    #[test]
+    fn sharded_admission_matches_epoch_admission() {
+        // Multi-epoch equivalence under parking churn: flags AND both
+        // streak arrays, via the AdmissionTier facade the fleet uses.
+        let mut rng = Rng::new(0xAD31);
+        for trial in 0..30 {
+            let n = 5 + rng.below(40);
+            let bound = 2 + rng.below(4);
+            let hyst = rng.below(3);
+            let total = (n / 2).max(1) * 2;
+            let weights: Vec<f64> = (0..n).map(|_| (1 + rng.below(4)) as f64).collect();
+            let mut single = EpochAdmission::new(n, bound).with_hysteresis(hyst);
+            let shards = 2 + rng.below(3);
+            let mut tier = AdmissionTier::new(n, shards, bound, hyst);
+            for epoch in 0..6 {
+                let demands: Vec<usize> = (0..n).map(|_| 1 + rng.below(4)).collect();
+                let want = single.decide(total, &weights, &demands);
+                let got = tier.decide(total, &weights, &demands);
+                assert_eq!(got, want, "trial {trial} epoch {epoch} shards {shards}");
+                assert_eq!(tier.overdue_pending(), single.overdue_pending());
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_admission_hold_ticks_match() {
+        let n = 12;
+        let weights: Vec<f64> = (0..n).map(|i| (1 + i % 3) as f64).collect();
+        let demands = vec![3usize; n];
+        let mut single = EpochAdmission::new(n, 3).with_hysteresis(1);
+        let mut tier = AdmissionTier::new(n, 3, 3, 1);
+        for round in 0..4 {
+            let want = single.decide(n, &weights, &demands);
+            let got = tier.decide(n, &weights, &demands);
+            assert_eq!(got, want, "decide round {round}");
+            let want_h = single.hold();
+            let got_h = tier.hold();
+            assert_eq!(got_h, want_h, "hold round {round}");
+            assert_eq!(tier.overdue_pending(), single.overdue_pending(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn sharded_force_first_matches() {
+        // total = 0: nothing fits, the coordinator must force the same
+        // global order[0] the single scan picks.
+        let n = 7;
+        let weights = vec![1.0, 4.0, 2.0, 4.0, 1.0, 2.0, 4.0];
+        let demands = vec![50usize; n];
+        for s in [2usize, 3] {
+            let mut single = EpochAdmission::new(n, 3);
+            let mut tier = AdmissionTier::new(n, s, 3, 0);
+            let w1 = single.decide(10, &weights, &demands);
+            let g1 = tier.decide(10, &weights, &demands);
+            assert_eq!(g1, w1);
+            let w2 = single.decide(0, &weights, &demands);
+            let g2 = tier.decide(0, &weights, &demands);
+            assert_eq!(g2, w2, "shards {s}");
+            assert_eq!(g2.iter().filter(|&&a| a).count(), 1);
+        }
+    }
+
+    #[test]
+    fn single_tier_is_the_legacy_controller() {
+        // S=1 must be the pre-shard path itself, not an equivalent.
+        let tier = AdmissionTier::new(8, 1, 4, 2);
+        assert!(matches!(tier, AdmissionTier::Single(_)));
+    }
+
+    #[test]
+    fn decision_reports_weight_tiers_descending() {
+        let n = 10;
+        let weights: Vec<f64> =
+            (0..n).map(|i| if i % 5 == 0 { 4.0 } else if i % 5 <= 2 { 2.0 } else { 1.0 }).collect();
+        let demands = vec![2usize; n];
+        let bounds = shard_bounds(n, 3);
+        let mut channels: Vec<InlineChannel> = bounds
+            .iter()
+            .enumerate()
+            .map(|(sid, &(lo, hi))| InlineChannel::new(TenantShard::new(sid, lo, hi, 4, 0)))
+            .collect();
+        for (ch, &(lo, hi)) in channels.iter_mut().zip(bounds.iter()) {
+            ch.send(Directive::LoadEpoch {
+                curves: Vec::new(),
+                demands: demands[lo..hi].to_vec(),
+                weights: weights[lo..hi].to_vec(),
+            });
+            ch.recv();
+        }
+        let d = decide_sharded(&mut channels, 3 * n, 4);
+        assert_eq!(d.tiers, vec![4.0, 2.0, 1.0]);
+        assert_eq!(d.flags.len(), n);
+    }
+}

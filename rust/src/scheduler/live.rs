@@ -500,10 +500,24 @@ impl LiveRun<'_> {
         let sub_curves: Vec<Vec<f64>> = active.iter().map(|&a| curves[a].clone()).collect();
         let sub_w: Vec<f64> = active.iter().map(|&a| w[a]).collect();
         let sub_prev: Vec<usize> = active.iter().map(|&a| self.rungs[a]).collect();
+        // 2% fairness holdback (epoch mode only): at the full pool the
+        // reserve_top_up below is provably a no-op — the water-filler's
+        // even-share raise strictly dominates the top-up condition — so
+        // withhold 2% from the fill and let the top-up spend it seating
+        // under-served admitted tenants. Floor-guarded so every
+        // admitted tenant still seats its floor rung on tight pools.
+        // Mirror-validated: python/tests/test_shard_mirror.py.
+        let fill_budget = if self.epoch_mode {
+            let hold = (self.total / 50)
+                .min(self.total.saturating_sub(active.len() * self.levels[0]));
+            self.total - hold
+        } else {
+            self.total
+        };
         let sub = scheduler::allocate_v2(
             &sub_curves,
             &self.levels,
-            self.total,
+            fill_budget,
             &sub_w,
             Some(&sub_prev),
             self.cfg.scheduler.hysteresis,

@@ -55,6 +55,7 @@
 //! [`BudgetedController::utility_at`]:
 //!     crate::tuner::BudgetedController::utility_at
 
+pub mod coordinator;
 pub mod frontier;
 pub mod live;
 
@@ -385,6 +386,10 @@ pub struct EpochAdmission {
 }
 
 impl EpochAdmission {
+    /// Admission state for `apps` tenants under a starvation `bound`
+    /// (consecutive parked epochs; clamped to at least 1). Starts
+    /// all-admitted and undecided — the first [`decide`](Self::decide)
+    /// ranks every tenant as an incumbent.
     pub fn new(apps: usize, bound: usize) -> Self {
         assert!(apps > 0, "admission needs at least one tenant");
         EpochAdmission {

@@ -1,7 +1,8 @@
 //! Minimal leveled stderr logger (ISSUE 7 satellite).
 //!
-//! Progress and status lines across the crate go through [`log_info!`] /
-//! [`log_verbose!`] / [`log_warn!`] instead of ad-hoc
+//! Progress and status lines across the crate go through
+//! [`log_info!`](crate::log_info) / [`log_verbose!`](crate::log_verbose)
+//! / [`log_warn!`](crate::log_warn) instead of ad-hoc
 //! `println!`/`eprintln!`, so stdout stays clean for machine-readable
 //! output (JSON reports, result tables) and the CLI's `--quiet` /
 //! `--verbose` flags work uniformly. Everything the logger emits goes to

@@ -608,7 +608,12 @@ def run(src_root, json_out=None, verbose=False):
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n")[0],
+        epilog="The rule catalog, the allow-annotation grammar, and the "
+               "determinism contract this tool enforces are documented in "
+               "docs/DETERMINISM.md.",
+    )
     ap.add_argument("src", nargs="?", help="crate source root (e.g. rust/src)")
     ap.add_argument("--json", help="write the machine-readable report here")
     ap.add_argument("--list-rules", action="store_true")

@@ -27,6 +27,7 @@ KIND_RANK = {
     "frontier": 5,
     "admission": 6,
     "alloc": 7,
+    "shard_alloc": 8,
 }
 
 # required payload fields (beyond the clock fields) and their types
@@ -39,6 +40,7 @@ KIND_FIELDS = {
     "frontier": {"passed": int},
     "admission": {"admitted": list, "reservations": list},
     "alloc": {"cores": list, "parked": list, "churn_cores": int},
+    "shard_alloc": {"shard": int, "lo": int, "hi": int, "cores": list},
 }
 
 INF = float("inf")
@@ -83,6 +85,18 @@ def check_event(i, e, apps, frames):
                     len(e[field]) == apps,
                     f"event {i} ({kind}): {field!r} has {len(e[field])} entries, want {apps}",
                 )
+    if kind == "shard_alloc":
+        # a shard's cores slice covers exactly its contiguous tenant range
+        expect(
+            0 <= e["lo"] <= e["hi"] <= apps,
+            f"event {i} (shard_alloc): range [{e['lo']}, {e['hi']}) outside 0..{apps}",
+        )
+        expect(
+            len(e["cores"]) == e["hi"] - e["lo"],
+            f"event {i} (shard_alloc): {len(e['cores'])} cores for a "
+            f"{e['hi'] - e['lo']}-tenant shard",
+        )
+        expect(e["seq"] == e["shard"], f"event {i} (shard_alloc): seq must stamp the shard id")
     return (
         e["epoch"],
         INF if e["tenant"] is None else e["tenant"],
